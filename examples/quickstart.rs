@@ -1,0 +1,67 @@
+//! Quickstart: build the paper's default system (3x3 mesh NoC, FPGA with
+//! eight HWAs at PR4-PS4/2-TB), run one accelerated invocation from a
+//! processor, and print the latency breakdown.
+//!
+//!     cargo run --release --example quickstart
+
+use accnoc::clock::PS_PER_US;
+use accnoc::cmp::core::{InvokeSpec, Segment};
+use accnoc::fpga::hwa::table3;
+use accnoc::runtime::NativeCompute;
+use accnoc::sim::system::{System, SystemConfig};
+
+fn main() {
+    // 1. System: paper defaults + the first eight Table 3 HWAs.
+    let cfg = SystemConfig::paper(table3().into_iter().take(8).collect());
+    let mut sys = System::new(cfg);
+    // Functional compute (swap in PjrtCompute for artifact-backed math —
+    // see examples/end_to_end.rs).
+    sys.fabric.set_compute(Box::new(NativeCompute::default()));
+
+    // 2. Program processor 0: some software work, then a D_HWA_invoke of
+    // the GSM autocorrelation HWA (id 5), then more software.
+    // GSM samples travel as f32 bit patterns on the wire.
+    let frame: Vec<u32> = (0..8).map(|i| (i as f32 * 100.0).to_bits()).collect();
+    sys.load_program(
+        0,
+        vec![
+            Segment::Compute(2_000),
+            Segment::Invoke(InvokeSpec::direct(5, frame, 8)),
+            Segment::Compute(1_000),
+        ],
+    );
+
+    // 3. Run until the program finishes.
+    assert!(sys.run_until_done(10_000 * PS_PER_US), "system finished");
+
+    // 4. Report.
+    let r = sys.procs[0].records[0];
+    println!("quickstart: one GSM invocation through the full system");
+    println!("  request sent        @ {:>8} ps", r.t_request);
+    println!(
+        "  grant received      @ {:>8} ps  (+{} ns)",
+        r.t_grant,
+        (r.t_grant - r.t_request) / 1000
+    );
+    println!(
+        "  payload delivered   @ {:>8} ps  (+{} ns)",
+        r.t_payload_done,
+        (r.t_payload_done - r.t_grant) / 1000
+    );
+    println!(
+        "  result complete     @ {:>8} ps  (+{} ns)",
+        r.t_result_last,
+        (r.t_result_last - r.t_payload_done) / 1000
+    );
+    println!(
+        "  total invocation latency: {:.3} µs",
+        r.total() as f64 / PS_PER_US as f64
+    );
+    let autocorr: Vec<f32> = sys.procs[0]
+        .last_result
+        .iter()
+        .map(|w| f32::from_bits(*w))
+        .collect();
+    println!("  autocorrelation lags: {autocorr:?}");
+    println!("  tasks executed on FPGA: {}", sys.fabric.tasks_executed());
+}

@@ -1,0 +1,29 @@
+//! Throughput sweep (paper §6.4 / Fig. 8): open-loop request-rate sweep
+//! over a chosen workload, printing injection rate, throughput and FPGA
+//! busy fraction per rate point.
+//!
+//!     cargo run --release --example throughput_sweep -- [izigzag|eight|dfdiv] [window_us]
+
+use accnoc::sim::experiments::fig8::{run, Workload};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let workload = match args.first().map(|s| s.as_str()) {
+        Some("eight") => Workload::EightHwa,
+        Some("dfdiv") => Workload::DfdivHwa,
+        _ => Workload::IzigzagHwa,
+    };
+    let window: u64 = args
+        .get(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40);
+    let series = run(workload, 5, window);
+    series.table().print();
+    println!(
+        "max injection {:.2} flits/µs, max throughput {:.2} flits/µs \
+         ({:.1}% below injection)",
+        series.max_injection(),
+        series.max_throughput(),
+        100.0 * (1.0 - series.max_throughput() / series.max_injection())
+    );
+}

@@ -1,0 +1,86 @@
+"""AOT bridge: lower every L2 graph to HLO text for the Rust runtime.
+
+HLO *text* (not ``.serialize()``): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs, per export in model.EXPORTS:
+    artifacts/<name>.hlo.txt     HLO text, lowered with return_tuple=True
+    artifacts/manifest.txt       one line per artifact:
+        <name> | in <dtype>:<d0>x<d1>... , ... | out <dtype>:<dims>...
+
+The manifest is a deliberately trivial line format so the Rust side needs
+no JSON/TOML dependency to parse it.
+
+Usage: (cd python && python -m compile.aot --out-dir ../artifacts)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big literals as ``constant({...})``, which the consuming
+    xla_extension 0.5.1 text parser silently reads as zeros — the kernels'
+    permutation tables and DCT basis would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "elided constants would decode as zeros"
+    return text
+
+
+def _sig(avals) -> str:
+    parts = []
+    for a in avals:
+        dims = "x".join(str(d) for d in a.shape)
+        parts.append(f"{a.dtype}:{dims}")
+    return ",".join(parts)
+
+
+def export_one(name: str, out_dir: str) -> str:
+    fn, args = model.EXPORTS[name]
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *args)
+    return f"{name} | in {_sig(args)} | out {_sig(outs)}"
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--only", nargs="*", default=None, help="subset of export names"
+    )
+    ns = parser.parse_args()
+    os.makedirs(ns.out_dir, exist_ok=True)
+    names = ns.only or sorted(model.EXPORTS)
+    manifest_lines = []
+    for name in names:
+        line = export_one(name, ns.out_dir)
+        manifest_lines.append(line)
+        print(f"exported {line}")
+    with open(os.path.join(ns.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(names)} artifacts to {ns.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""L1: Pallas kernels for the paper's accelerator datapaths.
+
+Each module holds one kernel mirroring one of the paper's HLS-derived HWAs
+(Table 3); ``chain`` is the fused analogue of the HWA chaining mechanism.
+``ref`` holds the pure-jnp oracles used by pytest and by the Rust-side
+golden checks.
+"""
+
+from . import chain, common, idct, iquantize, izigzag, ref, shiftbound
+from .zigzag_table import INV_ZIGZAG, ZIGZAG
+
+__all__ = [
+    "chain",
+    "common",
+    "idct",
+    "iquantize",
+    "izigzag",
+    "ref",
+    "shiftbound",
+    "INV_ZIGZAG",
+    "ZIGZAG",
+]

@@ -1,0 +1,65 @@
+"""Pallas kernel: fused JPEG decode chain (the paper's chaining mechanism).
+
+The paper's HWA chaining keeps intermediates in on-fabric chaining buffers
+so a 4-deep chain (izigzag -> iquantize -> idct -> shiftbound) never ships
+data back over the NoC between stages (§4.2 B.3). The TPU restatement of
+that insight: fuse all four stages into ONE pallas_call, so intermediates
+stay VMEM-resident between stages and only the scan-order coefficients in
+and the bounded pixels out cross HBM. This is the L1 analogue of the
+chaining-buffer datapath; the unfused per-stage kernels are the analogue of
+depth-0 (no chaining), where every stage round-trips through HBM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .ref import dct_basis_f32
+from .zigzag_table import INV_ZIGZAG
+
+_C = dct_basis_f32()
+
+
+def _chain_kernel(scan_ref, q_ref, perm_ref, c_ref, out_ref):
+    perm = perm_ref[...]
+    c = c_ref[...]
+    bb = scan_ref.shape[0]
+    # Stage 1: inverse zigzag (VMEM gather).
+    coef = scan_ref[...][:, perm]
+    # Stage 2: dequantize (VPU multiply).
+    deq = (coef * q_ref[...][None, :]).astype(jnp.float32)
+    # Stage 3: 2-D IDCT as two MXU matmuls (see idct.py for the algebra).
+    x = deq.reshape(bb, 8, 8)
+    y1 = (x.reshape(bb * 8, 8) @ c).reshape(bb, 8, 8)
+    y2 = (y1.transpose(0, 2, 1).reshape(bb * 8, 8) @ c).reshape(bb, 8, 8)
+    spatial = y2.transpose(0, 2, 1).reshape(bb, 64)
+    # Stage 4: level shift + saturate.
+    out_ref[...] = jnp.clip(jnp.round(spatial) + 128.0, 0.0, 255.0).astype(
+        jnp.int32
+    )
+
+
+def jpeg_chain(scan: jnp.ndarray, qtable: jnp.ndarray) -> jnp.ndarray:
+    """Fused decode of (B, 64) int32 scan-order coefficients -> pixels."""
+    if scan.ndim != 2 or scan.shape[1] != 64:
+        raise ValueError(f"expected (B, 64), got {scan.shape}")
+    if qtable.shape != (64,):
+        raise ValueError(f"expected (64,) qtable, got {qtable.shape}")
+    b = scan.shape[0]
+    steps, padded = common.grid_for(b)
+    x = jnp.pad(scan, ((0, padded - b), (0, 0)))
+    out = common.block_call(
+        _chain_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded, 64), jnp.int32),
+        in_specs=[
+            common.batch_block_spec(common.BLOCK_B, 64),
+            common.whole_spec(64),
+            common.whole_spec(64),
+            common.whole_spec(8, 8),
+        ],
+        out_specs=common.batch_block_spec(common.BLOCK_B, 64),
+        grid=(steps,),
+    )(x, qtable.astype(scan.dtype), jnp.asarray(INV_ZIGZAG), jnp.asarray(_C))
+    return out[:b]

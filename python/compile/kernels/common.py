@@ -1,0 +1,82 @@
+"""Shared Pallas helpers: tiling policy and pallas_call wrappers.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's HWAs are
+FPGA datapaths fed by BRAM FIFOs. On a TPU-shaped target the analogue is a
+grid of block programs whose working set lives in VMEM. All JPEG-chain
+kernels tile the batch dimension with ``BLOCK_B`` blocks per grid step so
+that every per-step buffer is a few hundred KiB — comfortably inside the
+~16 MiB VMEM of a modern TPU core — while keeping the lane dimension at 64
+(8x8 block) or a multiple of 128 after reshape.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels are lowered through the Pallas interpreter. The
+BlockSpec structure is written exactly as it would be for real TPU
+compilation; only the backend differs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+# Blocks of 8x8 coefficients processed per grid step. 256 blocks x 64 lanes
+# x 4 B = 64 KiB per operand buffer; the fused chain keeps ~4 such buffers
+# live (~256 KiB) — far below VMEM capacity, large enough to saturate the
+# VPU/MXU pipes.
+BLOCK_B = 256
+
+INTERPRET = True
+
+
+def grid_for(batch: int, block_b: int = BLOCK_B) -> tuple[int, int]:
+    """Return (grid_steps, padded_batch) covering `batch` blocks."""
+    if batch <= 0:
+        raise ValueError(f"batch must be positive, got {batch}")
+    steps = -(-batch // block_b)
+    return steps, steps * block_b
+
+
+def block_call(kernel, out_shape, in_specs, out_specs, grid):
+    """Thin pallas_call wrapper pinning the interpret-mode policy."""
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        grid=grid,
+        interpret=INTERPRET,
+    )
+
+
+def batch_block_spec(block_b: int, *rest: int) -> pl.BlockSpec:
+    """BlockSpec tiling dim 0 by `block_b`, keeping trailing dims whole.
+
+    Expresses the HBM->VMEM schedule: grid step i owns rows
+    [i*block_b, (i+1)*block_b) — the streaming analogue of the paper's
+    per-channel task-buffer FIFO fills.
+    """
+    shape = (block_b, *rest)
+    ndim = len(shape)
+
+    def index_map(i):
+        return (i,) + (0,) * (ndim - 1)
+
+    return pl.BlockSpec(shape, index_map)
+
+
+def whole_spec(*shape: int) -> pl.BlockSpec:
+    """BlockSpec for a small operand replicated to every grid step
+    (quantization table — the FPGA's coefficient ROM analogue)."""
+    ndim = len(shape)
+
+    def index_map(i):
+        return (0,) * ndim
+
+    return pl.BlockSpec(tuple(shape), index_map)
+
+
+def jit_kernel(fn):
+    """jax.jit with static batch handled by shape, kept for symmetry."""
+    return functools.wraps(fn)(jax.jit(fn))

@@ -1,0 +1,53 @@
+"""Pallas kernel: 2-D 8x8 inverse DCT (the paper's Idct HWA).
+
+The FPGA implementation is a DSP MAC array (14552 LUTs / 368 DSPs,
+Table 3) streaming row-column butterflies. Rather than port the butterfly
+structure mechanically, we restate the computation for the MXU systolic
+array: the separable 2-D IDCT of a block X is ``C.T @ X @ C``, i.e. two
+batched 8x8 matmuls. A (BLOCK_B, 8, 8) tile is reshaped to (BLOCK_B*8, 8)
+so each matmul is a single tall-skinny MXU op against the constant 8x8
+basis held in VMEM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .ref import dct_basis_f32
+
+_C = dct_basis_f32()
+
+
+def _idct_kernel(x_ref, c_ref, out_ref):
+    c = c_ref[...]
+    x = x_ref[...].astype(jnp.float32)  # (BLOCK_B, 8, 8)
+    bb = x.shape[0]
+    # rows: Y1[b] = C.T @ X[b]  ==  (BLOCK_B*8, 8) @ C with X transposed in
+    # the lane pair — express both passes as reshaped 2-D matmuls so the
+    # lowering is two dot ops, not a batched loop.
+    y1 = (x.reshape(bb * 8, 8) @ c).reshape(bb, 8, 8)  # X @ C
+    y1t = y1.transpose(0, 2, 1)  # (X @ C)^T = C.T @ X^T ... build C.T X C:
+    y2 = (y1t.reshape(bb * 8, 8) @ c).reshape(bb, 8, 8)  # C.T X C, transposed
+    out_ref[...] = y2.transpose(0, 2, 1)
+
+
+def idct8x8(blocks: jnp.ndarray) -> jnp.ndarray:
+    """2-D IDCT over (B, 8, 8) float32 blocks."""
+    if blocks.ndim != 3 or blocks.shape[1:] != (8, 8):
+        raise ValueError(f"expected (B, 8, 8), got {blocks.shape}")
+    b = blocks.shape[0]
+    steps, padded = common.grid_for(b)
+    x = jnp.pad(blocks.astype(jnp.float32), ((0, padded - b), (0, 0), (0, 0)))
+    out = common.block_call(
+        _idct_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded, 8, 8), jnp.float32),
+        in_specs=[
+            common.batch_block_spec(common.BLOCK_B, 8, 8),
+            common.whole_spec(8, 8),
+        ],
+        out_specs=common.batch_block_spec(common.BLOCK_B, 8, 8),
+        grid=(steps,),
+    )(x, jnp.asarray(_C))
+    return out[:b]

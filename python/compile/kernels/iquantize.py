@@ -1,0 +1,41 @@
+"""Pallas kernel: inverse quantization (the paper's Iquantize HWA).
+
+The FPGA implementation multiplies each of 64 coefficients by a per-band
+step size held in registers (608 LUTs / 76 DSPs, Table 3). The TPU-shaped
+analogue is a broadcast elementwise multiply on the VPU with the (64,)
+quantization table resident in VMEM and replicated to every grid step
+(``whole_spec`` — the coefficient-ROM analogue).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def _iquantize_kernel(coef_ref, q_ref, out_ref):
+    out_ref[...] = coef_ref[...] * q_ref[...][None, :]
+
+
+def iquantize(coef: jnp.ndarray, qtable: jnp.ndarray) -> jnp.ndarray:
+    """Dequantize (B, 64) int32 coefficients with a (64,) int32 table."""
+    if coef.ndim != 2 or coef.shape[1] != 64:
+        raise ValueError(f"expected (B, 64), got {coef.shape}")
+    if qtable.shape != (64,):
+        raise ValueError(f"expected (64,) qtable, got {qtable.shape}")
+    b = coef.shape[0]
+    steps, padded = common.grid_for(b)
+    x = jnp.pad(coef, ((0, padded - b), (0, 0)))
+    out = common.block_call(
+        _iquantize_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded, 64), coef.dtype),
+        in_specs=[
+            common.batch_block_spec(common.BLOCK_B, 64),
+            common.whole_spec(64),
+        ],
+        out_specs=common.batch_block_spec(common.BLOCK_B, 64),
+        grid=(steps,),
+    )(x, qtable.astype(coef.dtype))
+    return out[:b]

@@ -1,0 +1,45 @@
+"""Pallas kernel: inverse zigzag scan (the paper's Izigzag HWA).
+
+The FPGA implementation is a wired 64-entry permutation ROM (100 LUTs,
+Table 3) with one-cycle latency. The TPU-shaped analogue is a vectorized
+gather along the lane dimension with the permutation held as a constant in
+VMEM: ``natural[:, r] = scan[:, INV_ZIGZAG[r]]`` for a (BLOCK_B, 64) tile.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .zigzag_table import INV_ZIGZAG
+
+
+def _izigzag_kernel(scan_ref, perm_ref, out_ref):
+    # Pallas kernels may not capture array constants; the permutation ROM is
+    # passed as a (64,) int32 operand replicated to every grid step.
+    out_ref[...] = scan_ref[...][:, perm_ref[...]]
+
+
+def izigzag(scan: jnp.ndarray) -> jnp.ndarray:
+    """Inverse zigzag over (B, 64) int32 coefficients, B multiple-free.
+
+    B is padded up to a BLOCK_B multiple internally; callers receive
+    exactly B rows back.
+    """
+    if scan.ndim != 2 or scan.shape[1] != 64:
+        raise ValueError(f"expected (B, 64), got {scan.shape}")
+    b = scan.shape[0]
+    steps, padded = common.grid_for(b)
+    x = jnp.pad(scan, ((0, padded - b), (0, 0)))
+    out = common.block_call(
+        _izigzag_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded, 64), scan.dtype),
+        in_specs=[
+            common.batch_block_spec(common.BLOCK_B, 64),
+            common.whole_spec(64),
+        ],
+        out_specs=common.batch_block_spec(common.BLOCK_B, 64),
+        grid=(steps,),
+    )(x, jnp.asarray(INV_ZIGZAG))
+    return out[:b]

@@ -1,0 +1,112 @@
+"""Pure-jnp oracles for every accelerator kernel.
+
+These are the correctness references the Pallas kernels (and, transitively,
+the Rust runtime's PJRT executions) are validated against. They mirror the
+functional behaviour of the paper's HLS-derived HWAs for the JPEG
+decompression chain (Section 6.6) and the df*/GSM benchmarks (Table 3).
+
+Everything here is plain jax.numpy — no pallas — so it lowers to ordinary
+HLO and doubles as a numerically independent implementation.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .zigzag_table import INV_ZIGZAG
+
+# ---------------------------------------------------------------------------
+# IDCT basis
+# ---------------------------------------------------------------------------
+
+
+def dct_basis_f32() -> np.ndarray:
+    """8x8 DCT-II basis matrix C with C[k, n] = s(k) * cos((2n+1)k pi / 16).
+
+    Forward 2-D DCT of block X is  C @ X @ C.T ; the inverse (what the Idct
+    HWA computes) is  C.T @ Y @ C.
+    """
+    k = np.arange(8).reshape(8, 1).astype(np.float64)
+    n = np.arange(8).reshape(1, 8).astype(np.float64)
+    c = np.cos((2.0 * n + 1.0) * k * np.pi / 16.0)
+    scale = np.full((8, 1), np.sqrt(2.0 / 8.0))
+    scale[0, 0] = np.sqrt(1.0 / 8.0)
+    return (scale * c).astype(np.float32)
+
+
+_C = dct_basis_f32()
+
+
+# ---------------------------------------------------------------------------
+# JPEG chain stages (paper §6.6: Izigzag -> Iquantize -> Idct -> Shiftbound)
+# ---------------------------------------------------------------------------
+
+
+def izigzag(scan: jnp.ndarray) -> jnp.ndarray:
+    """Inverse zigzag: (B, 64) coefficients in scan order -> raster order."""
+    return scan[..., jnp.asarray(INV_ZIGZAG)]
+
+
+def iquantize(coef: jnp.ndarray, qtable: jnp.ndarray) -> jnp.ndarray:
+    """Dequantize: elementwise multiply by the (64,) quantization table."""
+    return coef * qtable.astype(coef.dtype)
+
+
+def idct8x8(blocks: jnp.ndarray) -> jnp.ndarray:
+    """2-D inverse DCT over (B, 8, 8) float32 blocks: C.T @ X @ C."""
+    c = jnp.asarray(_C)
+    return jnp.einsum("ij,bjk,kl->bil", c.T, blocks.astype(jnp.float32), c)
+
+
+def shiftbound(pixels: jnp.ndarray) -> jnp.ndarray:
+    """Level shift (+128) then clamp to [0, 255], returning int32."""
+    shifted = jnp.round(pixels) + 128.0
+    return jnp.clip(shifted, 0.0, 255.0).astype(jnp.int32)
+
+
+def jpeg_chain(scan: jnp.ndarray, qtable: jnp.ndarray) -> jnp.ndarray:
+    """Full decode chain on (B, 64) int32 scan-order coefficients."""
+    coef = izigzag(scan)
+    deq = iquantize(coef, qtable)
+    spatial = idct8x8(deq.reshape(-1, 8, 8).astype(jnp.float32))
+    return shiftbound(spatial).reshape(scan.shape)
+
+
+# ---------------------------------------------------------------------------
+# Floating-point micro-benchmarks (Table 3: Dfadd / Dfmul / Dfdiv)
+# ---------------------------------------------------------------------------
+
+
+def dfadd(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a + b
+
+
+def dfmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a * b
+
+
+def dfdiv(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Division with the CHStone convention of guarding zero divisors."""
+    safe = jnp.where(b == 0.0, jnp.float32(1.0), b)
+    return a / safe
+
+
+# ---------------------------------------------------------------------------
+# GSM front-end (Table 3: Gsm — LPC short-term analysis autocorrelation)
+# ---------------------------------------------------------------------------
+
+
+def gsm_autocorr(frame: jnp.ndarray, lags: int = 9) -> jnp.ndarray:
+    """Autocorrelation of a (B, 160) int16-valued frame for `lags` lags.
+
+    The GSM 06.10 short-term analysis computes autocorrelation up to lag 8 —
+    the computational hot loop the paper's Gsm HWA accelerates.
+    """
+    x = frame.astype(jnp.float32)
+    n = x.shape[-1]
+
+    def corr(k):
+        return jnp.sum(x[..., : n - k] * x[..., k:], axis=-1)
+
+    return jnp.stack([corr(k) for k in range(lags)], axis=-1)

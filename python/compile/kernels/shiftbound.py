@@ -1,0 +1,35 @@
+"""Pallas kernel: level shift + bound (the paper's Shiftbound HWA).
+
+The FPGA implementation adds the JPEG level shift (+128) and saturates to
+[0, 255] (7133 LUTs, Table 3). TPU-shaped analogue: fused VPU elementwise
+round/add/clip over the same (BLOCK_B, 64) tiling as the rest of the chain.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def _shiftbound_kernel(x_ref, out_ref):
+    shifted = jnp.round(x_ref[...]) + 128.0
+    out_ref[...] = jnp.clip(shifted, 0.0, 255.0).astype(jnp.int32)
+
+
+def shiftbound(pixels: jnp.ndarray) -> jnp.ndarray:
+    """Shift+clamp (B, 64) float32 IDCT outputs to [0,255] int32 pixels."""
+    if pixels.ndim != 2 or pixels.shape[1] != 64:
+        raise ValueError(f"expected (B, 64), got {pixels.shape}")
+    b = pixels.shape[0]
+    steps, padded = common.grid_for(b)
+    x = jnp.pad(pixels.astype(jnp.float32), ((0, padded - b), (0, 0)))
+    out = common.block_call(
+        _shiftbound_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded, 64), jnp.int32),
+        in_specs=[common.batch_block_spec(common.BLOCK_B, 64)],
+        out_specs=common.batch_block_spec(common.BLOCK_B, 64),
+        grid=(steps,),
+    )(x)
+    return out[:b]

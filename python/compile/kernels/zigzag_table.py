@@ -1,0 +1,35 @@
+"""JPEG 8x8 zigzag scan tables.
+
+``ZIGZAG[i]`` is the raster index of the i-th coefficient in zigzag scan
+order (the order coefficients arrive in the entropy-coded stream).
+``INV_ZIGZAG[r]`` is the zigzag position holding raster index ``r``; the
+inverse-zigzag HWA computes ``natural[r] = scan[INV_ZIGZAG[r]]``.
+
+These are the standard ITU-T T.81 tables; the paper's Izigzag HWA (Table 3,
+100 LUTs) implements exactly this permutation as a wired ROM.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Raster index visited at each zigzag step (ITU-T T.81 Figure 5).
+ZIGZAG = np.array(
+    [
+        0, 1, 8, 16, 9, 2, 3, 10,
+        17, 24, 32, 25, 18, 11, 4, 5,
+        12, 19, 26, 33, 40, 48, 41, 34,
+        27, 20, 13, 6, 7, 14, 21, 28,
+        35, 42, 49, 56, 57, 50, 43, 36,
+        29, 22, 15, 23, 30, 37, 44, 51,
+        58, 59, 52, 45, 38, 31, 39, 46,
+        53, 60, 61, 54, 47, 55, 62, 63,
+    ],
+    dtype=np.int32,
+)
+
+# INV_ZIGZAG[ZIGZAG[i]] == i
+INV_ZIGZAG = np.argsort(ZIGZAG).astype(np.int32)
+
+assert (ZIGZAG[INV_ZIGZAG] == np.arange(64)).all()
+assert (INV_ZIGZAG[ZIGZAG] == np.arange(64)).all()

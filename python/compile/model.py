@@ -1,0 +1,136 @@
+"""L2: JAX compute graphs for every functional HWA, built on the L1 kernels.
+
+Each exported entry corresponds to one hardware accelerator the Rust
+simulator can invoke through PJRT, plus the fused chain (the paper's
+chaining mechanism restated as a single kernel — see kernels/chain.py).
+
+Shapes are fixed at AOT time (PJRT executables are monomorphic): the batch
+size per invocation is ``INVOKE_BLOCKS`` 8x8 blocks for the JPEG chain and
+``INVOKE_LANES`` lanes for the df* ops. The Rust runtime pads/splits tasks
+to these shapes; the manifest records them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import chain as chain_k
+from .kernels import idct as idct_k
+from .kernels import iquantize as iquantize_k
+from .kernels import izigzag as izigzag_k
+from .kernels import ref
+from .kernels import shiftbound as shiftbound_k
+
+# Blocks of 64 coefficients per HWA invocation. 64 blocks x 64 coeffs x 4 B
+# = 16 KiB per direction — a realistic task-buffer fill (the paper's JPEG
+# payload is 18 flits of 61-bit payload per call; we batch more per PJRT
+# call and let the simulator account flit-level timing independently).
+INVOKE_BLOCKS = 64
+# Lanes per df* invocation.
+INVOKE_LANES = 256
+# Frames per GSM invocation (160 samples each).
+INVOKE_FRAMES = 8
+
+
+# --------------------------------------------------------------------------
+# Per-stage HWA graphs (chaining depth 0: each stage is its own PJRT call)
+# --------------------------------------------------------------------------
+
+
+def hwa_izigzag(scan):
+    return (izigzag_k.izigzag(scan),)
+
+
+def hwa_iquantize(coef, qtable):
+    return (iquantize_k.iquantize(coef, qtable),)
+
+
+def hwa_idct(blocks):
+    return (idct_k.idct8x8(blocks),)
+
+
+def hwa_shiftbound(pixels):
+    return (shiftbound_k.shiftbound(pixels),)
+
+
+# --------------------------------------------------------------------------
+# Fused chain (chaining depth 3) and staged composition for depths 1..2
+# --------------------------------------------------------------------------
+
+
+def hwa_jpeg_chain(scan, qtable):
+    return (chain_k.jpeg_chain(scan, qtable),)
+
+
+def hwa_jpeg_depth1(scan, qtable):
+    """izigzag+iquantize fused (chaining depth 1), rest separate."""
+    coef = izigzag_k.izigzag(scan)
+    return (iquantize_k.iquantize(coef, qtable),)
+
+
+def hwa_jpeg_depth2(scan, qtable):
+    """izigzag+iquantize+idct fused (chaining depth 2)."""
+    coef = izigzag_k.izigzag(scan)
+    deq = iquantize_k.iquantize(coef, qtable).astype(jnp.float32)
+    return (idct_k.idct8x8(deq.reshape(-1, 8, 8)),)
+
+
+# --------------------------------------------------------------------------
+# df* / GSM HWAs (plain-jnp L2 graphs; no Pallas hot-spot needed)
+# --------------------------------------------------------------------------
+
+
+def hwa_dfadd(a, b):
+    return (ref.dfadd(a, b),)
+
+
+def hwa_dfmul(a, b):
+    return (ref.dfmul(a, b),)
+
+
+def hwa_dfdiv(a, b):
+    return (ref.dfdiv(a, b),)
+
+
+def hwa_gsm(frames):
+    return (ref.gsm_autocorr(frames),)
+
+
+# --------------------------------------------------------------------------
+# Export table: name -> (fn, example input ShapeDtypeStructs)
+# --------------------------------------------------------------------------
+
+_I32 = jnp.int32
+_F32 = jnp.float32
+
+
+def _s(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+EXPORTS = {
+    "izigzag": (hwa_izigzag, (_s((INVOKE_BLOCKS, 64), _I32),)),
+    "iquantize": (
+        hwa_iquantize,
+        (_s((INVOKE_BLOCKS, 64), _I32), _s((64,), _I32)),
+    ),
+    "idct": (hwa_idct, (_s((INVOKE_BLOCKS, 8, 8), _F32),)),
+    "shiftbound": (hwa_shiftbound, (_s((INVOKE_BLOCKS, 64), _F32),)),
+    "jpeg_chain": (
+        hwa_jpeg_chain,
+        (_s((INVOKE_BLOCKS, 64), _I32), _s((64,), _I32)),
+    ),
+    "jpeg_depth1": (
+        hwa_jpeg_depth1,
+        (_s((INVOKE_BLOCKS, 64), _I32), _s((64,), _I32)),
+    ),
+    "jpeg_depth2": (
+        hwa_jpeg_depth2,
+        (_s((INVOKE_BLOCKS, 64), _I32), _s((64,), _I32)),
+    ),
+    "dfadd": (hwa_dfadd, (_s((INVOKE_LANES,), _F32), _s((INVOKE_LANES,), _F32))),
+    "dfmul": (hwa_dfmul, (_s((INVOKE_LANES,), _F32), _s((INVOKE_LANES,), _F32))),
+    "dfdiv": (hwa_dfdiv, (_s((INVOKE_LANES,), _F32), _s((INVOKE_LANES,), _F32))),
+    "gsm": (hwa_gsm, (_s((INVOKE_FRAMES, 160), _F32),)),
+}

@@ -1,0 +1,190 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against kernels.ref.
+
+This is the CORE correctness signal for L1: the same artifacts the Rust
+runtime executes are lowered from these kernels, so exactness here plus the
+Rust-side golden tests closes the loop end to end.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import chain, common, idct, iquantize, izigzag, ref, shiftbound
+from compile.kernels.zigzag_table import INV_ZIGZAG, ZIGZAG
+
+RNG = np.random.default_rng(1234)
+
+
+def coeffs(b: int) -> jnp.ndarray:
+    return jnp.asarray(RNG.integers(-1024, 1024, (b, 64), dtype=np.int32))
+
+
+def qtable() -> jnp.ndarray:
+    return jnp.asarray(RNG.integers(1, 64, (64,), dtype=np.int32))
+
+
+BATCHES = [1, 7, 64, common.BLOCK_B, common.BLOCK_B + 1, 1000]
+
+
+class TestZigzagTable:
+    def test_inverse_relation(self):
+        assert (ZIGZAG[INV_ZIGZAG] == np.arange(64)).all()
+        assert (INV_ZIGZAG[ZIGZAG] == np.arange(64)).all()
+
+    def test_is_permutation(self):
+        assert sorted(ZIGZAG.tolist()) == list(range(64))
+
+    def test_known_prefix(self):
+        # First diagonal sweep of the T.81 scan.
+        assert ZIGZAG[:6].tolist() == [0, 1, 8, 16, 9, 2]
+
+
+class TestIzigzag:
+    @pytest.mark.parametrize("b", BATCHES)
+    def test_matches_ref(self, b):
+        x = coeffs(b)
+        np.testing.assert_array_equal(izigzag.izigzag(x), ref.izigzag(x))
+
+    def test_permutation_semantics(self):
+        # Scan position i must land at raster position ZIGZAG[i].
+        x = jnp.arange(64, dtype=jnp.int32)[None, :]
+        out = np.asarray(izigzag.izigzag(x))[0]
+        for i in range(64):
+            assert out[ZIGZAG[i]] == i
+
+    def test_rejects_bad_shape(self):
+        with pytest.raises(ValueError):
+            izigzag.izigzag(jnp.zeros((4, 63), jnp.int32))
+
+
+class TestIquantize:
+    @pytest.mark.parametrize("b", BATCHES)
+    def test_matches_ref(self, b):
+        x, q = coeffs(b), qtable()
+        np.testing.assert_array_equal(
+            iquantize.iquantize(x, q), ref.iquantize(x, q)
+        )
+
+    def test_identity_table(self):
+        x = coeffs(16)
+        ones = jnp.ones((64,), jnp.int32)
+        np.testing.assert_array_equal(iquantize.iquantize(x, ones), x)
+
+    def test_rejects_bad_qtable(self):
+        with pytest.raises(ValueError):
+            iquantize.iquantize(coeffs(4), jnp.ones((63,), jnp.int32))
+
+
+class TestIdct:
+    @pytest.mark.parametrize("b", BATCHES)
+    def test_matches_ref(self, b):
+        x = jnp.asarray(RNG.normal(0, 128, (b, 8, 8)).astype(np.float32))
+        np.testing.assert_allclose(
+            idct.idct8x8(x), ref.idct8x8(x), rtol=1e-4, atol=1e-3
+        )
+
+    def test_dc_only_block(self):
+        # A DC-only block must decode to a constant block of DC/8.
+        x = np.zeros((1, 8, 8), np.float32)
+        x[0, 0, 0] = 800.0
+        out = np.asarray(idct.idct8x8(jnp.asarray(x)))
+        np.testing.assert_allclose(out, np.full((1, 8, 8), 100.0), atol=1e-3)
+
+    def test_energy_preservation(self):
+        # Orthonormal basis: Frobenius norm is preserved by the 2-D IDCT.
+        x = jnp.asarray(RNG.normal(0, 64, (5, 8, 8)).astype(np.float32))
+        out = idct.idct8x8(x)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(out), axis=(1, 2)),
+            np.linalg.norm(np.asarray(x), axis=(1, 2)),
+            rtol=1e-4,
+        )
+
+    def test_basis_orthonormal(self):
+        c = ref.dct_basis_f32()
+        np.testing.assert_allclose(c @ c.T, np.eye(8), atol=1e-6)
+
+
+class TestShiftbound:
+    @pytest.mark.parametrize("b", BATCHES)
+    def test_matches_ref(self, b):
+        x = jnp.asarray(RNG.normal(0, 200, (b, 64)).astype(np.float32))
+        np.testing.assert_array_equal(
+            shiftbound.shiftbound(x), ref.shiftbound(x)
+        )
+
+    def test_saturation(self):
+        x = jnp.asarray([[1e6, -1e6, 0.0, 127.0, -128.0] + [0.0] * 59],
+                        dtype=jnp.float32)
+        out = np.asarray(shiftbound.shiftbound(x))[0]
+        assert out[0] == 255 and out[1] == 0
+        assert out[2] == 128 and out[3] == 255 and out[4] == 0
+
+    def test_output_range(self):
+        x = jnp.asarray(RNG.normal(0, 500, (32, 64)).astype(np.float32))
+        out = np.asarray(shiftbound.shiftbound(x))
+        assert out.min() >= 0 and out.max() <= 255
+
+
+class TestChain:
+    @pytest.mark.parametrize("b", BATCHES)
+    def test_matches_ref(self, b):
+        # |diff| <= 1 pixel: float summation-order at rounding boundaries
+        # (ITU-T T.83 IDCT conformance tolerance).
+        x, q = coeffs(b), qtable()
+        got = np.asarray(chain.jpeg_chain(x, q)).astype(np.int64)
+        want = np.asarray(ref.jpeg_chain(x, q)).astype(np.int64)
+        assert np.abs(got - want).max() <= 1
+
+    def test_fused_equals_staged_kernels(self):
+        # The chaining-depth-3 fused kernel must equal running the four
+        # per-stage kernels (chaining depth 0) — the invariant the paper's
+        # chaining mechanism relies on. Both paths use the matmul-form IDCT
+        # so this comparison is exact.
+        x, q = coeffs(50), qtable()
+        staged = shiftbound.shiftbound(
+            idct.idct8x8(
+                iquantize.iquantize(izigzag.izigzag(x), q)
+                .astype(jnp.float32)
+                .reshape(-1, 8, 8)
+            ).reshape(-1, 64)
+        )
+        np.testing.assert_array_equal(chain.jpeg_chain(x, q), staged)
+
+    def test_zero_coefficients_decode_gray(self):
+        x = jnp.zeros((4, 64), jnp.int32)
+        out = np.asarray(chain.jpeg_chain(x, qtable()))
+        np.testing.assert_array_equal(out, np.full((4, 64), 128))
+
+
+class TestDfOps:
+    def test_dfadd(self):
+        a = jnp.asarray(RNG.normal(size=256).astype(np.float32))
+        b = jnp.asarray(RNG.normal(size=256).astype(np.float32))
+        np.testing.assert_allclose(ref.dfadd(a, b), np.asarray(a) + np.asarray(b))
+
+    def test_dfdiv_guards_zero(self):
+        a = jnp.ones((4,), jnp.float32)
+        b = jnp.asarray([2.0, 0.0, 4.0, 0.0], jnp.float32)
+        out = np.asarray(ref.dfdiv(a, b))
+        assert np.isfinite(out).all()
+        np.testing.assert_allclose(out, [0.5, 1.0, 0.25, 1.0])
+
+
+class TestGsm:
+    def test_lag0_is_energy(self):
+        x = jnp.asarray(RNG.integers(-4096, 4096, (3, 160)).astype(np.float32))
+        out = np.asarray(ref.gsm_autocorr(x))
+        np.testing.assert_allclose(
+            out[:, 0], (np.asarray(x) ** 2).sum(-1), rtol=1e-5
+        )
+
+    def test_symmetric_signal(self):
+        # Constant signal: corr(k) = (160-k) * v^2
+        x = jnp.full((1, 160), 3.0, jnp.float32)
+        out = np.asarray(ref.gsm_autocorr(x))[0]
+        np.testing.assert_allclose(
+            out, [(160 - k) * 9.0 for k in range(9)], rtol=1e-6
+        )

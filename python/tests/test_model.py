@@ -1,0 +1,109 @@
+"""L2 model and AOT export tests: shapes, composition, HLO round-trip."""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(99)
+
+
+def _example_args(name):
+    _, specs = model.EXPORTS[name]
+    out = []
+    for s in specs:
+        if np.issubdtype(s.dtype, np.integer):
+            out.append(jnp.asarray(
+                RNG.integers(1, 64, s.shape).astype(s.dtype)))
+        else:
+            out.append(jnp.asarray(
+                RNG.normal(0, 32, s.shape).astype(s.dtype)))
+    return tuple(out)
+
+
+class TestExports:
+    @pytest.mark.parametrize("name", sorted(model.EXPORTS))
+    def test_runs_and_returns_tuple(self, name):
+        fn, _ = model.EXPORTS[name]
+        out = fn(*_example_args(name))
+        assert isinstance(out, tuple) and len(out) == 1
+
+    @pytest.mark.parametrize("name", sorted(model.EXPORTS))
+    def test_eval_shape_matches_execution(self, name):
+        fn, specs = model.EXPORTS[name]
+        args = _example_args(name)
+        shaped = jax.eval_shape(fn, *specs)
+        out = fn(*args)
+        for s, o in zip(jax.tree.leaves(shaped), jax.tree.leaves(out)):
+            assert s.shape == o.shape and s.dtype == o.dtype
+
+
+class TestChainDepthModels:
+    """Depth-k fused graphs must equal the staged oracle compositions."""
+
+    def setup_method(self):
+        self.scan = jnp.asarray(
+            RNG.integers(-512, 512, (model.INVOKE_BLOCKS, 64), dtype=np.int32)
+        )
+        self.q = jnp.asarray(RNG.integers(1, 32, (64,), dtype=np.int32))
+
+    def test_depth1(self):
+        (got,) = model.hwa_jpeg_depth1(self.scan, self.q)
+        want = ref.iquantize(ref.izigzag(self.scan), self.q)
+        np.testing.assert_array_equal(got, want)
+
+    def test_depth2(self):
+        (got,) = model.hwa_jpeg_depth2(self.scan, self.q)
+        want = ref.idct8x8(
+            ref.iquantize(ref.izigzag(self.scan), self.q)
+            .reshape(-1, 8, 8)
+            .astype(jnp.float32)
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+    def test_depth3_full_chain(self):
+        # |diff| <= 1: summation-order at rounding boundaries (T.83).
+        (got,) = model.hwa_jpeg_chain(self.scan, self.q)
+        want = ref.jpeg_chain(self.scan, self.q)
+        diff = np.abs(np.asarray(got).astype(np.int64) - np.asarray(want))
+        assert diff.max() <= 1
+
+
+class TestAot:
+    def test_export_one_writes_parseable_manifest_line(self):
+        with tempfile.TemporaryDirectory() as d:
+            line = aot.export_one("dfadd", d)
+            name, ins, outs = [p.strip() for p in line.split("|")]
+            assert name == "dfadd"
+            assert ins == "in float32:256,float32:256"
+            assert outs == "out float32:256"
+            text = open(os.path.join(d, "dfadd.hlo.txt")).read()
+            assert "HloModule" in text
+
+    def test_hlo_text_is_valid_for_reparse(self):
+        # Round-trip through the XLA client parser: what the Rust side does.
+        from jax._src.lib import xla_client as xc
+
+        with tempfile.TemporaryDirectory() as d:
+            aot.export_one("izigzag", d)
+            text = open(os.path.join(d, "izigzag.hlo.txt")).read()
+            # ROOT tuple is the return_tuple=True convention the Rust
+            # runtime unwraps.
+            assert "ROOT" in text and "tuple(" in text
+
+    def test_export_is_deterministic(self):
+        with tempfile.TemporaryDirectory() as d1, \
+             tempfile.TemporaryDirectory() as d2:
+            aot.export_one("iquantize", d1)
+            aot.export_one("iquantize", d2)
+            t1 = open(os.path.join(d1, "iquantize.hlo.txt")).read()
+            t2 = open(os.path.join(d2, "iquantize.hlo.txt")).read()
+            assert t1 == t2

@@ -1,0 +1,11 @@
+//! Bench/regenerator for Fig. 10 (chaining-depth speedup).
+use accnoc::sim::experiments::fig10;
+use accnoc::util::bench::{sim_config, Bench};
+
+fn main() {
+    let mut b = Bench::new(sim_config());
+    let mut fig = None;
+    b.run("fig10 depths 0..3", || fig = Some(fig10::run()));
+    fig.unwrap().table().print();
+    b.report("fig10_chaining");
+}

@@ -1,0 +1,14 @@
+//! Bench/regenerator for Figs. 13-14 (three-prototype comparison).
+use accnoc::sim::experiments::fig13_14::{run_fig13, run_fig14};
+use accnoc::util::bench::{sim_config, Bench};
+
+fn main() {
+    let mut b = Bench::new(sim_config());
+    let mut f13 = None;
+    b.run("fig13 3x3 grid", || f13 = Some(run_fig13(3, 15)));
+    f13.unwrap().table().print();
+    let mut f14 = None;
+    b.run("fig14 loaded latency", || f14 = Some(run_fig14()));
+    f14.unwrap().table().print();
+    b.report("fig13_14_baselines");
+}

@@ -1,0 +1,12 @@
+//! Bench/regenerator for Fig. 6 (task-buffer sweep). Prints the paper-style
+//! table and wall-clock cost of the simulation itself.
+use accnoc::sim::experiments::fig6;
+use accnoc::util::bench::{sim_config, Bench};
+
+fn main() {
+    let mut b = Bench::new(sim_config());
+    let mut fig = None;
+    b.run("fig6 full sweep", || fig = Some(fig6::run()));
+    fig.unwrap().table().print();
+    b.report("fig6_task_buffers");
+}

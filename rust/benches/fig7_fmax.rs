@@ -1,0 +1,15 @@
+//! Bench/regenerator for Fig. 7 (fmax across PR/PS strategies).
+use accnoc::sim::experiments::fig7;
+use accnoc::util::bench::{Bench, BenchConfig};
+
+fn main() {
+    let mut b = Bench::new(BenchConfig::default());
+    let mut fig = None;
+    b.run("fig7 synthesis model", || fig = Some(fig7::run()));
+    let fig = fig.unwrap();
+    fig.table().print();
+    fig.component_table().print();
+    let (pr, ps, f) = fig.best();
+    println!("best strategy: {pr}-{ps} at {f:.0} MHz");
+    b.report("fig7_fmax");
+}

@@ -1,0 +1,21 @@
+//! Bench/regenerator for Fig. 8 (a/b/c): injection vs throughput sweeps.
+use accnoc::sim::experiments::fig8::{run, Workload};
+use accnoc::util::bench::{sim_config, Bench};
+
+fn main() {
+    let (warm, win) = (3, 15);
+    let mut b = Bench::new(sim_config());
+    for wl in [Workload::IzigzagHwa, Workload::EightHwa, Workload::DfdivHwa] {
+        let mut s = None;
+        b.run(wl.name(), || s = Some(run(wl, warm, win)));
+        let s = s.unwrap();
+        s.table().print();
+        println!(
+            "{}: max injection {:.2}, max throughput {:.2} flits/µs\n",
+            wl.name(),
+            s.max_injection(),
+            s.max_throughput()
+        );
+    }
+    b.report("fig8_throughput");
+}

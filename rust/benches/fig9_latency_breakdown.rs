@@ -1,0 +1,11 @@
+//! Bench/regenerator for Fig. 9 (GSM/JPEG partition latency breakdown).
+use accnoc::sim::experiments::fig9;
+use accnoc::util::bench::{sim_config, Bench};
+
+fn main() {
+    let mut b = Bench::new(sim_config());
+    let mut fig = None;
+    b.run("fig9 all partitions", || fig = Some(fig9::run()));
+    fig.unwrap().table().print();
+    b.report("fig9_latency_breakdown");
+}

@@ -1,0 +1,86 @@
+//! Hot-path micro-benchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! flit codec, router allocation, mesh stepping, channel stepping, and
+//! whole-system step rate.
+use accnoc::clock::PS_PER_US;
+use accnoc::flit::{HeadFields, PacketBuilder};
+use accnoc::fpga::hwa::{spec_by_name, table3};
+use accnoc::noc::mesh::{Mesh, MeshConfig};
+use accnoc::sim::system::{System, SystemConfig};
+use accnoc::util::bench::{Bench, BenchConfig};
+use accnoc::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bench::new(BenchConfig::default());
+
+    // Flit codec.
+    let h = HeadFields {
+        routing: 88,
+        hwa_id: 13,
+        start_addr: 0xDEAD_BEEF,
+        data_size: 256,
+        ..HeadFields::default()
+    };
+    b.run("flit encode+decode", || {
+        let raw = std::hint::black_box(&h).encode();
+        HeadFields::decode(&raw)
+    });
+
+    // Packet build: 64-word payload (17 flits).
+    let words: Vec<u32> = (0..64).collect();
+    let mut builder = PacketBuilder::new(1);
+    b.run("payload packet build (64w)", || {
+        builder.payload(h, std::hint::black_box(&words)).len()
+    });
+
+    // Mesh under uniform random traffic: cost of 1000 cycles.
+    b.run("mesh 3x3: 1000 cycles @ load", || {
+        let mut mesh = Mesh::new(MeshConfig::default());
+        let mut rng = Pcg32::seeded(5);
+        let mut bld = PacketBuilder::new(2);
+        for _ in 0..1000 {
+            let src = rng.range(0, 9);
+            let dst = rng.range(0, 9);
+            if src != dst {
+                let p = bld.command(HeadFields {
+                    routing: dst as u8,
+                    ..HeadFields::default()
+                });
+                mesh.try_inject(src, p.flits[0]);
+            }
+            mesh.step();
+            for n in 0..9 {
+                while mesh.eject_pop(n).is_some() {}
+            }
+        }
+        mesh.cycles
+    });
+
+    // Full system: simulated µs per wall second (the sim-rate headline).
+    b.run("system: simulate 20 µs izigzag saturation", || {
+        let cfg = SystemConfig::paper(vec![spec_by_name("izigzag").unwrap(); 8]);
+        let mut sys = System::new(cfg);
+        sys.set_open_loop(16.0, 3);
+        sys.run_for(20 * PS_PER_US);
+        sys.fabric.tasks_executed()
+    });
+
+    b.run("system: simulate 20 µs eight-hwa", || {
+        let cfg = SystemConfig::paper(table3().into_iter().take(8).collect());
+        let mut sys = System::new(cfg);
+        sys.set_open_loop(8.0, 3);
+        sys.run_for(20 * PS_PER_US);
+        sys.fabric.tasks_executed()
+    });
+
+    b.report("hotpath_micro");
+    // Derived sim-rate metric for §Perf.
+    if let Some(m) = b
+        .results()
+        .iter()
+        .find(|m| m.name.contains("izigzag saturation"))
+    {
+        let sim_us = 20.0;
+        let rate = sim_us / m.mean.as_secs_f64() / 1e6;
+        println!("sim rate: {rate:.3} simulated-seconds/wall-second x1e-6 (20µs in {:?})", m.mean);
+    }
+}

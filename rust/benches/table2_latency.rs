@@ -1,0 +1,8 @@
+//! Regenerator for Table 2 (component latencies; cycle expressions are
+//! enforced structurally and verified by rust/tests/table2.rs).
+use accnoc::sim::experiments::tables;
+
+fn main() {
+    tables::table2().print();
+    println!("verification: cargo test --test table2");
+}

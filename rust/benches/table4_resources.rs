@@ -1,0 +1,31 @@
+//! Regenerator for Tables 3-4 (resource accounting) plus the §6.6
+//! chaining overhead numbers.
+use accnoc::fpga::iface::pr::PrStrategy;
+use accnoc::fpga::iface::ps::PsStrategy;
+use accnoc::sim::experiments::tables;
+use accnoc::synth::resource::{channel_cost, interface_cost, lut_pct};
+
+fn main() {
+    tables::table3_table().print();
+    tables::table4().print();
+    let with = channel_cost(true);
+    let without = channel_cost(false);
+    println!(
+        "chaining overhead per channel: +{} LUT ({:.2}%), +{} BRAM (paper: 526 / 0.12% / 2)",
+        with.lut - without.lut,
+        100.0 * (with.lut - without.lut) as f64 / 433_200.0,
+        with.bram - without.bram
+    );
+    let total = interface_cost(
+        PrStrategy::distributed(4),
+        PsStrategy::hierarchical(4),
+        32,
+        false,
+    );
+    println!(
+        "32-channel interface: {} LUTs = {:.2}% (paper: ~10.63%), {:.2}%/channel (paper: 0.33%)",
+        total.lut,
+        lut_pct(&total),
+        lut_pct(&total) / 32.0
+    );
+}

@@ -1,0 +1,8 @@
+//! Comparison baselines: AXI4 bus integration (§6.7, Fig. 11) and the
+//! shared FPGA cache design (§6.8, Fig. 12).
+
+pub mod axi;
+pub mod shared_cache;
+
+pub use axi::{AxiBus, AXI_BURST_OVERHEAD};
+pub use shared_cache::{CacheFpga, SysCache, CACHE_HIT_CYCLES, CACHE_MISS_CYCLES};

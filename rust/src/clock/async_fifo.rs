@@ -1,0 +1,181 @@
+//! Asynchronous FIFO for clock-domain crossing (paper §4, Fig. 2: the
+//! router input/output buffers and all channel buffers bridging the NoC,
+//! interface and per-HWA frequencies).
+//!
+//! Model: an element written at time `t_w` becomes visible to the reader
+//! only at the **second** read-domain rising edge after `t_w` — the
+//! two-stage synchronizer latency the paper implements with registers
+//! (§4.2 B.1). Occupancy for backpressure is exact (a mild idealization of
+//! the gray-code pointer synchronizers; it errs by <= 2 producer cycles of
+//! conservatism in the paper's design and none here, noted in DESIGN.md).
+
+use std::collections::VecDeque;
+
+use super::domain::{ClockDomain, Ps};
+
+#[derive(Debug)]
+pub struct AsyncFifo<T> {
+    /// (visible_at, element)
+    items: VecDeque<(Ps, T)>,
+    capacity: usize,
+    /// Read-side clock, used to compute visibility edges.
+    read_period_ps: u64,
+    read_phase_ps: u64,
+    /// Synchronizer depth in read edges (2 = two-stage, the paper's).
+    sync_stages: u64,
+    /// Statistics.
+    pub pushed: u64,
+    pub popped: u64,
+    pub high_water: usize,
+}
+
+impl<T> AsyncFifo<T> {
+    pub fn new(capacity: usize, read_clock: &ClockDomain) -> Self {
+        Self::with_stages(capacity, read_clock, 2)
+    }
+
+    pub fn with_stages(capacity: usize, read_clock: &ClockDomain, sync_stages: u64) -> Self {
+        assert!(capacity > 0);
+        Self {
+            items: VecDeque::with_capacity(capacity),
+            capacity,
+            read_period_ps: read_clock.period_ps,
+            read_phase_ps: read_clock.phase_ps,
+            sync_stages,
+            pushed: 0,
+            popped: 0,
+            high_water: 0,
+        }
+    }
+
+    /// A same-domain FIFO (no CDC): visible on the next read edge.
+    pub fn synchronous(capacity: usize, clock: &ClockDomain) -> Self {
+        Self::with_stages(capacity, clock, 1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn can_push(&self) -> bool {
+        self.items.len() < self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn visible_at(&self, now: Ps) -> Ps {
+        // k-th read edge strictly after `now`.
+        let first = if now < self.read_phase_ps {
+            self.read_phase_ps
+        } else {
+            let k = (now - self.read_phase_ps) / self.read_period_ps + 1;
+            self.read_phase_ps + k * self.read_period_ps
+        };
+        first + (self.sync_stages - 1) * self.read_period_ps
+    }
+
+    /// Write at time `now`; returns false (rejecting) when full.
+    pub fn push(&mut self, now: Ps, item: T) -> bool {
+        if !self.can_push() {
+            return false;
+        }
+        let vis = self.visible_at(now);
+        self.items.push_back((vis, item));
+        self.pushed += 1;
+        self.high_water = self.high_water.max(self.items.len());
+        true
+    }
+
+    /// True when the front element is visible to a read at `now`.
+    pub fn front_visible(&self, now: Ps) -> bool {
+        self.items.front().map(|(v, _)| *v <= now).unwrap_or(false)
+    }
+
+    pub fn peek(&self, now: Ps) -> Option<&T> {
+        match self.items.front() {
+            Some((v, item)) if *v <= now => Some(item),
+            _ => None,
+        }
+    }
+
+    /// Read at time `now` (call on read-domain edges).
+    pub fn pop(&mut self, now: Ps) -> Option<T> {
+        if self.front_visible(now) {
+            self.popped += 1;
+            self.items.pop_front().map(|(_, item)| item)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::domain::ClockDomain;
+
+    #[test]
+    fn two_stage_sync_latency() {
+        let rd = ClockDomain::from_mhz("rd", 100.0); // 10_000 ps period
+        let mut f: AsyncFifo<u32> = AsyncFifo::new(4, &rd);
+        assert!(f.push(2_500, 7));
+        // First read edge after 2500 is 10_000; second is 20_000.
+        assert!(f.pop(10_000).is_none());
+        assert!(f.pop(19_999).is_none());
+        assert_eq!(f.pop(20_000), Some(7));
+    }
+
+    #[test]
+    fn synchronous_visible_next_edge() {
+        let rd = ClockDomain::from_mhz("rd", 100.0);
+        let mut f: AsyncFifo<u32> = AsyncFifo::synchronous(4, &rd);
+        assert!(f.push(2_500, 7));
+        assert_eq!(f.pop(10_000), Some(7));
+    }
+
+    #[test]
+    fn capacity_backpressure() {
+        let rd = ClockDomain::from_mhz("rd", 100.0);
+        let mut f: AsyncFifo<u32> = AsyncFifo::new(2, &rd);
+        assert!(f.push(0, 1));
+        assert!(f.push(0, 2));
+        assert!(!f.can_push());
+        assert!(!f.push(0, 3));
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let rd = ClockDomain::from_mhz("rd", 1000.0);
+        let mut f: AsyncFifo<u32> = AsyncFifo::new(8, &rd);
+        for i in 0..5 {
+            f.push(i * 10, i as u32);
+        }
+        let mut out = Vec::new();
+        let mut t = 0;
+        while out.len() < 5 {
+            t += 1000;
+            if let Some(v) = f.pop(t) {
+                out.push(v);
+            }
+        }
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn high_water_tracks() {
+        let rd = ClockDomain::from_mhz("rd", 100.0);
+        let mut f: AsyncFifo<u32> = AsyncFifo::new(4, &rd);
+        f.push(0, 1);
+        f.push(0, 2);
+        f.push(0, 3);
+        assert_eq!(f.high_water, 3);
+        assert_eq!(f.pushed, 3);
+    }
+}

@@ -1,0 +1,192 @@
+//! Clock domains over a global picosecond timeline.
+//!
+//! The paper's prototype runs the NoC/CMP at 1 GHz (modelled), the
+//! interface block at 300 MHz and every HWA at its own Vivado-reported
+//! fmax (§6.1). We reproduce that with explicit clock domains: global time
+//! is in picoseconds (u64 — ~213 days of 1 GHz time, far beyond any run),
+//! and each domain ticks on its own rising edges.
+
+pub type Ps = u64;
+
+pub const PS_PER_US: u64 = 1_000_000;
+
+/// Convert a frequency in MHz to a period in ps (rounded to nearest).
+pub fn mhz_to_period_ps(mhz: f64) -> u64 {
+    assert!(mhz > 0.0, "frequency must be positive");
+    (1_000_000.0 / mhz).round() as u64
+}
+
+#[derive(Debug, Clone)]
+pub struct ClockDomain {
+    pub name: String,
+    pub period_ps: u64,
+    /// Offset of the first rising edge.
+    pub phase_ps: u64,
+}
+
+impl ClockDomain {
+    pub fn from_mhz(name: &str, mhz: f64) -> Self {
+        Self {
+            name: name.to_string(),
+            period_ps: mhz_to_period_ps(mhz),
+            phase_ps: 0,
+        }
+    }
+
+    pub fn freq_mhz(&self) -> f64 {
+        1_000_000.0 / self.period_ps as f64
+    }
+
+    /// First rising edge at time strictly greater than `now`.
+    pub fn next_edge_after(&self, now: Ps) -> Ps {
+        if now < self.phase_ps {
+            return self.phase_ps;
+        }
+        let k = (now - self.phase_ps) / self.period_ps + 1;
+        self.phase_ps + k * self.period_ps
+    }
+
+    /// Number of whole cycles elapsed at `now` (edges at or before `now`).
+    pub fn cycles_at(&self, now: Ps) -> u64 {
+        if now < self.phase_ps {
+            0
+        } else {
+            (now - self.phase_ps) / self.period_ps + 1
+        }
+    }
+
+    pub fn cycles_to_ps(&self, cycles: u64) -> Ps {
+        cycles * self.period_ps
+    }
+}
+
+/// Identifier of a registered domain in a [`MultiClock`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DomainId(pub usize);
+
+/// A set of clock domains advanced together; `advance` moves global time
+/// to the earliest next edge and reports every domain ticking then.
+/// Same-instant ticks are reported in registration order (deterministic).
+#[derive(Debug, Default)]
+pub struct MultiClock {
+    domains: Vec<ClockDomain>,
+    next_edges: Vec<Ps>,
+    now: Ps,
+}
+
+impl MultiClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, domain: ClockDomain) -> DomainId {
+        let id = DomainId(self.domains.len());
+        // First edge at or after time zero (phase).
+        self.next_edges.push(if domain.phase_ps == 0 {
+            domain.period_ps
+        } else {
+            domain.phase_ps
+        });
+        self.domains.push(domain);
+        id
+    }
+
+    pub fn add_mhz(&mut self, name: &str, mhz: f64) -> DomainId {
+        self.add(ClockDomain::from_mhz(name, mhz))
+    }
+
+    pub fn now(&self) -> Ps {
+        self.now
+    }
+
+    pub fn domain(&self, id: DomainId) -> &ClockDomain {
+        &self.domains[id.0]
+    }
+
+    /// Advance to the earliest pending edge; returns (time, ticking ids).
+    pub fn advance(&mut self, ticking: &mut Vec<DomainId>) -> Ps {
+        debug_assert!(!self.domains.is_empty(), "no domains registered");
+        let t = *self.next_edges.iter().min().expect("nonempty");
+        ticking.clear();
+        for (i, edge) in self.next_edges.iter_mut().enumerate() {
+            if *edge == t {
+                ticking.push(DomainId(i));
+                *edge += self.domains[i].period_ps;
+            }
+        }
+        self.now = t;
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mhz_conversion() {
+        assert_eq!(mhz_to_period_ps(1000.0), 1000);
+        assert_eq!(mhz_to_period_ps(300.0), 3333);
+        assert_eq!(mhz_to_period_ps(100.0), 10_000);
+    }
+
+    #[test]
+    fn next_edge_progresses() {
+        let d = ClockDomain::from_mhz("x", 1000.0);
+        assert_eq!(d.next_edge_after(0), 1000);
+        assert_eq!(d.next_edge_after(999), 1000);
+        assert_eq!(d.next_edge_after(1000), 2000);
+    }
+
+    #[test]
+    fn multiclock_interleaves_domains() {
+        let mut mc = MultiClock::new();
+        let fast = mc.add_mhz("fast", 1000.0); // every 1000 ps
+        let slow = mc.add_mhz("slow", 500.0); // every 2000 ps
+        let mut ticks = Vec::new();
+        let mut log: Vec<(Ps, Vec<DomainId>)> = Vec::new();
+        for _ in 0..4 {
+            let t = mc.advance(&mut ticks);
+            log.push((t, ticks.clone()));
+        }
+        assert_eq!(log[0], (1000, vec![fast]));
+        assert_eq!(log[1], (2000, vec![fast, slow]));
+        assert_eq!(log[2], (3000, vec![fast]));
+        assert_eq!(log[3], (4000, vec![fast, slow]));
+    }
+
+    #[test]
+    fn cycles_at_counts_edges() {
+        let d = ClockDomain::from_mhz("x", 1000.0);
+        // Edges at 0(phase), then every 1000 ps; phase 0 counts as edge.
+        assert_eq!(d.cycles_at(0), 1);
+        assert_eq!(d.cycles_at(999), 1);
+        assert_eq!(d.cycles_at(1000), 2);
+        assert_eq!(d.cycles_at(5500), 6);
+    }
+
+    #[test]
+    fn simulated_rate_ratio() {
+        // A 1 GHz and a 300 MHz domain over 1 µs tick ~1000 and ~300 times.
+        let mut mc = MultiClock::new();
+        let fast = mc.add_mhz("ghz", 1000.0);
+        let slow = mc.add_mhz("iface", 300.0);
+        let (mut nf, mut ns) = (0u64, 0u64);
+        let mut ticks = Vec::new();
+        loop {
+            let t = mc.advance(&mut ticks);
+            if t > PS_PER_US {
+                break;
+            }
+            for id in &ticks {
+                if *id == fast {
+                    nf += 1;
+                } else if *id == slow {
+                    ns += 1;
+                }
+            }
+        }
+        assert_eq!(nf, 1000);
+        assert!((299..=301).contains(&ns), "ns={ns}");
+    }
+}

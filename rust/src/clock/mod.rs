@@ -1,0 +1,10 @@
+//! Multi-clock-domain timing substrate: domains, the edge scheduler and
+//! CDC asynchronous FIFOs (paper §4.2 B.1).
+
+pub mod async_fifo;
+pub mod domain;
+
+pub use async_fifo::AsyncFifo;
+pub use domain::{
+    mhz_to_period_ps, ClockDomain, DomainId, MultiClock, Ps, PS_PER_US,
+};

@@ -1,0 +1,305 @@
+//! Partitioned applications for the Fig. 9 latency-breakdown experiment:
+//! GSM (3-flit payloads) and the JPEG decoder (large payloads), each split
+//! into functions that can run in software on the core or as HWAs on the
+//! FPGA.
+//!
+//! Software cycle counts are calibrated constants (DESIGN.md substitution
+//! 3): they reflect the relative cost of the C implementations on a
+//! MicroBlaze-class in-order core (the paper's Fig. 9 shows FPGA
+//! acceleration winning in every partition, most at the all-FPGA
+//! partitions GSM.p3 / JPEG.p5 — these constants preserve exactly that
+//! ordering, with software ~10-40x slower than the HWA datapath, typical
+//! of HLS speedups for these kernels).
+
+use crate::flit::Direction;
+
+use super::core::{InvokeSpec, Segment};
+
+/// One application function: software cost vs. HWA offload.
+#[derive(Debug, Clone)]
+pub struct AppFunction {
+    pub name: &'static str,
+    /// Core cycles when executed in software.
+    pub sw_cycles: u64,
+    /// HWA id executing this function when offloaded.
+    pub hwa_id: u8,
+    /// Input words sent on offload.
+    pub in_words: usize,
+    /// Result words received back.
+    pub out_words: usize,
+}
+
+/// A partitioned application: functions 0..k run on the FPGA, the rest in
+/// software ("partition k" = `k` leading functions offloaded; the paper's
+/// GSM.p3 / JPEG.p5 all-FPGA cases are `k = functions.len()`).
+#[derive(Debug, Clone)]
+pub struct App {
+    pub name: &'static str,
+    pub functions: Vec<AppFunction>,
+    /// When all functions are offloaded AND chainable, the invocation can
+    /// use the chaining mechanism: (first hwa, depth, index path).
+    pub chain_path: Option<(u8, u8, [u8; 3])>,
+}
+
+impl App {
+    pub fn n_partitions(&self) -> usize {
+        self.functions.len() + 1
+    }
+
+    /// Program for partition `k`: the first `k` functions offloaded as
+    /// individual HWA invocations, the rest as software compute.
+    pub fn partition_program(&self, k: usize) -> Vec<Segment> {
+        assert!(k <= self.functions.len());
+        let mut prog = Vec::new();
+        for (i, f) in self.functions.iter().enumerate() {
+            if i < k {
+                let words: Vec<u32> = (0..f.in_words as u32).collect();
+                prog.push(Segment::Invoke(InvokeSpec {
+                    hwa_id: f.hwa_id,
+                    words,
+                    chain_depth: 0,
+                    chain_index: [0; 3],
+                    priority: 0,
+                    direction: Direction::ProcToHwa,
+                    start_addr: 0,
+                    mem_bytes: 0,
+                    expect_words: f.out_words,
+                }));
+            } else {
+                prog.push(Segment::Compute(f.sw_cycles));
+            }
+        }
+        prog
+    }
+
+    /// All-FPGA program using the chaining mechanism (one invocation).
+    pub fn chained_program(&self) -> Option<Vec<Segment>> {
+        let (first_hwa, depth, index) = self.chain_path?;
+        let first = &self.functions[0];
+        let last = self.functions.last().unwrap();
+        let words: Vec<u32> = (0..first.in_words as u32).collect();
+        Some(vec![Segment::Invoke(
+            InvokeSpec {
+                hwa_id: first_hwa,
+                words,
+                chain_depth: 0,
+                chain_index: [0; 3],
+                priority: 0,
+                direction: Direction::ProcToHwa,
+                start_addr: 0,
+                mem_bytes: 0,
+                expect_words: last.out_words,
+            }
+            .chained(depth, index),
+        )])
+    }
+
+    /// Total software-only cycles (partition 0 baseline).
+    pub fn sw_total_cycles(&self) -> u64 {
+        self.functions.iter().map(|f| f.sw_cycles).sum()
+    }
+}
+
+/// GSM LPC front-end: three functions (§6.5; 3-flit payloads => 8 words).
+/// `hwa_id` values refer to the Fig. 9 scenario's channel layout — see
+/// `sim::experiments::fig9`.
+pub fn gsm_app(hwa_base: u8) -> App {
+    App {
+        name: "GSM",
+        functions: vec![
+            AppFunction {
+                name: "autocorrelation",
+                sw_cycles: 36_000,
+                hwa_id: hwa_base,
+                in_words: 8,
+                out_words: 8,
+            },
+            AppFunction {
+                name: "reflection_coeff",
+                sw_cycles: 21_000,
+                hwa_id: hwa_base + 1,
+                in_words: 8,
+                out_words: 8,
+            },
+            AppFunction {
+                name: "lar_quantize",
+                sw_cycles: 9_000,
+                hwa_id: hwa_base + 2,
+                in_words: 8,
+                out_words: 8,
+            },
+        ],
+        chain_path: None,
+    }
+}
+
+/// JPEG decoder: five functions (§6.5/§6.6; 18-flit payloads ~ 64+ words).
+/// The last four map to the izigzag/iquantize/idct/shiftbound HWAs and are
+/// chainable; entropy decode is a fifth (non-Table 3) HWA modelled after a
+/// Huffman-decode HLS kernel.
+pub fn jpeg_app(hwa_base: u8) -> App {
+    App {
+        name: "JPEG",
+        functions: vec![
+            AppFunction {
+                name: "entropy_decode",
+                sw_cycles: 42_000,
+                hwa_id: hwa_base,
+                in_words: 64,
+                out_words: 64,
+            },
+            AppFunction {
+                name: "izigzag",
+                sw_cycles: 6_000,
+                hwa_id: hwa_base + 1,
+                in_words: 64,
+                out_words: 64,
+            },
+            AppFunction {
+                name: "iquantize",
+                sw_cycles: 14_000,
+                hwa_id: hwa_base + 2,
+                in_words: 64,
+                out_words: 64,
+            },
+            AppFunction {
+                name: "idct",
+                sw_cycles: 95_000,
+                hwa_id: hwa_base + 3,
+                in_words: 64,
+                out_words: 64,
+            },
+            AppFunction {
+                name: "shiftbound",
+                sw_cycles: 10_000,
+                hwa_id: hwa_base + 4,
+                in_words: 64,
+                out_words: 64,
+            },
+        ],
+        // izigzag (member 1) -> iquantize (2) -> idct (3) -> shiftbound
+        // ... chaining applies to the four-JPEG-HWA group; see fig10.
+        chain_path: None,
+    }
+}
+
+/// The §6.6 chaining workload: just the four JPEG-chain HWAs (channel
+/// indices 0..3 in the fig10 scenario, group indexes likewise).
+pub fn jpeg_chain_app() -> App {
+    App {
+        name: "JPEG-chain",
+        functions: vec![
+            AppFunction {
+                name: "izigzag",
+                sw_cycles: 6_000,
+                hwa_id: 0,
+                in_words: 64,
+                out_words: 64,
+            },
+            AppFunction {
+                name: "iquantize",
+                sw_cycles: 14_000,
+                hwa_id: 1,
+                in_words: 64,
+                out_words: 64,
+            },
+            AppFunction {
+                name: "idct",
+                sw_cycles: 95_000,
+                hwa_id: 2,
+                in_words: 64,
+                out_words: 64,
+            },
+            AppFunction {
+                name: "shiftbound",
+                sw_cycles: 10_000,
+                hwa_id: 3,
+                in_words: 64,
+                out_words: 64,
+            },
+        ],
+        chain_path: Some((0, 3, [1, 2, 3])),
+    }
+}
+
+/// Program that chains only the first `depth + 1` functions, running the
+/// rest as separate invocations — the Fig. 10 sweep (chaining depth 0-3).
+pub fn jpeg_chain_depth_program(depth: u8) -> Vec<Segment> {
+    let app = jpeg_chain_app();
+    let mut prog = Vec::new();
+    let f0 = &app.functions[0];
+    let words: Vec<u32> = (0..f0.in_words as u32).collect();
+    let index = [1u8, 2, 3];
+    prog.push(Segment::Invoke(
+        InvokeSpec {
+            hwa_id: 0,
+            words,
+            chain_depth: 0,
+            chain_index: [0; 3],
+            priority: 0,
+            direction: Direction::ProcToHwa,
+            start_addr: 0,
+            mem_bytes: 0,
+            expect_words: app.functions[depth as usize].out_words,
+        }
+        .chained(depth, index),
+    ));
+    // Remaining functions invoked individually.
+    for f in app.functions.iter().skip(depth as usize + 1) {
+        let words: Vec<u32> = (0..f.in_words as u32).collect();
+        prog.push(Segment::Invoke(InvokeSpec {
+            hwa_id: f.hwa_id,
+            words,
+            chain_depth: 0,
+            chain_index: [0; 3],
+            priority: 0,
+            direction: Direction::ProcToHwa,
+            start_addr: 0,
+            mem_bytes: 0,
+            expect_words: f.out_words,
+        }));
+    }
+    prog
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_k_offloads_prefix() {
+        let app = gsm_app(0);
+        let p1 = app.partition_program(1);
+        assert!(matches!(p1[0], Segment::Invoke(_)));
+        assert!(matches!(p1[1], Segment::Compute(_)));
+        assert!(matches!(p1[2], Segment::Compute(_)));
+        let p3 = app.partition_program(3);
+        assert!(p3.iter().all(|s| matches!(s, Segment::Invoke(_))));
+    }
+
+    #[test]
+    fn sw_total_is_sum() {
+        let app = gsm_app(0);
+        assert_eq!(app.sw_total_cycles(), 36_000 + 21_000 + 9_000);
+    }
+
+    #[test]
+    fn chain_depth_programs_shrink() {
+        // depth 3: one invocation; depth 0: four invocations.
+        assert_eq!(jpeg_chain_depth_program(3).len(), 1);
+        assert_eq!(jpeg_chain_depth_program(0).len(), 4);
+        assert_eq!(jpeg_chain_depth_program(1).len(), 3);
+    }
+
+    #[test]
+    fn chained_program_exists_for_chain_app() {
+        assert!(jpeg_chain_app().chained_program().is_some());
+        assert!(gsm_app(0).chained_program().is_none());
+    }
+
+    #[test]
+    fn jpeg_has_five_functions_gsm_three() {
+        assert_eq!(jpeg_app(0).functions.len(), 5);
+        assert_eq!(gsm_app(0).functions.len(), 3);
+    }
+}

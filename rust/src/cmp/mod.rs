@@ -1,0 +1,11 @@
+//! CMP cores (MicroBlaze-class timing model) and the Fig. 9 partitioned
+//! applications; the software interface semantics of Fig. 4.
+
+pub mod apps;
+pub mod core;
+
+pub use apps::{gsm_app, jpeg_app, jpeg_chain_app, jpeg_chain_depth_program, App, AppFunction};
+pub use core::{
+    mmu_payload_packet, InvokeRecord, InvokeSpec, Processor, Segment,
+    INVOKE_OVERHEAD_CYCLES, RECV_CYCLES_PER_FLIT, SEND_CYCLES_PER_FLIT,
+};

@@ -1,0 +1,223 @@
+//! Coordinator: configuration loading, system construction, experiment
+//! dispatch and reporting — the surface behind the `accnoc` CLI.
+
+use crate::sim::experiments::{fig10, fig13_14, fig6, fig7, fig8, fig9, tables};
+use crate::util::cli::Args;
+use crate::util::config_text::ConfigText;
+
+pub const USAGE: &str = "\
+accnoc — FPGA multi-accelerator / NoC-CMP integration simulator
+(reproduction of Lin et al., IEEE TMSCS 2017; see DESIGN.md)
+
+USAGE:
+    accnoc <subcommand> [options]
+
+SUBCOMMANDS:
+    experiment <id>   regenerate a paper result:
+                      fig6 | fig7 | fig8 | fig9 | fig10 | fig13 | fig14 |
+                      table2 | table3 | table4 | all
+    run               run a custom simulation from a config file
+                      (--config path, see configs/ samples)
+    synth             print the synthesis model sweep (fmax + resources)
+    list              list HWA benchmarks and artifacts
+    selftest          quick end-to-end smoke of all three prototypes
+    help              this text
+
+OPTIONS:
+    --warmup-us N     measurement warmup (default 5)
+    --window-us N     measurement window (default 40)
+    --csv             CSV output instead of tables
+";
+
+fn emit(t: crate::util::table::Table, csv: bool) {
+    if csv {
+        print!("{}", t.render_csv());
+    } else {
+        t.print();
+    }
+}
+
+pub fn main_with(args: Args) -> Result<(), String> {
+    let csv = args.has_flag("csv");
+    let warmup: u64 = args.get_parse_or("warmup-us", 5)?;
+    let window: u64 = args.get_parse_or("window-us", 40)?;
+    match args.subcommand.as_deref() {
+        Some("experiment") => {
+            let id = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .ok_or("experiment: missing id (fig6..fig14, table2..4, all)")?;
+            run_experiment(id, warmup, window, csv)
+        }
+        Some("run") => run_custom(&args, csv),
+        Some("synth") => {
+            emit(fig7::run().table(), csv);
+            emit(fig7::run().component_table(), csv);
+            emit(tables::table4(), csv);
+            Ok(())
+        }
+        Some("list") => {
+            emit(tables::table3_table(), csv);
+            match crate::runtime::Runtime::load_default() {
+                Ok(rt) => println!("artifacts: {:?}", rt.names()),
+                Err(e) => println!("artifacts not loaded: {e:#}"),
+            }
+            Ok(())
+        }
+        Some("selftest") => selftest(),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown subcommand {other:?}\n{USAGE}")),
+    }
+}
+
+pub fn run_experiment(
+    id: &str,
+    warmup: u64,
+    window: u64,
+    csv: bool,
+) -> Result<(), String> {
+    match id {
+        "fig6" => emit(fig6::run().table(), csv),
+        "fig7" => {
+            let f = fig7::run();
+            emit(f.table(), csv);
+            emit(f.component_table(), csv);
+        }
+        "fig8" => {
+            for wl in [
+                fig8::Workload::IzigzagHwa,
+                fig8::Workload::EightHwa,
+                fig8::Workload::DfdivHwa,
+            ] {
+                emit(fig8::run(wl, warmup, window).table(), csv);
+            }
+        }
+        "fig9" => emit(fig9::run().table(), csv),
+        "fig10" => emit(fig10::run().table(), csv),
+        "fig13" => emit(fig13_14::run_fig13(warmup, window).table(), csv),
+        "fig14" => emit(fig13_14::run_fig14().table(), csv),
+        "table2" => emit(tables::table2(), csv),
+        "table3" => emit(tables::table3_table(), csv),
+        "table4" => emit(tables::table4(), csv),
+        "all" => {
+            for id in [
+                "table2", "table3", "table4", "fig6", "fig7", "fig8", "fig9",
+                "fig10", "fig13", "fig14",
+            ] {
+                run_experiment(id, warmup, window, csv)?;
+            }
+        }
+        other => return Err(format!("unknown experiment {other:?}")),
+    }
+    Ok(())
+}
+
+/// Custom run: config-file-driven single simulation.
+fn run_custom(args: &Args, csv: bool) -> Result<(), String> {
+    use crate::fpga::hwa::{spec_by_name, table3};
+    use crate::sim::system::{FabricKind, NetKind, System, SystemConfig};
+    use crate::workload::random::measure_open_rate_point;
+
+    let cfg_text = match args.get("config") {
+        Some(path) => ConfigText::load(std::path::Path::new(path))?,
+        None => ConfigText::parse("")?,
+    };
+    let hwas = cfg_text
+        .get("system.hwas")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| "first8".to_string());
+    let specs = match hwas.as_str() {
+        "first8" => table3().into_iter().take(8).collect(),
+        "jpeg" => vec![
+            spec_by_name("izigzag").unwrap(),
+            spec_by_name("iquantize").unwrap(),
+            spec_by_name("idct").unwrap(),
+            spec_by_name("shiftbound").unwrap(),
+        ],
+        list => list
+            .split(|c| c == '+' || c == ',')
+            .map(|n| {
+                spec_by_name(n.trim())
+                    .ok_or_else(|| format!("unknown HWA {n:?}"))
+            })
+            .collect::<Result<Vec<_>, _>>()?,
+    };
+    let mut sys_cfg = SystemConfig::paper(specs);
+    sys_cfg.n_tbs = cfg_text.get_or("system.task_buffers", 2usize)?;
+    sys_cfg.pr_group = cfg_text.get_or("system.pr_group", 4usize)?;
+    sys_cfg.ps_group = cfg_text.get_or("system.ps_group", 4usize)?;
+    sys_cfg.net = match cfg_text.get("system.net").unwrap_or("noc") {
+        "axi" => NetKind::Axi,
+        _ => NetKind::Noc,
+    };
+    if cfg_text.get("system.fabric") == Some("shared_cache") {
+        sys_cfg.fabric = FabricKind::SharedCache {
+            cache_bytes: cfg_text.get_or("system.cache_kib", 128u32)? * 1024,
+        };
+    }
+    let rate: f64 = cfg_text.get_or("workload.rate_per_us", 4.0)?;
+    let seed: u64 = cfg_text.get_or("workload.seed", 7u64)?;
+    let warmup: u64 = cfg_text.get_or("workload.warmup_us", 5u64)?;
+    let window: u64 = cfg_text.get_or("workload.window_us", 40u64)?;
+    let mut sys = System::new(sys_cfg);
+    sys.set_open_loop(rate, seed);
+    let p = measure_open_rate_point(&mut sys, warmup, window);
+    let mut t = crate::util::table::Table::new(
+        "custom run",
+        &["metric", "value"],
+    );
+    t.row(&["injection (flits/us)".into(), format!("{:.2}", p.injection_flits_per_us)]);
+    t.row(&["throughput (flits/us)".into(), format!("{:.2}", p.throughput_flits_per_us)]);
+    t.row(&["busy fraction".into(), format!("{:.3}", p.busy_fraction)]);
+    t.row(&["completions (/us)".into(), format!("{:.2}", p.completions_per_us)]);
+    t.row(&["tasks executed".into(), sys.fabric.tasks_executed().to_string()]);
+    emit(t, csv);
+    Ok(())
+}
+
+fn selftest() -> Result<(), String> {
+    use crate::cmp::core::{InvokeSpec, Segment};
+    use crate::fpga::hwa::table3;
+    use crate::sim::system::{FabricKind, NetKind, System, SystemConfig};
+
+    for (name, net, fabric) in [
+        ("noc+buffers", NetKind::Noc, FabricKind::Buffered),
+        ("axi+buffers", NetKind::Axi, FabricKind::Buffered),
+        (
+            "noc+cache",
+            NetKind::Noc,
+            FabricKind::SharedCache {
+                cache_bytes: 128 * 1024,
+            },
+        ),
+    ] {
+        let mut cfg = SystemConfig::paper(table3().into_iter().take(8).collect());
+        cfg.net = net;
+        cfg.fabric = fabric;
+        let mut sys = System::new(cfg);
+        for i in 0..sys.n_procs() {
+            let spec = sys.config.specs[i % 8].clone();
+            sys.load_program(
+                i,
+                vec![Segment::Invoke(InvokeSpec::direct(
+                    (i % 8) as u8,
+                    (0..spec.in_words as u32).collect(),
+                    spec.out_words,
+                ))],
+            );
+        }
+        let ok = sys.run_until_done(100_000 * crate::clock::PS_PER_US);
+        if !ok {
+            return Err(format!("selftest {name}: did not complete"));
+        }
+        println!(
+            "selftest {name}: OK ({} tasks executed)",
+            sys.fabric.tasks_executed()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,392 @@
+//! Bit-exact 137-bit flit layout (paper Table 1).
+//!
+//! | bits    | field                                   |
+//! |---------|-----------------------------------------|
+//! | 130-136 | routing information (destination node)  |
+//! | 128-129 | packet head & tail bits                 |
+//! | 125-127 | source ID (requesting processor)        |
+//! | 120-124 | HWA ID                                  |
+//! | 119     | packet type (1 = command, 0 = payload)  |
+//! | 117-118 | task head & tail bits                   |
+//! | 115-116 | task buffer ID                          |
+//! | 113-114 | chaining depth                          |
+//! | 107-112 | chaining index (3 × 2-bit group indexes)|
+//! | 105-106 | packet priority                         |
+//! | 103-104 | packet direction                        |
+//! | 71-102  | start address                           |
+//! | 61-70   | data size (bytes to fetch)              |
+//! | 0-60    | payload data (head flit)                |
+//!
+//! Body/tail flits: bits 128-136 carry routing + head/tail bits; bits
+//! 0-127 are payload data.
+//!
+//! The raw image is three little-endian u64 words (bit i lives at word
+//! i/64, bit i%64); bits 137-191 are always zero. Simulation-only metadata
+//! (flow id, timestamps) lives in [`super::packet::FlitMeta`], outside the
+//! 137 wire bits, and is asserted not to influence any timing decision by
+//! the codec round-trip tests.
+
+/// A raw 137-bit flit image.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct RawFlit(pub [u64; 3]);
+
+pub const FLIT_BITS: u32 = 137;
+
+/// Number of payload bits in a head flit (bits 0-60).
+pub const HEAD_PAYLOAD_BITS: u32 = 61;
+/// Number of payload bits in a body/tail flit (bits 0-127).
+pub const BODY_PAYLOAD_BITS: u32 = 128;
+
+impl RawFlit {
+    /// Extract `len` bits starting at bit `lo` (len <= 64).
+    #[inline]
+    pub fn get(&self, lo: u32, len: u32) -> u64 {
+        debug_assert!(len >= 1 && len <= 64 && lo + len <= 192);
+        let word = (lo / 64) as usize;
+        let off = lo % 64;
+        let mut v = self.0[word] >> off;
+        if off + len > 64 && word + 1 < 3 {
+            v |= self.0[word + 1] << (64 - off);
+        }
+        if len == 64 {
+            v
+        } else {
+            v & ((1u64 << len) - 1)
+        }
+    }
+
+    /// Set `len` bits starting at `lo` to `value` (masked).
+    #[inline]
+    pub fn set(&mut self, lo: u32, len: u32, value: u64) {
+        debug_assert!(len >= 1 && len <= 64 && lo + len <= 192);
+        let masked = if len == 64 {
+            value
+        } else {
+            value & ((1u64 << len) - 1)
+        };
+        let word = (lo / 64) as usize;
+        let off = lo % 64;
+        let lo_mask = if len == 64 && off == 0 {
+            u64::MAX
+        } else {
+            (((1u128 << len) - 1) << off) as u64
+        };
+        self.0[word] = (self.0[word] & !lo_mask) | (masked << off);
+        if off + len > 64 && word + 1 < 3 {
+            let hi_len = off + len - 64;
+            let hi_mask = (1u64 << hi_len) - 1;
+            self.0[word + 1] =
+                (self.0[word + 1] & !hi_mask) | (masked >> (64 - off));
+        }
+    }
+
+    /// True when every bit at index >= 137 is zero (well-formed image).
+    pub fn padding_clear(&self) -> bool {
+        let hi = self.0[2];
+        (hi >> (FLIT_BITS - 128)) == 0
+    }
+}
+
+/// Head/body/tail discriminant from bits 128-129 (bit129 = head,
+/// bit128 = tail; a single-flit packet sets both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FlitKind {
+    Head,
+    Body,
+    Tail,
+    /// Single-flit packet (head+tail set) — command packets are these.
+    Single,
+}
+
+impl FlitKind {
+    pub fn encode(self) -> u64 {
+        match self {
+            FlitKind::Body => 0b00,
+            FlitKind::Tail => 0b01,
+            FlitKind::Head => 0b10,
+            FlitKind::Single => 0b11,
+        }
+    }
+
+    pub fn decode(bits: u64) -> Self {
+        match bits & 0b11 {
+            0b00 => FlitKind::Body,
+            0b01 => FlitKind::Tail,
+            0b10 => FlitKind::Head,
+            _ => FlitKind::Single,
+        }
+    }
+
+    pub fn is_head(self) -> bool {
+        matches!(self, FlitKind::Head | FlitKind::Single)
+    }
+
+    pub fn is_tail(self) -> bool {
+        matches!(self, FlitKind::Tail | FlitKind::Single)
+    }
+}
+
+/// Packet type bit 119.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PacketType {
+    Payload,
+    Command,
+}
+
+impl PacketType {
+    pub fn encode(self) -> u64 {
+        match self {
+            PacketType::Payload => 0,
+            PacketType::Command => 1,
+        }
+    }
+
+    pub fn decode(bit: u64) -> Self {
+        if bit & 1 == 1 {
+            PacketType::Command
+        } else {
+            PacketType::Payload
+        }
+    }
+}
+
+/// Packet direction bits 103-104 (source/destination of the data).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Direction {
+    /// Processor sends input data directly (Fig. 5a).
+    ProcToHwa,
+    /// Data fetched from memory via the MMU (Fig. 5b).
+    MemToHwa,
+    /// Results returned to the requesting processor.
+    HwaToProc,
+    /// Results written back to memory.
+    HwaToMem,
+}
+
+impl Direction {
+    pub fn encode(self) -> u64 {
+        match self {
+            Direction::ProcToHwa => 0,
+            Direction::MemToHwa => 1,
+            Direction::HwaToProc => 2,
+            Direction::HwaToMem => 3,
+        }
+    }
+
+    pub fn decode(bits: u64) -> Self {
+        match bits & 0b11 {
+            0 => Direction::ProcToHwa,
+            1 => Direction::MemToHwa,
+            2 => Direction::HwaToProc,
+            _ => Direction::HwaToMem,
+        }
+    }
+}
+
+/// Decoded head-flit fields (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HeadFields {
+    pub routing: u8,        // 7 bits: destination node id
+    pub kind: FlitKind,     // 2 bits
+    pub src_id: u8,         // 3 bits
+    pub hwa_id: u8,         // 5 bits
+    pub pkt_type: PacketType, // 1 bit
+    pub task_head: bool,    // bit 118
+    pub task_tail: bool,    // bit 117
+    pub tb_id: u8,          // 2 bits
+    pub chain_depth: u8,    // 2 bits
+    pub chain_index: [u8; 3], // 3 x 2 bits (bits 107-112, index 0 lowest)
+    pub priority: u8,       // 2 bits
+    pub direction: Direction, // 2 bits
+    pub start_addr: u32,    // 32 bits
+    pub data_size: u16,     // 10 bits
+    pub payload: u64,       // 61 bits
+}
+
+impl Default for HeadFields {
+    fn default() -> Self {
+        Self {
+            routing: 0,
+            kind: FlitKind::Head,
+            src_id: 0,
+            hwa_id: 0,
+            pkt_type: PacketType::Payload,
+            task_head: false,
+            task_tail: false,
+            tb_id: 0,
+            chain_depth: 0,
+            chain_index: [0; 3],
+            priority: 0,
+            direction: Direction::ProcToHwa,
+            start_addr: 0,
+            data_size: 0,
+            payload: 0,
+        }
+    }
+}
+
+impl HeadFields {
+    pub fn encode(&self) -> RawFlit {
+        debug_assert!(self.routing < 128, "routing is 7 bits");
+        debug_assert!(self.src_id < 8, "src_id is 3 bits");
+        debug_assert!(self.hwa_id < 32, "hwa_id is 5 bits");
+        debug_assert!(self.tb_id < 4, "tb_id is 2 bits");
+        debug_assert!(self.chain_depth < 4, "chain_depth is 2 bits");
+        debug_assert!(self.priority < 4, "priority is 2 bits");
+        debug_assert!(self.data_size < 1024, "data_size is 10 bits");
+        debug_assert!(self.payload < (1 << 61), "head payload is 61 bits");
+        let mut raw = RawFlit::default();
+        raw.set(130, 7, self.routing as u64);
+        raw.set(128, 2, self.kind.encode());
+        raw.set(125, 3, self.src_id as u64);
+        raw.set(120, 5, self.hwa_id as u64);
+        raw.set(119, 1, self.pkt_type.encode());
+        raw.set(118, 1, self.task_head as u64);
+        raw.set(117, 1, self.task_tail as u64);
+        raw.set(115, 2, self.tb_id as u64);
+        raw.set(113, 2, self.chain_depth as u64);
+        let ci = (self.chain_index[0] as u64 & 0b11)
+            | ((self.chain_index[1] as u64 & 0b11) << 2)
+            | ((self.chain_index[2] as u64 & 0b11) << 4);
+        raw.set(107, 6, ci);
+        raw.set(105, 2, self.priority as u64);
+        raw.set(103, 2, self.direction.encode());
+        raw.set(71, 32, self.start_addr as u64);
+        raw.set(61, 10, self.data_size as u64);
+        raw.set(0, 61, self.payload);
+        raw
+    }
+
+    pub fn decode(raw: &RawFlit) -> Self {
+        let ci = raw.get(107, 6);
+        Self {
+            routing: raw.get(130, 7) as u8,
+            kind: FlitKind::decode(raw.get(128, 2)),
+            src_id: raw.get(125, 3) as u8,
+            hwa_id: raw.get(120, 5) as u8,
+            pkt_type: PacketType::decode(raw.get(119, 1)),
+            task_head: raw.get(118, 1) == 1,
+            task_tail: raw.get(117, 1) == 1,
+            tb_id: raw.get(115, 2) as u8,
+            chain_depth: raw.get(113, 2) as u8,
+            chain_index: [
+                (ci & 0b11) as u8,
+                ((ci >> 2) & 0b11) as u8,
+                ((ci >> 4) & 0b11) as u8,
+            ],
+            priority: raw.get(105, 2) as u8,
+            direction: Direction::decode(raw.get(103, 2)),
+            start_addr: raw.get(71, 32) as u32,
+            data_size: raw.get(61, 10) as u16,
+            payload: raw.get(0, 61),
+        }
+    }
+}
+
+/// Encode a body or tail flit: routing + kind + 128-bit payload.
+pub fn encode_body(routing: u8, kind: FlitKind, payload: [u64; 2]) -> RawFlit {
+    debug_assert!(matches!(kind, FlitKind::Body | FlitKind::Tail));
+    let mut raw = RawFlit::default();
+    raw.set(130, 7, routing as u64);
+    raw.set(128, 2, kind.encode());
+    raw.set(0, 64, payload[0]);
+    raw.set(64, 64, payload[1]);
+    raw
+}
+
+/// Decode the 128-bit payload of a body/tail flit.
+pub fn decode_body_payload(raw: &RawFlit) -> [u64; 2] {
+    [raw.get(0, 64), raw.get(64, 64)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> HeadFields {
+        HeadFields {
+            routing: 0b101_1010,
+            kind: FlitKind::Head,
+            src_id: 5,
+            hwa_id: 19,
+            pkt_type: PacketType::Command,
+            task_head: true,
+            task_tail: false,
+            tb_id: 2,
+            chain_depth: 3,
+            chain_index: [1, 2, 3],
+            priority: 2,
+            direction: Direction::MemToHwa,
+            start_addr: 0xDEAD_BEEF,
+            data_size: 777,
+            payload: 0x0ABC_DEF0_1234_5678 & ((1 << 61) - 1),
+        }
+    }
+
+    #[test]
+    fn head_roundtrip_exact() {
+        let h = sample();
+        assert_eq!(HeadFields::decode(&h.encode()), h);
+    }
+
+    #[test]
+    fn padding_bits_stay_zero() {
+        assert!(sample().encode().padding_clear());
+    }
+
+    #[test]
+    fn table1_bit_positions() {
+        // Spot-check absolute bit positions against Table 1.
+        let h = sample();
+        let raw = h.encode();
+        assert_eq!(raw.get(130, 7), 0b101_1010); // routing at 130
+        assert_eq!(raw.get(120, 5), 19); // hwa id at 120
+        assert_eq!(raw.get(119, 1), 1); // command bit
+        assert_eq!(raw.get(71, 32), 0xDEAD_BEEF); // start addr at 71
+        assert_eq!(raw.get(61, 10), 777); // data size at 61
+    }
+
+    #[test]
+    fn kind_encoding_matches_head_tail_bits() {
+        assert_eq!(FlitKind::Head.encode(), 0b10);
+        assert_eq!(FlitKind::Tail.encode(), 0b01);
+        assert_eq!(FlitKind::Single.encode(), 0b11);
+        assert!(FlitKind::Single.is_head() && FlitKind::Single.is_tail());
+        assert!(FlitKind::Head.is_head() && !FlitKind::Head.is_tail());
+    }
+
+    #[test]
+    fn body_roundtrip() {
+        let payload = [0x1122_3344_5566_7788, 0x99AA_BBCC_DDEE_FF00];
+        let raw = encode_body(77, FlitKind::Body, payload);
+        assert_eq!(decode_body_payload(&raw), payload);
+        assert_eq!(raw.get(130, 7), 77);
+        assert_eq!(FlitKind::decode(raw.get(128, 2)), FlitKind::Body);
+        assert!(raw.padding_clear());
+    }
+
+    #[test]
+    fn get_set_cross_word_boundary() {
+        let mut raw = RawFlit::default();
+        raw.set(60, 10, 0x3FF);
+        assert_eq!(raw.get(60, 10), 0x3FF);
+        assert_eq!(raw.get(0, 60), 0);
+        raw.set(100, 64, u64::MAX);
+        assert_eq!(raw.get(100, 64), u64::MAX);
+        raw.set(100, 64, 0xDEAD);
+        assert_eq!(raw.get(100, 64), 0xDEAD);
+    }
+
+    #[test]
+    fn set_is_idempotent_and_isolated() {
+        let mut raw = sample().encode();
+        let before = raw;
+        raw.set(61, 10, 777); // same value
+        assert_eq!(raw, before);
+        raw.set(61, 10, 1); // different value changes only that field
+        let h = HeadFields::decode(&raw);
+        assert_eq!(h.data_size, 1);
+        assert_eq!(h.start_addr, 0xDEAD_BEEF);
+        assert_eq!(h.hwa_id, 19);
+    }
+}

@@ -1,0 +1,13 @@
+//! 137-bit flit format (paper Table 1), packets and task framing.
+
+pub mod fields;
+pub mod packet;
+
+pub use fields::{
+    Direction, FlitKind, HeadFields, PacketType, RawFlit, BODY_PAYLOAD_BITS,
+    FLIT_BITS, HEAD_PAYLOAD_BITS,
+};
+pub use packet::{
+    payload_packet_flits, Flit, FlitMeta, Packet, PacketBuilder,
+    WORDS_PER_BODY_FLIT,
+};

@@ -1,0 +1,276 @@
+//! Packets: sequences of flits plus simulation metadata, and the builders
+//! for every packet class the protocol uses (§4.1, §4.2 B.2, §5):
+//!
+//! * **request**  — single command flit, processor -> FPGA
+//! * **grant**    — single command flit, FPGA -> processor or MMU
+//! * **notify**   — single command flit, FPGA -> processor (completion)
+//! * **payload**  — head + body* + tail carrying task input data
+//! * **result**   — head + body* + tail carrying HWA output data
+
+use super::fields::{
+    decode_body_payload, encode_body, FlitKind, HeadFields,
+    PacketType, RawFlit, BODY_PAYLOAD_BITS,
+};
+
+/// Simulation-side metadata carried next to the 137 wire bits. Never
+/// consulted by any protocol/timing decision — used for metrics and
+/// invariant checking only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FlitMeta {
+    /// Flow id: unique per (source, invocation).
+    pub flow: u32,
+    /// Sequence number of this flit within its flow.
+    pub seq: u32,
+    /// Injection timestamp (ps) stamped by the first NI that saw it.
+    pub injected_ps: u64,
+}
+
+/// A flit in flight: raw wire image + metadata.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Flit {
+    pub raw: RawFlit,
+    pub meta: FlitMeta,
+}
+
+impl Flit {
+    pub fn kind(&self) -> FlitKind {
+        FlitKind::decode(self.raw.get(128, 2))
+    }
+
+    pub fn dest(&self) -> u8 {
+        self.raw.get(130, 7) as u8
+    }
+
+    pub fn is_head(&self) -> bool {
+        self.kind().is_head()
+    }
+
+    pub fn is_tail(&self) -> bool {
+        self.kind().is_tail()
+    }
+
+    pub fn head_fields(&self) -> HeadFields {
+        debug_assert!(self.is_head(), "head_fields on non-head flit");
+        HeadFields::decode(&self.raw)
+    }
+
+    pub fn body_payload(&self) -> [u64; 2] {
+        decode_body_payload(&self.raw)
+    }
+}
+
+/// An ordered run of flits forming one packet.
+#[derive(Debug, Clone, Default)]
+pub struct Packet {
+    pub flits: Vec<Flit>,
+}
+
+impl Packet {
+    pub fn len(&self) -> usize {
+        self.flits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.flits.is_empty()
+    }
+
+    pub fn head(&self) -> HeadFields {
+        self.flits[0].head_fields()
+    }
+
+    /// Extract the data words carried by body/tail flits (u32 lanes; four
+    /// per 128-bit body payload), truncated to `n_words`.
+    pub fn data_words(&self, n_words: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(n_words);
+        for f in &self.flits {
+            if matches!(f.kind(), FlitKind::Body | FlitKind::Tail) {
+                let [a, b] = f.body_payload();
+                for w in [a as u32, (a >> 32) as u32, b as u32, (b >> 32) as u32] {
+                    if out.len() < n_words {
+                        out.push(w);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Well-formedness: head first, tail last, bodies between, one packet.
+    pub fn is_well_formed(&self) -> bool {
+        if self.flits.is_empty() {
+            return false;
+        }
+        let n = self.flits.len();
+        if n == 1 {
+            return self.flits[0].kind() == FlitKind::Single;
+        }
+        self.flits[0].kind() == FlitKind::Head
+            && self.flits[n - 1].kind() == FlitKind::Tail
+            && self.flits[1..n - 1]
+                .iter()
+                .all(|f| f.kind() == FlitKind::Body)
+    }
+}
+
+/// Words (u32) carried per body/tail flit.
+pub const WORDS_PER_BODY_FLIT: usize = (BODY_PAYLOAD_BITS / 32) as usize;
+
+/// Builder context: stamps flow/seq metadata.
+#[derive(Debug, Clone)]
+pub struct PacketBuilder {
+    pub flow: u32,
+    next_seq: u32,
+}
+
+impl PacketBuilder {
+    pub fn new(flow: u32) -> Self {
+        Self { flow, next_seq: 0 }
+    }
+
+    fn stamp(&mut self, raw: RawFlit) -> Flit {
+        let meta = FlitMeta {
+            flow: self.flow,
+            seq: self.next_seq,
+            injected_ps: 0,
+        };
+        self.next_seq += 1;
+        Flit { raw, meta }
+    }
+
+    /// Single-flit command packet from decoded fields (kind forced Single,
+    /// type forced Command).
+    pub fn command(&mut self, mut fields: HeadFields) -> Packet {
+        fields.kind = FlitKind::Single;
+        fields.pkt_type = PacketType::Command;
+        Packet {
+            flits: vec![self.stamp(fields.encode())],
+        }
+    }
+
+    /// Multi-flit payload packet: head (task/routing info) followed by the
+    /// data words packed four u32 lanes per body flit; last flit is Tail.
+    /// `fields.data_size` is set to the byte count (10-bit field, saturated).
+    pub fn payload(&mut self, mut fields: HeadFields, words: &[u32]) -> Packet {
+        fields.pkt_type = PacketType::Payload;
+        fields.data_size = ((words.len() * 4).min(1023)) as u16;
+        let n_body = words.len().div_ceil(WORDS_PER_BODY_FLIT).max(1);
+        fields.kind = FlitKind::Head;
+        let routing = fields.routing;
+        let mut flits = Vec::with_capacity(1 + n_body);
+        flits.push(self.stamp(fields.encode()));
+        // A payload packet always has at least one data flit; chunk the
+        // words without intermediate allocation (hot path, §Perf).
+        for i in 0..n_body {
+            let chunk = if words.is_empty() {
+                &[] as &[u32]
+            } else {
+                let lo = i * WORDS_PER_BODY_FLIT;
+                &words[lo..(lo + WORDS_PER_BODY_FLIT).min(words.len())]
+            };
+            let mut lanes = [0u32; 4];
+            lanes[..chunk.len()].copy_from_slice(chunk);
+            let payload = [
+                lanes[0] as u64 | ((lanes[1] as u64) << 32),
+                lanes[2] as u64 | ((lanes[3] as u64) << 32),
+            ];
+            let kind = if i + 1 == n_body {
+                FlitKind::Tail
+            } else {
+                FlitKind::Body
+            };
+            flits.push(self.stamp(encode_body(routing, kind, payload)));
+        }
+        Packet { flits }
+    }
+}
+
+/// Flit count of a payload packet carrying `n_words` u32 words
+/// (head + ceil(words/4) body/tail flits; minimum one data flit).
+pub fn payload_packet_flits(n_words: usize) -> usize {
+    1 + n_words.div_ceil(WORDS_PER_BODY_FLIT).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flit::fields::Direction;
+
+    fn fields(dest: u8, hwa: u8) -> HeadFields {
+        HeadFields {
+            routing: dest,
+            hwa_id: hwa,
+            direction: Direction::ProcToHwa,
+            ..HeadFields::default()
+        }
+    }
+
+    #[test]
+    fn command_is_single_flit() {
+        let mut b = PacketBuilder::new(1);
+        let p = b.command(fields(3, 7));
+        assert_eq!(p.len(), 1);
+        assert!(p.is_well_formed());
+        assert_eq!(p.head().pkt_type, PacketType::Command);
+        assert_eq!(p.flits[0].kind(), FlitKind::Single);
+    }
+
+    #[test]
+    fn payload_packs_words_roundtrip() {
+        let mut b = PacketBuilder::new(2);
+        let words: Vec<u32> = (0..13).map(|i| 0xA000_0000 | i).collect();
+        let p = b.payload(fields(5, 2), &words);
+        // 13 words -> 4 data flits (4+4+4+1) + head.
+        assert_eq!(p.len(), 5);
+        assert!(p.is_well_formed());
+        assert_eq!(p.data_words(13), words);
+        assert_eq!(p.head().data_size, 52);
+    }
+
+    #[test]
+    fn payload_word_multiple_of_four() {
+        let mut b = PacketBuilder::new(3);
+        let words: Vec<u32> = (0..8).collect();
+        let p = b.payload(fields(1, 1), &words);
+        assert_eq!(p.len(), 3); // head + 2
+        assert_eq!(p.data_words(8), words);
+    }
+
+    #[test]
+    fn empty_payload_still_has_data_flit() {
+        let mut b = PacketBuilder::new(4);
+        let p = b.payload(fields(1, 1), &[]);
+        assert_eq!(p.len(), 2);
+        assert!(p.is_well_formed());
+    }
+
+    #[test]
+    fn seq_numbers_increase_across_packets() {
+        let mut b = PacketBuilder::new(5);
+        let p1 = b.command(fields(1, 1));
+        let p2 = b.command(fields(1, 1));
+        assert_eq!(p1.flits[0].meta.seq, 0);
+        assert_eq!(p2.flits[0].meta.seq, 1);
+        assert_eq!(p1.flits[0].meta.flow, 5);
+    }
+
+    #[test]
+    fn well_formedness_rejects_misordered() {
+        let mut b = PacketBuilder::new(6);
+        let p = b.payload(fields(1, 1), &(0..8).collect::<Vec<_>>());
+        let mut bad = p.clone();
+        bad.flits.swap(0, 1);
+        assert!(!bad.is_well_formed());
+        let empty = Packet::default();
+        assert!(!empty.is_well_formed());
+    }
+
+    #[test]
+    fn payload_flit_count_helper_matches_builder() {
+        let mut b = PacketBuilder::new(7);
+        for n in [0usize, 1, 3, 4, 5, 16, 64, 255] {
+            let words: Vec<u32> = (0..n as u32).collect();
+            let p = b.payload(fields(1, 1), &words);
+            assert_eq!(p.len(), payload_packet_flits(n), "n={n}");
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! A task: one HWA invocation's header + data words + timestamps.
+
+use crate::clock::Ps;
+use crate::flit::HeadFields;
+
+/// Command subtypes carried in the low payload bits of command packets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommandKind {
+    Request,
+    Grant,
+    Notify,
+}
+
+impl CommandKind {
+    pub fn encode(self) -> u64 {
+        match self {
+            CommandKind::Request => 0,
+            CommandKind::Grant => 1,
+            CommandKind::Notify => 2,
+        }
+    }
+
+    pub fn decode(payload: u64) -> Self {
+        match payload & 0b11 {
+            1 => CommandKind::Grant,
+            2 => CommandKind::Notify,
+            _ => CommandKind::Request,
+        }
+    }
+}
+
+/// One in-flight HWA invocation inside the fabric.
+#[derive(Debug, Clone)]
+pub struct Task {
+    /// Current header; chaining fields mutate as the task hops HWAs.
+    pub head: HeadFields,
+    /// Data words (input before execution, output after).
+    pub words: Vec<u32>,
+    /// Flow id for metrics (from the payload packet's flits).
+    pub flow: u32,
+    /// Chain hops completed so far (simulation metadata).
+    pub chain_hops: u8,
+    // -- timestamps (ps), 0 = unset --
+    pub t_request: Ps,
+    pub t_ready: Ps,
+    pub t_exec_start: Ps,
+    pub t_exec_end: Ps,
+}
+
+impl Task {
+    pub fn new(head: HeadFields, words: Vec<u32>, flow: u32) -> Self {
+        Self {
+            head,
+            words,
+            flow,
+            chain_hops: 0,
+            t_request: 0,
+            t_ready: 0,
+            t_exec_start: 0,
+            t_exec_end: 0,
+        }
+    }
+
+    /// Remaining chaining hops after the current HWA.
+    pub fn chain_remaining(&self) -> u8 {
+        self.head.chain_depth
+    }
+
+    /// Consume one chaining hop: returns the group-member index of the next
+    /// HWA and shifts the index pipeline (the hardware shifts the 6-bit
+    /// chain-index field left by one 2-bit lane as depth decrements, §4.2
+    /// B.3).
+    pub fn advance_chain(&mut self) -> u8 {
+        debug_assert!(self.head.chain_depth > 0);
+        let next = self.head.chain_index[0];
+        self.head.chain_index = [self.head.chain_index[1], self.head.chain_index[2], 0];
+        self.head.chain_depth -= 1;
+        self.chain_hops += 1;
+        next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flit::HeadFields;
+
+    #[test]
+    fn command_kind_roundtrip() {
+        for k in [CommandKind::Request, CommandKind::Grant, CommandKind::Notify] {
+            assert_eq!(CommandKind::decode(k.encode()), k);
+        }
+    }
+
+    #[test]
+    fn chain_advance_shifts_indexes() {
+        let mut t = Task::new(
+            HeadFields {
+                chain_depth: 3,
+                chain_index: [2, 1, 3],
+                ..HeadFields::default()
+            },
+            vec![],
+            0,
+        );
+        assert_eq!(t.advance_chain(), 2);
+        assert_eq!(t.advance_chain(), 1);
+        assert_eq!(t.advance_chain(), 3);
+        assert_eq!(t.chain_remaining(), 0);
+        assert_eq!(t.chain_hops, 3);
+    }
+}

@@ -1,0 +1,150 @@
+//! Task buffers (TBs): BRAM FIFOs staging input packets per HWA channel
+//! (§4.2 B.1). The number of TBs is the Fig. 6 design parameter; state
+//! transitions implement the request/grant protocol's buffer reservation.
+
+use crate::clock::Ps;
+use crate::flit::HeadFields;
+
+use super::task::Task;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TbState {
+    /// Available for granting.
+    Free,
+    /// Reserved by a grant; awaiting the payload packet head.
+    Granted,
+    /// Payload streaming in.
+    Filling,
+    /// Complete task awaiting the task arbiter (visible after CDC sync).
+    Ready,
+    /// Being drained by the HWA controller.
+    InUse,
+}
+
+#[derive(Debug)]
+pub struct TaskBuffer {
+    pub state: TbState,
+    head: Option<HeadFields>,
+    words: Vec<u32>,
+    flow: u32,
+    /// Time the task becomes visible to the HWA-clock side (2-stage sync).
+    ready_at: Ps,
+    t_request: Ps,
+}
+
+impl TaskBuffer {
+    pub fn new() -> Self {
+        Self {
+            state: TbState::Free,
+            head: None,
+            words: Vec::new(),
+            flow: 0,
+            ready_at: 0,
+            t_request: 0,
+        }
+    }
+
+    pub fn grant(&mut self, t_request: Ps) {
+        debug_assert_eq!(self.state, TbState::Free);
+        self.state = TbState::Granted;
+        self.t_request = t_request;
+    }
+
+    /// Payload packet head arrives from the PR.
+    pub fn begin_fill(&mut self, head: HeadFields, flow: u32) {
+        debug_assert_eq!(self.state, TbState::Granted, "fill without grant");
+        self.state = TbState::Filling;
+        self.head = Some(head);
+        self.flow = flow;
+        self.words.clear();
+    }
+
+    /// A data flit's words arrive (four u32 lanes per body flit).
+    pub fn push_words(&mut self, lanes: &[u32]) {
+        debug_assert_eq!(self.state, TbState::Filling);
+        self.words.extend_from_slice(lanes);
+    }
+
+    /// Tail flit observed: task complete; visible to the HWA clock domain
+    /// at `ready_at` (two destination edges later — CDC).
+    pub fn finish_fill(&mut self, ready_at: Ps) {
+        debug_assert_eq!(self.state, TbState::Filling);
+        self.state = TbState::Ready;
+        self.ready_at = ready_at;
+    }
+
+    pub fn is_ready(&self, now: Ps) -> bool {
+        self.state == TbState::Ready && now >= self.ready_at
+    }
+
+    /// The task arbiter hands the buffer to the HWA controller.
+    pub fn take(&mut self, expected_words: usize, now: Ps) -> Task {
+        debug_assert!(self.is_ready(now));
+        self.state = TbState::InUse;
+        let head = self.head.take().expect("filled buffer has a head");
+        let mut words = std::mem::take(&mut self.words);
+        // Pad/truncate to the HWA's expected input width (the paper's HWAs
+        // have fixed input sizes; data_size in the header is advisory).
+        words.resize(expected_words, 0);
+        let mut task = Task::new(head, words, self.flow);
+        task.t_request = self.t_request;
+        task.t_ready = self.ready_at;
+        task
+    }
+
+    /// HWAC finished reading: buffer returns to the free pool.
+    pub fn release(&mut self) {
+        debug_assert_eq!(self.state, TbState::InUse);
+        self.state = TbState::Free;
+        self.head = None;
+        self.words.clear();
+    }
+}
+
+impl Default for TaskBuffer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_lifecycle() {
+        let mut tb = TaskBuffer::new();
+        assert_eq!(tb.state, TbState::Free);
+        tb.grant(100);
+        tb.begin_fill(HeadFields::default(), 7);
+        tb.push_words(&[1, 2, 3, 4]);
+        tb.push_words(&[5, 6]);
+        tb.finish_fill(500);
+        assert!(!tb.is_ready(400), "not visible before CDC sync");
+        assert!(tb.is_ready(500));
+        let task = tb.take(8, 500);
+        assert_eq!(task.words, vec![1, 2, 3, 4, 5, 6, 0, 0]);
+        assert_eq!(task.flow, 7);
+        assert_eq!(task.t_request, 100);
+        tb.release();
+        assert_eq!(tb.state, TbState::Free);
+    }
+
+    #[test]
+    fn truncates_excess_words() {
+        let mut tb = TaskBuffer::new();
+        tb.grant(0);
+        tb.begin_fill(HeadFields::default(), 0);
+        tb.push_words(&[9; 16]);
+        tb.finish_fill(0);
+        let task = tb.take(4, 0);
+        assert_eq!(task.words.len(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fill_without_grant_panics() {
+        let mut tb = TaskBuffer::new();
+        tb.begin_fill(HeadFields::default(), 0);
+    }
+}

@@ -1,0 +1,560 @@
+//! The FPGA node (paper Fig. 2a): router input/output asynchronous FIFOs,
+//! distributed packet receivers, hierarchical packet sender, HWA channels
+//! and the chaining-controller fabric.
+//!
+//! Clocking: `step_noc_*` run on the NoC clock (router-buffer sides),
+//! `step_iface` on the interface clock (PR, LGC, PS, CC), and
+//! `step_channel` per HWA clock domain. The simulation system drives
+//! these from a [`crate::clock::MultiClock`].
+
+use crate::clock::{AsyncFifo, ClockDomain, Ps};
+use crate::flit::Flit;
+
+use super::channel::Channel;
+use super::hwa::{EchoCompute, HwaCompute, HwaSpec};
+use super::iface::pr::{PacketReceiver, PrStrategy};
+use super::iface::ps::{PacketSender, PsStrategy};
+
+/// Router-buffer depth in flits (asynchronous FIFOs, Fig. 2a).
+pub const ROUTER_FIFO_CAP: usize = 32;
+
+/// A chaining group: ordered set of channel indices whose HWAs may chain
+/// (§4.2 B.3). `chain_index` values in headers index into `members`.
+#[derive(Debug, Clone)]
+pub struct ChainGroup {
+    pub members: Vec<usize>,
+    rr: usize,
+}
+
+impl ChainGroup {
+    pub fn new(members: Vec<usize>) -> Self {
+        assert!(members.len() <= 4, "chain_index is 2 bits per hop");
+        Self { members, rr: 0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct FpgaConfig {
+    pub n_tbs: usize,
+    pub pr: PrStrategy,
+    pub ps: PsStrategy,
+    pub iface_mhz: f64,
+    /// NoC node the FPGA occupies.
+    pub node: u8,
+    /// NoC node of the MMU.
+    pub mmu_node: u8,
+    /// Map src_id (processor id) -> NoC node, for reply routing.
+    pub reply_route: Vec<u8>,
+}
+
+impl FpgaConfig {
+    /// Paper defaults: 2 TBs (§6.2), PR4-PS4 (§6.3), 300 MHz (§6.1).
+    pub fn paper_defaults(node: u8, mmu_node: u8, reply_route: Vec<u8>) -> Self {
+        Self {
+            n_tbs: 2,
+            pr: PrStrategy::distributed(4),
+            ps: PsStrategy::hierarchical(4),
+            iface_mhz: 300.0,
+            node,
+            mmu_node,
+            reply_route,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FabricStats {
+    /// Flits received from the NoC (injection side of §6.4's metrics).
+    pub flits_from_noc: u64,
+    /// Flits sent to the NoC (throughput side of §6.4's metrics).
+    pub flits_to_noc: u64,
+    /// Interface cycles with at least one busy HWA.
+    pub busy_iface_cycles: u64,
+    pub iface_cycles: u64,
+}
+
+pub struct Fpga {
+    pub config: FpgaConfig,
+    pub iface_clock: ClockDomain,
+    /// NoC -> fabric (read on the interface clock).
+    router_out: AsyncFifo<Flit>,
+    /// Fabric -> NoC (read on the NoC clock).
+    router_in: AsyncFifo<Flit>,
+    prs: Vec<PacketReceiver>,
+    ps: PacketSender,
+    pub channels: Vec<Channel>,
+    /// hwa_id -> channel index.
+    id_map: Vec<Option<usize>>,
+    chain_groups: Vec<ChainGroup>,
+    compute: Box<dyn HwaCompute>,
+    /// PR currently holding the input stream (payload packets span cycles).
+    active_pr: Option<usize>,
+    pub stats: FabricStats,
+}
+
+impl Fpga {
+    pub fn new(config: FpgaConfig, specs: Vec<HwaSpec>, noc_clock: &ClockDomain) -> Self {
+        let iface_clock = ClockDomain::from_mhz("iface", config.iface_mhz);
+        let n = specs.len();
+        assert!(n <= 32, "hwa_id is 5 bits");
+        let mut id_map = vec![None; 32];
+        let channels: Vec<Channel> = specs
+            .into_iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                id_map[i] = Some(i);
+                Channel::new(
+                    i as u8,
+                    spec,
+                    config.n_tbs,
+                    config.reply_route.clone(),
+                    config.mmu_node,
+                )
+            })
+            .collect();
+        let n_prs = config.pr.n_prs(n);
+        Self {
+            router_out: AsyncFifo::new(ROUTER_FIFO_CAP, &iface_clock),
+            router_in: AsyncFifo::new(ROUTER_FIFO_CAP, noc_clock),
+            prs: (0..n_prs).map(|_| PacketReceiver::new()).collect(),
+            ps: PacketSender::new(config.ps, n),
+            channels,
+            id_map,
+            chain_groups: Vec::new(),
+            compute: Box::new(EchoCompute),
+            active_pr: None,
+            iface_clock,
+            config,
+            stats: FabricStats::default(),
+        }
+    }
+
+    /// Install the functional compute hook (PJRT/native/echo).
+    pub fn set_compute(&mut self, compute: Box<dyn HwaCompute>) {
+        self.compute = compute;
+    }
+
+    /// Register a chaining group over channel indices.
+    pub fn add_chain_group(&mut self, members: Vec<usize>) {
+        self.chain_groups.push(ChainGroup::new(members));
+    }
+
+    pub fn chain_group_members(&self, group: usize) -> &[usize] {
+        &self.chain_groups[group].members
+    }
+
+    // ------------------------------------------------------------------
+    // NoC-clock side
+    // ------------------------------------------------------------------
+
+    /// Can the FPGA absorb one more flit from the NoC this cycle?
+    pub fn can_accept_from_noc(&self) -> bool {
+        self.router_out.can_push()
+    }
+
+    /// Deliver a flit ejected at the FPGA node.
+    pub fn push_from_noc(&mut self, now: Ps, flit: Flit) {
+        let ok = self.router_out.push(now, flit);
+        debug_assert!(ok, "caller must check can_accept_from_noc");
+        self.stats.flits_from_noc += 1;
+    }
+
+    /// Test/bench hook: push a flit directly into the router-output
+    /// buffer, bypassing the mesh (used by micro-rigs).
+    pub fn router_out_push_for_test(&mut self, now: Ps, flit: Flit) -> bool {
+        self.router_out.push(now, flit)
+    }
+
+    /// One flit (if any) for NoC injection this cycle.
+    pub fn pop_to_noc(&mut self, now: Ps) -> Option<Flit> {
+        let f = self.router_in.pop(now);
+        if f.is_some() {
+            self.stats.flits_to_noc += 1;
+        }
+        f
+    }
+
+    pub fn peek_to_noc(&self, now: Ps) -> Option<&Flit> {
+        self.router_in.peek(now)
+    }
+
+    // ------------------------------------------------------------------
+    // Interface-clock side
+    // ------------------------------------------------------------------
+
+    pub fn step_iface(&mut self, now: Ps) {
+        self.stats.iface_cycles += 1;
+        if self.channels.iter().any(|c| c.busy()) {
+            self.stats.busy_iface_cycles += 1;
+        }
+        // Chaining controllers (combinational, §4.2 B.3).
+        self.step_chain_controllers();
+        // Packet receiver(s): the input stream is serial; the PR owning
+        // the in-flight packet (or the one selected by the head flit's
+        // hwa_id) advances.
+        self.step_pr(now);
+        // Local grant controllers (1/cycle each, §4.2 B.2).
+        for ch in self.channels.iter_mut() {
+            ch.step_lgc(now);
+        }
+        // Packet sender into the router input buffer.
+        let router_in = &mut self.router_in;
+        let mut pushed = |f: Flit| router_in.push(now, f);
+        self.ps.step(&mut self.channels, &mut pushed);
+    }
+
+    fn step_pr(&mut self, now: Ps) {
+        let pr_idx = match self.active_pr {
+            Some(i) if !self.prs[i].idle() => i,
+            _ => {
+                // Select by the head flit waiting at the router buffer.
+                let Some(flit) = self.router_out.peek(now) else {
+                    return;
+                };
+                debug_assert!(flit.is_head());
+                let hwa = flit.head_fields().hwa_id;
+                // Unknown HWA ids go to PR 0 to be consumed/dropped.
+                let i = match self.id_map[hwa as usize] {
+                    Some(chan) => self.config.pr.pr_for(chan),
+                    None => 0,
+                };
+                self.active_pr = Some(i);
+                i
+            }
+        };
+        let id_map = &self.id_map;
+        let lookup = move |id: u8| id_map[id as usize];
+        self.prs[pr_idx].step(now, &mut self.router_out, &mut self.channels, &lookup);
+    }
+
+    fn step_chain_controllers(&mut self) {
+        for group in self.chain_groups.iter_mut() {
+            let m = group.members.len();
+            if m == 0 {
+                continue;
+            }
+            // RR over producer CBs; one transfer per group per cycle.
+            for k in 0..m {
+                let prod = group.members[(group.rr + k) % m];
+                let Some(task) = self.channels[prod].chain_out.front() else {
+                    continue;
+                };
+                let next_idx = task.head.chain_index[0] as usize;
+                if next_idx >= m {
+                    // Malformed index: drop the task (counted as forward
+                    // to nowhere). Keeps the fabric live.
+                    self.channels[prod].chain_out.pop_front();
+                    continue;
+                }
+                let target = group.members[next_idx];
+                if self.channels[target].chain_in.is_none() {
+                    let mut task =
+                        self.channels[prod].chain_out.pop_front().expect("peeked");
+                    task.advance_chain();
+                    self.channels[target].chain_in = Some(task);
+                    group.rr = (group.rr + k + 1) % m;
+                    break; // one CC hand-off per group per cycle
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // HWA-clock side
+    // ------------------------------------------------------------------
+
+    /// Step one channel on its own clock edge.
+    pub fn step_channel(&mut self, idx: usize, now: Ps) {
+        self.channels[idx].step_hwa(now, self.compute.as_mut());
+    }
+
+    /// Distinct HWA clock periods (for MultiClock registration):
+    /// (period_ps, channel indices).
+    pub fn hwa_domains(&self) -> Vec<(u64, Vec<usize>)> {
+        let mut domains: Vec<(u64, Vec<usize>)> = Vec::new();
+        for (i, ch) in self.channels.iter().enumerate() {
+            let p = ch.hwa_clock.period_ps;
+            match domains.iter_mut().find(|(q, _)| *q == p) {
+                Some((_, v)) => v.push(i),
+                None => domains.push((p, vec![i])),
+            }
+        }
+        domains
+    }
+
+    /// Everything drained: no task anywhere in the fabric.
+    pub fn quiescent(&self, now: Ps) -> bool {
+        self.router_out.is_empty()
+            && self.router_in.is_empty()
+            && self.prs.iter().all(|p| p.idle())
+            && self.ps.idle()
+            && self.channels.iter().all(|c| c.quiescent())
+            && now > 0
+    }
+
+    /// Total tasks executed across channels.
+    pub fn tasks_executed(&self) -> u64 {
+        self.channels.iter().map(|c| c.stats.tasks_executed).sum()
+    }
+
+    pub fn ps_stats(&self) -> super::iface::ps::PsStats {
+        self.ps.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::MultiClock;
+    use crate::flit::{Direction, HeadFields, Packet, PacketBuilder, PacketType};
+    use crate::fpga::channel::task::CommandKind;
+    use crate::fpga::hwa::{spec_by_name, table3};
+
+    /// A self-contained harness driving the fabric's clocks directly
+    /// (no NoC): feeds flits into router_out, drains router_in.
+    struct Rig {
+        fpga: Fpga,
+        mc: MultiClock,
+        iface_dom: crate::clock::DomainId,
+        noc_dom: crate::clock::DomainId,
+        hwa_doms: Vec<(crate::clock::DomainId, Vec<usize>)>,
+        out: Vec<Flit>,
+        builder: PacketBuilder,
+    }
+
+    impl Rig {
+        fn new(specs: Vec<HwaSpec>) -> Self {
+            let mut mc = MultiClock::new();
+            let noc_clock = ClockDomain::from_mhz("noc", 1000.0);
+            let noc_dom = mc.add(noc_clock.clone());
+            let cfg = FpgaConfig::paper_defaults(5, 7, vec![0; 8]);
+            let fpga = Fpga::new(cfg, specs, &noc_clock);
+            let iface_dom = mc.add(fpga.iface_clock.clone());
+            let hwa_doms = fpga
+                .hwa_domains()
+                .into_iter()
+                .enumerate()
+                .map(|(i, (p, chans))| {
+                    let d = mc.add(ClockDomain {
+                        name: format!("hwa{i}"),
+                        period_ps: p,
+                        phase_ps: 0,
+                    });
+                    (d, chans)
+                })
+                .collect();
+            Self {
+                fpga,
+                mc,
+                iface_dom,
+                noc_dom,
+                hwa_doms,
+                out: Vec::new(),
+                builder: PacketBuilder::new(1),
+            }
+        }
+
+        fn inject(&mut self, p: &Packet) {
+            for f in &p.flits {
+                let now = self.mc.now();
+                assert!(self.fpga.router_out.push(now, *f));
+            }
+        }
+
+        fn run(&mut self, until_ps: Ps) {
+            let mut ticking = Vec::new();
+            while self.mc.now() < until_ps {
+                let t = self.mc.advance(&mut ticking);
+                for d in ticking.clone() {
+                    if d == self.iface_dom {
+                        self.fpga.step_iface(t);
+                    } else if d == self.noc_dom {
+                        if let Some(f) = self.fpga.pop_to_noc(t) {
+                            self.out.push(f);
+                        }
+                    } else if let Some((_, chans)) =
+                        self.hwa_doms.iter().find(|(dd, _)| *dd == d)
+                    {
+                        for i in chans.clone() {
+                            self.fpga.step_channel(i, t);
+                        }
+                    }
+                }
+            }
+        }
+
+        fn request(&mut self, hwa_id: u8, src: u8, chain: Option<(u8, [u8; 3])>) {
+            let (depth, index) = chain.unwrap_or((0, [0; 3]));
+            let p = self.builder.command(HeadFields {
+                routing: 5,
+                hwa_id,
+                src_id: src,
+                direction: Direction::ProcToHwa,
+                chain_depth: depth,
+                chain_index: index,
+                payload: CommandKind::Request.encode(),
+                ..HeadFields::default()
+            });
+            self.inject(&p);
+        }
+
+        fn payload_for_grant(&mut self, grant: &HeadFields, words: &[u32]) {
+            let p = self.builder.payload(
+                HeadFields {
+                    routing: 5,
+                    hwa_id: grant.hwa_id,
+                    src_id: grant.src_id,
+                    tb_id: grant.tb_id,
+                    task_head: true,
+                    task_tail: true,
+                    chain_depth: grant.chain_depth,
+                    chain_index: grant.chain_index,
+                    direction: Direction::ProcToHwa,
+                    ..HeadFields::default()
+                },
+                words,
+            );
+            self.inject(&p);
+        }
+
+        fn take_grants(&mut self) -> Vec<HeadFields> {
+            let mut grants = Vec::new();
+            self.out.retain(|f| {
+                if f.is_head() {
+                    let h = f.head_fields();
+                    if h.pkt_type == PacketType::Command
+                        && CommandKind::decode(h.payload) == CommandKind::Grant
+                    {
+                        grants.push(h);
+                        return false;
+                    }
+                }
+                true
+            });
+            grants
+        }
+    }
+
+    #[test]
+    fn request_grant_payload_result_roundtrip() {
+        let mut rig = Rig::new(vec![spec_by_name("dfadd").unwrap()]);
+        rig.request(0, 1, None);
+        rig.run(1_000_000); // 1 µs
+        let grants = rig.take_grants();
+        assert_eq!(grants.len(), 1, "grant issued");
+        assert_eq!(grants[0].hwa_id, 0);
+        rig.payload_for_grant(&grants[0], &[1, 2, 3, 4]);
+        rig.run(3_000_000);
+        // Result packet: head + 1 data flit (dfadd out_words=2).
+        let heads: Vec<HeadFields> = rig
+            .out
+            .iter()
+            .filter(|f| f.is_head())
+            .map(|f| f.head_fields())
+            .collect();
+        assert_eq!(heads.len(), 1, "one result packet: {:?}", rig.out.len());
+        assert_eq!(heads[0].direction, Direction::HwaToProc);
+        assert_eq!(rig.fpga.tasks_executed(), 1);
+        assert!(rig.fpga.quiescent(rig.mc.now()));
+    }
+
+    #[test]
+    fn grants_deferred_until_tb_free() {
+        // 3 requests, 2 TBs: third grant must wait for a completion.
+        let mut rig = Rig::new(vec![spec_by_name("dfdiv").unwrap()]);
+        for src in 0..3 {
+            rig.request(0, src, None);
+        }
+        rig.run(1_000_000);
+        let grants = rig.take_grants();
+        assert_eq!(grants.len(), 2, "only as many grants as TBs");
+        // Feed both granted payloads; after one completes, grant 3 arrives.
+        for g in &grants {
+            rig.payload_for_grant(&g.clone(), &[1, 2, 3, 4]);
+        }
+        rig.run(rig.mc.now() + 4_000_000);
+        let more = rig.take_grants();
+        assert_eq!(more.len(), 1, "third grant after TB freed");
+    }
+
+    #[test]
+    fn chaining_two_hwas_single_result() {
+        // izigzag (idx 0) chains into iquantize (idx 1): one request,
+        // one payload, ONE result packet, no intermediate NoC traffic.
+        let specs = vec![
+            spec_by_name("izigzag").unwrap(),
+            spec_by_name("iquantize").unwrap(),
+        ];
+        let mut rig = Rig::new(specs);
+        rig.fpga.add_chain_group(vec![0, 1]);
+        rig.request(0, 1, Some((1, [1, 0, 0])));
+        rig.run(1_000_000);
+        let grants = rig.take_grants();
+        assert_eq!(grants.len(), 1);
+        let words: Vec<u32> = (0..64).collect();
+        rig.payload_for_grant(&grants[0], &words);
+        rig.run(rig.mc.now() + 8_000_000);
+        let result_heads: Vec<HeadFields> = rig
+            .out
+            .iter()
+            .filter(|f| f.is_head() && f.head_fields().pkt_type == PacketType::Payload)
+            .map(|f| f.head_fields())
+            .collect();
+        assert_eq!(result_heads.len(), 1, "single chained result");
+        assert_eq!(result_heads[0].hwa_id, 1, "result from the LAST hwa");
+        assert_eq!(rig.fpga.channels[0].stats.chain_forwards, 1);
+        assert_eq!(rig.fpga.channels[1].stats.chain_receives, 1);
+        assert_eq!(rig.fpga.tasks_executed(), 2);
+        assert!(rig.fpga.quiescent(rig.mc.now()));
+    }
+
+    #[test]
+    fn full_depth3_jpeg_chain() {
+        // izigzag -> iquantize -> idct -> shiftbound (§6.6's pipeline).
+        let specs = vec![
+            spec_by_name("izigzag").unwrap(),
+            spec_by_name("iquantize").unwrap(),
+            spec_by_name("idct").unwrap(),
+            spec_by_name("shiftbound").unwrap(),
+        ];
+        let mut rig = Rig::new(specs);
+        rig.fpga.add_chain_group(vec![0, 1, 2, 3]);
+        rig.request(0, 2, Some((3, [1, 2, 3])));
+        rig.run(1_000_000);
+        let grants = rig.take_grants();
+        assert_eq!(grants.len(), 1);
+        let words: Vec<u32> = (0..64).collect();
+        rig.payload_for_grant(&grants[0], &words);
+        rig.run(rig.mc.now() + 20_000_000);
+        assert_eq!(rig.fpga.tasks_executed(), 4, "all four stages ran");
+        let result_heads: Vec<HeadFields> = rig
+            .out
+            .iter()
+            .filter(|f| f.is_head() && f.head_fields().pkt_type == PacketType::Payload)
+            .map(|f| f.head_fields())
+            .collect();
+        assert_eq!(result_heads.len(), 1);
+        assert_eq!(result_heads[0].hwa_id, 3, "shiftbound emits the result");
+        assert!(rig.fpga.quiescent(rig.mc.now()));
+    }
+
+    #[test]
+    fn eight_hwas_parallel_requests() {
+        let specs: Vec<HwaSpec> = table3().into_iter().take(8).collect();
+        let mut rig = Rig::new(specs.clone());
+        for (i, _) in specs.iter().enumerate() {
+            rig.request(i as u8, (i % 8) as u8, None);
+        }
+        rig.run(1_000_000);
+        let grants = rig.take_grants();
+        assert_eq!(grants.len(), 8, "each channel granted independently");
+        for g in grants {
+            let spec = &specs[g.hwa_id as usize];
+            let words: Vec<u32> = (0..spec.in_words as u32).collect();
+            rig.payload_for_grant(&g, &words);
+        }
+        rig.run(rig.mc.now() + 30_000_000);
+        assert_eq!(rig.fpga.tasks_executed(), 8);
+        assert!(rig.fpga.quiescent(rig.mc.now()));
+    }
+}

@@ -1,0 +1,9 @@
+//! Interface block (paper §4.1): packet receivers and packet senders.
+
+pub mod pr;
+pub mod ps;
+pub mod source;
+
+pub use pr::{PacketReceiver, PrStrategy};
+pub use ps::{PacketSender, PsStrategy};
+pub use source::FlitSource;

@@ -1,0 +1,300 @@
+//! Packet receiver (PR), §4.1 A.1: an FSM reading flits from the router
+//! output buffer and dispatching them to HWA channels.
+//!
+//! Strategy (centralized vs. distributed, Fig. 3a) determines how many
+//! channels each PR instance serves. In cycle terms every PR processes one
+//! flit per interface cycle; the strategy's payoff is the achievable clock
+//! frequency (fan-out-driven — reproduced by `synth::delay`, Fig. 7) while
+//! the dispatch FSM below realizes Table 2's latencies: command packets
+//! dispatch in 1 cycle, payload packets in 2 + N (head pop, decode/setup,
+//! then one data flit per cycle).
+
+use crate::clock::Ps;
+use crate::flit::{FlitKind, HeadFields, PacketType};
+
+use super::super::channel::task::CommandKind;
+use super::super::channel::Channel;
+use super::source::FlitSource;
+
+/// PR strategy: number of HWA channels per PR instance
+/// (`group_size == n_channels` models the centralized strategy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrStrategy {
+    pub group_size: usize,
+}
+
+impl PrStrategy {
+    pub fn distributed(group_size: usize) -> Self {
+        assert!(group_size > 0);
+        Self { group_size }
+    }
+
+    pub fn centralized(n_channels: usize) -> Self {
+        Self {
+            group_size: n_channels.max(1),
+        }
+    }
+
+    pub fn n_prs(&self, n_channels: usize) -> usize {
+        n_channels.div_ceil(self.group_size)
+    }
+
+    /// PR instance responsible for a channel index.
+    pub fn pr_for(&self, channel_idx: usize) -> usize {
+        channel_idx / self.group_size
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrStats {
+    pub flits_in: u64,
+    pub commands_dispatched: u64,
+    pub payload_packets: u64,
+    pub stall_cycles: u64,
+}
+
+#[derive(Debug)]
+enum PrState {
+    Idle,
+    /// Head popped; decode/setup cycle before data flits stream.
+    Decode { head: HeadFields, known: bool },
+    /// Streaming data flits of the packet into the TB.
+    Stream { head: HeadFields, known: bool },
+}
+
+/// One PR instance.
+#[derive(Debug)]
+pub struct PacketReceiver {
+    state: PrState,
+    pub stats: PrStats,
+}
+
+impl PacketReceiver {
+    pub fn new() -> Self {
+        Self {
+            state: PrState::Idle,
+            stats: PrStats::default(),
+        }
+    }
+
+    /// One interface-clock cycle: consume at most one flit from `input`
+    /// and dispatch into `channels`. `chan_index` maps an HWA id to a
+    /// channel slot in `channels` (None = not ours / unknown).
+    pub fn step(
+        &mut self,
+        now: Ps,
+        input: &mut dyn FlitSource,
+        channels: &mut [Channel],
+        chan_index: &dyn Fn(u8) -> Option<usize>,
+    ) {
+        match std::mem::replace(&mut self.state, PrState::Idle) {
+            PrState::Idle => {
+                let Some(flit) = input.peek_at(now) else {
+                    return;
+                };
+                debug_assert!(flit.is_head(), "stream must start with a head");
+                let head = flit.head_fields();
+                match head.pkt_type {
+                    PacketType::Command => {
+                        debug_assert_eq!(
+                            CommandKind::decode(head.payload),
+                            CommandKind::Request
+                        );
+                        let Some(idx) = chan_index(head.hwa_id) else {
+                            input.pop_at(now); // unknown HWA: drop
+                            return;
+                        };
+                        if channels[idx].push_request(head, now) {
+                            input.pop_at(now);
+                            self.stats.flits_in += 1;
+                            self.stats.commands_dispatched += 1;
+                        } else {
+                            self.stats.stall_cycles += 1; // RB full: retry
+                        }
+                    }
+                    PacketType::Payload => {
+                        input.pop_at(now).expect("peeked");
+                        self.stats.flits_in += 1;
+                        let known = chan_index(head.hwa_id).is_some();
+                        self.state = PrState::Decode { head, known };
+                    }
+                }
+            }
+            PrState::Decode { head, known } => {
+                // Decode/setup cycle: claim the granted TB.
+                if known {
+                    let idx = chan_index(head.hwa_id).expect("known");
+                    // flow id comes from the head flit's builder; recover it
+                    // lazily from the first data flit instead (meta is
+                    // uniform across a packet) — here we pass 0 and patch
+                    // on the first data flit.
+                    let ok = channels[idx].payload_head(head, 0);
+                    debug_assert!(ok, "payload without a granted TB");
+                    self.stats.payload_packets += 1;
+                }
+                self.state = PrState::Stream { head, known };
+            }
+            PrState::Stream { head, known } => {
+                let Some(flit) = input.pop_at(now) else {
+                    self.stats.stall_cycles += 1;
+                    self.state = PrState::Stream { head, known };
+                    return;
+                };
+                self.stats.flits_in += 1;
+                let is_tail = flit.kind() == FlitKind::Tail;
+                if known {
+                    let idx = chan_index(head.hwa_id).expect("known channel");
+                    let [a, b] = flit.body_payload();
+                    let lanes =
+                        [a as u32, (a >> 32) as u32, b as u32, (b >> 32) as u32];
+                    let ready_at = channels[idx].cdc_ready_at(now);
+                    channels[idx].payload_data(head.tb_id, &lanes, is_tail, ready_at);
+                }
+                if is_tail {
+                    self.state = PrState::Idle;
+                } else {
+                    self.state = PrState::Stream { head, known };
+                }
+            }
+        }
+    }
+
+    pub fn idle(&self) -> bool {
+        matches!(self.state, PrState::Idle)
+    }
+}
+
+impl Default for PacketReceiver {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flit::{Direction, Flit, PacketBuilder};
+    use crate::fpga::hwa::spec_by_name;
+    use std::collections::VecDeque;
+
+    fn mk_channels() -> Vec<Channel> {
+        vec![Channel::new(
+            0,
+            spec_by_name("dfadd").unwrap(),
+            2,
+            vec![0; 8],
+            7,
+        )]
+    }
+
+    fn drive(pr: &mut PacketReceiver, chans: &mut [Channel], flits: Vec<Flit>) -> u64 {
+        let mut queue: VecDeque<Flit> = flits.into_iter().collect();
+        let mut cycles = 0;
+        for _ in 0..1000 {
+            cycles += 1;
+            let now = cycles * 3333;
+            pr.step(now, &mut queue, chans, &|id| {
+                if id == 0 {
+                    Some(0)
+                } else {
+                    None
+                }
+            });
+            if queue.is_empty() && pr.idle() {
+                break;
+            }
+        }
+        cycles
+    }
+
+    #[test]
+    fn command_dispatches_in_one_cycle() {
+        let mut pr = PacketReceiver::new();
+        let mut chans = mk_channels();
+        let mut b = PacketBuilder::new(1);
+        let req = b.command(HeadFields {
+            hwa_id: 0,
+            direction: Direction::ProcToHwa,
+            ..HeadFields::default()
+        });
+        let cycles = drive(&mut pr, &mut chans, req.flits.clone());
+        assert_eq!(cycles, 1);
+        assert_eq!(chans[0].rb_len(), 1);
+        assert_eq!(pr.stats.commands_dispatched, 1);
+    }
+
+    #[test]
+    fn payload_takes_two_plus_n_cycles() {
+        let mut pr = PacketReceiver::new();
+        let mut chans = mk_channels();
+        chans[0].push_request(
+            HeadFields {
+                hwa_id: 0,
+                ..HeadFields::default()
+            },
+            0,
+        );
+        chans[0].step_lgc(0);
+        chans[0].cmd_out.clear();
+        let mut b = PacketBuilder::new(2);
+        let p = b.payload(
+            HeadFields {
+                hwa_id: 0,
+                tb_id: 0,
+                task_head: true,
+                task_tail: true,
+                ..HeadFields::default()
+            },
+            &[1, 2, 3, 4], // 1 data flit
+        );
+        let n = p.len() - 1;
+        let cycles = drive(&mut pr, &mut chans, p.flits.clone());
+        assert_eq!(cycles as usize, 2 + n, "Table 2: payload = 2+N");
+    }
+
+    #[test]
+    fn payload_words_reach_execution() {
+        let mut pr = PacketReceiver::new();
+        let mut chans = mk_channels();
+        chans[0].push_request(HeadFields::default(), 0);
+        chans[0].step_lgc(0);
+        chans[0].cmd_out.clear();
+        let mut b = PacketBuilder::new(3);
+        let p = b.payload(
+            HeadFields {
+                hwa_id: 0,
+                tb_id: 0,
+                task_head: true,
+                task_tail: true,
+                ..HeadFields::default()
+            },
+            &[10, 20, 30, 40],
+        );
+        drive(&mut pr, &mut chans, p.flits.clone());
+        use crate::fpga::hwa::EchoCompute;
+        let mut compute = EchoCompute;
+        let mut now = 1_000_000;
+        for _ in 0..200 {
+            now += chans[0].hwa_clock.period_ps;
+            chans[0].step_hwa(now, &mut compute);
+            if !chans[0].pob.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(chans[0].completed.len(), 1);
+        assert_eq!(chans[0].completed[0].words.len(), 2); // dfadd out_words
+    }
+
+    #[test]
+    fn unknown_hwa_command_dropped() {
+        let mut pr = PacketReceiver::new();
+        let mut chans = mk_channels();
+        let mut b = PacketBuilder::new(4);
+        let req = b.command(HeadFields {
+            hwa_id: 31,
+            ..HeadFields::default()
+        });
+        drive(&mut pr, &mut chans, req.flits.clone());
+        assert_eq!(chans[0].rb_len(), 0);
+    }
+}

@@ -1,0 +1,363 @@
+//! Packet sender (PS), §4.1 A.2: arbitrates among HWA channels and
+//! streams the selected packets into the router input buffer.
+//!
+//! * Command packets (grants, notifies) are single-flit and strictly
+//!   higher priority than result packets; round-robin among channels.
+//! * Result packets use priority-based round-robin (priority bits from
+//!   the head flit; all-zero priorities degrade to plain round-robin).
+//! * Strategy (global vs. hierarchical, Fig. 3b) groups channels for
+//!   two-level arbitration; in cycle terms both meet Table 2 (command 1
+//!   cycle, payload 4 + N: 3 arbitration/handshake cycles, then the head
+//!   and the N data flits at one per cycle). The strategy's fmax impact is
+//!   modelled by `synth::delay` (Fig. 7).
+
+use crate::flit::{Flit, Packet, PacketBuilder};
+
+use super::super::channel::Channel;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PsStrategy {
+    /// Channels per first-level arbitration group (== n_channels for the
+    /// global strategy).
+    pub group_size: usize,
+}
+
+impl PsStrategy {
+    pub fn hierarchical(group_size: usize) -> Self {
+        assert!(group_size > 0);
+        Self { group_size }
+    }
+
+    pub fn global(n_channels: usize) -> Self {
+        Self {
+            group_size: n_channels.max(1),
+        }
+    }
+
+    pub fn n_groups(&self, n_channels: usize) -> usize {
+        n_channels.div_ceil(self.group_size)
+    }
+}
+
+/// Arbitration/handshake cycles before a result packet's head flit leaves.
+const RESULT_ARB_CYCLES: u32 = 3;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PsStats {
+    pub command_flits: u64,
+    pub result_packets: u64,
+    pub result_flits: u64,
+    pub stall_cycles: u64,
+    pub busy_cycles: u64,
+}
+
+#[derive(Debug)]
+enum PsState {
+    Idle,
+    Arbitrating { channel: usize, cycles_left: u32 },
+    Streaming { packet: Packet, next: usize },
+}
+
+#[derive(Debug)]
+pub struct PacketSender {
+    strategy: PsStrategy,
+    state: PsState,
+    cmd_rr: usize,
+    group_rr: usize,
+    within_rr: Vec<usize>,
+    builder: PacketBuilder,
+    pub stats: PsStats,
+}
+
+impl PacketSender {
+    pub fn new(strategy: PsStrategy, n_channels: usize) -> Self {
+        Self {
+            strategy,
+            state: PsState::Idle,
+            cmd_rr: 0,
+            group_rr: 0,
+            within_rr: vec![0; strategy.n_groups(n_channels)],
+            builder: PacketBuilder::new(0x4000_0000),
+            stats: PsStats::default(),
+        }
+    }
+
+    /// One interface cycle. `out_push` pushes a flit toward the router
+    /// input buffer, returning false when it is full.
+    pub fn step(
+        &mut self,
+        channels: &mut [Channel],
+        out_push: &mut dyn FnMut(Flit) -> bool,
+    ) {
+        match std::mem::replace(&mut self.state, PsState::Idle) {
+            PsState::Idle => {
+                // 1) Command packets first (RR over channels).
+                let n = channels.len();
+                for k in 0..n {
+                    let idx = (self.cmd_rr + k) % n;
+                    if let Some(head) = channels[idx].cmd_out.front() {
+                        let pkt = self.builder.command(*head);
+                        if out_push(pkt.flits[0]) {
+                            channels[idx].cmd_out.pop_front();
+                            self.cmd_rr = (idx + 1) % n;
+                            self.stats.command_flits += 1;
+                            self.stats.busy_cycles += 1;
+                        } else {
+                            self.stats.stall_cycles += 1;
+                        }
+                        return;
+                    }
+                }
+                // 2) Result packets: two-level priority round-robin.
+                if let Some(winner) = self.arbitrate_result(channels) {
+                    self.state = PsState::Arbitrating {
+                        channel: winner,
+                        cycles_left: RESULT_ARB_CYCLES,
+                    };
+                    self.stats.busy_cycles += 1;
+                }
+            }
+            PsState::Arbitrating {
+                channel,
+                cycles_left,
+            } => {
+                self.stats.busy_cycles += 1;
+                if cycles_left > 1 {
+                    self.state = PsState::Arbitrating {
+                        channel,
+                        cycles_left: cycles_left - 1,
+                    };
+                } else {
+                    match channels[channel].pop_result() {
+                        Some(packet) => {
+                            self.stats.result_packets += 1;
+                            self.state = PsState::Streaming { packet, next: 0 };
+                            // Handshake's final cycle coincides with head
+                            // issue.
+                            self.emit(out_push);
+                        }
+                        None => { /* drained by reset: drop */ }
+                    }
+                }
+            }
+            PsState::Streaming { packet, next } => {
+                self.stats.busy_cycles += 1;
+                self.state = PsState::Streaming { packet, next };
+                self.emit(out_push);
+            }
+        }
+    }
+
+    fn emit(&mut self, out_push: &mut dyn FnMut(Flit) -> bool) {
+        if let PsState::Streaming { packet, next } =
+            std::mem::replace(&mut self.state, PsState::Idle)
+        {
+            if next < packet.flits.len() {
+                if out_push(packet.flits[next]) {
+                    self.stats.result_flits += 1;
+                    if next + 1 < packet.flits.len() {
+                        self.state = PsState::Streaming {
+                            packet,
+                            next: next + 1,
+                        };
+                    }
+                } else {
+                    self.stats.stall_cycles += 1;
+                    self.state = PsState::Streaming { packet, next };
+                }
+            }
+        }
+    }
+
+    /// Two-level arbitration: per-group priority-RR, then RR over groups.
+    fn arbitrate_result(&mut self, channels: &[Channel]) -> Option<usize> {
+        let n = channels.len();
+        let g = self.strategy.group_size;
+        let n_groups = self.strategy.n_groups(n);
+        for gk in 0..n_groups {
+            let group = (self.group_rr + gk) % n_groups;
+            let lo = group * g;
+            let hi = (lo + g).min(n);
+            let best_prio = (lo..hi)
+                .filter_map(|i| channels[i].pob_priority())
+                .max();
+            let Some(best_prio) = best_prio else {
+                continue;
+            };
+            let span = hi - lo;
+            for k in 0..span {
+                let idx = lo + (self.within_rr[group] + k) % span;
+                if channels[idx].pob_priority() == Some(best_prio) {
+                    self.within_rr[group] = (idx - lo + 1) % span;
+                    self.group_rr = (group + 1) % n_groups;
+                    return Some(idx);
+                }
+            }
+        }
+        None
+    }
+
+    pub fn idle(&self) -> bool {
+        matches!(self.state, PsState::Idle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flit::{FlitKind, HeadFields, PacketType};
+    use crate::fpga::hwa::spec_by_name;
+
+    fn mk_channel(hwa_id: u8) -> Channel {
+        Channel::new(hwa_id, spec_by_name("dfadd").unwrap(), 2, vec![0; 8], 7)
+    }
+
+    fn result_packet(ch: &mut Channel, priority: u8, words: usize) {
+        let mut b = crate::flit::PacketBuilder::new(100 + ch.hwa_id as u32);
+        let p = b.payload(
+            HeadFields {
+                routing: 0,
+                priority,
+                pkt_type: PacketType::Payload,
+                ..HeadFields::default()
+            },
+            &vec![1u32; words],
+        );
+        assert!(ch.push_result_packet(p));
+    }
+
+    fn run(ps: &mut PacketSender, channels: &mut [Channel], cycles: usize) -> Vec<Flit> {
+        let mut out = Vec::new();
+        for _ in 0..cycles {
+            let mut push = |f: Flit| {
+                out.push(f);
+                true
+            };
+            ps.step(channels, &mut push);
+        }
+        out
+    }
+
+    #[test]
+    fn command_beats_result() {
+        let mut chans = vec![mk_channel(0), mk_channel(1)];
+        result_packet(&mut chans[0], 0, 4);
+        chans[1].cmd_out.push_back(HeadFields {
+            pkt_type: PacketType::Command,
+            ..HeadFields::default()
+        });
+        let mut ps = PacketSender::new(PsStrategy::hierarchical(2), 2);
+        let out = run(&mut ps, &mut chans, 1);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].kind(), FlitKind::Single, "command went first");
+    }
+
+    #[test]
+    fn result_packet_takes_4_plus_n_cycles() {
+        let mut chans = vec![mk_channel(0)];
+        result_packet(&mut chans[0], 0, 4); // head + 1 data flit => N=1
+        let mut ps = PacketSender::new(PsStrategy::global(1), 1);
+        let mut emitted_at = Vec::new();
+        for cycle in 1..=20 {
+            let mut push = |_f: Flit| {
+                emitted_at.push(cycle);
+                true
+            };
+            ps.step(&mut chans, &mut push);
+        }
+        // Head on cycle 4 (3 arb + issue), tail on cycle 5 => 4+N total.
+        assert_eq!(emitted_at, vec![4, 5]);
+    }
+
+    #[test]
+    fn priority_wins_within_group() {
+        let mut chans = vec![mk_channel(0), mk_channel(1)];
+        result_packet(&mut chans[0], 0, 4);
+        result_packet(&mut chans[1], 3, 4);
+        let mut ps = PacketSender::new(PsStrategy::global(2), 2);
+        let out = run(&mut ps, &mut chans, 6);
+        assert!(!out.is_empty());
+        assert_eq!(out[0].head_fields().priority, 3, "high priority first");
+    }
+
+    #[test]
+    fn round_robin_when_priorities_equal() {
+        let mut chans = vec![mk_channel(0), mk_channel(1)];
+        for _ in 0..2 {
+            result_packet(&mut chans[0], 1, 4);
+            result_packet(&mut chans[1], 1, 4);
+        }
+        let mut ps = PacketSender::new(PsStrategy::global(2), 2);
+        let out = run(&mut ps, &mut chans, 40);
+        let heads: Vec<u32> = out
+            .iter()
+            .filter(|f| f.is_head())
+            .map(|f| f.meta.flow)
+            .collect();
+        assert_eq!(heads.len(), 4);
+        assert_ne!(heads[0], heads[1], "alternates between channels");
+    }
+
+    #[test]
+    fn streaming_not_preempted_by_command() {
+        let mut chans = vec![mk_channel(0), mk_channel(1)];
+        result_packet(&mut chans[0], 0, 16); // head + 4 data flits
+        let mut ps = PacketSender::new(PsStrategy::global(2), 2);
+        run(&mut ps, &mut chans, 4); // arb + head out
+        chans[1].cmd_out.push_back(HeadFields {
+            pkt_type: PacketType::Command,
+            ..HeadFields::default()
+        });
+        let out = run(&mut ps, &mut chans, 10);
+        let kinds: Vec<FlitKind> = out.iter().map(|f| f.kind()).collect();
+        let cmd_pos = kinds.iter().position(|k| *k == FlitKind::Single).unwrap();
+        let last_data = kinds
+            .iter()
+            .rposition(|k| matches!(k, FlitKind::Body | FlitKind::Tail))
+            .unwrap();
+        assert!(cmd_pos > last_data, "packet finished before command");
+    }
+
+    #[test]
+    fn backpressure_stalls_without_loss() {
+        let mut chans = vec![mk_channel(0)];
+        result_packet(&mut chans[0], 0, 8);
+        let mut ps = PacketSender::new(PsStrategy::global(1), 1);
+        let mut accepted = Vec::new();
+        for cycle in 1..=30 {
+            let mut push = |f: Flit| {
+                if cycle < 6 {
+                    false
+                } else {
+                    accepted.push(f);
+                    true
+                }
+            };
+            ps.step(&mut chans, &mut push);
+        }
+        // head + 2 data flits all delivered despite early rejects.
+        assert_eq!(accepted.len(), 3);
+        assert!(ps.stats.stall_cycles > 0);
+    }
+
+    #[test]
+    fn hierarchical_groups_served_round_robin() {
+        let mut chans: Vec<Channel> = (0..4).map(mk_channel).collect();
+        for ch in chans.iter_mut() {
+            result_packet(ch, 0, 4);
+        }
+        let mut ps = PacketSender::new(PsStrategy::hierarchical(2), 4);
+        let out = run(&mut ps, &mut chans, 40);
+        let heads: Vec<u32> = out
+            .iter()
+            .filter(|f| f.is_head())
+            .map(|f| f.meta.flow - 100)
+            .collect();
+        assert_eq!(heads.len(), 4);
+        // Group alternation: channel from group 0 then group 1 then ...
+        assert_eq!(heads[0] / 2, 0);
+        assert_eq!(heads[1] / 2, 1);
+        assert_eq!(heads[2] / 2, 0);
+        assert_eq!(heads[3] / 2, 1);
+    }
+}

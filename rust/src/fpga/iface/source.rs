@@ -1,0 +1,58 @@
+//! Flit source abstraction: what a packet receiver reads from.
+//!
+//! Implemented by the router-output [`AsyncFifo`] (the real datapath) and
+//! by plain `VecDeque`s in unit tests.
+
+use std::collections::VecDeque;
+
+use crate::clock::{AsyncFifo, Ps};
+use crate::flit::Flit;
+
+pub trait FlitSource {
+    fn peek_at(&self, now: Ps) -> Option<Flit>;
+    fn pop_at(&mut self, now: Ps) -> Option<Flit>;
+}
+
+impl FlitSource for AsyncFifo<Flit> {
+    fn peek_at(&self, now: Ps) -> Option<Flit> {
+        self.peek(now).copied()
+    }
+
+    fn pop_at(&mut self, now: Ps) -> Option<Flit> {
+        self.pop(now)
+    }
+}
+
+impl FlitSource for VecDeque<Flit> {
+    fn peek_at(&self, _now: Ps) -> Option<Flit> {
+        self.front().copied()
+    }
+
+    fn pop_at(&mut self, _now: Ps) -> Option<Flit> {
+        self.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::ClockDomain;
+
+    #[test]
+    fn vecdeque_source() {
+        let mut q: VecDeque<Flit> = VecDeque::new();
+        q.push_back(Flit::default());
+        assert!(q.peek_at(0).is_some());
+        assert!(q.pop_at(0).is_some());
+        assert!(q.pop_at(0).is_none());
+    }
+
+    #[test]
+    fn async_fifo_source_respects_visibility() {
+        let rd = ClockDomain::from_mhz("rd", 100.0);
+        let mut f: AsyncFifo<Flit> = AsyncFifo::new(4, &rd);
+        f.push(0, Flit::default());
+        assert!(f.peek_at(10_000).is_none(), "one edge: not visible yet");
+        assert!(f.peek_at(20_000).is_some(), "two edges: visible");
+    }
+}

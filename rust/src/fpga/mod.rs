@@ -1,0 +1,12 @@
+//! The FPGA-based multi-accelerator architecture (paper §4): interface
+//! block, HWA channels, chaining fabric and HWA models.
+
+pub mod channel;
+pub mod fabric;
+pub mod hwa;
+pub mod iface;
+
+pub use channel::Channel;
+pub use fabric::{ChainGroup, Fpga, FpgaConfig, ROUTER_FIFO_CAP};
+pub use hwa::{spec_by_name, table3, EchoCompute, HwaCompute, HwaSpec, Resources};
+pub use iface::{PrStrategy, PsStrategy};

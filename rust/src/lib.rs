@@ -1,0 +1,30 @@
+//! # accnoc
+//!
+//! Full-system reproduction of *"Scalable Light-Weight Integration of FPGA
+//! Based Accelerators with Chip Multi-Processors"* (Lin, Sinha, Liang,
+//! Feng, Zhang — IEEE TMSCS, DOI 10.1109/TMSCS.2017.2754378).
+//!
+//! Three-layer architecture (DESIGN.md):
+//! * **L3 (this crate)** — cycle-level simulator of the paper's entire
+//!   prototype: mesh NoC, FPGA multi-accelerator interface (packet
+//!   receivers/senders, HWA channels, request/grant, chaining), MicroBlaze
+//!   CMP model, MMU/DMA, AXI and shared-cache baselines, plus an
+//!   analytical synthesis model for fmax/resource results.
+//! * **L2/L1 (python/)** — JAX graphs + Pallas kernels for the HWA
+//!   compute, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **runtime** — loads the artifacts through PJRT (`xla` crate) so HWA
+//!   invocations in the simulator produce real numerics.
+
+pub mod baseline;
+pub mod clock;
+pub mod cmp;
+pub mod coordinator;
+pub mod mem;
+pub mod synth;
+pub mod fpga;
+pub mod flit;
+pub mod noc;
+pub mod runtime;
+pub mod sim;
+pub mod workload;
+pub mod util;

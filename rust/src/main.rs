@@ -1,0 +1,15 @@
+//! `accnoc` CLI — see `coordinator::USAGE` and DESIGN.md.
+
+fn main() {
+    let args = match accnoc::util::cli::Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = accnoc::coordinator::main_with(args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

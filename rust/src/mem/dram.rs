@@ -1,0 +1,74 @@
+//! Simple main-memory model: fixed access latency plus word-serial
+//! bandwidth, with a backing store for functional reads/writes.
+
+use std::collections::BTreeMap;
+
+use crate::clock::Ps;
+
+/// Fixed DRAM access latency in NoC cycles (CAS + controller), a common
+/// MPSoC-prototype figure.
+pub const DRAM_LATENCY_CYCLES: u64 = 30;
+/// Words transferred per cycle once a burst is streaming.
+pub const DRAM_WORDS_PER_CYCLE: u64 = 2;
+
+#[derive(Debug, Default)]
+pub struct Dram {
+    store: BTreeMap<u32, u32>,
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl Dram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn write_words(&mut self, addr: u32, words: &[u32]) {
+        for (i, w) in words.iter().enumerate() {
+            self.store.insert(addr + (i as u32) * 4, *w);
+        }
+        self.writes += 1;
+    }
+
+    pub fn read_words(&mut self, addr: u32, n: usize) -> Vec<u32> {
+        self.reads += 1;
+        (0..n)
+            .map(|i| {
+                self.store
+                    .get(&(addr + (i as u32) * 4))
+                    .copied()
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Completion time of an `n_words` access starting at `now`,
+    /// given the NoC clock period.
+    pub fn access_done_at(&self, now: Ps, n_words: usize, period_ps: u64) -> Ps {
+        let cycles =
+            DRAM_LATENCY_CYCLES + (n_words as u64).div_ceil(DRAM_WORDS_PER_CYCLE);
+        now + cycles * period_ps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_back_written_words() {
+        let mut d = Dram::new();
+        d.write_words(0x1000, &[1, 2, 3]);
+        assert_eq!(d.read_words(0x1000, 3), vec![1, 2, 3]);
+        assert_eq!(d.read_words(0x1000, 5), vec![1, 2, 3, 0, 0]);
+    }
+
+    #[test]
+    fn access_time_scales_with_size() {
+        let d = Dram::new();
+        let t1 = d.access_done_at(0, 4, 1000);
+        let t2 = d.access_done_at(0, 64, 1000);
+        assert!(t2 > t1);
+        assert_eq!(t1, (30 + 2) * 1000);
+    }
+}

@@ -1,0 +1,215 @@
+//! MMU node (paper §5, Fig. 5b): decodes grant packets from HWAs, fetches
+//! input data from memory via DMA and streams payload packets to the FPGA;
+//! receives result packets and writes them back to memory.
+
+use std::collections::VecDeque;
+
+use crate::clock::Ps;
+use crate::flit::{
+    Direction, Flit, FlitKind, HeadFields, PacketBuilder, PacketType,
+};
+use crate::fpga::channel::task::CommandKind;
+
+use super::dram::Dram;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MmuStats {
+    pub grants_decoded: u64,
+    pub dma_reads: u64,
+    pub results_written: u64,
+}
+
+/// A DMA job waiting on memory.
+#[derive(Debug)]
+struct DmaJob {
+    grant: HeadFields,
+    ready_at: Ps,
+}
+
+pub struct Mmu {
+    pub node: u8,
+    fpga_node: u8,
+    noc_period_ps: u64,
+    pub dram: Dram,
+    jobs: VecDeque<DmaJob>,
+    /// Flits being streamed toward the FPGA (one per cycle).
+    outbox: VecDeque<Flit>,
+    /// Result packet in reception.
+    rx_head: Option<HeadFields>,
+    rx_words: Vec<u32>,
+    builder: PacketBuilder,
+    pub stats: MmuStats,
+}
+
+impl Mmu {
+    pub fn new(node: u8, fpga_node: u8, noc_period_ps: u64) -> Self {
+        Self {
+            node,
+            fpga_node,
+            noc_period_ps,
+            dram: Dram::new(),
+            jobs: VecDeque::new(),
+            outbox: VecDeque::new(),
+            rx_head: None,
+            rx_words: Vec::new(),
+            builder: PacketBuilder::new(0x2000_0000),
+            stats: MmuStats::default(),
+        }
+    }
+
+    /// Deliver a flit ejected at the MMU node.
+    pub fn deliver(&mut self, flit: Flit, now: Ps) {
+        if flit.is_head() {
+            let h = flit.head_fields();
+            match h.pkt_type {
+                PacketType::Command => {
+                    debug_assert_eq!(
+                        CommandKind::decode(h.payload),
+                        CommandKind::Grant
+                    );
+                    self.stats.grants_decoded += 1;
+                    let n_words = (h.data_size as usize) / 4;
+                    let ready_at =
+                        self.dram
+                            .access_done_at(now, n_words, self.noc_period_ps);
+                    self.stats.dma_reads += 1;
+                    self.jobs.push_back(DmaJob { grant: h, ready_at });
+                }
+                PacketType::Payload => {
+                    // Result packet (HwaToMem): start accumulating.
+                    self.rx_head = Some(h);
+                    self.rx_words.clear();
+                }
+            }
+            return;
+        }
+        // Data flit of a result packet.
+        let [a, b] = flit.body_payload();
+        self.rx_words.extend_from_slice(&[
+            a as u32,
+            (a >> 32) as u32,
+            b as u32,
+            (b >> 32) as u32,
+        ]);
+        if flit.kind() == FlitKind::Tail {
+            if let Some(h) = self.rx_head.take() {
+                self.dram.write_words(h.start_addr, &self.rx_words.clone());
+                self.stats.results_written += 1;
+            }
+            self.rx_words.clear();
+        }
+    }
+
+    /// One NoC cycle: pop at most one flit to inject toward the FPGA.
+    pub fn step(&mut self, now: Ps, can_inject: bool) -> Option<Flit> {
+        // Promote completed DMA jobs into payload packets.
+        while let Some(job) = self.jobs.front() {
+            if job.ready_at > now {
+                break;
+            }
+            let job = self.jobs.pop_front().unwrap();
+            let n_words = (job.grant.data_size as usize) / 4;
+            let words = self.dram.read_words(job.grant.start_addr, n_words);
+            let pkt = self.builder.payload(
+                HeadFields {
+                    routing: self.fpga_node,
+                    hwa_id: job.grant.hwa_id,
+                    src_id: job.grant.src_id,
+                    tb_id: job.grant.tb_id,
+                    task_head: true,
+                    task_tail: true,
+                    chain_depth: job.grant.chain_depth,
+                    chain_index: job.grant.chain_index,
+                    priority: job.grant.priority,
+                    direction: Direction::MemToHwa,
+                    start_addr: job.grant.start_addr,
+                    ..HeadFields::default()
+                },
+                &words,
+            );
+            self.outbox.extend(pkt.flits);
+        }
+        if can_inject {
+            self.outbox.pop_front()
+        } else {
+            None
+        }
+    }
+
+    pub fn idle(&self) -> bool {
+        self.jobs.is_empty() && self.outbox.is_empty() && self.rx_head.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grant(addr: u32, bytes: u16) -> Flit {
+        let mut b = PacketBuilder::new(1);
+        b.command(HeadFields {
+            hwa_id: 2,
+            src_id: 1,
+            tb_id: 1,
+            start_addr: addr,
+            data_size: bytes,
+            direction: Direction::MemToHwa,
+            payload: CommandKind::Grant.encode(),
+            ..HeadFields::default()
+        })
+        .flits[0]
+    }
+
+    #[test]
+    fn grant_triggers_dma_payload() {
+        let mut mmu = Mmu::new(7, 5, 1000);
+        mmu.dram.write_words(0x100, &[5, 6, 7, 8]);
+        mmu.deliver(grant(0x100, 16), 0);
+        // Before DRAM latency: nothing.
+        assert!(mmu.step(1000, true).is_none());
+        // After: payload streams out, head first.
+        let done = mmu.dram.access_done_at(0, 4, 1000);
+        let head = mmu.step(done, true).expect("head flit");
+        let h = head.head_fields();
+        assert_eq!(h.routing, 5);
+        assert_eq!(h.tb_id, 1);
+        assert_eq!(h.direction, Direction::MemToHwa);
+        let data = mmu.step(done + 1000, true).expect("data flit");
+        assert_eq!(data.kind(), FlitKind::Tail);
+        let [a, b] = data.body_payload();
+        assert_eq!(a as u32, 5);
+        assert_eq!((b >> 32) as u32, 8);
+        assert!(mmu.idle());
+    }
+
+    #[test]
+    fn result_written_to_memory() {
+        let mut mmu = Mmu::new(7, 5, 1000);
+        let mut b = PacketBuilder::new(9);
+        let result = b.payload(
+            HeadFields {
+                routing: 7,
+                start_addr: 0x200,
+                direction: Direction::HwaToMem,
+                ..HeadFields::default()
+            },
+            &[42, 43],
+        );
+        for f in &result.flits {
+            mmu.deliver(*f, 10);
+        }
+        assert_eq!(mmu.stats.results_written, 1);
+        assert_eq!(mmu.dram.read_words(0x200, 2), vec![42, 43]);
+    }
+
+    #[test]
+    fn backpressure_holds_outbox() {
+        let mut mmu = Mmu::new(7, 5, 1000);
+        mmu.dram.write_words(0, &[1]);
+        mmu.deliver(grant(0, 4), 0);
+        let done = mmu.dram.access_done_at(0, 1, 1000);
+        assert!(mmu.step(done, false).is_none());
+        assert!(!mmu.idle());
+        assert!(mmu.step(done, true).is_some());
+    }
+}

@@ -1,0 +1,7 @@
+//! Memory subsystem: MMU + DMA (paper §5, Fig. 5b) and the DRAM model.
+
+pub mod dram;
+pub mod mmu;
+
+pub use dram::{Dram, DRAM_LATENCY_CYCLES, DRAM_WORDS_PER_CYCLE};
+pub use mmu::Mmu;

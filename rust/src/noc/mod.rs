@@ -1,0 +1,10 @@
+//! Cycle-level mesh NoC (XY routing, VOQs, wormhole, credits) — the
+//! CONNECT-equivalent substrate of the paper's prototype (§3.1, §6.1).
+
+pub mod mesh;
+pub mod router;
+pub mod traffic;
+
+pub use mesh::{Mesh, MeshConfig, DEFAULT_EJECT_CAP};
+pub use router::{Port, Router, DEFAULT_IN_BUF, PORTS};
+pub use traffic::FlowTracker;

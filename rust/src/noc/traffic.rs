@@ -1,0 +1,148 @@
+//! Traffic tracing and flow-invariant checking for the NoC.
+//!
+//! [`FlowTracker`] asserts the properties every higher layer relies on:
+//! per-flow in-order delivery, no duplication, no loss; plus latency
+//! accounting used by the experiment drivers.
+
+use std::collections::BTreeMap;
+
+use crate::clock::Ps;
+use crate::flit::Flit;
+use crate::util::stats::Accum;
+
+#[derive(Debug, Default)]
+struct FlowState {
+    sent: u32,
+    received: u32,
+    next_seq_base: Option<u32>,
+}
+
+#[derive(Debug, Default)]
+pub struct FlowTracker {
+    flows: BTreeMap<u32, FlowState>,
+    pub latency: Accum,
+    violations: Vec<String>,
+}
+
+impl FlowTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_inject(&mut self, flit: &mut Flit, now: Ps) {
+        flit.meta.injected_ps = now;
+        let st = self.flows.entry(flit.meta.flow).or_default();
+        st.sent += 1;
+    }
+
+    pub fn on_eject(&mut self, flit: &Flit, now: Ps) {
+        let st = self.flows.entry(flit.meta.flow).or_default();
+        st.received += 1;
+        if st.received > st.sent {
+            self.violations.push(format!(
+                "flow {}: duplication ({} received > {} sent)",
+                flit.meta.flow, st.received, st.sent
+            ));
+        }
+        // Sequence monotonicity within the flow.
+        match st.next_seq_base {
+            None => st.next_seq_base = Some(flit.meta.seq + 1),
+            Some(expected) => {
+                if flit.meta.seq < expected {
+                    self.violations.push(format!(
+                        "flow {}: reorder/dup (seq {} after {})",
+                        flit.meta.flow,
+                        flit.meta.seq,
+                        expected - 1
+                    ));
+                }
+                st.next_seq_base = Some(flit.meta.seq + 1);
+            }
+        }
+        if now >= flit.meta.injected_ps {
+            self.latency.push((now - flit.meta.injected_ps) as f64);
+        }
+    }
+
+    /// Flits still unaccounted for (sent - received) across all flows.
+    pub fn outstanding(&self) -> u64 {
+        self.flows
+            .values()
+            .map(|s| (s.sent - s.received) as u64)
+            .sum()
+    }
+
+    pub fn violations(&self) -> &[String] {
+        &self.violations
+    }
+
+    pub fn assert_clean(&self) {
+        assert!(
+            self.violations.is_empty(),
+            "flow invariant violations: {:?}",
+            self.violations
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flit::{FlitMeta, Flit};
+
+    fn flit(flow: u32, seq: u32) -> Flit {
+        Flit {
+            meta: FlitMeta {
+                flow,
+                seq,
+                injected_ps: 0,
+            },
+            ..Flit::default()
+        }
+    }
+
+    #[test]
+    fn in_order_flow_is_clean() {
+        let mut t = FlowTracker::new();
+        for seq in 0..5 {
+            let mut f = flit(1, seq);
+            t.on_inject(&mut f, 100);
+            t.on_eject(&f, 200);
+        }
+        t.assert_clean();
+        assert_eq!(t.outstanding(), 0);
+        assert_eq!(t.latency.count(), 5);
+    }
+
+    #[test]
+    fn reorder_is_flagged() {
+        let mut t = FlowTracker::new();
+        let mut a = flit(1, 0);
+        let mut b = flit(1, 1);
+        t.on_inject(&mut a, 0);
+        t.on_inject(&mut b, 0);
+        t.on_eject(&b, 10);
+        t.on_eject(&a, 20);
+        assert!(!t.violations().is_empty());
+    }
+
+    #[test]
+    fn duplication_is_flagged() {
+        let mut t = FlowTracker::new();
+        let mut a = flit(2, 0);
+        t.on_inject(&mut a, 0);
+        t.on_eject(&a, 10);
+        t.on_eject(&a, 20);
+        assert!(!t.violations().is_empty());
+    }
+
+    #[test]
+    fn outstanding_counts_in_flight() {
+        let mut t = FlowTracker::new();
+        let mut a = flit(3, 0);
+        t.on_inject(&mut a, 0);
+        assert_eq!(t.outstanding(), 1);
+        t.on_eject(&a, 5);
+        assert_eq!(t.outstanding(), 0);
+    }
+}

@@ -1,0 +1,475 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (`artifacts/*.hlo.txt` + `manifest.txt`) and executes them from the
+//! simulator's HWA-completion hook — Python is never on this path.
+//!
+//! Interchange is HLO **text**: jax >= 0.5 emits HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod native;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::fpga::hwa::{HwaCompute, HwaSpec};
+use native::DEFAULT_QTABLE;
+
+/// One tensor in an artifact signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        let (dtype, dims) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow!("bad tensor sig {s:?}"))?;
+        let dims = dims
+            .split('x')
+            .filter(|d| !d.is_empty())
+            .map(|d| d.parse::<usize>().context("dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            dtype: dtype.to_string(),
+            dims,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Parse `manifest.txt` lines: `name | in sig,sig | out sig`.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSig>> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split('|').map(|p| p.trim()).collect();
+        if parts.len() != 3 {
+            bail!("bad manifest line: {line:?}");
+        }
+        let ins = parts[1]
+            .strip_prefix("in ")
+            .ok_or_else(|| anyhow!("missing 'in': {line:?}"))?;
+        let outs = parts[2]
+            .strip_prefix("out ")
+            .ok_or_else(|| anyhow!("missing 'out': {line:?}"))?;
+        out.push(ArtifactSig {
+            name: parts[0].to_string(),
+            inputs: ins
+                .split(',')
+                .map(TensorSig::parse)
+                .collect::<Result<Vec<_>>>()?,
+            outputs: outs
+                .split(',')
+                .map(TensorSig::parse)
+                .collect::<Result<Vec<_>>>()?,
+        });
+    }
+    Ok(out)
+}
+
+/// The PJRT runtime: CPU client + lazily compiled executables.
+pub struct Runtime {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    sigs: HashMap<String, ArtifactSig>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load from an artifacts directory (must contain `manifest.txt`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| {
+                format!(
+                    "{}/manifest.txt missing — run `make artifacts`",
+                    dir.display()
+                )
+            })?;
+        let sigs = parse_manifest(&manifest)?
+            .into_iter()
+            .map(|s| (s.name.clone(), s))
+            .collect();
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            client: xla::PjRtClient::cpu()?,
+            sigs,
+            executables: HashMap::new(),
+        })
+    }
+
+    /// Default location: `$ACCNOC_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("ACCNOC_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(Path::new(&dir))
+    }
+
+    pub fn signature(&self, name: &str) -> Option<&ArtifactSig> {
+        self.sigs.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.sigs.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Execute artifact `name` on f32/i32 inputs already shaped per the
+    /// manifest (flattened row-major). Returns flattened outputs.
+    pub fn execute(&mut self, name: &str, inputs: &[TensorValue]) -> Result<Vec<TensorValue>> {
+        let sig = self
+            .sigs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+            .clone();
+        if inputs.len() != sig.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (tv, ts) in inputs.iter().zip(&sig.inputs) {
+            if tv.len() != ts.elements() {
+                bail!(
+                    "{name}: input size {} != manifest {}",
+                    tv.len(),
+                    ts.elements()
+                );
+            }
+            let dims: Vec<i64> = ts.dims.iter().map(|d| *d as i64).collect();
+            let lit = match tv {
+                TensorValue::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+                TensorValue::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+            };
+            literals.push(lit);
+        }
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let elements = result.to_tuple()?;
+        let mut out = Vec::with_capacity(elements.len());
+        for (lit, ts) in elements.into_iter().zip(&sig.outputs) {
+            let tv = match ts.dtype.as_str() {
+                "float32" => TensorValue::F32(lit.to_vec::<f32>()?),
+                "int32" => TensorValue::I32(lit.to_vec::<i32>()?),
+                other => bail!("unsupported dtype {other}"),
+            };
+            out.push(tv);
+        }
+        Ok(out)
+    }
+}
+
+/// A flattened tensor value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorValue {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorValue {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorValue::F32(v) => v.len(),
+            TensorValue::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            TensorValue::I32(v) => v,
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            TensorValue::F32(v) => v,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HwaCompute implementations
+// ---------------------------------------------------------------------------
+
+/// Marshal a task's 64 words into one artifact invocation (row 0 of the
+/// batched artifact shape) and back. The quantization table input of the
+/// iquantize/chain artifacts is the baked-in ROM table, as in the FPGA.
+fn words_to_i32(words: &[u32], n: usize) -> Vec<i32> {
+    let mut v: Vec<i32> = words.iter().map(|w| *w as i32).collect();
+    v.resize(n, 0);
+    v
+}
+
+fn words_to_f32(words: &[u32], n: usize) -> Vec<f32> {
+    let mut v: Vec<f32> = words.iter().map(|w| f32::from_bits(*w)).collect();
+    v.resize(n, 0.0);
+    v
+}
+
+/// Compute through the PJRT-loaded AOT artifacts; HWAs without an
+/// artifact fall back to the native golden implementations.
+pub struct PjrtCompute {
+    pub runtime: Runtime,
+    native: NativeCompute,
+    pub invocations: u64,
+}
+
+impl PjrtCompute {
+    pub fn new(runtime: Runtime) -> Self {
+        Self {
+            runtime,
+            native: NativeCompute::default(),
+            invocations: 0,
+        }
+    }
+
+    fn run(&mut self, spec: &HwaSpec, input: &[u32]) -> Result<Vec<u32>> {
+        let name = spec.artifact.ok_or_else(|| anyhow!("no artifact"))?;
+        let sig = self
+            .runtime
+            .signature(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
+            .clone();
+        // Build inputs: first input carries the task's words (padded into
+        // the batched shape); a second int32 input of 64 elements is the
+        // quantization ROM; df* artifacts take (a, b) split from words.
+        let inputs: Vec<TensorValue> = match name {
+            "iquantize" | "jpeg_chain" | "jpeg_depth1" | "jpeg_depth2" => {
+                vec![
+                    TensorValue::I32(words_to_i32(input, sig.inputs[0].elements())),
+                    TensorValue::I32(DEFAULT_QTABLE.to_vec()),
+                ]
+            }
+            "izigzag" => vec![TensorValue::I32(words_to_i32(
+                input,
+                sig.inputs[0].elements(),
+            ))],
+            // idct's wire format is i32 dequantized coefficients (what
+            // iquantize emits); the artifact takes f32 values.
+            "idct" => {
+                let mut v: Vec<f32> =
+                    input.iter().map(|w| (*w as i32) as f32).collect();
+                v.resize(sig.inputs[0].elements(), 0.0);
+                vec![TensorValue::F32(v)]
+            }
+            "shiftbound" | "gsm" => vec![TensorValue::F32(
+                words_to_f32(input, sig.inputs[0].elements()),
+            )],
+            "dfadd" | "dfmul" | "dfdiv" => {
+                let half = input.len() / 2;
+                vec![
+                    TensorValue::F32(words_to_f32(
+                        &input[..half],
+                        sig.inputs[0].elements(),
+                    )),
+                    TensorValue::F32(words_to_f32(
+                        &input[half..],
+                        sig.inputs[1].elements(),
+                    )),
+                ]
+            }
+            other => bail!("no marshalling rule for artifact {other}"),
+        };
+        let outputs = self.runtime.execute(name, &inputs)?;
+        self.invocations += 1;
+        let out0 = &outputs[0];
+        let mut words: Vec<u32> = match out0 {
+            TensorValue::I32(v) => v.iter().map(|x| *x as u32).collect(),
+            TensorValue::F32(v) => v.iter().map(|x| x.to_bits()).collect(),
+        };
+        words.truncate(spec.out_words.max(1));
+        words.resize(spec.out_words, 0);
+        Ok(words)
+    }
+}
+
+impl HwaCompute for PjrtCompute {
+    fn compute(&mut self, spec: &HwaSpec, input: &[u32]) -> Vec<u32> {
+        if spec.artifact.is_some() {
+            match self.run(spec, input) {
+                Ok(words) => return words,
+                Err(e) => {
+                    // Surface once, then fall back (keeps sims running if
+                    // an artifact is stale).
+                    eprintln!("pjrt compute failed for {}: {e:#}", spec.name);
+                }
+            }
+        }
+        self.native.compute(spec, input)
+    }
+}
+
+/// Pure-Rust golden compute (no artifacts needed).
+#[derive(Debug, Default)]
+pub struct NativeCompute {
+    pub invocations: u64,
+}
+
+impl HwaCompute for NativeCompute {
+    fn compute(&mut self, spec: &HwaSpec, input: &[u32]) -> Vec<u32> {
+        self.invocations += 1;
+        let out: Vec<u32> = match spec.name {
+            "izigzag" => {
+                let mut block = [0i32; 64];
+                for (i, w) in input.iter().take(64).enumerate() {
+                    block[i] = *w as i32;
+                }
+                native::izigzag(&block).iter().map(|x| *x as u32).collect()
+            }
+            "iquantize" => {
+                let mut block = [0i32; 64];
+                for (i, w) in input.iter().take(64).enumerate() {
+                    block[i] = *w as i32;
+                }
+                native::iquantize(&block, &DEFAULT_QTABLE)
+                    .iter()
+                    .map(|x| *x as u32)
+                    .collect()
+            }
+            "idct" => {
+                // Wire format: i32 dequantized coefficients in, f32 bits
+                // out (shiftbound's input convention).
+                let mut block = [0f32; 64];
+                for (i, w) in input.iter().take(64).enumerate() {
+                    block[i] = (*w as i32) as f32;
+                }
+                native::idct8x8(&block).iter().map(|x| x.to_bits()).collect()
+            }
+            "shiftbound" => {
+                let mut block = [0f32; 64];
+                for (i, w) in input.iter().take(64).enumerate() {
+                    block[i] = f32::from_bits(*w);
+                }
+                native::shiftbound(&block)
+                    .iter()
+                    .map(|x| *x as u32)
+                    .collect()
+            }
+            "dfadd" | "dfmul" | "dfdiv" => {
+                let half = input.len() / 2;
+                let op = match spec.name {
+                    "dfadd" => native::dfadd as fn(f32, f32) -> f32,
+                    "dfmul" => native::dfmul,
+                    _ => native::dfdiv,
+                };
+                (0..half)
+                    .map(|i| {
+                        op(
+                            f32::from_bits(input[i]),
+                            f32::from_bits(input[half + i]),
+                        )
+                        .to_bits()
+                    })
+                    .collect()
+            }
+            "gsm" => {
+                let frame: Vec<f32> =
+                    input.iter().map(|w| f32::from_bits(*w)).collect();
+                native::gsm_autocorr(&frame, spec.out_words.min(9))
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect()
+            }
+            // No functional model (aes/sha/prime/entropy): echo.
+            _ => input.to_vec(),
+        };
+        let mut words = out;
+        words.resize(spec.out_words, 0);
+        words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::hwa::spec_by_name;
+
+    #[test]
+    fn manifest_parses() {
+        let m = parse_manifest(
+            "izigzag | in int32:64x64 | out int32:64x64\n\
+             dfadd | in float32:256,float32:256 | out float32:256\n",
+        )
+        .unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].name, "izigzag");
+        assert_eq!(m[0].inputs[0].dims, vec![64, 64]);
+        assert_eq!(m[1].inputs.len(), 2);
+        assert_eq!(m[1].outputs[0].dtype, "float32");
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(parse_manifest("nope").is_err());
+        assert!(parse_manifest("a | b | c").is_err());
+    }
+
+    #[test]
+    fn native_compute_izigzag_matches_golden() {
+        let spec = spec_by_name("izigzag").unwrap();
+        let mut nc = NativeCompute::default();
+        let input: Vec<u32> = (0..64).collect();
+        let out = nc.compute(&spec, &input);
+        let mut block = [0i32; 64];
+        for i in 0..64 {
+            block[i] = i as i32;
+        }
+        let want: Vec<u32> =
+            native::izigzag(&block).iter().map(|x| *x as u32).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn native_compute_resizes_to_out_words() {
+        let spec = spec_by_name("dfadd").unwrap();
+        let mut nc = NativeCompute::default();
+        let out = nc.compute(&spec, &[1f32.to_bits(), 2f32.to_bits(),
+                                      3f32.to_bits(), 4f32.to_bits()]);
+        assert_eq!(out.len(), spec.out_words);
+        assert_eq!(f32::from_bits(out[0]), 4.0); // 1 + 3
+        assert_eq!(f32::from_bits(out[1]), 6.0); // 2 + 4
+    }
+
+    // PJRT tests that need built artifacts live in rust/tests/pjrt.rs so
+    // they can be skipped gracefully when artifacts/ is absent.
+}

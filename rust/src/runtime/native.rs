@@ -1,0 +1,279 @@
+//! Native Rust golden implementations of the HWA computations — the
+//! numerically independent check against the PJRT-executed AOT artifacts
+//! (which are themselves validated against the jnp oracle by pytest).
+//! Also the fallback compute when `artifacts/` has not been built.
+
+/// ITU-T T.81 zigzag order: ZIGZAG[i] = raster index of scan position i.
+pub const ZIGZAG: [usize; 64] = [
+    0, 1, 8, 16, 9, 2, 3, 10, 17, 24, 32, 25, 18, 11, 4, 5, 12, 19, 26, 33,
+    40, 48, 41, 34, 27, 20, 13, 6, 7, 14, 21, 28, 35, 42, 49, 56, 57, 50, 43,
+    36, 29, 22, 15, 23, 30, 37, 44, 51, 58, 59, 52, 45, 38, 31, 39, 46, 53,
+    60, 61, 54, 47, 55, 62, 63,
+];
+
+/// INV_ZIGZAG[r] = scan position holding raster index r.
+pub fn inv_zigzag_table() -> [usize; 64] {
+    let mut inv = [0usize; 64];
+    for (i, &r) in ZIGZAG.iter().enumerate() {
+        inv[r] = i;
+    }
+    inv
+}
+
+/// The default luminance quantization table (ITU-T T.81 Annex K.1) the
+/// runtime bakes in — the analogue of the coefficient ROM in the paper's
+/// Iquantize HWA.
+pub const DEFAULT_QTABLE: [i32; 64] = [
+    16, 11, 10, 16, 24, 40, 51, 61, 12, 12, 14, 19, 26, 58, 60, 55, 14, 13,
+    16, 24, 40, 57, 69, 56, 14, 17, 22, 29, 51, 87, 80, 62, 18, 22, 37, 56,
+    68, 109, 103, 77, 24, 35, 55, 64, 81, 104, 113, 92, 49, 64, 78, 87, 103,
+    121, 120, 101, 72, 92, 95, 98, 112, 100, 103, 99,
+];
+
+/// Inverse zigzag over one 64-coefficient block (i32 lanes as u32 bits).
+pub fn izigzag(scan: &[i32; 64]) -> [i32; 64] {
+    let inv = inv_zigzag_table();
+    let mut out = [0i32; 64];
+    for r in 0..64 {
+        out[r] = scan[inv[r]];
+    }
+    out
+}
+
+pub fn iquantize(coef: &[i32; 64], qtable: &[i32; 64]) -> [i32; 64] {
+    let mut out = [0i32; 64];
+    for i in 0..64 {
+        out[i] = coef[i].wrapping_mul(qtable[i]);
+    }
+    out
+}
+
+/// 8x8 DCT-II basis matrix (same formula as ref.py's dct_basis_f32).
+pub fn dct_basis() -> [[f32; 8]; 8] {
+    let mut c = [[0f32; 8]; 8];
+    for (k, row) in c.iter_mut().enumerate() {
+        let scale = if k == 0 {
+            (1.0f64 / 8.0).sqrt()
+        } else {
+            (2.0f64 / 8.0).sqrt()
+        };
+        for (n, v) in row.iter_mut().enumerate() {
+            let ang =
+                (2.0 * n as f64 + 1.0) * k as f64 * std::f64::consts::PI / 16.0;
+            *v = (scale * ang.cos()) as f32;
+        }
+    }
+    c
+}
+
+/// 2-D IDCT of one 8x8 block: C^T X C.
+pub fn idct8x8(block: &[f32; 64]) -> [f32; 64] {
+    let c = dct_basis();
+    // y1 = X @ C  (x row-major 8x8)
+    let mut y1 = [0f32; 64];
+    for i in 0..8 {
+        for j in 0..8 {
+            let mut acc = 0f32;
+            for k in 0..8 {
+                acc += block[i * 8 + k] * c[k][j];
+            }
+            y1[i * 8 + j] = acc;
+        }
+    }
+    // y = C^T @ y1  => y[i][j] = sum_k C[k][i] * y1[k][j]
+    let mut out = [0f32; 64];
+    for i in 0..8 {
+        for j in 0..8 {
+            let mut acc = 0f32;
+            for k in 0..8 {
+                acc += c[k][i] * y1[k * 8 + j];
+            }
+            out[i * 8 + j] = acc;
+        }
+    }
+    out
+}
+
+/// Level shift + clamp to [0, 255].
+pub fn shiftbound(pixels: &[f32; 64]) -> [i32; 64] {
+    let mut out = [0i32; 64];
+    for i in 0..64 {
+        let v = pixels[i].round_ties_even() + 128.0;
+        out[i] = v.clamp(0.0, 255.0) as i32;
+    }
+    out
+}
+
+/// Full JPEG decode chain on one block.
+pub fn jpeg_chain(scan: &[i32; 64], qtable: &[i32; 64]) -> [i32; 64] {
+    let deq = iquantize(&izigzag(scan), qtable);
+    let mut f = [0f32; 64];
+    for i in 0..64 {
+        f[i] = deq[i] as f32;
+    }
+    shiftbound(&idct8x8(&f))
+}
+
+/// Forward path (for building realistic workloads): DCT + quantize +
+/// zigzag of a pixel block.
+pub fn jpeg_encode(pixels: &[f32; 64], qtable: &[i32; 64]) -> [i32; 64] {
+    let c = dct_basis();
+    let mut shifted = [0f32; 64];
+    for i in 0..64 {
+        shifted[i] = pixels[i] - 128.0;
+    }
+    // F = C X C^T
+    let mut y1 = [0f32; 64];
+    for i in 0..8 {
+        for j in 0..8 {
+            let mut acc = 0f32;
+            for k in 0..8 {
+                acc += c[i][k] * shifted[k * 8 + j];
+            }
+            y1[i * 8 + j] = acc;
+        }
+    }
+    let mut freq = [0f32; 64];
+    for i in 0..8 {
+        for j in 0..8 {
+            let mut acc = 0f32;
+            for k in 0..8 {
+                acc += y1[i * 8 + k] * c[j][k];
+            }
+            freq[i * 8 + j] = acc;
+        }
+    }
+    let mut quant = [0i32; 64];
+    for i in 0..64 {
+        quant[i] = (freq[i] / qtable[i] as f32).round() as i32;
+    }
+    // natural -> scan order
+    let mut scan = [0i32; 64];
+    for (i, &r) in ZIGZAG.iter().enumerate() {
+        scan[i] = quant[r];
+    }
+    scan
+}
+
+pub fn dfadd(a: f32, b: f32) -> f32 {
+    a + b
+}
+
+pub fn dfmul(a: f32, b: f32) -> f32 {
+    a * b
+}
+
+pub fn dfdiv(a: f32, b: f32) -> f32 {
+    if b == 0.0 {
+        a
+    } else {
+        a / b
+    }
+}
+
+/// GSM autocorrelation, lags 0..=8 over a frame.
+pub fn gsm_autocorr(frame: &[f32], lags: usize) -> Vec<f32> {
+    (0..lags)
+        .map(|k| {
+            frame[..frame.len() - k]
+                .iter()
+                .zip(&frame[k..])
+                .map(|(a, b)| a * b)
+                .sum()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zigzag_is_permutation() {
+        let mut seen = [false; 64];
+        for &z in &ZIGZAG {
+            assert!(!seen[z]);
+            seen[z] = true;
+        }
+    }
+
+    #[test]
+    fn izigzag_inverts_encode_order() {
+        // natural -> scan (encode) -> natural (izigzag) is identity.
+        let natural: [i32; 64] = std::array::from_fn(|i| i as i32);
+        let mut scan = [0i32; 64];
+        for (i, &r) in ZIGZAG.iter().enumerate() {
+            scan[i] = natural[r];
+        }
+        assert_eq!(izigzag(&scan), natural);
+    }
+
+    #[test]
+    fn basis_is_orthonormal() {
+        let c = dct_basis();
+        for i in 0..8 {
+            for j in 0..8 {
+                let dot: f32 = (0..8).map(|k| c[i][k] * c[j][k]).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-5, "({i},{j}) {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn dc_only_block_decodes_flat() {
+        let mut f = [0f32; 64];
+        f[0] = 800.0;
+        let out = idct8x8(&f);
+        for v in out {
+            assert!((v - 100.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn roundtrip_within_quantization_error() {
+        let q = DEFAULT_QTABLE;
+        let mut pixels = [0f32; 64];
+        let mut x = 7u32;
+        for p in pixels.iter_mut() {
+            x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+            *p = (x >> 24) as f32;
+        }
+        let scan = jpeg_encode(&pixels, &q);
+        let decoded = jpeg_chain(&scan, &q);
+        let mean_err: f32 = pixels
+            .iter()
+            .zip(&decoded)
+            .map(|(p, d)| (p - *d as f32).abs())
+            .sum::<f32>()
+            / 64.0;
+        assert!(mean_err < 40.0, "mean_err={mean_err}");
+    }
+
+    #[test]
+    fn shiftbound_saturates() {
+        let mut px = [0f32; 64];
+        px[0] = 1e6;
+        px[1] = -1e6;
+        px[2] = 0.0;
+        let out = shiftbound(&px);
+        assert_eq!(out[0], 255);
+        assert_eq!(out[1], 0);
+        assert_eq!(out[2], 128);
+    }
+
+    #[test]
+    fn gsm_lag0_is_energy() {
+        let frame: Vec<f32> = (0..160).map(|i| (i % 7) as f32).collect();
+        let ac = gsm_autocorr(&frame, 9);
+        let energy: f32 = frame.iter().map(|x| x * x).sum();
+        assert!((ac[0] - energy).abs() < 1e-3);
+        assert_eq!(ac.len(), 9);
+    }
+
+    #[test]
+    fn dfdiv_guards_zero() {
+        assert_eq!(dfdiv(4.0, 2.0), 2.0);
+        assert_eq!(dfdiv(4.0, 0.0), 4.0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Fig. 10: speedup of HWA chaining depths 1-3 over depth 0 for the JPEG
+//! decompression chain (izigzag -> iquantize -> idct -> shiftbound).
+//!
+//! Paper result: speedup grows with chaining depth, because each chained
+//! hop eliminates a result+request+payload round trip over the NoC whose
+//! processor-side packet send/receive cost dominates.
+
+use crate::clock::PS_PER_US;
+use crate::cmp::apps::jpeg_chain_depth_program;
+use crate::fpga::hwa::spec_by_name;
+use crate::sim::system::{System, SystemConfig};
+use crate::util::table::Table;
+use crate::workload::jpeg::BlockImage;
+
+/// Blocks decoded per run.
+pub const N_BLOCKS: usize = 12;
+
+fn chain_system() -> System {
+    let mut cfg = SystemConfig::paper(vec![
+        spec_by_name("izigzag").unwrap(),
+        spec_by_name("iquantize").unwrap(),
+        spec_by_name("idct").unwrap(),
+        spec_by_name("shiftbound").unwrap(),
+    ]);
+    cfg.chain_groups = vec![vec![0, 1, 2, 3]];
+    System::new(cfg)
+}
+
+pub struct Fig10Point {
+    pub depth: u8,
+    pub total_us: f64,
+}
+
+pub fn run_depth(depth: u8) -> Fig10Point {
+    let mut sys = chain_system();
+    let img = BlockImage::synthetic(N_BLOCKS, 0xF16);
+    let words = img.coefficient_words();
+    // One processor decodes block after block (the §6.6 experiment).
+    let mut prog = Vec::new();
+    for block in words.iter() {
+        for seg in jpeg_chain_depth_program(depth) {
+            // Patch the real coefficients into the first invocation of
+            // each block's program (the chain entry).
+            prog.push(match seg {
+                crate::cmp::core::Segment::Invoke(mut spec) => {
+                    if spec.hwa_id == 0 {
+                        spec.words = block.clone();
+                    }
+                    crate::cmp::core::Segment::Invoke(spec)
+                }
+                other => other,
+            });
+        }
+    }
+    sys.load_program(0, prog);
+    let done = sys.run_until_done(100_000 * PS_PER_US);
+    assert!(done, "fig10 depth {depth} did not finish");
+    let total_us =
+        sys.procs[0].finished_at.unwrap() as f64 / PS_PER_US as f64;
+    Fig10Point { depth, total_us }
+}
+
+pub struct Fig10 {
+    pub points: Vec<Fig10Point>,
+}
+
+pub fn run() -> Fig10 {
+    Fig10 {
+        points: (0..=3).map(run_depth).collect(),
+    }
+}
+
+impl Fig10 {
+    pub fn speedup(&self, depth: u8) -> f64 {
+        let base = self.points[0].total_us;
+        base / self.points[depth as usize].total_us
+    }
+
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Fig. 10 — chaining speedup vs depth 0 (JPEG chain)",
+            &["chaining depth", "total time (us)", "speedup"],
+        );
+        for p in &self.points {
+            t.row(&[
+                p.depth.to_string(),
+                format!("{:.2}", p.total_us),
+                format!("{:.2}x", self.speedup(p.depth)),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_grows_with_depth() {
+        let f = run();
+        let s1 = f.speedup(1);
+        let s2 = f.speedup(2);
+        let s3 = f.speedup(3);
+        assert!(s1 > 1.0, "depth1 {s1}");
+        assert!(s2 > s1, "depth2 {s2} vs {s1}");
+        assert!(s3 > s2, "depth3 {s3} vs {s2}");
+    }
+}

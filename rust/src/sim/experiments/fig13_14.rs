@@ -1,0 +1,254 @@
+//! Fig. 13 (maximum throughput) and Fig. 14 (single-invocation
+//! communication latency) for the three prototypes: the proposed
+//! NoC + distributed buffers, AXI bus integration (§6.7), and the shared
+//! FPGA cache design (§6.8).
+//!
+//! Paper results: vs. the proposal, AXI loses 27% (Izigzag-HWA) / 53%
+//! (Eight-HWA) max throughput and the cache design loses 22.5% / 28.2%;
+//! Dfdiv-HWA is execution-bound and identical everywhere. Communication
+//! latency: NoC 2.42x better than AXI, 1.63x better than the cache.
+
+use crate::clock::PS_PER_US;
+use crate::sim::system::{FabricKind, NetKind, System, SystemConfig};
+use crate::util::table::Table;
+
+use super::fig8::{run_series, Workload};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Prototype {
+    Proposed,
+    Axi,
+    SharedCache,
+}
+
+impl Prototype {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Prototype::Proposed => "NoC+buffers (proposed)",
+            Prototype::Axi => "AXI bus",
+            Prototype::SharedCache => "shared FPGA cache",
+        }
+    }
+
+    pub fn net(&self) -> NetKind {
+        match self {
+            Prototype::Axi => NetKind::Axi,
+            _ => NetKind::Noc,
+        }
+    }
+
+    pub fn fabric(&self) -> FabricKind {
+        match self {
+            Prototype::SharedCache => FabricKind::SharedCache {
+                cache_bytes: 128 * 1024,
+            },
+            _ => FabricKind::Buffered,
+        }
+    }
+}
+
+pub const PROTOTYPES: [Prototype; 3] =
+    [Prototype::Proposed, Prototype::Axi, Prototype::SharedCache];
+
+// ---------------------------------------------------------------------------
+// Fig. 13 — max throughput
+// ---------------------------------------------------------------------------
+
+pub struct Fig13 {
+    /// (prototype, workload, max throughput flits/µs)
+    pub results: Vec<(Prototype, Workload, f64)>,
+}
+
+pub fn run_fig13(warmup_us: u64, window_us: u64) -> Fig13 {
+    let rates = [2.0, 8.0, 16.0, 24.0];
+    let mut results = Vec::new();
+    for proto in PROTOTYPES {
+        for wl in [Workload::IzigzagHwa, Workload::EightHwa, Workload::DfdivHwa]
+        {
+            let series = run_series(
+                wl,
+                &rates,
+                proto.net(),
+                proto.fabric(),
+                warmup_us,
+                window_us,
+                0x1314,
+            );
+            results.push((proto, wl, series.max_throughput()));
+        }
+    }
+    Fig13 { results }
+}
+
+impl Fig13 {
+    pub fn get(&self, proto: Prototype, wl: Workload) -> f64 {
+        self.results
+            .iter()
+            .find(|(p, w, _)| *p == proto && *w == wl)
+            .map(|(_, _, t)| *t)
+            .unwrap()
+    }
+
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Fig. 13 — maximum throughput (flits/µs)",
+            &["prototype", "Izigzag-HWA", "Eight-HWA", "Dfdiv-HWA"],
+        );
+        for proto in PROTOTYPES {
+            t.row(&[
+                proto.name().to_string(),
+                format!("{:.2}", self.get(proto, Workload::IzigzagHwa)),
+                format!("{:.2}", self.get(proto, Workload::EightHwa)),
+                format!("{:.2}", self.get(proto, Workload::DfdivHwa)),
+            ]);
+        }
+        // Relative rows (the paper's reported percentages).
+        for proto in [Prototype::Axi, Prototype::SharedCache] {
+            let rel = |wl| {
+                100.0
+                    * (self.get(Prototype::Proposed, wl) - self.get(proto, wl))
+                    / self.get(Prototype::Proposed, wl)
+            };
+            t.row(&[
+                format!("{} loss vs proposed", proto.name()),
+                format!("{:.1}%", rel(Workload::IzigzagHwa)),
+                format!("{:.1}%", rel(Workload::EightHwa)),
+                format!("{:.1}%", rel(Workload::DfdivHwa)),
+            ]);
+        }
+        t
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 14 — communication latency for a single invocation
+// ---------------------------------------------------------------------------
+
+pub struct Fig14 {
+    /// (prototype, mean communication latency µs)
+    pub results: Vec<(Prototype, f64)>,
+}
+
+/// Mean request->result latency for invocations completing inside a
+/// loaded steady state: open-loop Izigzag traffic near the proposed
+/// design's saturation point. Izigzag executes in one cycle, so the
+/// measured quantity is pure communication — the Fig. 14 metric. The
+/// baselines are saturated at this rate, so their queueing delay is the
+/// latency gap the paper reports.
+pub fn run_fig14() -> Fig14 {
+    const RATE: f64 = 8.0;
+    let mut results = Vec::new();
+    for proto in PROTOTYPES {
+        let mut cfg = SystemConfig::paper(Workload::IzigzagHwa.specs());
+        cfg.net = proto.net();
+        cfg.fabric = proto.fabric();
+        let mut sys = System::new(cfg);
+        sys.set_open_loop(RATE, 0x1414);
+        // Warmup, then measure latencies of completions in the window.
+        let warm_end = sys.now() + 5 * PS_PER_US;
+        while sys.now() < warm_end {
+            sys.step();
+        }
+        let skip: Vec<usize> = sys
+            .open_sources
+            .iter()
+            .flatten()
+            .map(|s| s.latencies_ps.len())
+            .collect();
+        let end = sys.now() + 25 * PS_PER_US;
+        while sys.now() < end {
+            sys.step();
+        }
+        let mut total = 0f64;
+        let mut count = 0f64;
+        for (s, skip_n) in sys.open_sources.iter().flatten().zip(&skip) {
+            for l in s.latencies_ps.iter().skip(*skip_n) {
+                total += *l as f64;
+                count += 1.0;
+            }
+        }
+        assert!(count > 0.0, "fig14 {}: no completions", proto.name());
+        results.push((proto, total / count / PS_PER_US as f64));
+    }
+    Fig14 { results }
+}
+
+impl Fig14 {
+    pub fn get(&self, proto: Prototype) -> f64 {
+        self.results
+            .iter()
+            .find(|(p, _)| *p == proto)
+            .map(|(_, l)| *l)
+            .unwrap()
+    }
+
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Fig. 14 — communication latency, single invocation (µs)",
+            &["prototype", "latency (µs)", "vs proposed"],
+        );
+        let base = self.get(Prototype::Proposed);
+        for proto in PROTOTYPES {
+            let l = self.get(proto);
+            t.row(&[
+                proto.name().to_string(),
+                format!("{l:.3}"),
+                format!("{:.2}x", l / base),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig14_both_baselines_lose_to_noc() {
+        // Paper: NoC 2.42x better than AXI, 1.63x better than the cache.
+        // Our calibrated models preserve the headline (NoC clearly best,
+        // both baselines substantially worse); the AXI-vs-cache relative
+        // order depends on cache-port vs bus-width constants and is a
+        // documented deviation (EXPERIMENTS.md).
+        let f = run_fig14();
+        let noc = f.get(Prototype::Proposed);
+        let axi = f.get(Prototype::Axi);
+        let cache = f.get(Prototype::SharedCache);
+        assert!(axi > 1.2 * noc, "axi {axi} vs noc {noc}");
+        assert!(cache > 1.2 * noc, "cache {cache} vs noc {noc}");
+    }
+
+    #[test]
+    fn fig13_proposed_wins_izigzag_clearly_eight_mildly() {
+        let f = run_fig13(2, 10);
+        // Izigzag-HWA: communication-bound; both baselines lose by a
+        // clear margin (paper: AXI -27%, cache -22.5%).
+        let wl = Workload::IzigzagHwa;
+        let prop = f.get(Prototype::Proposed, wl);
+        assert!(prop > 1.15 * f.get(Prototype::Axi, wl), "axi margin");
+        assert!(prop > 1.15 * f.get(Prototype::SharedCache, wl), "cache margin");
+        // Eight-HWA: mixed exec times damp the gap in our calibration
+        // (paper reports larger losses; see EXPERIMENTS.md §Deviations) —
+        // assert the proposal is never materially beaten.
+        let wl = Workload::EightHwa;
+        let prop = f.get(Prototype::Proposed, wl);
+        assert!(prop > 0.9 * f.get(Prototype::Axi, wl));
+        assert!(prop > 0.9 * f.get(Prototype::SharedCache, wl));
+    }
+
+    #[test]
+    fn fig13_dfdiv_is_execution_bound_everywhere() {
+        let f = run_fig13(2, 10);
+        let vals: Vec<f64> = PROTOTYPES
+            .iter()
+            .map(|p| f.get(*p, Workload::DfdivHwa))
+            .collect();
+        let max = vals.iter().cloned().fold(0.0, f64::max);
+        let min = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(
+            (max - min) / max < 0.35,
+            "dfdiv throughput should be close across prototypes: {vals:?}"
+        );
+    }
+}

@@ -1,0 +1,151 @@
+//! Fig. 6: total execution time vs. number of task buffers, for the two
+//! extreme communication patterns — Dfdiv (long execution, small data)
+//! and Izigzag (one-cycle execution, large data).
+//!
+//! Paper result: Dfdiv flat across TB counts; Izigzag improves ~28.4%
+//! going from 1 to 2 TBs and is flat beyond.
+
+use crate::clock::PS_PER_US;
+use crate::cmp::core::{InvokeSpec, Segment};
+use crate::fpga::hwa::spec_by_name;
+use crate::sim::system::{System, SystemConfig};
+use crate::util::table::Table;
+
+/// Requests per processor issued back-to-back at the same HWA (§6.2:
+/// "multiple requests for the same HWA ... from different processors
+/// simultaneously").
+const REQUESTS_PER_PROC: usize = 8;
+
+pub struct Fig6Point {
+    pub hwa: &'static str,
+    pub n_tbs: usize,
+    pub total_us: f64,
+}
+
+pub fn run_point(hwa: &'static str, n_tbs: usize) -> Fig6Point {
+    let spec = spec_by_name(hwa).expect("known benchmark");
+    let mut cfg = SystemConfig::paper(vec![spec.clone()]);
+    cfg.n_tbs = n_tbs;
+    let mut sys = System::new(cfg);
+    for i in 0..sys.n_procs() {
+        let prog: Vec<Segment> = (0..REQUESTS_PER_PROC)
+            .map(|_| {
+                Segment::Invoke(InvokeSpec::direct(
+                    0,
+                    (0..spec.in_words as u32).collect(),
+                    spec.out_words,
+                ))
+            })
+            .collect();
+        sys.load_program(i, prog);
+    }
+    let done = sys.run_until_done(2_000 * PS_PER_US);
+    assert!(done, "fig6 run did not drain ({hwa}, {n_tbs} TBs)");
+    let total_us = sys
+        .procs
+        .iter()
+        .filter_map(|p| p.finished_at)
+        .max()
+        .unwrap_or(0) as f64
+        / PS_PER_US as f64;
+    Fig6Point {
+        hwa,
+        n_tbs,
+        total_us,
+    }
+}
+
+pub struct Fig6 {
+    pub points: Vec<Fig6Point>,
+}
+
+pub fn run() -> Fig6 {
+    let mut points = Vec::new();
+    for hwa in ["dfdiv", "izigzag"] {
+        for n_tbs in 1..=4 {
+            points.push(run_point(hwa, n_tbs));
+        }
+    }
+    Fig6 { points }
+}
+
+impl Fig6 {
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Fig. 6 — execution time vs number of task buffers",
+            &["hwa", "task buffers", "total time (us)", "vs 1 TB"],
+        );
+        for hwa in ["dfdiv", "izigzag"] {
+            let base = self
+                .points
+                .iter()
+                .find(|p| p.hwa == hwa && p.n_tbs == 1)
+                .map(|p| p.total_us)
+                .unwrap_or(f64::NAN);
+            for p in self.points.iter().filter(|p| p.hwa == hwa) {
+                t.row(&[
+                    p.hwa.to_string(),
+                    p.n_tbs.to_string(),
+                    format!("{:.2}", p.total_us),
+                    format!("{:+.1}%", 100.0 * (p.total_us - base) / base),
+                ]);
+            }
+        }
+        t
+    }
+
+    pub fn improvement_1_to_2(&self, hwa: &str) -> f64 {
+        let t1 = self
+            .points
+            .iter()
+            .find(|p| p.hwa == hwa && p.n_tbs == 1)
+            .unwrap()
+            .total_us;
+        let t2 = self
+            .points
+            .iter()
+            .find(|p| p.hwa == hwa && p.n_tbs == 2)
+            .unwrap()
+            .total_us;
+        100.0 * (t1 - t2) / t1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn izigzag_improves_with_second_tb_dfdiv_does_not() {
+        let fig = run();
+        let izz = fig.improvement_1_to_2("izigzag");
+        let dfd = fig.improvement_1_to_2("dfdiv");
+        assert!(
+            izz > 10.0,
+            "izigzag should gain >10% from 2 TBs, got {izz:.1}%"
+        );
+        assert!(
+            dfd < 5.0,
+            "dfdiv should gain <5% from 2 TBs, got {dfd:.1}%"
+        );
+    }
+
+    #[test]
+    fn no_further_gain_beyond_two_tbs() {
+        let fig = run();
+        let t2 = fig
+            .points
+            .iter()
+            .find(|p| p.hwa == "izigzag" && p.n_tbs == 2)
+            .unwrap()
+            .total_us;
+        let t4 = fig
+            .points
+            .iter()
+            .find(|p| p.hwa == "izigzag" && p.n_tbs == 4)
+            .unwrap()
+            .total_us;
+        let gain = 100.0 * (t2 - t4) / t2;
+        assert!(gain < 6.0, "beyond 2 TBs gain should be small: {gain:.1}%");
+    }
+}

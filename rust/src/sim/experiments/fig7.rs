@@ -1,0 +1,107 @@
+//! Fig. 7: maximum interface frequency for every PR x PS strategy pair
+//! (32 HWA channels), from the analytical synthesis model.
+
+use crate::synth::delay::{interface_fmax_mhz, pr_fmax_mhz, ps_fmax_mhz};
+use crate::util::table::Table;
+
+pub const N_CHANNELS: usize = 32;
+pub const PR_SWEEP: [usize; 4] = [4, 8, 16, 32];
+/// PS group sizes; `N_CHANNELS` encodes the global strategy.
+pub const PS_SWEEP: [usize; 5] = [2, 4, 8, 16, N_CHANNELS];
+
+pub struct Fig7 {
+    /// (pr label, ps label, fmax MHz)
+    pub grid: Vec<(String, String, f64)>,
+}
+
+pub fn run() -> Fig7 {
+    let mut grid = Vec::new();
+    for ps in PS_SWEEP {
+        for pr in PR_SWEEP {
+            let label_ps = if ps == N_CHANNELS {
+                "PSglobal".to_string()
+            } else {
+                format!("PS{ps}")
+            };
+            grid.push((
+                format!("PR{pr}"),
+                label_ps,
+                interface_fmax_mhz(pr, ps, N_CHANNELS),
+            ));
+        }
+    }
+    Fig7 { grid }
+}
+
+impl Fig7 {
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Fig. 7 — max frequency (MHz), PR x PS strategies, 32 channels",
+            &["PS strategy", "PR4", "PR8", "PR16", "PR32", "PR avg"],
+        );
+        for ps in PS_SWEEP {
+            let label_ps = if ps == N_CHANNELS {
+                "PSglobal".to_string()
+            } else {
+                format!("PS{ps}")
+            };
+            let row: Vec<f64> = PR_SWEEP
+                .iter()
+                .map(|pr| interface_fmax_mhz(*pr, ps, N_CHANNELS))
+                .collect();
+            let avg = row.iter().sum::<f64>() / row.len() as f64;
+            t.row(&[
+                label_ps,
+                format!("{:.0}", row[0]),
+                format!("{:.0}", row[1]),
+                format!("{:.0}", row[2]),
+                format!("{:.0}", row[3]),
+                format!("{:.0}", avg),
+            ]);
+        }
+        t
+    }
+
+    pub fn component_table(&self) -> Table {
+        let mut t = Table::new(
+            "Fig. 7 components — standalone PR / PS fmax (MHz)",
+            &["strategy", "fmax (MHz)"],
+        );
+        for pr in PR_SWEEP {
+            t.row(&[
+                format!("PR{pr}"),
+                format!("{:.0}", pr_fmax_mhz(pr, N_CHANNELS)),
+            ]);
+        }
+        for ps in PS_SWEEP {
+            let label = if ps == N_CHANNELS {
+                "PSglobal".to_string()
+            } else {
+                format!("PS{ps}")
+            };
+            t.row(&[label, format!("{:.0}", ps_fmax_mhz(ps, N_CHANNELS))]);
+        }
+        t
+    }
+
+    pub fn best(&self) -> &(String, String, f64) {
+        self.grid
+            .iter()
+            .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_is_pr4_ps4() {
+        let f = run();
+        let (pr, ps, fmax) = f.best();
+        assert_eq!(pr, "PR4");
+        assert_eq!(ps, "PS4");
+        assert!(*fmax >= 300.0);
+    }
+}

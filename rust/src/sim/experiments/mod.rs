@@ -1,0 +1,9 @@
+//! One driver per paper figure/table (DESIGN.md §4 per-experiment index).
+
+pub mod fig10;
+pub mod fig13_14;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod tables;

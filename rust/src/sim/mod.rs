@@ -1,0 +1,6 @@
+//! Full-system simulation: system assembly and experiment drivers.
+
+pub mod experiments;
+pub mod system;
+
+pub use system::{Fabric, FabricKind, Net, NetKind, System, SystemConfig};

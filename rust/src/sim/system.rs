@@ -1,0 +1,577 @@
+//! Full-system assembly (paper Fig. 1): CMP cores + interconnect + FPGA
+//! fabric + MMU, driven by a multi-domain clock. Three prototypes are
+//! expressible (§6.7/§6.8): NoC + distributed buffers (the proposal),
+//! AXI4 bus + distributed buffers, and NoC + shared FPGA cache.
+
+use crate::baseline::axi::AxiBus;
+use crate::baseline::shared_cache::CacheFpga;
+use crate::clock::{ClockDomain, DomainId, MultiClock, Ps};
+use crate::cmp::core::{Processor, Segment};
+use crate::flit::Flit;
+use crate::fpga::fabric::{Fpga, FpgaConfig};
+use crate::fpga::hwa::{HwaCompute, HwaSpec};
+use crate::mem::mmu::Mmu;
+use crate::noc::mesh::{Mesh, MeshConfig};
+
+/// Interconnect selection (Fig. 13/14's three prototypes use Noc or Axi).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetKind {
+    Noc,
+    Axi,
+}
+
+/// FPGA-side architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricKind {
+    /// The paper's proposal: distributed TB/POB/CB buffers.
+    Buffered,
+    /// §6.8 baseline: shared system cache, given capacity in bytes.
+    SharedCache { cache_bytes: u32 },
+}
+
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub mesh: MeshConfig,
+    pub net: NetKind,
+    pub fabric: FabricKind,
+    pub n_tbs: usize,
+    pub pr_group: usize,
+    pub ps_group: usize,
+    pub iface_mhz: f64,
+    pub specs: Vec<HwaSpec>,
+    pub chain_groups: Vec<Vec<usize>>,
+}
+
+impl SystemConfig {
+    /// Paper defaults: 3x3 mesh, NoC, buffered fabric, 2 TBs, PR4-PS4.
+    pub fn paper(specs: Vec<HwaSpec>) -> Self {
+        Self {
+            mesh: MeshConfig::default(),
+            net: NetKind::Noc,
+            fabric: FabricKind::Buffered,
+            n_tbs: 2,
+            pr_group: 4,
+            ps_group: 4,
+            iface_mhz: 300.0,
+            specs,
+            chain_groups: Vec::new(),
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.mesh.width as usize * self.mesh.height as usize
+    }
+
+    /// FPGA sits at the last node, MMU beside it; processors elsewhere.
+    pub fn fpga_node(&self) -> usize {
+        self.n_nodes() - 1
+    }
+
+    pub fn mmu_node(&self) -> usize {
+        self.n_nodes() - 2
+    }
+
+    pub fn proc_nodes(&self) -> Vec<usize> {
+        (0..self.n_nodes())
+            .filter(|n| *n != self.fpga_node() && *n != self.mmu_node())
+            .collect()
+    }
+}
+
+pub enum Net {
+    Noc(Mesh),
+    Axi(AxiBus),
+}
+
+impl Net {
+    fn can_inject(&self, node: usize) -> bool {
+        match self {
+            Net::Noc(m) => m.can_inject(node),
+            Net::Axi(b) => b.can_inject(node),
+        }
+    }
+
+    fn try_inject(&mut self, node: usize, flit: Flit) -> bool {
+        match self {
+            Net::Noc(m) => m.try_inject(node, flit),
+            Net::Axi(b) => b.try_inject(node, flit),
+        }
+    }
+
+    fn eject_pop(&mut self, node: usize) -> Option<Flit> {
+        match self {
+            Net::Noc(m) => m.eject_pop(node),
+            Net::Axi(b) => b.eject_pop(node),
+        }
+    }
+
+    fn eject_peek_some(&self, node: usize) -> bool {
+        match self {
+            Net::Noc(m) => m.eject_peek(node).is_some(),
+            Net::Axi(b) => b.eject_len(node) > 0,
+        }
+    }
+
+    fn step(&mut self) {
+        match self {
+            Net::Noc(m) => m.step(),
+            Net::Axi(b) => b.step(),
+        }
+    }
+
+    fn idle(&self) -> bool {
+        match self {
+            Net::Noc(m) => m.idle(),
+            Net::Axi(b) => b.idle(),
+        }
+    }
+}
+
+pub enum Fabric {
+    Buffered(Fpga),
+    Cached(CacheFpga),
+}
+
+impl Fabric {
+    pub fn can_accept_from_noc(&self) -> bool {
+        match self {
+            Fabric::Buffered(f) => f.can_accept_from_noc(),
+            Fabric::Cached(f) => f.can_accept_from_noc(),
+        }
+    }
+
+    pub fn push_from_noc(&mut self, now: Ps, flit: Flit) {
+        match self {
+            Fabric::Buffered(f) => f.push_from_noc(now, flit),
+            Fabric::Cached(f) => f.push_from_noc(now, flit),
+        }
+    }
+
+    pub fn pop_to_noc(&mut self, now: Ps) -> Option<Flit> {
+        match self {
+            Fabric::Buffered(f) => f.pop_to_noc(now),
+            Fabric::Cached(f) => f.pop_to_noc(now),
+        }
+    }
+
+    pub fn step_iface(&mut self, now: Ps) {
+        match self {
+            Fabric::Buffered(f) => f.step_iface(now),
+            Fabric::Cached(f) => f.step_iface(now),
+        }
+    }
+
+    pub fn tasks_executed(&self) -> u64 {
+        match self {
+            Fabric::Buffered(f) => f.tasks_executed(),
+            Fabric::Cached(f) => f.tasks_executed(),
+        }
+    }
+
+    pub fn flits_in_out(&self) -> (u64, u64) {
+        match self {
+            Fabric::Buffered(f) => (f.stats.flits_from_noc, f.stats.flits_to_noc),
+            Fabric::Cached(f) => (f.stats.flits_from_noc, f.stats.flits_to_noc),
+        }
+    }
+
+    pub fn buffered(&self) -> Option<&Fpga> {
+        match self {
+            Fabric::Buffered(f) => Some(f),
+            _ => None,
+        }
+    }
+
+    pub fn buffered_mut(&mut self) -> Option<&mut Fpga> {
+        match self {
+            Fabric::Buffered(f) => Some(f),
+            _ => None,
+        }
+    }
+
+    pub fn set_compute(&mut self, compute: Box<dyn HwaCompute>) {
+        match self {
+            Fabric::Buffered(f) => f.set_compute(compute),
+            Fabric::Cached(f) => f.set_compute(compute),
+        }
+    }
+
+    pub fn quiescent(&self, now: Ps) -> bool {
+        match self {
+            Fabric::Buffered(f) => f.quiescent(now),
+            Fabric::Cached(f) => f.quiescent(),
+        }
+    }
+}
+
+pub struct System {
+    pub config: SystemConfig,
+    pub clk: MultiClock,
+    noc_dom: DomainId,
+    iface_dom: DomainId,
+    hwa_doms: Vec<(DomainId, Vec<usize>)>,
+    pub net: Net,
+    pub fabric: Fabric,
+    pub procs: Vec<Processor>,
+    /// Open-loop traffic sources replacing processors (per slot) for the
+    /// §6.4 injection-rate experiments.
+    pub open_sources: Vec<Option<crate::workload::openloop::OpenLoopSource>>,
+    pub mmu: Mmu,
+    ticking: Vec<DomainId>,
+}
+
+impl System {
+    pub fn new(config: SystemConfig) -> Self {
+        let mut clk = MultiClock::new();
+        let noc_clock = ClockDomain::from_mhz("noc+cmp", 1000.0);
+        let noc_dom = clk.add(noc_clock.clone());
+        let fpga_node = config.fpga_node() as u8;
+        let mmu_node = config.mmu_node() as u8;
+        // src_id (3 bits) -> node map for replies.
+        let proc_nodes = config.proc_nodes();
+        let mut reply_route = vec![0u8; 8];
+        for (i, n) in proc_nodes.iter().enumerate().take(8) {
+            reply_route[i] = *n as u8;
+        }
+        let fabric = match config.fabric {
+            FabricKind::Buffered => {
+                let fcfg = FpgaConfig {
+                    n_tbs: config.n_tbs,
+                    pr: crate::fpga::PrStrategy::distributed(config.pr_group),
+                    ps: crate::fpga::PsStrategy::hierarchical(
+                        config.ps_group.min(config.specs.len().max(1)),
+                    ),
+                    iface_mhz: config.iface_mhz,
+                    node: fpga_node,
+                    mmu_node,
+                    reply_route: reply_route.clone(),
+                };
+                let mut f = Fpga::new(fcfg, config.specs.clone(), &noc_clock);
+                for g in &config.chain_groups {
+                    f.add_chain_group(g.clone());
+                }
+                Fabric::Buffered(f)
+            }
+            FabricKind::SharedCache { cache_bytes } => Fabric::Cached(
+                CacheFpga::new(
+                    fpga_node,
+                    mmu_node,
+                    reply_route.clone(),
+                    config.specs.clone(),
+                    cache_bytes,
+                    &noc_clock,
+                ),
+            ),
+        };
+        let iface_dom = clk.add(match &fabric {
+            Fabric::Buffered(f) => f.iface_clock.clone(),
+            Fabric::Cached(f) => f.iface_clock.clone(),
+        });
+        let hwa_doms = match &fabric {
+            Fabric::Buffered(f) => f
+                .hwa_domains()
+                .into_iter()
+                .enumerate()
+                .map(|(i, (p, chans))| {
+                    let d = clk.add(ClockDomain {
+                        name: format!("hwa{i}"),
+                        period_ps: p,
+                        phase_ps: 0,
+                    });
+                    (d, chans)
+                })
+                .collect(),
+            Fabric::Cached(_) => Vec::new(),
+        };
+        let net = match config.net {
+            NetKind::Noc => Net::Noc(Mesh::new(config.mesh.clone())),
+            NetKind::Axi => {
+                Net::Axi(AxiBus::new(config.n_nodes(), config.fpga_node()))
+            }
+        };
+        let procs = proc_nodes
+            .iter()
+            .enumerate()
+            .take(8)
+            .map(|(i, n)| {
+                Processor::new(i as u8, *n as u8, fpga_node, Vec::new())
+            })
+            .collect();
+        let mmu = Mmu::new(mmu_node, fpga_node, noc_clock.period_ps);
+        let n_procs = proc_nodes.len().min(8);
+        Self {
+            config,
+            clk,
+            noc_dom,
+            iface_dom,
+            hwa_doms,
+            net,
+            fabric,
+            procs,
+            open_sources: (0..n_procs).map(|_| None).collect(),
+            mmu,
+            ticking: Vec::new(),
+        }
+    }
+
+    /// Replace every processor with an open-loop source at the given
+    /// aggregate request rate (requests/µs across all sources).
+    pub fn set_open_loop(&mut self, total_rate_per_us: f64, seed: u64) {
+        let n = self.procs.len();
+        let fpga_node = self.config.fpga_node() as u8;
+        for i in 0..n {
+            self.open_sources[i] =
+                Some(crate::workload::openloop::OpenLoopSource::new(
+                    i as u8,
+                    self.procs[i].node,
+                    fpga_node,
+                    self.config.specs.clone(),
+                    total_rate_per_us / n as f64,
+                    seed,
+                ));
+        }
+    }
+
+    /// Total completed invocations across open-loop sources.
+    pub fn open_loop_completions(&self) -> u64 {
+        self.open_sources
+            .iter()
+            .flatten()
+            .map(|s| s.results_done)
+            .sum()
+    }
+
+    /// Load a program onto processor `i`.
+    pub fn load_program(&mut self, i: usize, program: Vec<Segment>) {
+        for seg in program {
+            self.procs[i].enqueue(seg);
+        }
+    }
+
+    pub fn now(&self) -> Ps {
+        self.clk.now()
+    }
+
+    /// Advance the whole system by one clock event.
+    pub fn step(&mut self) -> Ps {
+        let mut ticking = std::mem::take(&mut self.ticking);
+        let t = self.clk.advance(&mut ticking);
+        for d in &ticking {
+            if *d == self.noc_dom {
+                self.step_noc_domain(t);
+            } else if *d == self.iface_dom {
+                self.fabric.step_iface(t);
+            } else if let Some((_, chans)) =
+                self.hwa_doms.iter().find(|(dd, _)| dd == d)
+            {
+                if let Fabric::Buffered(f) = &mut self.fabric {
+                    for i in chans {
+                        f.step_channel(*i, t);
+                    }
+                }
+            }
+        }
+        self.ticking = ticking;
+        t
+    }
+
+    fn step_noc_domain(&mut self, t: Ps) {
+        let fpga_node = self.config.fpga_node();
+        let mmu_node = self.config.mmu_node();
+        // FPGA <-> net exchange.
+        while self.fabric.can_accept_from_noc()
+            && self.net.eject_peek_some(fpga_node)
+        {
+            let f = self.net.eject_pop(fpga_node).expect("peeked");
+            self.fabric.push_from_noc(t, f);
+        }
+        if self.net.can_inject(fpga_node) {
+            if let Some(f) = self.fabric.pop_to_noc(t) {
+                let ok = self.net.try_inject(fpga_node, f);
+                debug_assert!(ok);
+            }
+        }
+        // MMU.
+        while let Some(f) = self.net.eject_pop(mmu_node) {
+            self.mmu.deliver(f, t);
+        }
+        let can = self.net.can_inject(mmu_node);
+        if let Some(f) = self.mmu.step(t, can) {
+            let ok = self.net.try_inject(mmu_node, f);
+            debug_assert!(ok);
+        }
+        // Processors (or their open-loop replacements).
+        for (i, p) in self.procs.iter_mut().enumerate() {
+            let node = p.node as usize;
+            if let Some(src) = self.open_sources[i].as_mut() {
+                while let Some(f) = self.net.eject_pop(node) {
+                    src.deliver(f, t);
+                }
+                let can = self.net.can_inject(node);
+                if let Some(f) = src.step(t, can) {
+                    let ok = self.net.try_inject(node, f);
+                    debug_assert!(ok);
+                }
+                continue;
+            }
+            while let Some(f) = self.net.eject_pop(node) {
+                p.deliver(f, t);
+            }
+            let can = self.net.can_inject(node);
+            if let Some(f) = p.step(t, can) {
+                let ok = self.net.try_inject(node, f);
+                debug_assert!(ok);
+            }
+        }
+        // Advance the interconnect itself.
+        self.net.step();
+    }
+
+    /// Run until every processor's program completes (or deadline).
+    /// Returns true on completion.
+    pub fn run_until_done(&mut self, deadline_ps: Ps) -> bool {
+        while self.clk.now() < deadline_ps {
+            self.step();
+            if self.procs.iter().all(|p| p.done())
+                && self.net.idle()
+                && self.mmu.idle()
+                && self.fabric.quiescent(self.clk.now())
+            {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Run for a fixed window.
+    pub fn run_for(&mut self, window_ps: Ps) {
+        let end = self.clk.now() + window_ps;
+        while self.clk.now() < end {
+            self.step();
+        }
+    }
+
+    pub fn n_procs(&self) -> usize {
+        self.procs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cmp::core::InvokeSpec;
+    use crate::fpga::hwa::spec_by_name;
+
+    fn one_hwa_system(net: NetKind, fabric: FabricKind) -> System {
+        let mut cfg = SystemConfig::paper(vec![
+            spec_by_name("dfadd").unwrap(),
+            spec_by_name("izigzag").unwrap(),
+        ]);
+        cfg.net = net;
+        cfg.fabric = fabric;
+        System::new(cfg)
+    }
+
+    #[test]
+    fn full_system_single_invocation_noc() {
+        let mut sys = one_hwa_system(NetKind::Noc, FabricKind::Buffered);
+        sys.load_program(
+            0,
+            vec![Segment::Invoke(InvokeSpec::direct(0, vec![1, 2, 3, 4], 2))],
+        );
+        assert!(sys.run_until_done(50_000_000), "completed within 50 µs");
+        assert_eq!(sys.procs[0].records.len(), 1);
+        let r = sys.procs[0].records[0];
+        assert!(r.t_grant > r.t_request);
+        assert!(r.t_result_last > r.t_grant);
+        assert_eq!(sys.fabric.tasks_executed(), 1);
+        // dfadd of (1,2)+(3,4) via native/echo compute: result delivered.
+        assert_eq!(sys.procs[0].last_result.len(), 2);
+    }
+
+    #[test]
+    fn full_system_single_invocation_axi() {
+        let mut sys = one_hwa_system(NetKind::Axi, FabricKind::Buffered);
+        sys.load_program(
+            0,
+            vec![Segment::Invoke(InvokeSpec::direct(0, vec![1, 2, 3, 4], 2))],
+        );
+        assert!(sys.run_until_done(50_000_000));
+        assert_eq!(sys.fabric.tasks_executed(), 1);
+    }
+
+    #[test]
+    fn full_system_single_invocation_shared_cache() {
+        let mut sys = one_hwa_system(
+            NetKind::Noc,
+            FabricKind::SharedCache {
+                cache_bytes: 64 * 1024,
+            },
+        );
+        sys.load_program(
+            0,
+            vec![Segment::Invoke(InvokeSpec::direct(0, vec![1, 2, 3, 4], 2))],
+        );
+        assert!(sys.run_until_done(50_000_000));
+        assert_eq!(sys.fabric.tasks_executed(), 1);
+    }
+
+    #[test]
+    fn seven_processors_share_one_hwa() {
+        let mut sys = one_hwa_system(NetKind::Noc, FabricKind::Buffered);
+        let n = sys.n_procs();
+        for i in 0..n {
+            sys.load_program(
+                i,
+                vec![Segment::Invoke(InvokeSpec::direct(
+                    1,
+                    (0..64).collect(),
+                    64,
+                ))],
+            );
+        }
+        assert!(sys.run_until_done(100_000_000));
+        assert_eq!(sys.fabric.tasks_executed(), n as u64);
+        for p in &sys.procs {
+            assert_eq!(p.records.len(), 1);
+        }
+    }
+
+    #[test]
+    fn noc_latency_beats_axi_under_load() {
+        // The Fig. 14 direction: with several processors invoking
+        // concurrently (each its own HWA so the fabric doesn't serialize),
+        // the shared bus becomes the bottleneck and loses.
+        let run = |net| {
+            let mut cfg = SystemConfig::paper(
+                crate::fpga::hwa::table3().into_iter().take(7).collect(),
+            );
+            cfg.net = net;
+            let mut sys = System::new(cfg);
+            let n = sys.n_procs();
+            for i in 0..n {
+                let spec = &sys.config.specs[i];
+                let words: Vec<u32> = (0..spec.in_words as u32).collect();
+                let expect = spec.out_words;
+                sys.load_program(
+                    i,
+                    vec![Segment::Invoke(InvokeSpec::direct(
+                        i as u8, words, expect,
+                    ))],
+                );
+            }
+            assert!(sys.run_until_done(400_000_000));
+            sys.procs
+                .iter()
+                .map(|p| p.records[0].total() as f64)
+                .sum::<f64>()
+                / n as f64
+        };
+        let noc = run(NetKind::Noc);
+        let axi = run(NetKind::Axi);
+        assert!(
+            axi > noc,
+            "axi mean latency {axi} should exceed noc {noc}"
+        );
+    }
+}

@@ -1,0 +1,161 @@
+//! Analytical fmax model for the interface strategies (paper Fig. 7).
+//!
+//! The paper reports Vivado post-P&R maximum frequencies for 32 HWA
+//! channels under every combination of distributed-PR and hierarchical-PS
+//! strategy. We cannot run Vivado (DESIGN.md substitution 2), so we model
+//! the critical path as
+//!
+//! ```text
+//! t = t_reg + t_logic(fan) + t_route(fan)
+//! ```
+//!
+//! where the logic term grows with mux/arbiter depth (log2 of fan-in) and
+//! the routing term grows super-linearly with fan-out/fan-in beyond the
+//! device's comfortable net fan-out (congestion). Constants are calibrated
+//! to the paper's anchors:
+//!
+//! * global PS lands near 130 MHz; every hierarchical PS is **more than
+//!   2x** faster (§6.3.1);
+//! * PS4 is the best PS; PR4 the best PR; PR8/PR16 close; PR32 worst;
+//! * the winning PR4-PS4 design clears 300 MHz, the frequency the full
+//!   prototype runs at (§6.1).
+
+/// Register clock-to-out + setup (ns).
+const T_REG: f64 = 0.6;
+/// Per-level LUT delay (ns) for a mux/arbiter tree level.
+const T_LUT: f64 = 0.45;
+/// Baseline net routing delay (ns).
+const T_NET: f64 = 0.5;
+/// Routing delay added per unit fan (ns).
+const T_FAN: f64 = 0.055;
+/// Super-linear congestion once fan exceeds this knee.
+const FAN_KNEE: f64 = 12.0;
+const T_CONGEST: f64 = 0.0008;
+
+fn log2c(x: f64) -> f64 {
+    x.max(1.0).log2().ceil().max(1.0)
+}
+
+/// Critical-path delay (ns) of a block with the given worst fan.
+fn path_delay(fan: f64) -> f64 {
+    let congested = (fan - FAN_KNEE).max(0.0);
+    T_REG + T_LUT * log2c(fan) + T_NET + T_FAN * fan + T_CONGEST * congested * congested
+}
+
+/// fmax (MHz) of the distributed-PR strategy with `k` channels per PR and
+/// `n` channels total. The PR's worst net is the max of its dispatch
+/// fan-out (k channels) and the input demux fan (n/k receivers).
+pub fn pr_fmax_mhz(k: usize, n: usize) -> f64 {
+    assert!(k >= 1 && k <= n);
+    let n_prs = n.div_ceil(k) as f64;
+    // Dispatch fan-out dominates (channel buffers spread across the die:
+    // 1.25x wire-length weighting); the input demux fans over n/k PRs.
+    let fan = (1.25 * k as f64).max(n_prs);
+    1000.0 / path_delay(fan)
+}
+
+/// fmax (MHz) of the PS strategy: `group == n` is the global PS (single
+/// level, fan-in n); otherwise two registered levels of fan-in `group`
+/// and `n/group`.
+pub fn ps_fmax_mhz(group: usize, n: usize) -> f64 {
+    assert!(group >= 1 && group <= n);
+    if group == n {
+        // Global: one flat arbiter + mux over n channels, plus the
+        // command/result merge doubling its effective fan.
+        return 1000.0 / path_delay(2.0 * n as f64);
+    }
+    let level1 = path_delay(group as f64 * 1.25); // data mux + priority RR
+    let level2 = path_delay(n.div_ceil(group) as f64);
+    1000.0 / level1.max(level2)
+}
+
+/// Interface fmax for a (PR, PS) pair (the Fig. 7 bars).
+pub fn interface_fmax_mhz(pr_k: usize, ps_group: usize, n: usize) -> f64 {
+    pr_fmax_mhz(pr_k, n).min(ps_fmax_mhz(ps_group, n))
+}
+
+/// The Fig. 7 sweep: PR in {4, 8, 16, 32} x PS in {global, 16, 8, 4, 2}.
+pub fn fig7_grid(n: usize) -> Vec<(String, String, f64)> {
+    let mut out = Vec::new();
+    for ps in [n, 16, 8, 4, 2] {
+        for pr in [4usize, 8, 16, 32] {
+            let label_ps = if ps == n {
+                "PSglobal".to_string()
+            } else {
+                format!("PS{ps}")
+            };
+            out.push((format!("PR{pr}"), label_ps, interface_fmax_mhz(pr, ps, n)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const N: usize = 32;
+
+    #[test]
+    fn ps4_is_best_ps() {
+        let best = [2, 4, 8, 16, N]
+            .into_iter()
+            .max_by(|a, b| {
+                ps_fmax_mhz(*a, N)
+                    .partial_cmp(&ps_fmax_mhz(*b, N))
+                    .unwrap()
+            })
+            .unwrap();
+        assert_eq!(best, 4, "paper §6.3.1: PS4 renders the highest fmax");
+    }
+
+    #[test]
+    fn hierarchical_ps_more_than_2x_global() {
+        let global = ps_fmax_mhz(N, N);
+        for g in [2, 4, 8, 16] {
+            assert!(
+                ps_fmax_mhz(g, N) > 2.0 * global,
+                "PS{g}: {} vs global {}",
+                ps_fmax_mhz(g, N),
+                global
+            );
+        }
+    }
+
+    #[test]
+    fn pr4_is_best_pr_and_pr32_worst() {
+        let f: Vec<f64> = [4, 8, 16, 32]
+            .into_iter()
+            .map(|k| pr_fmax_mhz(k, N))
+            .collect();
+        assert!(f[0] > f[1] && f[1] >= f[2] && f[2] > f[3], "{f:?}");
+    }
+
+    #[test]
+    fn pr8_pr16_similar() {
+        // Paper: "PR8 and PR16 provide similar results". Our analytical
+        // model separates them slightly more than Vivado does; assert
+        // they stay within 35% while PR32 falls far further behind.
+        let r = pr_fmax_mhz(8, N) / pr_fmax_mhz(16, N);
+        assert!((0.85..1.35).contains(&r), "ratio {r}");
+        assert!(pr_fmax_mhz(16, N) / pr_fmax_mhz(32, N) > r);
+    }
+
+    #[test]
+    fn winning_design_clears_300mhz() {
+        assert!(interface_fmax_mhz(4, 4, N) >= 300.0);
+    }
+
+    #[test]
+    fn global_ps_is_the_bottleneck_everywhere() {
+        for pr in [4, 8, 16, 32] {
+            let f = interface_fmax_mhz(pr, N, N);
+            assert!(f < 160.0, "global PS must cap fmax, got {f}");
+        }
+    }
+
+    #[test]
+    fn grid_has_20_points() {
+        assert_eq!(fig7_grid(N).len(), 20);
+    }
+}

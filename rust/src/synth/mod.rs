@@ -1,0 +1,7 @@
+//! Analytical synthesis model: fmax (Fig. 7) and resources (Tables 3, 4).
+
+pub mod delay;
+pub mod resource;
+
+pub use delay::{fig7_grid, interface_fmax_mhz, pr_fmax_mhz, ps_fmax_mhz};
+pub use resource::{channel_cost, interface_cost, lut_pct, pr_cost, ps_cost};

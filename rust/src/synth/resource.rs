@@ -1,0 +1,172 @@
+//! Resource accounting for the interface architecture (paper Table 4,
+//! §6.3.2, §6.6) on the Virtex-7 xc7vx690t.
+//!
+//! Per-HWA-channel component costs are Table 4 verbatim; PR/PS costs are
+//! modelled from the strategy (calibrated so PR4-PS4 at 32 channels
+//! reproduces Table 4's PR = 870 / PS = 5039 LUTs and the §6.3.2 headline
+//! of ~10.6% total, 0.33% per channel).
+
+use crate::fpga::hwa::{Resources, DEVICE_BRAMS, DEVICE_LUTS};
+use crate::fpga::iface::pr::PrStrategy;
+use crate::fpga::iface::ps::PsStrategy;
+
+/// Table 4 per-channel components (LUT, BRAM).
+pub const TB_COST: Resources = Resources::new(100, 4, 0, 0);
+pub const TA_COST: Resources = Resources::new(2, 0, 0, 0);
+pub const HWAC_PG_COST: Resources = Resources::new(290, 0, 0, 0);
+pub const POB_COST: Resources = Resources::new(231, 2, 0, 0);
+pub const RB_COST: Resources = Resources::new(243, 0, 0, 0);
+pub const LGC_COST: Resources = Resources::new(139, 0, 0, 0);
+pub const LGB_COST: Resources = Resources::new(247, 0, 0, 0);
+/// §6.6: chaining support per channel (CB + CC).
+pub const CHAIN_COST: Resources = Resources::new(526, 2, 0, 0);
+
+/// Per-channel interface cost, without/with chaining support.
+pub fn channel_cost(with_chaining: bool) -> Resources {
+    let base = TB_COST
+        .add(&TA_COST)
+        .add(&HWAC_PG_COST)
+        .add(&POB_COST)
+        .add(&RB_COST)
+        .add(&LGC_COST)
+        .add(&LGB_COST);
+    if with_chaining {
+        base.add(&CHAIN_COST)
+    } else {
+        base
+    }
+}
+
+/// PR cost for a strategy over `n` channels. Calibrated: each PR instance
+/// costs a base FSM plus per-served-channel decode; PR4 x 32 channels
+/// => 8 instances x ~109 LUTs ~= 870 (Table 4).
+pub fn pr_cost(strategy: PrStrategy, n: usize) -> Resources {
+    let n_prs = strategy.n_prs(n) as u32;
+    let k = strategy.group_size as u32;
+    Resources::new(n_prs * (61 + 12 * k), 0, 0, n_prs * 96)
+}
+
+/// PS cost: first-level arbiters (per group) + second-level controller.
+/// Calibrated: PS4 x 32 channels => 8 groups x ~600 + ~239 ~= 5039
+/// (Table 4). The global PS is a single flat arbiter whose mux grows
+/// super-linearly with fan-in.
+pub fn ps_cost(strategy: PsStrategy, n: usize) -> Resources {
+    let g = strategy.group_size as u32;
+    let n_groups = strategy.n_groups(n) as u32;
+    if strategy.group_size >= n {
+        // Global: flat n-way priority mux + arbiter.
+        let n = n as u32;
+        return Resources::new(180 + 95 * n + n * n / 4, 0, 0, 150 + 30 * n);
+    }
+    let level1 = n_groups * (400 + 50 * g);
+    let level2 = 79 + 20 * n_groups;
+    Resources::new(level1 + level2, 0, 0, n_groups * 180 + 120)
+}
+
+/// Full interface cost for `n` channels under a strategy pair.
+pub fn interface_cost(
+    pr: PrStrategy,
+    ps: PsStrategy,
+    n: usize,
+    with_chaining: bool,
+) -> Resources {
+    let mut total = pr_cost(pr, n).add(&ps_cost(ps, n));
+    for _ in 0..n {
+        total = total.add(&channel_cost(with_chaining));
+    }
+    total
+}
+
+pub fn lut_pct(r: &Resources) -> f64 {
+    100.0 * r.lut as f64 / DEVICE_LUTS as f64
+}
+
+pub fn bram_pct(r: &Resources) -> f64 {
+    100.0 * r.bram as f64 / DEVICE_BRAMS as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_pr_ps_anchor() {
+        // PR4-PS4 at 32 channels: Table 4 reports PR 870, PS 5039 LUTs.
+        let pr = pr_cost(PrStrategy::distributed(4), 32);
+        assert_eq!(pr.lut, 872, "8 x (61 + 48)");
+        let ps = ps_cost(PsStrategy::hierarchical(4), 32);
+        assert_eq!(ps.lut, 5039, "8 x 600 + 239");
+    }
+
+    #[test]
+    fn per_channel_within_paper_band() {
+        // §6.3.2: ~0.33% LUTs per HWA channel (with its share of PR/PS).
+        let n = 32;
+        let total = interface_cost(
+            PrStrategy::distributed(4),
+            PsStrategy::hierarchical(4),
+            n,
+            false,
+        );
+        let per_channel_pct = lut_pct(&total) / n as f64;
+        assert!(
+            (0.25..0.40).contains(&per_channel_pct),
+            "{per_channel_pct}"
+        );
+    }
+
+    #[test]
+    fn total_close_to_10_63_pct() {
+        let total = interface_cost(
+            PrStrategy::distributed(4),
+            PsStrategy::hierarchical(4),
+            32,
+            false,
+        );
+        let pct = lut_pct(&total);
+        assert!((9.5..11.5).contains(&pct), "total {pct}%");
+    }
+
+    #[test]
+    fn chaining_overhead_matches_6_6() {
+        // §6.6: +526 LUT (0.12%) and +2 BRAM per channel.
+        let delta_lut = channel_cost(true).lut - channel_cost(false).lut;
+        assert_eq!(delta_lut, 526);
+        let pct = 100.0 * delta_lut as f64 / DEVICE_LUTS as f64;
+        assert!((0.10..0.14).contains(&pct));
+        assert_eq!(channel_cost(true).bram - channel_cost(false).bram, 2);
+    }
+
+    #[test]
+    fn eight_channels_about_2_6_pct() {
+        // §6.3.2: an 8-channel design uses ~2.6% of LUTs.
+        let total = interface_cost(
+            PrStrategy::distributed(4),
+            PsStrategy::hierarchical(4),
+            8,
+            false,
+        );
+        let pct = lut_pct(&total);
+        assert!((2.2..3.1).contains(&pct), "{pct}%");
+    }
+
+    #[test]
+    fn strategy_range_small() {
+        // §6.3.2: across strategies LUT use spans ~10.48%..10.78%.
+        let mut pcts = Vec::new();
+        for pr_k in [4usize, 8, 16, 32] {
+            for ps_g in [2usize, 4, 8, 16] {
+                let t = interface_cost(
+                    PrStrategy::distributed(pr_k),
+                    PsStrategy::hierarchical(ps_g),
+                    32,
+                    false,
+                );
+                pcts.push(lut_pct(&t));
+            }
+        }
+        let min = pcts.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = pcts.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max - min < 1.5, "spread {min}..{max}");
+    }
+}

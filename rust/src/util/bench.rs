@@ -1,0 +1,169 @@
+//! Micro-benchmark harness for `cargo bench` targets (criterion is not in
+//! the offline registry snapshot — DESIGN.md §Substrates, substitution 6).
+//!
+//! Each bench target is a `harness = false` binary that calls
+//! [`Bench::run`] per measured function and prints a table. Measurements:
+//! warmup, then timed batches until both a minimum iteration count and a
+//! minimum wall time are reached; reports mean/min/p50 per iteration.
+
+use std::time::{Duration, Instant};
+
+use super::stats::percentile;
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub min_time: Duration,
+    pub min_iters: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            min_time: Duration::from_millis(800),
+            min_iters: 10,
+        }
+    }
+}
+
+/// Quick config for heavyweight end-to-end simulation benches.
+pub fn sim_config() -> BenchConfig {
+    BenchConfig {
+        warmup: Duration::from_millis(0),
+        min_time: Duration::from_millis(100),
+        min_iters: 3,
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub min: Duration,
+    pub p50: Duration,
+}
+
+pub struct Bench {
+    config: BenchConfig,
+    results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(config: BenchConfig) -> Self {
+        Self {
+            config,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, using its return value to defeat dead-code elimination.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.config.warmup {
+            std::hint::black_box(f());
+        }
+        // Calibrate a batch size so per-sample timing overhead stays
+        // negligible for nanosecond-scale functions.
+        let probe = Instant::now();
+        std::hint::black_box(f());
+        let once = probe.elapsed().as_nanos().max(1);
+        let batch = (1_000_000 / once).clamp(1, 4096) as u64;
+        // Measure in batches.
+        let mut samples: Vec<f64> = Vec::new();
+        let mut iters = 0u64;
+        let begin = Instant::now();
+        while iters < self.config.min_iters || begin.elapsed() < self.config.min_time {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+            iters += batch;
+            if iters > 100_000_000 {
+                break;
+            }
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let p50 = percentile(&samples, 50.0);
+        self.results.push(Measurement {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_secs_f64(mean),
+            min: Duration::from_secs_f64(min),
+            p50: Duration::from_secs_f64(p50),
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Print the classic `name ... time` report.
+    pub fn report(&self, title: &str) {
+        println!("\n== bench: {title} ==");
+        let width = self
+            .results
+            .iter()
+            .map(|m| m.name.len())
+            .max()
+            .unwrap_or(8)
+            .max(8);
+        println!(
+            "{:width$}  {:>12}  {:>12}  {:>12}  {:>8}",
+            "name", "mean", "min", "p50", "iters"
+        );
+        for m in &self.results {
+            println!(
+                "{:width$}  {:>12}  {:>12}  {:>12}  {:>8}",
+                m.name,
+                fmt_duration(m.mean),
+                fmt_duration(m.min),
+                fmt_duration(m.p50),
+                m.iters
+            );
+        }
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new(BenchConfig {
+            warmup: Duration::from_millis(1),
+            min_time: Duration::from_millis(5),
+            min_iters: 3,
+        });
+        let m = b.run("noop-ish", || (0..100u64).sum::<u64>());
+        assert!(m.iters >= 3);
+        assert!(m.min <= m.mean);
+    }
+
+    #[test]
+    fn fmt_covers_scales() {
+        assert!(fmt_duration(Duration::from_nanos(5)).contains("ns"));
+        assert!(fmt_duration(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_duration(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_duration(Duration::from_secs(5)).contains("s"));
+    }
+}

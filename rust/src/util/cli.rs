@@ -1,0 +1,127 @@
+//! Tiny CLI argument parser (clap is not in the offline registry snapshot).
+//!
+//! Supports `binary <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags may be written `--key=value` or `--key value`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // `--` terminator: rest is positional.
+                    out.positional.extend(iter);
+                    break;
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: cannot parse {s:?}")),
+        }
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse(&["run", "scenario.cfg"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["scenario.cfg"]);
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&["run", "--rate=0.25", "--seed", "42"]);
+        assert_eq!(a.get("rate"), Some("0.25"));
+        assert_eq!(a.get("seed"), Some("42"));
+    }
+
+    #[test]
+    fn bare_flag() {
+        let a = parse(&["run", "--verbose"]);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get("verbose"), None);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["run", "--csv"]);
+        assert!(a.has_flag("csv"));
+    }
+
+    #[test]
+    fn double_dash_terminates() {
+        let a = parse(&["run", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn get_parse_errors_nicely() {
+        let a = parse(&["run", "--seed", "abc"]);
+        assert!(a.get_parse::<u64>("seed").is_err());
+        assert_eq!(a.get_parse_or("missing", 7u64).unwrap(), 7);
+    }
+}

@@ -1,0 +1,111 @@
+//! Minimal `key = value` config-file loader (serde/toml are not in the
+//! offline registry snapshot).
+//!
+//! Grammar: one `key = value` per line; `#` comments; optional `[section]`
+//! headers which prefix keys as `section.key`. Values are strings; typed
+//! accessors parse on demand.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, Default)]
+pub struct ConfigText {
+    values: BTreeMap<String, String>,
+}
+
+impl ConfigText {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, v.trim().to_string());
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("{key}: cannot parse {s:?}")),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        Ok(self.get_parse(key)?.unwrap_or(default))
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let c = ConfigText::parse(
+            "# comment\n\
+             seed = 42\n\
+             [noc]\n\
+             width = 3   # inline comment\n\
+             height = 3\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("seed"), Some("42"));
+        assert_eq!(c.get_or::<u32>("noc.width", 0).unwrap(), 3);
+        assert_eq!(c.get_or::<u32>("noc.height", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn missing_key_uses_default() {
+        let c = ConfigText::parse("").unwrap();
+        assert_eq!(c.get_or::<u64>("nope", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ConfigText::parse("not a kv line").is_err());
+        assert!(ConfigText::parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn bad_parse_reports_key() {
+        let c = ConfigText::parse("x = abc").unwrap();
+        let err = c.get_or::<u32>("x", 0).unwrap_err();
+        assert!(err.contains("x"));
+    }
+}

@@ -1,0 +1,11 @@
+//! In-repo substrates: PRNG, stats, property testing, bench harness, CLI,
+//! config, tables. See DESIGN.md §Substrates — these replace crates that
+//! are not available in the offline registry snapshot.
+
+pub mod bench;
+pub mod cli;
+pub mod config_text;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

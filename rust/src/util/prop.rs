@@ -1,0 +1,264 @@
+//! Minimal property-testing framework (proptest is not in the offline
+//! registry snapshot — DESIGN.md §Substrates, substitution 6).
+//!
+//! Shape: a [`Gen`] draws random inputs from a PRNG; [`check`] runs a
+//! property over many cases and, on failure, greedily shrinks the failing
+//! input via the generator's [`Gen::shrink`] candidates before panicking
+//! with the minimal counterexample.
+//!
+//! ```no_run
+//! use accnoc::util::prop::{check, VecGen, IntGen};
+//! check("sorted twice is idempotent", VecGen::new(IntGen::below(100), 0, 20), |xs| {
+//!     let mut a = xs.clone();
+//!     a.sort();
+//!     let mut b = a.clone();
+//!     b.sort();
+//!     a == b
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+/// Number of cases per property (tuned for CI-speed full runs).
+pub const DEFAULT_CASES: usize = 256;
+
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+
+    fn generate(&self, rng: &mut Pcg32) -> Self::Value;
+
+    /// Candidate strictly-smaller values; empty when fully shrunk.
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Run `prop` over `cases` random draws (seeded deterministically from the
+/// property name so failures reproduce), shrinking on failure.
+pub fn check_with<G: Gen>(
+    name: &str,
+    gen: G,
+    cases: usize,
+    prop: impl Fn(&G::Value) -> bool,
+) {
+    let seed = name
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+        });
+    let mut rng = Pcg32::seeded(seed);
+    for case in 0..cases {
+        let value = gen.generate(&mut rng);
+        if !prop(&value) {
+            let minimal = shrink_loop(&gen, value, &prop);
+            panic!(
+                "property '{name}' failed at case {case}; minimal \
+                 counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+/// [`check_with`] at [`DEFAULT_CASES`].
+pub fn check<G: Gen>(name: &str, gen: G, prop: impl Fn(&G::Value) -> bool) {
+    check_with(name, gen, DEFAULT_CASES, prop);
+}
+
+fn shrink_loop<G: Gen>(
+    gen: &G,
+    mut failing: G::Value,
+    prop: &impl Fn(&G::Value) -> bool,
+) -> G::Value {
+    // Greedy descent, bounded to avoid pathological generators looping.
+    for _ in 0..10_000 {
+        let mut advanced = false;
+        for cand in gen.shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    failing
+}
+
+// ---------------------------------------------------------------------------
+// Stock generators
+// ---------------------------------------------------------------------------
+
+/// Uniform `u64` in `[lo, hi)` with shrinking toward `lo`.
+#[derive(Clone)]
+pub struct IntGen {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl IntGen {
+    pub fn below(hi: u64) -> Self {
+        Self { lo: 0, hi }
+    }
+
+    pub fn range(lo: u64, hi: u64) -> Self {
+        assert!(lo < hi);
+        Self { lo, hi }
+    }
+}
+
+impl Gen for IntGen {
+    type Value = u64;
+
+    fn generate(&self, rng: &mut Pcg32) -> u64 {
+        self.lo + rng.next_u64() % (self.hi - self.lo)
+    }
+
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (v - self.lo) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vectors of an inner generator with length in `[min_len, max_len]`;
+/// shrinks by halving length, dropping elements, then shrinking elements.
+#[derive(Clone)]
+pub struct VecGen<G> {
+    pub inner: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<G> VecGen<G> {
+    pub fn new(inner: G, min_len: usize, max_len: usize) -> Self {
+        assert!(min_len <= max_len);
+        Self {
+            inner,
+            min_len,
+            max_len,
+        }
+    }
+}
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Value = Vec<G::Value>;
+
+    fn generate(&self, rng: &mut Pcg32) -> Self::Value {
+        let len = self.min_len + rng.range(0, self.max_len - self.min_len + 1);
+        (0..len).map(|_| self.inner.generate(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            let half = (v.len() / 2).max(self.min_len);
+            out.push(v[..half].to_vec());
+            let mut drop_last = v.clone();
+            drop_last.pop();
+            out.push(drop_last);
+            let mut drop_first = v.clone();
+            drop_first.remove(0);
+            out.push(drop_first);
+        }
+        // Shrink one element at a time (first shrinkable).
+        for (i, elem) in v.iter().enumerate() {
+            for cand in self.inner.shrink(elem) {
+                let mut next = v.clone();
+                next[i] = cand;
+                out.push(next);
+                break;
+            }
+            if !out.is_empty() && i > 8 {
+                break; // bound candidate fan-out
+            }
+        }
+        out
+    }
+}
+
+/// Pair generator.
+#[derive(Clone)]
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Pcg32) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Map a generator through a function (no shrinking across the map).
+pub struct MapGen<G, F> {
+    pub inner: G,
+    pub f: F,
+}
+
+impl<G: Gen, T: Clone + std::fmt::Debug, F: Fn(G::Value) -> T> Gen for MapGen<G, F> {
+    type Value = T;
+
+    fn generate(&self, rng: &mut Pcg32) -> T {
+        (self.f)(self.inner.generate(rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum is commutative", PairGen(IntGen::below(1000), IntGen::below(1000)), |(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        check("all values below 50", IntGen::below(1000), |v| *v < 50);
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // Catch the panic and confirm the shrunk value is near-minimal.
+        let result = std::panic::catch_unwind(|| {
+            check("no vec longer than 3", VecGen::new(IntGen::below(10), 0, 32), |v| {
+                v.len() <= 3
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Minimal counterexample should be a 4-element vector.
+        let count = msg.matches(',').count();
+        assert!(count <= 4, "not shrunk enough: {msg}");
+    }
+
+    #[test]
+    fn intgen_respects_bounds() {
+        let g = IntGen::range(10, 20);
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..1000 {
+            let v = g.generate(&mut rng);
+            assert!((10..20).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Realistic JPEG-block workload: synthetic images pushed through the
+//! forward DCT + quantization so the simulator decodes *real* coefficient
+//! blocks (used by the end-to-end example and the Fig. 10 experiment).
+
+use crate::runtime::native::{jpeg_encode, DEFAULT_QTABLE};
+use crate::util::rng::Pcg32;
+
+/// A synthetic 8x8-block image with smooth gradients + noise (so the
+/// DCT coefficients have realistic energy compaction).
+pub struct BlockImage {
+    pub blocks: Vec<[f32; 64]>,
+}
+
+impl BlockImage {
+    pub fn synthetic(n_blocks: usize, seed: u64) -> Self {
+        let mut rng = Pcg32::seeded(seed);
+        let blocks = (0..n_blocks)
+            .map(|b| {
+                let base = (b % 17) as f32 * 13.0;
+                let mut px = [0f32; 64];
+                for (i, p) in px.iter_mut().enumerate() {
+                    let (x, y) = ((i % 8) as f32, (i / 8) as f32);
+                    let v = base + 8.0 * x + 5.0 * y
+                        + rng.f64() as f32 * 24.0;
+                    *p = v.clamp(0.0, 255.0);
+                }
+                px
+            })
+            .collect();
+        Self { blocks }
+    }
+
+    /// Encode every block to scan-order quantized coefficients.
+    pub fn encode(&self) -> Vec<[i32; 64]> {
+        self.blocks
+            .iter()
+            .map(|b| jpeg_encode(b, &DEFAULT_QTABLE))
+            .collect()
+    }
+
+    /// Coefficient blocks as u32 word vectors (task payloads).
+    pub fn coefficient_words(&self) -> Vec<Vec<u32>> {
+        self.encode()
+            .iter()
+            .map(|scan| scan.iter().map(|c| *c as u32).collect())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::jpeg_chain;
+
+    #[test]
+    fn encode_decode_roundtrip_quality() {
+        let img = BlockImage::synthetic(16, 7);
+        let coeffs = img.encode();
+        let mut total_err = 0.0f64;
+        for (px, scan) in img.blocks.iter().zip(&coeffs) {
+            let decoded = jpeg_chain(scan, &DEFAULT_QTABLE);
+            for i in 0..64 {
+                total_err += (px[i] as f64 - decoded[i] as f64).abs();
+            }
+        }
+        let mean = total_err / (16.0 * 64.0);
+        assert!(mean < 20.0, "mean abs error {mean}");
+    }
+
+    #[test]
+    fn coefficients_are_sparse() {
+        // Energy compaction: most high-frequency coefficients quantize
+        // to zero for smooth blocks.
+        let img = BlockImage::synthetic(8, 9);
+        let coeffs = img.encode();
+        let zeros: usize = coeffs
+            .iter()
+            .map(|c| c.iter().filter(|x| **x == 0).count())
+            .sum();
+        assert!(zeros > 8 * 32, "zeros={zeros}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload generators: random rate-driven requests (§6.4) and real
+//! JPEG coefficient blocks (§6.6 / end-to-end example).
+
+pub mod jpeg;
+pub mod openloop;
+pub mod random;
+
+pub use jpeg::BlockImage;
+pub use random::{measure_rate_point, RandomWorkload, RandomWorkloadConfig, RatePoint};

@@ -1,0 +1,256 @@
+//! Open-loop traffic sources for the §6.4 throughput experiments: each
+//! processor node issues requests at a configured rate *without blocking
+//! on results* (injection rate is the experiment's independent variable;
+//! the paper sweeps "request frequencies" with multiple outstanding
+//! invocations in flight).
+//!
+//! The source speaks the full protocol (request -> grant -> payload) but
+//! keeps issuing while earlier invocations are still executing.
+
+use std::collections::VecDeque;
+
+use crate::clock::{Ps, PS_PER_US};
+use crate::flit::{
+    Direction, Flit, FlitKind, HeadFields, PacketBuilder, PacketType,
+};
+use crate::fpga::channel::task::CommandKind;
+use crate::fpga::hwa::HwaSpec;
+use crate::util::rng::Pcg32;
+
+/// Bound on queued outbound flits (prevents unbounded memory at deep
+/// over-saturation; drops are counted, mirroring a finite source FIFO).
+const OUTBOX_CAP: usize = 4096;
+
+/// Outstanding invocations a source keeps in flight per HWA. Matches the
+/// 2-deep task-buffer pipelining of the fabric: issuing more would only
+/// pile requests into RBs without adding throughput. Arrivals beyond the
+/// cap are deferred, making the source semi-open (open up to the cap).
+const MAX_OUTSTANDING_PER_HWA: u64 = 2;
+
+pub struct OpenLoopSource {
+    pub id: u8,
+    pub node: u8,
+    fpga_node: u8,
+    specs: Vec<HwaSpec>,
+    rate_per_us: f64,
+    rng: Pcg32,
+    next_arrival: Ps,
+    outbox: VecDeque<Flit>,
+    builder: PacketBuilder,
+    pub requests_issued: u64,
+    pub grants_seen: u64,
+    pub results_done: u64,
+    pub drops: u64,
+    /// (request issue time, completion time) for latency stats.
+    issue_times: VecDeque<Ps>,
+    pub latencies_ps: Vec<u64>,
+    /// Outstanding invocations per HWA (issued - completed).
+    outstanding: Vec<u64>,
+    /// Head fields of the result packet currently being received.
+    rx_head: Option<u8>,
+    /// Arrivals deferred because the target HWA was at its cap.
+    pub deferred: u64,
+}
+
+impl OpenLoopSource {
+    pub fn new(
+        id: u8,
+        node: u8,
+        fpga_node: u8,
+        specs: Vec<HwaSpec>,
+        rate_per_us: f64,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Pcg32::new(seed, id as u64 + 1);
+        let mean_gap = PS_PER_US as f64 / rate_per_us.max(1e-9);
+        let first = rng.exp(mean_gap) as Ps;
+        Self {
+            id,
+            node,
+            fpga_node,
+            specs,
+            rate_per_us,
+            rng,
+            next_arrival: first,
+            outbox: VecDeque::new(),
+            builder: PacketBuilder::new(((id as u32) << 20) | 0x10_0000),
+            requests_issued: 0,
+            grants_seen: 0,
+            results_done: 0,
+            drops: 0,
+            issue_times: VecDeque::new(),
+            latencies_ps: Vec::new(),
+            outstanding: Vec::new(),
+            rx_head: None,
+            deferred: 0,
+        }
+    }
+
+    /// One NoC/CMP cycle: emit at most one flit.
+    pub fn step(&mut self, now: Ps, can_inject: bool) -> Option<Flit> {
+        if self.outstanding.len() != self.specs.len() {
+            self.outstanding = vec![0; self.specs.len()];
+        }
+        while now >= self.next_arrival {
+            let mean_gap = PS_PER_US as f64 / self.rate_per_us.max(1e-9);
+            self.next_arrival += self.rng.exp(mean_gap).max(1.0) as Ps;
+            let hwa = self.rng.range(0, self.specs.len());
+            if self.outstanding[hwa] >= MAX_OUTSTANDING_PER_HWA {
+                self.deferred += 1;
+                continue;
+            }
+            self.outstanding[hwa] += 1;
+            let req = self.builder.command(HeadFields {
+                routing: self.fpga_node,
+                hwa_id: hwa as u8,
+                src_id: self.id,
+                direction: Direction::ProcToHwa,
+                data_size: ((self.specs[hwa].in_words * 4).min(1023)) as u16,
+                payload: CommandKind::Request.encode(),
+                ..HeadFields::default()
+            });
+            if self.outbox.len() + req.flits.len() <= OUTBOX_CAP {
+                self.outbox.extend(req.flits);
+                self.requests_issued += 1;
+                self.issue_times.push_back(now);
+            } else {
+                self.drops += 1;
+            }
+        }
+        if can_inject {
+            self.outbox.pop_front()
+        } else {
+            None
+        }
+    }
+
+    /// A flit ejected at this node.
+    pub fn deliver(&mut self, flit: Flit, now: Ps) {
+        if flit.is_head() {
+            let h = flit.head_fields();
+            if h.pkt_type == PacketType::Payload {
+                self.rx_head = Some(h.hwa_id);
+            }
+            if h.pkt_type == PacketType::Command {
+                match CommandKind::decode(h.payload) {
+                    CommandKind::Grant => {
+                        self.grants_seen += 1;
+                        let spec = &self.specs[h.hwa_id as usize];
+                        let words: Vec<u32> = (0..spec.in_words)
+                            .map(|_| self.rng.next_u32())
+                            .collect();
+                        let p = self.builder.payload(
+                            HeadFields {
+                                routing: self.fpga_node,
+                                hwa_id: h.hwa_id,
+                                src_id: self.id,
+                                tb_id: h.tb_id,
+                                task_head: true,
+                                task_tail: true,
+                                direction: Direction::ProcToHwa,
+                                ..HeadFields::default()
+                            },
+                            &words,
+                        );
+                        if self.outbox.len() + p.flits.len() <= OUTBOX_CAP {
+                            self.outbox.extend(p.flits);
+                        } else {
+                            self.drops += 1;
+                        }
+                    }
+                    CommandKind::Notify => {
+                        self.complete(now, h.hwa_id);
+                    }
+                    CommandKind::Request => {}
+                }
+            }
+            return;
+        }
+        if flit.kind() == FlitKind::Tail {
+            let hwa = self.rx_head.take().unwrap_or(0);
+            self.complete(now, hwa);
+        }
+    }
+
+    fn complete(&mut self, now: Ps, hwa: u8) {
+        self.results_done += 1;
+        if let Some(o) = self.outstanding.get_mut(hwa as usize) {
+            *o = o.saturating_sub(1);
+        }
+        if let Some(t0) = self.issue_times.pop_front() {
+            self.latencies_ps.push(now.saturating_sub(t0));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::hwa::spec_by_name;
+
+    #[test]
+    fn issues_requests_up_to_outstanding_cap() {
+        let specs = vec![spec_by_name("izigzag").unwrap()];
+        let mut src = OpenLoopSource::new(0, 0, 8, specs, 4.0, 7);
+        let mut flits = 0;
+        for c in 0..10_000u64 {
+            if src.step(c * 1000, true).is_some() {
+                flits += 1;
+            }
+        }
+        // One HWA, never completing: capped at MAX_OUTSTANDING_PER_HWA,
+        // further arrivals deferred.
+        assert_eq!(src.requests_issued, MAX_OUTSTANDING_PER_HWA);
+        assert_eq!(flits as u64, src.requests_issued);
+        assert!(src.deferred > 10, "deferred {}", src.deferred);
+    }
+
+    #[test]
+    fn completion_reopens_the_cap() {
+        let specs = vec![spec_by_name("izigzag").unwrap()];
+        let mut src = OpenLoopSource::new(0, 0, 8, specs, 4.0, 7);
+        let mut issued = 0;
+        for c in 0..10_000u64 {
+            let now = c * 1000;
+            if src.step(now, true).is_some() {
+                issued += 1;
+            }
+            // Simulate completions: notify packets.
+            if c % 1000 == 999 {
+                let mut b = PacketBuilder::new(77);
+                let n = b.command(HeadFields {
+                    hwa_id: 0,
+                    payload: CommandKind::Notify.encode(),
+                    ..HeadFields::default()
+                });
+                src.deliver(n.flits[0], now);
+            }
+        }
+        assert!(issued > MAX_OUTSTANDING_PER_HWA, "issued {issued}");
+        assert_eq!(src.results_done, 10);
+    }
+
+    #[test]
+    fn grant_triggers_payload_without_waiting_result() {
+        let specs = vec![spec_by_name("dfadd").unwrap()];
+        let mut src = OpenLoopSource::new(1, 0, 8, specs, 1.0, 9);
+        let mut b = PacketBuilder::new(50);
+        let grant = b.command(HeadFields {
+            hwa_id: 0,
+            src_id: 1,
+            tb_id: 1,
+            payload: CommandKind::Grant.encode(),
+            ..HeadFields::default()
+        });
+        src.deliver(grant.flits[0], 100);
+        assert_eq!(src.grants_seen, 1);
+        let mut got = Vec::new();
+        for c in 1..100u64 {
+            if let Some(f) = src.step(c, true) {
+                got.push(f);
+            }
+        }
+        assert!(got.iter().any(|f| f.is_head()
+            && f.head_fields().pkt_type == PacketType::Payload));
+    }
+}

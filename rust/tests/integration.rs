@@ -1,0 +1,200 @@
+//! Full-system integration: every subsystem composed, including the
+//! memory-access scenario (§5, Fig. 5b), chaining across the NoC, and
+//! the PJRT compute hook inside the simulated fabric.
+
+use accnoc::clock::PS_PER_US;
+use accnoc::cmp::core::{InvokeSpec, Processor, Segment};
+use accnoc::flit::Direction;
+use accnoc::fpga::hwa::spec_by_name;
+use accnoc::runtime::native::{self, DEFAULT_QTABLE};
+use accnoc::runtime::{NativeCompute, PjrtCompute, Runtime};
+use accnoc::sim::system::{FabricKind, NetKind, System, SystemConfig};
+use accnoc::workload::jpeg::BlockImage;
+
+fn jpeg_system() -> System {
+    let mut cfg = SystemConfig::paper(vec![
+        spec_by_name("izigzag").unwrap(),
+        spec_by_name("iquantize").unwrap(),
+        spec_by_name("idct").unwrap(),
+        spec_by_name("shiftbound").unwrap(),
+    ]);
+    cfg.chain_groups = vec![vec![0, 1, 2, 3]];
+    System::new(cfg)
+}
+
+#[test]
+fn chained_jpeg_decode_with_native_compute_is_bit_correct() {
+    let mut sys = jpeg_system();
+    sys.fabric.set_compute(Box::new(NativeCompute::default()));
+    let img = BlockImage::synthetic(4, 42);
+    let coeffs = img.encode();
+    // One chained invocation per block from processor 0.
+    let prog: Vec<Segment> = coeffs
+        .iter()
+        .map(|scan| {
+            Segment::Invoke(
+                InvokeSpec::direct(
+                    0,
+                    scan.iter().map(|c| *c as u32).collect(),
+                    64,
+                )
+                .chained(3, [1, 2, 3]),
+            )
+        })
+        .collect();
+    sys.load_program(0, prog);
+    assert!(sys.run_until_done(200_000 * PS_PER_US));
+    assert_eq!(sys.procs[0].records.len(), 4);
+    // The final invocation's result words must equal the native chain.
+    let want = native::jpeg_chain(coeffs.last().unwrap(), &DEFAULT_QTABLE);
+    let got: Vec<i32> = sys.procs[0]
+        .last_result
+        .iter()
+        .map(|w| *w as i32)
+        .collect();
+    assert_eq!(got, want.to_vec(), "decoded pixels via simulated fabric");
+}
+
+#[test]
+fn chained_jpeg_decode_with_pjrt_compute() {
+    let Ok(rt) = Runtime::load_default() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let mut sys = jpeg_system();
+    sys.fabric.set_compute(Box::new(PjrtCompute::new(rt)));
+    let img = BlockImage::synthetic(2, 77);
+    let coeffs = img.encode();
+    let prog: Vec<Segment> = coeffs
+        .iter()
+        .map(|scan| {
+            Segment::Invoke(
+                InvokeSpec::direct(
+                    0,
+                    scan.iter().map(|c| *c as u32).collect(),
+                    64,
+                )
+                .chained(3, [1, 2, 3]),
+            )
+        })
+        .collect();
+    sys.load_program(0, prog);
+    assert!(sys.run_until_done(200_000 * PS_PER_US));
+    let want = native::jpeg_chain(coeffs.last().unwrap(), &DEFAULT_QTABLE);
+    let got: Vec<i32> = sys.procs[0]
+        .last_result
+        .iter()
+        .map(|w| *w as i32)
+        .collect();
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert!(
+            (g - w).abs() <= 1,
+            "pixel {i}: pjrt-through-fabric {g} vs native {w}"
+        );
+    }
+    assert_eq!(sys.fabric.tasks_executed(), 8, "4 stages x 2 blocks");
+}
+
+#[test]
+fn memory_access_scenario_roundtrips_through_mmu() {
+    // M_HWA_invoke (Fig. 5b): grant goes to the MMU, which DMAs the input
+    // from DRAM; the result is written back to memory and the processor
+    // is notified.
+    let mut cfg = SystemConfig::paper(vec![spec_by_name("izigzag").unwrap()]);
+    cfg.chain_groups = vec![];
+    let mut sys = System::new(cfg);
+    sys.fabric.set_compute(Box::new(NativeCompute::default()));
+    // Stage input data in DRAM.
+    let scan: Vec<u32> = (0..64u32).map(|i| (i * 3) % 101).collect();
+    let addr = 0x4000;
+    sys.mmu.dram.write_words(addr, &scan);
+    let spec = InvokeSpec::memory(0, addr, 256);
+    sys.load_program(0, vec![Segment::Invoke(spec)]);
+    assert!(sys.run_until_done(100_000 * PS_PER_US), "memory scenario done");
+    assert_eq!(sys.mmu.stats.grants_decoded, 1);
+    assert_eq!(sys.mmu.stats.dma_reads, 1);
+    assert_eq!(sys.mmu.stats.results_written, 1);
+    // Result in DRAM equals the native izigzag of the staged input.
+    let mut block = [0i32; 64];
+    for (i, w) in scan.iter().enumerate() {
+        block[i] = *w as i32;
+    }
+    let want = native::izigzag(&block);
+    let got = sys.mmu.dram.read_words(addr, 64);
+    let got: Vec<i32> = got.iter().map(|w| *w as i32).collect();
+    assert_eq!(got, want.to_vec());
+}
+
+#[test]
+fn priority_bits_reorder_result_packets() {
+    // Two processors invoke the same HWA; the higher-priority task's
+    // result leaves the PS first when both are queued (§4.1 A.2).
+    let mut cfg = SystemConfig::paper(vec![spec_by_name("idct").unwrap()]);
+    cfg.n_tbs = 2;
+    let mut sys = System::new(cfg);
+    let words: Vec<u32> = (0..64).collect();
+    sys.load_program(
+        0,
+        vec![Segment::Invoke(
+            InvokeSpec::direct(0, words.clone(), 64).with_priority(0),
+        )],
+    );
+    sys.load_program(
+        1,
+        vec![Segment::Invoke(
+            InvokeSpec::direct(0, words, 64).with_priority(3),
+        )],
+    );
+    assert!(sys.run_until_done(200_000 * PS_PER_US));
+    // Both complete; sanity that records exist. (Exact PS-order is
+    // covered by the unit test; here we assert the system-level effect:
+    // the high-priority invocation never finishes materially later.)
+    let lo = sys.procs[0].records[0].t_result_last;
+    let hi = sys.procs[1].records[0].t_result_last;
+    assert!(hi <= lo + 2_000_000, "hi {hi} vs lo {lo}");
+}
+
+#[test]
+fn all_twelve_hwas_execute_in_one_system() {
+    let mut cfg = SystemConfig::paper(accnoc::fpga::hwa::table3());
+    cfg.mesh.width = 4; // more processors for 12 channels
+    cfg.mesh.height = 4;
+    let mut sys = System::new(cfg);
+    let n = sys.n_procs().min(8);
+    for i in 0..n {
+        let mut prog = Vec::new();
+        for hwa in (i..12).step_by(n.max(1)) {
+            let spec = sys.config.specs[hwa].clone();
+            prog.push(Segment::Invoke(InvokeSpec::direct(
+                hwa as u8,
+                (0..spec.in_words as u32).collect(),
+                spec.out_words,
+            )));
+        }
+        sys.load_program(i, prog);
+    }
+    assert!(sys.run_until_done(500_000 * PS_PER_US));
+    assert_eq!(sys.fabric.tasks_executed(), 12);
+}
+
+#[test]
+fn processor_records_monotone_timestamps() {
+    let mut cfg = SystemConfig::paper(vec![spec_by_name("gsm").unwrap()]);
+    cfg.chain_groups = vec![];
+    let mut sys = System::new(cfg);
+    let prog: Vec<Segment> = (0..3)
+        .map(|_| {
+            Segment::Invoke(InvokeSpec::direct(0, (0..8).collect(), 8))
+        })
+        .collect();
+    sys.load_program(2, prog);
+    assert!(sys.run_until_done(200_000 * PS_PER_US));
+    let p: &Processor = &sys.procs[2];
+    assert_eq!(p.records.len(), 3);
+    for r in &p.records {
+        assert!(r.t_request < r.t_grant);
+        assert!(r.t_grant < r.t_payload_done);
+        assert!(r.t_payload_done < r.t_result_first);
+        assert!(r.t_result_first <= r.t_result_last);
+    }
+}

@@ -1,0 +1,184 @@
+//! PJRT integration: execute the AOT artifacts from Rust and check the
+//! numerics against the native golden implementations (which pytest has
+//! independently checked against the jnp oracle) — closing the
+//! L1 -> L2 -> artifact -> PJRT -> L3 loop.
+//!
+//! Requires `make artifacts`; tests are skipped (pass vacuously, loudly)
+//! when artifacts/ is absent so `cargo test` works on a fresh checkout.
+
+use accnoc::fpga::hwa::{spec_by_name, HwaCompute};
+use accnoc::runtime::native::{self, DEFAULT_QTABLE};
+use accnoc::runtime::{PjrtCompute, Runtime, TensorValue};
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP pjrt tests (artifacts not built): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_covers_expected_artifacts() {
+    let Some(rt) = runtime() else { return };
+    for name in [
+        "izigzag",
+        "iquantize",
+        "idct",
+        "shiftbound",
+        "jpeg_chain",
+        "dfadd",
+        "dfdiv",
+        "dfmul",
+        "gsm",
+    ] {
+        assert!(rt.signature(name).is_some(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn izigzag_artifact_matches_native() {
+    let Some(mut rt) = runtime() else { return };
+    let sig = rt.signature("izigzag").unwrap().clone();
+    let n = sig.inputs[0].elements();
+    let input: Vec<i32> = (0..n as i32).map(|i| (i * 7 + 3) % 997).collect();
+    let out = rt
+        .execute("izigzag", &[TensorValue::I32(input.clone())])
+        .unwrap();
+    let out = out[0].as_i32();
+    for block in 0..(n / 64) {
+        let mut scan = [0i32; 64];
+        scan.copy_from_slice(&input[block * 64..block * 64 + 64]);
+        let want = native::izigzag(&scan);
+        assert_eq!(&out[block * 64..block * 64 + 64], &want[..], "block {block}");
+    }
+}
+
+#[test]
+fn idct_artifact_matches_native_within_tolerance() {
+    let Some(mut rt) = runtime() else { return };
+    let sig = rt.signature("idct").unwrap().clone();
+    let n = sig.inputs[0].elements();
+    let input: Vec<f32> = (0..n)
+        .map(|i| ((i * 37 + 11) % 255) as f32 - 128.0)
+        .collect();
+    let out = rt.execute("idct", &[TensorValue::F32(input.clone())]).unwrap();
+    let out = out[0].as_f32();
+    for block in 0..(n / 64) {
+        let mut b = [0f32; 64];
+        b.copy_from_slice(&input[block * 64..block * 64 + 64]);
+        let want = native::idct8x8(&b);
+        for i in 0..64 {
+            let got = out[block * 64 + i];
+            assert!(
+                (got - want[i]).abs() < 1e-2,
+                "block {block} [{i}]: {got} vs {}",
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn jpeg_chain_artifact_decodes_like_native() {
+    let Some(mut rt) = runtime() else { return };
+    let sig = rt.signature("jpeg_chain").unwrap().clone();
+    let blocks = sig.inputs[0].dims[0];
+    let mut scan_all: Vec<i32> = Vec::new();
+    for b in 0..blocks {
+        let mut px = [0f32; 64];
+        for (i, p) in px.iter_mut().enumerate() {
+            *p = (((b * 13 + i * 3) % 256) as f32).clamp(0.0, 255.0);
+        }
+        let scan = native::jpeg_encode(&px, &DEFAULT_QTABLE);
+        scan_all.extend_from_slice(&scan);
+    }
+    let out = rt
+        .execute(
+            "jpeg_chain",
+            &[
+                TensorValue::I32(scan_all.clone()),
+                TensorValue::I32(DEFAULT_QTABLE.to_vec()),
+            ],
+        )
+        .unwrap();
+    let out = out[0].as_i32();
+    for b in 0..blocks {
+        let mut scan = [0i32; 64];
+        scan.copy_from_slice(&scan_all[b * 64..b * 64 + 64]);
+        let want = native::jpeg_chain(&scan, &DEFAULT_QTABLE);
+        for i in 0..64 {
+            let got = out[b * 64 + i];
+            assert!(
+                (got - want[i]).abs() <= 1,
+                "block {b} [{i}]: pjrt {got} vs native {}",
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn dfadd_artifact_adds() {
+    let Some(mut rt) = runtime() else { return };
+    let sig = rt.signature("dfadd").unwrap().clone();
+    let n = sig.inputs[0].elements();
+    let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+    let b: Vec<f32> = (0..n).map(|i| 100.0 - i as f32).collect();
+    let out = rt
+        .execute(
+            "dfadd",
+            &[TensorValue::F32(a.clone()), TensorValue::F32(b.clone())],
+        )
+        .unwrap();
+    let out = out[0].as_f32();
+    for i in 0..n {
+        assert_eq!(out[i], a[i] + b[i]);
+    }
+}
+
+#[test]
+fn pjrt_compute_hook_via_hwa_spec() {
+    let Some(rt) = runtime() else { return };
+    let mut compute = PjrtCompute::new(rt);
+    let spec = spec_by_name("izigzag").unwrap();
+    let input: Vec<u32> = (0..64).collect();
+    let out = compute.compute(&spec, &input);
+    assert_eq!(out.len(), 64);
+    let mut scan = [0i32; 64];
+    for i in 0..64 {
+        scan[i] = input[i] as i32;
+    }
+    let want = native::izigzag(&scan);
+    let got: Vec<i32> = out.iter().map(|w| *w as i32).collect();
+    assert_eq!(got, want.to_vec());
+    assert_eq!(compute.invocations, 1, "went through PJRT, not fallback");
+}
+
+#[test]
+fn gsm_artifact_autocorrelates() {
+    let Some(mut rt) = runtime() else { return };
+    let sig = rt.signature("gsm").unwrap().clone();
+    let frames = sig.inputs[0].dims[0];
+    let len = sig.inputs[0].dims[1];
+    let input: Vec<f32> = (0..frames * len)
+        .map(|i| ((i % 13) as f32) - 6.0)
+        .collect();
+    let out = rt.execute("gsm", &[TensorValue::F32(input.clone())]).unwrap();
+    let out = out[0].as_f32();
+    let lags = sig.outputs[0].dims[1];
+    for f in 0..frames {
+        let frame = &input[f * len..(f + 1) * len];
+        let want = native::gsm_autocorr(frame, lags);
+        for k in 0..lags {
+            let got = out[f * lags + k];
+            assert!(
+                (got - want[k]).abs() <= 1e-2 * want[0].abs().max(1.0),
+                "frame {f} lag {k}: {got} vs {}",
+                want[k]
+            );
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! Property-based tests (in-repo `util::prop` framework): protocol and
+//! network invariants under randomized inputs.
+
+use accnoc::flit::{
+    fields::{encode_body, HeadFields, RawFlit},
+    Direction, FlitKind, PacketBuilder, PacketType,
+};
+use accnoc::noc::mesh::{Mesh, MeshConfig};
+use accnoc::util::prop::{check, check_with, Gen, IntGen, PairGen, VecGen};
+use accnoc::util::rng::Pcg32;
+
+// ---------------------------------------------------------------------------
+// Flit codec properties
+// ---------------------------------------------------------------------------
+
+/// Generator for arbitrary valid head fields.
+struct HeadGen;
+
+impl Gen for HeadGen {
+    type Value = HeadFields;
+
+    fn generate(&self, rng: &mut Pcg32) -> HeadFields {
+        HeadFields {
+            routing: rng.below(128) as u8,
+            kind: match rng.below(4) {
+                0 => FlitKind::Head,
+                1 => FlitKind::Body,
+                2 => FlitKind::Tail,
+                _ => FlitKind::Single,
+            },
+            src_id: rng.below(8) as u8,
+            hwa_id: rng.below(32) as u8,
+            pkt_type: if rng.chance(0.5) {
+                PacketType::Command
+            } else {
+                PacketType::Payload
+            },
+            task_head: rng.chance(0.5),
+            task_tail: rng.chance(0.5),
+            tb_id: rng.below(4) as u8,
+            chain_depth: rng.below(4) as u8,
+            chain_index: [
+                rng.below(4) as u8,
+                rng.below(4) as u8,
+                rng.below(4) as u8,
+            ],
+            priority: rng.below(4) as u8,
+            direction: Direction::decode(rng.below(4) as u64),
+            start_addr: rng.next_u32(),
+            data_size: rng.below(1024) as u16,
+            payload: rng.next_u64() & ((1 << 61) - 1),
+        }
+    }
+}
+
+#[test]
+fn prop_head_flit_roundtrips_exactly() {
+    check("head encode/decode roundtrip", HeadGen, |h| {
+        HeadFields::decode(&h.encode()) == *h
+    });
+}
+
+#[test]
+fn prop_encoded_flits_have_clear_padding() {
+    check("padding bits beyond 137 stay zero", HeadGen, |h| {
+        h.encode().padding_clear()
+    });
+}
+
+#[test]
+fn prop_raw_get_set_isolated() {
+    // Setting any field leaves all disjoint bit ranges untouched.
+    let gen = PairGen(IntGen::below(126), IntGen::below(u64::MAX));
+    check("raw set/get isolation", gen, |(lo, val)| {
+        let lo = *lo as u32;
+        let len = (137 - lo).min(11);
+        let mut raw = RawFlit::default();
+        raw.set(lo, len, *val);
+        let masked = if len == 64 { *val } else { *val & ((1 << len) - 1) };
+        raw.get(lo, len) == masked
+            && (lo == 0 || raw.get(0, lo.min(64)) == 0)
+    });
+}
+
+#[test]
+fn prop_payload_packets_roundtrip_words() {
+    let gen = VecGen::new(IntGen::below(u32::MAX as u64 + 1), 0, 200);
+    check_with("payload packet data roundtrip", gen, 128, |words| {
+        let words: Vec<u32> = words.iter().map(|w| *w as u32).collect();
+        let mut b = PacketBuilder::new(9);
+        let p = b.payload(
+            HeadFields {
+                routing: 3,
+                ..HeadFields::default()
+            },
+            &words,
+        );
+        p.is_well_formed() && p.data_words(words.len()) == words
+    });
+}
+
+// ---------------------------------------------------------------------------
+// NoC invariants
+// ---------------------------------------------------------------------------
+
+/// Random traffic scenario: (seed, injection attempts).
+struct TrafficGen;
+
+impl Gen for TrafficGen {
+    type Value = (u64, usize);
+
+    fn generate(&self, rng: &mut Pcg32) -> (u64, usize) {
+        (rng.next_u64(), 50 + rng.range(0, 400))
+    }
+
+    fn shrink(&self, v: &(u64, usize)) -> Vec<(u64, usize)> {
+        if v.1 > 50 {
+            vec![(v.0, 50), (v.0, v.1 / 2)]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[test]
+fn prop_noc_conserves_flits_under_random_traffic() {
+    // NIs may stall on backpressure but never abandon a started packet
+    // (wormhole contiguity): pending flits are retried in later cycles.
+    check_with("flit conservation", TrafficGen, 24, |(seed, n)| {
+        let mut mesh = Mesh::new(MeshConfig::default());
+        let mut rng = Pcg32::seeded(*seed);
+        let nodes = mesh.node_count();
+        let mut builder = PacketBuilder::new(1);
+        let mut pending: Vec<std::collections::VecDeque<accnoc::flit::Flit>> =
+            vec![std::collections::VecDeque::new(); nodes];
+        let mut sent = 0u64;
+        let mut got = 0u64;
+        for _ in 0..*n {
+            let src = rng.range(0, nodes);
+            let dst = rng.range(0, nodes);
+            if src != dst && pending[src].len() < 64 {
+                let words: Vec<u32> =
+                    (0..rng.range(0, 9) as u32).collect();
+                let p = builder.payload(
+                    HeadFields {
+                        routing: dst as u8,
+                        ..HeadFields::default()
+                    },
+                    &words,
+                );
+                pending[src].extend(p.flits);
+            }
+            for (node, q) in pending.iter_mut().enumerate() {
+                while let Some(f) = q.front() {
+                    if mesh.try_inject(node, *f) {
+                        q.pop_front();
+                        sent += 1;
+                    } else {
+                        break;
+                    }
+                }
+            }
+            mesh.step();
+            for node in 0..nodes {
+                while mesh.eject_pop(node).is_some() {
+                    got += 1;
+                }
+            }
+        }
+        for _ in 0..20_000 {
+            for (node, q) in pending.iter_mut().enumerate() {
+                while let Some(f) = q.front() {
+                    if mesh.try_inject(node, *f) {
+                        q.pop_front();
+                        sent += 1;
+                    } else {
+                        break;
+                    }
+                }
+            }
+            mesh.step();
+            for node in 0..nodes {
+                while mesh.eject_pop(node).is_some() {
+                    got += 1;
+                }
+            }
+            if mesh.idle() && pending.iter().all(|q| q.is_empty()) {
+                break;
+            }
+        }
+        got == sent && mesh.idle()
+    });
+}
+
+#[test]
+fn prop_per_flow_flits_arrive_in_order() {
+    check_with("per-flow in-order delivery", TrafficGen, 16, |(seed, n)| {
+        let mut mesh = Mesh::new(MeshConfig::default());
+        let mut rng = Pcg32::seeded(*seed);
+        // One flow per (src, dst) pair; whole packets injected atomically.
+        let mut builders: std::collections::HashMap<(usize, usize), PacketBuilder> =
+            std::collections::HashMap::new();
+        let mut last_seq: std::collections::HashMap<u32, u32> =
+            std::collections::HashMap::new();
+        let mut ok = true;
+        let mut drain = |mesh: &mut Mesh,
+                         last_seq: &mut std::collections::HashMap<u32, u32>,
+                         ok: &mut bool| {
+            for node in 0..9 {
+                while let Some(f) = mesh.eject_pop(node) {
+                    let e = last_seq.entry(f.meta.flow).or_insert(0);
+                    if f.meta.seq < *e {
+                        *ok = false;
+                    }
+                    *e = f.meta.seq + 1;
+                }
+            }
+        };
+        for _ in 0..*n {
+            let src = rng.range(0, 9);
+            let dst = rng.range(0, 9);
+            if src != dst {
+                let flow = (src * 16 + dst) as u32;
+                let b = builders
+                    .entry((src, dst))
+                    .or_insert_with(|| PacketBuilder::new(flow));
+                let p = b.command(HeadFields {
+                    routing: dst as u8,
+                    ..HeadFields::default()
+                });
+                // Atomic inject or skip (order check needs no partials).
+                if mesh.can_inject(src) {
+                    mesh.try_inject(src, p.flits[0]);
+                }
+            }
+            mesh.step();
+            drain(&mut mesh, &mut last_seq, &mut ok);
+        }
+        for _ in 0..10_000 {
+            mesh.step();
+            drain(&mut mesh, &mut last_seq, &mut ok);
+            if mesh.idle() {
+                break;
+            }
+        }
+        ok && mesh.idle()
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Chaining invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_chain_index_walk_never_escapes_group() {
+    // advance_chain over arbitrary depth/index headers visits only valid
+    // group member indexes and terminates.
+    let gen = PairGen(IntGen::below(4), IntGen::below(64));
+    check("chain walk bounded", gen, |(depth, packed)| {
+        use accnoc::fpga::channel::task::Task;
+        let idx = [
+            (packed & 3) as u8,
+            ((packed >> 2) & 3) as u8,
+            ((packed >> 4) & 3) as u8,
+        ];
+        let mut t = Task::new(
+            HeadFields {
+                chain_depth: *depth as u8,
+                chain_index: idx,
+                ..HeadFields::default()
+            },
+            vec![],
+            0,
+        );
+        let mut hops = 0;
+        while t.chain_remaining() > 0 {
+            let next = t.advance_chain();
+            if next > 3 {
+                return false;
+            }
+            hops += 1;
+            if hops > 3 {
+                return false;
+            }
+        }
+        hops == *depth as u32
+    });
+}

@@ -1,0 +1,185 @@
+//! Table 2 verification: the structural latencies of every interface
+//! component, measured end to end on micro-rigs. N = payload data flits.
+
+use accnoc::clock::{ClockDomain, MultiClock, Ps};
+use accnoc::flit::{Direction, Flit, HeadFields, PacketBuilder, PacketType};
+use accnoc::fpga::channel::task::CommandKind;
+use accnoc::fpga::fabric::{Fpga, FpgaConfig};
+use accnoc::fpga::hwa::{spec_by_name, HwaSpec};
+
+/// Drive the fabric's clocks; count *interface cycles* between request
+/// injection and grant emission, and between payload injection and the
+/// first/last result flit.
+struct Rig {
+    fpga: Fpga,
+    mc: MultiClock,
+    iface_dom: accnoc::clock::DomainId,
+    noc_dom: accnoc::clock::DomainId,
+    hwa_doms: Vec<(accnoc::clock::DomainId, Vec<usize>)>,
+    out: Vec<(Ps, Flit)>,
+    builder: PacketBuilder,
+}
+
+impl Rig {
+    fn new(specs: Vec<HwaSpec>) -> Self {
+        let mut mc = MultiClock::new();
+        let noc_clock = ClockDomain::from_mhz("noc", 1000.0);
+        let noc_dom = mc.add(noc_clock.clone());
+        let cfg = FpgaConfig::paper_defaults(5, 7, vec![0; 8]);
+        let fpga = Fpga::new(cfg, specs, &noc_clock);
+        let iface_dom = mc.add(fpga.iface_clock.clone());
+        let hwa_doms = fpga
+            .hwa_domains()
+            .into_iter()
+            .enumerate()
+            .map(|(i, (p, chans))| {
+                let d = mc.add(ClockDomain {
+                    name: format!("hwa{i}"),
+                    period_ps: p,
+                    phase_ps: 0,
+                });
+                (d, chans)
+            })
+            .collect();
+        Self {
+            fpga,
+            mc,
+            iface_dom,
+            noc_dom,
+            hwa_doms,
+            out: Vec::new(),
+            builder: PacketBuilder::new(1),
+        }
+    }
+
+    fn run_until(&mut self, deadline: Ps) {
+        let mut ticking = Vec::new();
+        while self.mc.now() < deadline {
+            let t = self.mc.advance(&mut ticking);
+            for d in ticking.clone() {
+                if d == self.iface_dom {
+                    self.fpga.step_iface(t);
+                } else if d == self.noc_dom {
+                    if let Some(f) = self.fpga.pop_to_noc(t) {
+                        self.out.push((t, f));
+                    }
+                } else if let Some((_, chans)) =
+                    self.hwa_doms.iter().find(|(dd, _)| *dd == d)
+                {
+                    for i in chans.clone() {
+                        self.fpga.step_channel(i, t);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lgc_grant_latency_is_about_one_iface_cycle_plus_cdc() {
+    // Request -> grant path: router_out CDC (2 iface edges) + PR command
+    // dispatch (1) + LGC (1) + PS command (1) + router_in CDC. Total
+    // must be a handful of interface cycles — the "light-weight" claim.
+    let mut rig = Rig::new(vec![spec_by_name("dfadd").unwrap()]);
+    let t0 = rig.mc.now();
+    let req = rig.builder.command(HeadFields {
+        routing: 5,
+        hwa_id: 0,
+        src_id: 1,
+        direction: Direction::ProcToHwa,
+        payload: CommandKind::Request.encode(),
+        ..HeadFields::default()
+    });
+    assert!(rig.fpga.router_out_push_for_test(t0, req.flits[0]));
+    rig.run_until(1_000_000);
+    let (t_grant, g) = rig.out.first().expect("grant emitted");
+    assert_eq!(
+        CommandKind::decode(g.head_fields().payload),
+        CommandKind::Grant
+    );
+    let iface_period = rig.fpga.iface_clock.period_ps;
+    let cycles = (t_grant - t0) / iface_period;
+    assert!(
+        (2..=8).contains(&cycles),
+        "request->grant took {cycles} iface cycles"
+    );
+}
+
+#[test]
+fn end_to_end_latency_decomposes_per_table2() {
+    // For a known HWA, total fabric latency must equal the sum of the
+    // Table 2 terms within a small CDC slack:
+    //   PR payload (2+N_in) + TB sync + TA(1) + HWAC (4+N_in) + exec
+    //   + PG (4+N_out) + PS (4+N_out)
+    let spec = spec_by_name("izigzag").unwrap();
+    let n_in = (spec.in_packet_flits() - 1) as u64;
+    let n_out = (spec.out_packet_flits() - 1) as u64;
+    let exec = spec.exec_cycles;
+    let mut rig = Rig::new(vec![spec.clone()]);
+    // Grant first.
+    let req = rig.builder.command(HeadFields {
+        routing: 5,
+        hwa_id: 0,
+        src_id: 1,
+        direction: Direction::ProcToHwa,
+        payload: CommandKind::Request.encode(),
+        ..HeadFields::default()
+    });
+    let t0 = rig.mc.now();
+    assert!(rig.fpga.router_out_push_for_test(t0, req.flits[0]));
+    rig.run_until(1_000_000);
+    let grant = rig.out.remove(0).1.head_fields();
+    // Payload.
+    let words: Vec<u32> = (0..spec.in_words as u32).collect();
+    let payload = rig.builder.payload(
+        HeadFields {
+            routing: 5,
+            hwa_id: 0,
+            src_id: 1,
+            tb_id: grant.tb_id,
+            task_head: true,
+            task_tail: true,
+            direction: Direction::ProcToHwa,
+            ..HeadFields::default()
+        },
+        &words,
+    );
+    let t1 = rig.mc.now();
+    for f in &payload.flits {
+        assert!(rig.fpga.router_out_push_for_test(t1, *f));
+    }
+    rig.run_until(rig.mc.now() + 30_000_000);
+    let last_result = rig
+        .out
+        .iter()
+        .filter(|(_, f)| {
+            f.is_head() && f.head_fields().pkt_type == PacketType::Payload
+                || !f.is_head()
+        })
+        .last()
+        .expect("result emitted");
+    // Expected bound: interface-clock terms + HWA-clock terms + CDC slack.
+    let ifp = rig.fpga.iface_clock.period_ps;
+    let hwp = accnoc::clock::mhz_to_period_ps(spec.fmax_mhz);
+    let expected = (2 + n_in + 4 + n_out) * ifp        // PR + PS
+        + (1 + 4 + n_in + exec + 4 + n_out) * hwp; // TA + HWAC + exec + PG
+    let slack = 8 * ifp; // CDC synchronizers + edge alignment
+    let measured = last_result.0 - t1;
+    assert!(
+        measured <= expected + slack,
+        "measured {measured} ps > expected {expected} + slack {slack}"
+    );
+    assert!(
+        measured + slack >= expected,
+        "measured {measured} ps << expected {expected} (model broke?)"
+    );
+}
+
+#[test]
+fn table2_printed_form_is_stable() {
+    let t = accnoc::sim::experiments::tables::table2();
+    let s = t.render();
+    for needle in ["HWAC", "4 + N", "PR (payload)", "2 + N", "PS (payload)"] {
+        assert!(s.contains(needle), "missing {needle}");
+    }
+}
