@@ -1,0 +1,14 @@
+# Convenience targets; see README.md.
+
+.PHONY: artifacts test bench
+
+# AOT-lower the JAX/Pallas kernels to artifacts/*.hlo.txt + manifest.txt
+# (prerequisite for `cargo {test,run} --features pjrt`).
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	cargo bench --no-run

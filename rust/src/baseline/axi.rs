@@ -144,7 +144,6 @@ pub struct AxiBus {
     request: BusChannel,
     response: BusChannel,
     eject: Vec<VecDeque<Flit>>,
-    toggle: bool,
     pub cycles: u64,
     pub flits_injected: u64,
     pub flits_ejected: u64,
@@ -158,7 +157,6 @@ impl AxiBus {
             request: BusChannel::new(n_nodes),
             response: BusChannel::new(1),
             eject: (0..n_nodes).map(|_| VecDeque::new()).collect(),
-            toggle: false,
             cycles: 0,
             flits_injected: 0,
             flits_ejected: 0,
@@ -206,9 +204,11 @@ impl AxiBus {
         // shared between the request and response directions (the NIC's
         // single crossbar slice toward the lone FPGA slave/master pair) —
         // the serialization the paper's Figs. 13/14 measure against the
-        // NoC's concurrent links. Round-robin between directions.
-        let req_first = self.toggle;
-        self.toggle = !self.toggle;
+        // NoC's concurrent links. Round-robin between directions, derived
+        // from the cycle counter so that idle cycles fast-forwarded by the
+        // event-driven scheduler (folded in via `account_idle_cycles`)
+        // leave the arbitration parity identical to per-edge stepping.
+        let req_first = self.cycles % 2 == 0;
         let req_ok = self.request.beat_ready()
             && self.eject[self.fpga_node].len() < AXI_EJECT_CAP;
         let resp_ok = self.response.beat_ready();
@@ -233,6 +233,13 @@ impl AxiBus {
         self.request.is_empty()
             && self.response.is_empty()
             && self.eject.iter().all(|q| q.is_empty())
+    }
+
+    /// Fold `n` bus cycles the idle-skipping scheduler fast-forwarded past
+    /// (the bus was provably empty; keeps stats and arbitration parity
+    /// identical to per-edge stepping).
+    pub fn account_idle_cycles(&mut self, n: u64) {
+        self.cycles += n;
     }
 }
 

@@ -5,6 +5,21 @@
 //! fmax (§6.1). We reproduce that with explicit clock domains: global time
 //! is in picoseconds (u64 — ~213 days of 1 GHz time, far beyond any run),
 //! and each domain ticks on its own rising edges.
+//!
+//! Edge convention (reconciled across the module): a domain's processed
+//! rising edges are `phase + k*period` for `k >= 1` when `phase == 0`
+//! (simulated time starts *just after* zero, so the t=0 edge is never
+//! stepped) and for `k >= 0` when `phase > 0`. `MultiClock::add`,
+//! [`ClockDomain::next_edge_after`] and [`ClockDomain::cycles_at`] all
+//! follow this convention; `clock_edge_cycle_conventions_agree` pins it.
+//!
+//! [`MultiClock`] is the event-driven scheduler core: a binary heap of
+//! next-edge events (lazily invalidated), with [`MultiClock::skip_until`]
+//! letting the simulator fast-forward fully-idle stretches to the next
+//! injection/wakeup instead of ticking every domain edge.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 pub type Ps = u64;
 
@@ -46,9 +61,28 @@ impl ClockDomain {
         self.phase_ps + k * self.period_ps
     }
 
-    /// Number of whole cycles elapsed at `now` (edges at or before `now`).
+    /// First rising edge at or after `now` (the edge the scheduler would
+    /// process next if every earlier edge were already consumed).
+    pub fn first_edge_at_or_after(&self, now: Ps) -> Ps {
+        let first = if self.phase_ps == 0 {
+            self.period_ps
+        } else {
+            self.phase_ps
+        };
+        if now <= first {
+            return first;
+        }
+        let k = (now - self.phase_ps).div_ceil(self.period_ps);
+        self.phase_ps + k * self.period_ps
+    }
+
+    /// Number of whole cycles elapsed at `now`: edges at or before `now`,
+    /// under the module's edge convention (a phase-0 domain has NO edge at
+    /// t = 0 — see the module docs; this was the t=0 off-by-one).
     pub fn cycles_at(&self, now: Ps) -> u64 {
-        if now < self.phase_ps {
+        if self.phase_ps == 0 {
+            now / self.period_ps
+        } else if now < self.phase_ps {
             0
         } else {
             (now - self.phase_ps) / self.period_ps + 1
@@ -67,10 +101,16 @@ pub struct DomainId(pub usize);
 /// A set of clock domains advanced together; `advance` moves global time
 /// to the earliest next edge and reports every domain ticking then.
 /// Same-instant ticks are reported in registration order (deterministic).
+///
+/// Internally a min-heap of `(edge_time, domain)` events with lazy
+/// deletion: `next_edges` is the authoritative next edge per domain, and
+/// heap entries that no longer match it (because [`MultiClock::skip_until`]
+/// fast-forwarded the domain) are discarded on pop.
 #[derive(Debug, Default)]
 pub struct MultiClock {
     domains: Vec<ClockDomain>,
     next_edges: Vec<Ps>,
+    heap: BinaryHeap<Reverse<(Ps, usize)>>,
     now: Ps,
 }
 
@@ -81,12 +121,15 @@ impl MultiClock {
 
     pub fn add(&mut self, domain: ClockDomain) -> DomainId {
         let id = DomainId(self.domains.len());
-        // First edge at or after time zero (phase).
-        self.next_edges.push(if domain.phase_ps == 0 {
+        // First processed edge per the module's convention: a phase-0
+        // domain's t=0 edge is not simulated.
+        let first = if domain.phase_ps == 0 {
             domain.period_ps
         } else {
             domain.phase_ps
-        });
+        };
+        self.next_edges.push(first);
+        self.heap.push(Reverse((first, id.0)));
         self.domains.push(domain);
         id
     }
@@ -103,19 +146,71 @@ impl MultiClock {
         &self.domains[id.0]
     }
 
+    pub fn n_domains(&self) -> usize {
+        self.domains.len()
+    }
+
     /// Advance to the earliest pending edge; returns (time, ticking ids).
     pub fn advance(&mut self, ticking: &mut Vec<DomainId>) -> Ps {
         debug_assert!(!self.domains.is_empty(), "no domains registered");
-        let t = *self.next_edges.iter().min().expect("nonempty");
         ticking.clear();
-        for (i, edge) in self.next_edges.iter_mut().enumerate() {
-            if *edge == t {
+        // Pop the earliest valid event, discarding stale (skipped) ones.
+        let t = loop {
+            let Reverse((t, i)) = self.heap.pop().expect("a valid event per domain");
+            if self.next_edges[i] == t {
                 ticking.push(DomainId(i));
-                *edge += self.domains[i].period_ps;
+                break t;
             }
+        };
+        // Gather every other domain ticking at the same instant.
+        while let Some(&Reverse((tt, i))) = self.heap.peek() {
+            if tt > t {
+                break;
+            }
+            self.heap.pop();
+            if self.next_edges[i] == tt {
+                ticking.push(DomainId(i));
+            }
+        }
+        // Same-instant ticks are reported in registration order.
+        ticking.sort_unstable();
+        ticking.dedup();
+        for d in ticking.iter() {
+            let next = self.next_edges[d.0] + self.domains[d.0].period_ps;
+            self.next_edges[d.0] = next;
+            self.heap.push(Reverse((next, d.0)));
         }
         self.now = t;
         t
+    }
+
+    /// Fast-forward every domain whose next edge falls strictly before `t`
+    /// so that its next processed edge is the first on-grid edge at or
+    /// after `t`. Global time (`now`) is unchanged — the next `advance`
+    /// lands on the first surviving edge. Per-domain skipped edge counts
+    /// are written into `skipped` (indexed by domain id) so callers can
+    /// keep cycle statistics consistent with naive per-edge stepping.
+    ///
+    /// Soundness is the caller's obligation: every skipped edge must be a
+    /// provable no-op (see `System::idle_until`).
+    pub fn skip_until(&mut self, t: Ps, skipped: &mut Vec<u64>) {
+        skipped.clear();
+        skipped.resize(self.domains.len(), 0);
+        for (i, d) in self.domains.iter().enumerate() {
+            let old = self.next_edges[i];
+            if old >= t {
+                continue;
+            }
+            // `old` lies on the domain's grid, so the distance to the
+            // first edge >= t is a whole number of periods.
+            let new = d.first_edge_at_or_after(t).max(old);
+            if new == old {
+                continue;
+            }
+            skipped[i] = (new - old) / d.period_ps;
+            self.next_edges[i] = new;
+            self.heap.push(Reverse((new, i)));
+        }
     }
 }
 
@@ -158,11 +253,44 @@ mod tests {
     #[test]
     fn cycles_at_counts_edges() {
         let d = ClockDomain::from_mhz("x", 1000.0);
-        // Edges at 0(phase), then every 1000 ps; phase 0 counts as edge.
-        assert_eq!(d.cycles_at(0), 1);
-        assert_eq!(d.cycles_at(999), 1);
-        assert_eq!(d.cycles_at(1000), 2);
-        assert_eq!(d.cycles_at(5500), 6);
+        // Edges at 1000, 2000, ... — a phase-0 domain has NO edge at t=0
+        // (the reconciled convention; this was the t=0 off-by-one).
+        assert_eq!(d.cycles_at(0), 0);
+        assert_eq!(d.cycles_at(999), 0);
+        assert_eq!(d.cycles_at(1000), 1);
+        assert_eq!(d.cycles_at(5500), 5);
+    }
+
+    /// Regression for the t=0 off-by-one: `MultiClock::add`'s first
+    /// scheduled edge and `cycles_at`'s count now agree for both phase-0
+    /// and phased domains.
+    #[test]
+    fn clock_edge_cycle_conventions_agree() {
+        let plain = ClockDomain::from_mhz("plain", 1000.0);
+        let phased = ClockDomain {
+            name: "phased".into(),
+            period_ps: 1000,
+            phase_ps: 400,
+        };
+        let mut mc = MultiClock::new();
+        let a = mc.add(plain.clone());
+        let b = mc.add(phased.clone());
+        let mut ticks = Vec::new();
+        // First edge overall: the phased domain at 400 ps.
+        let t = mc.advance(&mut ticks);
+        assert_eq!((t, ticks.clone()), (400, vec![b]));
+        assert_eq!(phased.cycles_at(t), 1, "one phased edge at/before 400");
+        assert_eq!(plain.cycles_at(t), 0, "no phase-0 edge yet");
+        // Next: the phase-0 domain's first edge, one full period in.
+        let t = mc.advance(&mut ticks);
+        assert_eq!((t, ticks.clone()), (1000, vec![a]));
+        assert_eq!(plain.cycles_at(t), 1);
+        // Phased cadence continues on its own grid.
+        let t = mc.advance(&mut ticks);
+        assert_eq!((t, ticks.clone()), (1400, vec![b]));
+        assert_eq!(phased.cycles_at(t), 2);
+        // cycles_at at any edge equals the number of advances that ticked
+        // that domain — the two conventions are reconciled.
     }
 
     #[test]
@@ -188,5 +316,37 @@ mod tests {
         }
         assert_eq!(nf, 1000);
         assert!((299..=301).contains(&ns), "ns={ns}");
+    }
+
+    #[test]
+    fn skip_until_lands_on_grid_edges() {
+        let mut mc = MultiClock::new();
+        let a = mc.add_mhz("a", 1000.0); // 1000 ps grid
+        let b = mc.add_mhz("b", 300.0); // 3333 ps grid
+        let mut ticks = Vec::new();
+        assert_eq!(mc.advance(&mut ticks), 1000); // a's first edge
+        let mut skipped = Vec::new();
+        mc.skip_until(10_500, &mut skipped);
+        // a: 2000 -> 11000 (9 edges skipped); b: 3333 -> 13332 (3 skipped).
+        assert_eq!(skipped[a.0], 9);
+        assert_eq!(skipped[b.0], 3);
+        let t = mc.advance(&mut ticks);
+        assert_eq!((t, ticks.clone()), (11_000, vec![a]));
+        assert_eq!(mc.advance(&mut ticks), 12_000);
+        let t = mc.advance(&mut ticks);
+        assert_eq!((t, ticks.clone()), (13_000, vec![a]));
+        let t = mc.advance(&mut ticks);
+        assert_eq!((t, ticks.clone()), (13_332, vec![b]), "b stays on grid");
+    }
+
+    #[test]
+    fn skip_until_past_target_is_a_noop() {
+        let mut mc = MultiClock::new();
+        let a = mc.add_mhz("a", 1000.0);
+        let mut ticks = Vec::new();
+        let mut skipped = Vec::new();
+        mc.skip_until(500, &mut skipped); // before the first edge
+        assert_eq!(skipped[a.0], 0);
+        assert_eq!(mc.advance(&mut ticks), 1000);
     }
 }

@@ -96,7 +96,9 @@ pub enum Segment {
 }
 
 /// Per-invocation latency breakdown (Fig. 9 / Fig. 14 measurements).
-#[derive(Debug, Clone, Copy, Default)]
+/// `PartialEq` so the event-driven scheduler's determinism tests can
+/// compare whole record vectors bit-for-bit.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct InvokeRecord {
     pub t_request: Ps,
     pub t_grant: Ps,
@@ -193,6 +195,28 @@ impl Processor {
     /// Number of completed invocations.
     pub fn invocations_done(&self) -> usize {
         self.records.len()
+    }
+
+    /// True while the core needs clock edges to make progress (computing,
+    /// sending, draining receive overhead, or with queued program). The
+    /// await states are event-driven — progress comes from `deliver` — so
+    /// the idle-skipping scheduler may fast-forward past them.
+    pub fn needs_clock(&self) -> bool {
+        match &self.state {
+            CoreState::Computing { .. }
+            | CoreState::Sending { .. }
+            | CoreState::RecvOverhead { .. } => true,
+            CoreState::AwaitGrant | CoreState::AwaitResult { .. } => false,
+            CoreState::Done => !self.program.is_empty(),
+        }
+    }
+
+    /// Fold `n` core cycles the idle-skipping scheduler fast-forwarded
+    /// past (the core was awaiting/done, so `step` would only have bumped
+    /// this counter); keeps `total_cycles` identical to per-edge stepping.
+    pub fn account_idle_cycles(&mut self, n: u64) {
+        debug_assert!(!self.needs_clock(), "skipped a working core");
+        self.total_cycles += n;
     }
 
     fn next_segment(&mut self, now: Ps) {

@@ -59,10 +59,16 @@ pub fn main_with(args: Args) -> Result<(), String> {
         }
         Some("list") => {
             emit(tables::table3_table(), csv);
+            #[cfg(feature = "pjrt")]
             match crate::runtime::Runtime::load_default() {
                 Ok(rt) => println!("artifacts: {:?}", rt.names()),
                 Err(e) => println!("artifacts not loaded: {e:#}"),
             }
+            #[cfg(not(feature = "pjrt"))]
+            println!(
+                "artifacts: built without the `pjrt` feature \
+                 (rebuild with --features pjrt after `make artifacts`)"
+            );
             Ok(())
         }
         Some("selftest") => selftest(),

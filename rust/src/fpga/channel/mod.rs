@@ -43,6 +43,10 @@ pub struct ChannelStats {
     pub result_packets: u64,
     /// Cycles the PG stalled on a full CB/POB.
     pub pg_stall_cycles: u64,
+    /// Malformed/untrusted header events rejected instead of acted on
+    /// (out-of-range `tb_id`/`src_id`, payload without a grant). A
+    /// hardware channel drops such flits; the simulator must not panic.
+    pub rejected_flits: u64,
 }
 
 /// HWA controller FSM (§4.2 B.1).
@@ -162,14 +166,21 @@ impl Channel {
         let Some((req, t_req)) = self.rb.pop_front() else {
             return;
         };
-        self.tbs[free_tb].grant(t_req);
-        self.stats.grants += 1;
+        // An unroutable src_id is an untrusted-header error for EVERY
+        // direction — even a memory-access grant ultimately notifies the
+        // requesting processor — so drop the request (no TB reserved).
+        let Some(reply_node) = self.reply_route.get(req.src_id as usize) else {
+            self.stats.rejected_flits += 1;
+            return;
+        };
         // Grant routed to the requester (direct access) or the MMU
         // (memory access), §5 / Fig. 5.
         let grant_dest = match req.direction {
             Direction::MemToHwa => self.mmu_node,
-            _ => self.reply_route[req.src_id as usize],
+            _ => *reply_node,
         };
+        self.tbs[free_tb].grant(t_req);
+        self.stats.grants += 1;
         self.cmd_out.push_back(HeadFields {
             routing: grant_dest,
             kind: FlitKind::Single,
@@ -188,10 +199,17 @@ impl Channel {
         });
     }
 
-    /// Payload packet head from the PR (targets the granted TB).
+    /// Payload packet head from the PR (targets the granted TB). The
+    /// `tb_id` field is untrusted wire input: an out-of-range index or a
+    /// TB that was never granted rejects the packet (counted) instead of
+    /// panicking the simulator.
     pub fn payload_head(&mut self, head: HeadFields, flow: u32) -> bool {
-        let tb = &mut self.tbs[head.tb_id as usize];
+        let Some(tb) = self.tbs.get_mut(head.tb_id as usize) else {
+            self.stats.rejected_flits += 1;
+            return false;
+        };
         if tb.state != TbState::Granted {
+            self.stats.rejected_flits += 1;
             return false;
         }
         tb.begin_fill(head, flow);
@@ -200,14 +218,22 @@ impl Channel {
 
     /// Payload data flit (four u32 lanes); `is_tail` completes the task.
     /// `ready_at` is the CDC-visible time (computed by the PR from this
-    /// channel's HWA clock).
-    pub fn payload_data(&mut self, tb_id: u8, lanes: &[u32], is_tail: bool, ready_at: Ps) {
-        let tb = &mut self.tbs[tb_id as usize];
-        debug_assert_eq!(tb.state, TbState::Filling, "data without head");
+    /// channel's HWA clock). Returns false (and counts the rejection)
+    /// when `tb_id` is out of range or the TB is not mid-fill.
+    pub fn payload_data(&mut self, tb_id: u8, lanes: &[u32], is_tail: bool, ready_at: Ps) -> bool {
+        let Some(tb) = self.tbs.get_mut(tb_id as usize) else {
+            self.stats.rejected_flits += 1;
+            return false;
+        };
+        if tb.state != TbState::Filling {
+            self.stats.rejected_flits += 1;
+            return false;
+        }
         tb.push_words(lanes);
         if is_tail {
             tb.finish_fill(ready_at);
         }
+        true
     }
 
     /// CDC visibility horizon for a fill finishing at `now` (2 HWA edges).
@@ -305,6 +331,19 @@ impl Channel {
         }
     }
 
+    /// Reply route for an untrusted `src_id`, falling back to the MMU node
+    /// (and counting the rejection) when the id is unroutable — chained
+    /// tasks can carry arbitrary header bits.
+    fn reply_dest(&mut self, src_id: u8) -> u8 {
+        match self.reply_route.get(src_id as usize) {
+            Some(node) => *node,
+            None => {
+                self.stats.rejected_flits += 1;
+                self.mmu_node
+            }
+        }
+    }
+
     /// PG output routing: chain onward or emit a result packet.
     fn finish_or_block(&mut self, task: Task) {
         if task.chain_remaining() > 0 {
@@ -326,16 +365,24 @@ impl Channel {
             // the invoking processor gets a notifying command packet with
             // the memory address in the header.
             if matches!(task.head.direction, Direction::MemToHwa) {
-                self.cmd_out.push_back(HeadFields {
-                    routing: self.reply_route[task.head.src_id as usize],
-                    kind: FlitKind::Single,
-                    src_id: task.head.src_id,
-                    hwa_id: self.hwa_id,
-                    pkt_type: PacketType::Command,
-                    start_addr: task.head.start_addr,
-                    payload: CommandKind::Notify.encode(),
-                    ..HeadFields::default()
-                });
+                // The completion notify must reach the requesting
+                // processor; an unroutable src_id (possible only via a
+                // forged chained header) drops the notify — routing it
+                // anywhere else would hand the MMU a command packet it
+                // must treat as a grant.
+                match self.reply_route.get(task.head.src_id as usize) {
+                    Some(&routing) => self.cmd_out.push_back(HeadFields {
+                        routing,
+                        kind: FlitKind::Single,
+                        src_id: task.head.src_id,
+                        hwa_id: self.hwa_id,
+                        pkt_type: PacketType::Command,
+                        start_addr: task.head.start_addr,
+                        payload: CommandKind::Notify.encode(),
+                        ..HeadFields::default()
+                    }),
+                    None => self.stats.rejected_flits += 1,
+                }
             }
             self.completed.push(task);
         } else {
@@ -346,7 +393,7 @@ impl Channel {
     fn make_result_packet(&mut self, task: &Task) -> Packet {
         let dest = match task.head.direction {
             Direction::MemToHwa | Direction::HwaToMem => self.mmu_node,
-            _ => self.reply_route[task.head.src_id as usize],
+            _ => self.reply_dest(task.head.src_id),
         };
         let head = HeadFields {
             routing: dest,
@@ -611,5 +658,73 @@ mod tests {
         assert!(ch.quiescent());
         ch.push_request(request(1), 0);
         assert!(!ch.quiescent());
+    }
+
+    #[test]
+    fn out_of_range_tb_id_is_rejected_not_a_panic() {
+        // tb_id is a 2-bit wire field; with 2 TBs configured, 3 is out of
+        // range. Both the head and data paths must reject and count it.
+        let mut ch = channel("dfadd", 2);
+        let head = HeadFields {
+            tb_id: 3,
+            task_head: true,
+            task_tail: true,
+            ..HeadFields::default()
+        };
+        assert!(!ch.payload_head(head, 1));
+        assert!(!ch.payload_data(3, &[1, 2, 3, 4], true, 0));
+        assert_eq!(ch.stats.rejected_flits, 2);
+        assert!(ch.quiescent(), "rejected traffic leaves no state behind");
+    }
+
+    #[test]
+    fn payload_for_ungranted_tb_is_rejected() {
+        let mut ch = channel("dfadd", 2);
+        // TB 0 exists but was never granted.
+        assert!(!ch.payload_head(
+            HeadFields {
+                tb_id: 0,
+                ..HeadFields::default()
+            },
+            1
+        ));
+        // Data for a TB that is not filling.
+        assert!(!ch.payload_data(0, &[9, 9, 9, 9], false, 0));
+        assert_eq!(ch.stats.rejected_flits, 2);
+    }
+
+    #[test]
+    fn unroutable_src_id_request_is_dropped_without_reserving_a_tb() {
+        // A short reply route (2 entries) with a 3-bit src_id of 5: the
+        // LGC must drop the request, reserve nothing and count it.
+        let mut ch = Channel::new(
+            0,
+            spec_by_name("dfadd").unwrap(),
+            2,
+            vec![0; 2],
+            7,
+        );
+        assert!(ch.push_request(request(5), 0));
+        ch.step_lgc(100);
+        assert_eq!(ch.cmd_out.len(), 0, "no grant for an unroutable source");
+        assert_eq!(ch.stats.rejected_flits, 1);
+        assert_eq!(ch.stats.grants, 0);
+        assert!(
+            ch.tbs.iter().all(|tb| tb.state == TbState::Free),
+            "no TB leaked"
+        );
+        // A routable request still succeeds afterwards.
+        assert!(ch.push_request(request(1), 200));
+        ch.step_lgc(300);
+        assert_eq!(ch.cmd_out.len(), 1);
+        assert_eq!(ch.stats.grants, 1);
+        // Memory-access requests validate src_id too: the completion
+        // notify must eventually reach the requesting processor.
+        let mut mem_req = request(6);
+        mem_req.direction = Direction::MemToHwa;
+        assert!(ch.push_request(mem_req, 400));
+        ch.step_lgc(500);
+        assert_eq!(ch.stats.rejected_flits, 2);
+        assert_eq!(ch.stats.grants, 1, "no grant for the forged mem request");
     }
 }

@@ -182,6 +182,14 @@ impl Fpga {
     // Interface-clock side
     // ------------------------------------------------------------------
 
+    /// Fold `n` interface cycles the idle-skipping scheduler fast-forwarded
+    /// past (the fabric was quiescent, so stepping them would only have
+    /// bumped `iface_cycles`); keeps busy-fraction denominators identical
+    /// to naive per-edge stepping.
+    pub fn account_idle_iface_cycles(&mut self, n: u64) {
+        self.stats.iface_cycles += n;
+    }
+
     pub fn step_iface(&mut self, now: Ps) {
         self.stats.iface_cycles += 1;
         if self.channels.iter().any(|c| c.busy()) {
@@ -536,6 +544,31 @@ mod tests {
         assert_eq!(result_heads.len(), 1);
         assert_eq!(result_heads[0].hwa_id, 3, "shiftbound emits the result");
         assert!(rig.fpga.quiescent(rig.mc.now()));
+    }
+
+    #[test]
+    fn malformed_tb_id_payload_is_dropped_not_a_panic() {
+        // A payload packet forged against a TB id the channel never
+        // granted (and beyond its TB array) must be rejected and counted,
+        // with the fabric still live for well-formed traffic.
+        let mut rig = Rig::new(vec![spec_by_name("dfadd").unwrap()]);
+        rig.request(0, 1, None);
+        rig.run(1_000_000);
+        let grants = rig.take_grants();
+        assert_eq!(grants.len(), 1);
+        let mut forged = grants[0];
+        forged.tb_id = 3; // 2 TBs configured: index 3 is out of range
+        rig.payload_for_grant(&forged, &[1, 2, 3, 4]);
+        rig.run(rig.mc.now() + 2_000_000);
+        assert_eq!(rig.fpga.tasks_executed(), 0, "forged task dropped");
+        assert!(
+            rig.fpga.channels[0].stats.rejected_flits > 0,
+            "rejection counted"
+        );
+        // The grant's real TB still works.
+        rig.payload_for_grant(&grants[0], &[1, 2, 3, 4]);
+        rig.run(rig.mc.now() + 3_000_000);
+        assert_eq!(rig.fpga.tasks_executed(), 1, "fabric still live");
     }
 
     #[test]

@@ -122,15 +122,21 @@ impl PacketReceiver {
             }
             PrState::Decode { head, known } => {
                 // Decode/setup cycle: claim the granted TB.
+                let mut known = known;
                 if known {
                     let idx = chan_index(head.hwa_id).expect("known");
                     // flow id comes from the head flit's builder; recover it
                     // lazily from the first data flit instead (meta is
                     // uniform across a packet) — here we pass 0 and patch
                     // on the first data flit.
-                    let ok = channels[idx].payload_head(head, 0);
-                    debug_assert!(ok, "payload without a granted TB");
-                    self.stats.payload_packets += 1;
+                    if channels[idx].payload_head(head, 0) {
+                        self.stats.payload_packets += 1;
+                    } else {
+                        // Malformed header (out-of-range or ungranted
+                        // tb_id): the channel rejected and counted it;
+                        // consume the rest of the packet and drop it.
+                        known = false;
+                    }
                 }
                 self.state = PrState::Stream { head, known };
             }
@@ -148,7 +154,7 @@ impl PacketReceiver {
                     let lanes =
                         [a as u32, (a >> 32) as u32, b as u32, (b >> 32) as u32];
                     let ready_at = channels[idx].cdc_ready_at(now);
-                    channels[idx].payload_data(head.tb_id, &lanes, is_tail, ready_at);
+                    let _ = channels[idx].payload_data(head.tb_id, &lanes, is_tail, ready_at);
                 }
                 if is_tail {
                     self.state = PrState::Idle;

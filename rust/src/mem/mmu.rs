@@ -139,6 +139,28 @@ impl Mmu {
     pub fn idle(&self) -> bool {
         self.jobs.is_empty() && self.outbox.is_empty() && self.rx_head.is_none()
     }
+
+    /// Scheduler activity probe (see `System::idle_until`).
+    pub fn activity(&self) -> MmuActivity {
+        if !self.outbox.is_empty() || self.rx_head.is_some() {
+            return MmuActivity::Busy;
+        }
+        match self.jobs.iter().map(|j| j.ready_at).min() {
+            None => MmuActivity::Idle,
+            Some(t) => MmuActivity::WaitUntil(t),
+        }
+    }
+}
+
+/// What the MMU needs from the clock right now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MmuActivity {
+    /// Nothing queued or in flight.
+    Idle,
+    /// Mid-stream work that needs every NoC edge.
+    Busy,
+    /// Only DMA jobs waiting on memory; nothing can happen earlier.
+    WaitUntil(Ps),
 }
 
 #[cfg(test)]

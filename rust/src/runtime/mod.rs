@@ -5,10 +5,18 @@
 //! Interchange is HLO **text**: jax >= 0.5 emits HloModuleProto with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Feature gating: everything touching the `xla` crate ([`Runtime`],
+//! [`PjrtCompute`]) lives behind the off-by-default `pjrt` feature so the
+//! default build is fully offline. [`NativeCompute`] (the golden Rust
+//! implementations) and the manifest parser compile unconditionally and
+//! are the default compute path.
 
 pub mod native;
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -85,6 +93,7 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSig>> {
 }
 
 /// The PJRT runtime: CPU client + lazily compiled executables.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     dir: PathBuf,
     client: xla::PjRtClient,
@@ -92,6 +101,7 @@ pub struct Runtime {
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Load from an artifacts directory (must contain `manifest.txt`).
     pub fn load(dir: &Path) -> Result<Self> {
@@ -234,12 +244,14 @@ impl TensorValue {
 /// Marshal a task's 64 words into one artifact invocation (row 0 of the
 /// batched artifact shape) and back. The quantization table input of the
 /// iquantize/chain artifacts is the baked-in ROM table, as in the FPGA.
+#[cfg(feature = "pjrt")]
 fn words_to_i32(words: &[u32], n: usize) -> Vec<i32> {
     let mut v: Vec<i32> = words.iter().map(|w| *w as i32).collect();
     v.resize(n, 0);
     v
 }
 
+#[cfg(feature = "pjrt")]
 fn words_to_f32(words: &[u32], n: usize) -> Vec<f32> {
     let mut v: Vec<f32> = words.iter().map(|w| f32::from_bits(*w)).collect();
     v.resize(n, 0.0);
@@ -248,12 +260,14 @@ fn words_to_f32(words: &[u32], n: usize) -> Vec<f32> {
 
 /// Compute through the PJRT-loaded AOT artifacts; HWAs without an
 /// artifact fall back to the native golden implementations.
+#[cfg(feature = "pjrt")]
 pub struct PjrtCompute {
     pub runtime: Runtime,
     native: NativeCompute,
     pub invocations: u64,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtCompute {
     pub fn new(runtime: Runtime) -> Self {
         Self {
@@ -323,6 +337,7 @@ impl PjrtCompute {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl HwaCompute for PjrtCompute {
     fn compute(&mut self, spec: &HwaSpec, input: &[u32]) -> Vec<u32> {
         if spec.artifact.is_some() {

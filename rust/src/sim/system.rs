@@ -10,7 +10,7 @@ use crate::cmp::core::{Processor, Segment};
 use crate::flit::Flit;
 use crate::fpga::fabric::{Fpga, FpgaConfig};
 use crate::fpga::hwa::{HwaCompute, HwaSpec};
-use crate::mem::mmu::Mmu;
+use crate::mem::mmu::{Mmu, MmuActivity};
 use crate::noc::mesh::{Mesh, MeshConfig};
 
 /// Interconnect selection (Fig. 13/14's three prototypes use Noc or Axi).
@@ -125,6 +125,15 @@ impl Net {
             Net::Axi(b) => b.idle(),
         }
     }
+
+    /// Fold `n` provably-idle cycles into the interconnect's statistics
+    /// (the idle-skipping scheduler fast-forwarded past them).
+    fn account_idle_cycles(&mut self, n: u64) {
+        match self {
+            Net::Noc(m) => m.account_idle_cycles(n),
+            Net::Axi(b) => b.account_idle_cycles(n),
+        }
+    }
 }
 
 pub enum Fabric {
@@ -202,6 +211,15 @@ impl Fabric {
             Fabric::Cached(f) => f.quiescent(),
         }
     }
+
+    /// Fold `n` skipped interface-clock cycles into the fabric's counters
+    /// so busy-fraction denominators match naive per-edge stepping.
+    pub fn account_idle_iface_cycles(&mut self, n: u64) {
+        match self {
+            Fabric::Buffered(f) => f.account_idle_iface_cycles(n),
+            Fabric::Cached(_) => {}
+        }
+    }
 }
 
 pub struct System {
@@ -218,6 +236,14 @@ pub struct System {
     pub open_sources: Vec<Option<crate::workload::openloop::OpenLoopSource>>,
     pub mmu: Mmu,
     ticking: Vec<DomainId>,
+    /// Idle-skipping event-driven scheduling (on by default). When every
+    /// component is provably idle, the clock fast-forwards to the next
+    /// injection/wakeup instead of ticking every domain edge.
+    idle_skip: bool,
+    skip_scratch: Vec<u64>,
+    /// Clock edges actually dispatched (skipped edges excluded) — the
+    /// scheduler's work metric, used by perf tests and hotpath_micro.
+    pub edges_stepped: u64,
 }
 
 impl System {
@@ -311,7 +337,17 @@ impl System {
             open_sources: (0..n_procs).map(|_| None).collect(),
             mmu,
             ticking: Vec::new(),
+            idle_skip: true,
+            skip_scratch: Vec::new(),
+            edges_stepped: 0,
         }
+    }
+
+    /// Enable/disable the idle-skipping scheduler (enabled by default).
+    /// Disabling forces naive per-edge stepping; per-task latency records
+    /// are identical either way (rust/tests/event_driven.rs proves it).
+    pub fn set_idle_skip(&mut self, on: bool) {
+        self.idle_skip = on;
     }
 
     /// Replace every processor with an open-loop source at the given
@@ -352,8 +388,94 @@ impl System {
         self.clk.now()
     }
 
-    /// Advance the whole system by one clock event.
+    /// Activity probe for the idle-skipping scheduler. `None` means some
+    /// component is mid-work and every edge must be simulated. `Some(wake)`
+    /// means the whole system is idle — the interconnect holds no flits,
+    /// the fabric is quiescent, the MMU has nothing in flight and every
+    /// processor (or open-loop source) is between events — and nothing can
+    /// change state before `wake` (`None` = no future event at all).
+    fn idle_until(&self) -> Option<Option<Ps>> {
+        let now = self.clk.now();
+        if now == 0 || !self.net.idle() || !self.fabric.quiescent(now) {
+            return None;
+        }
+        let mut wake: Option<Ps> = None;
+        fn fold(wake: &mut Option<Ps>, t: Ps) {
+            *wake = Some(wake.map_or(t, |w| w.min(t)));
+        }
+        match self.mmu.activity() {
+            MmuActivity::Busy => return None,
+            MmuActivity::Idle => {}
+            MmuActivity::WaitUntil(t) => fold(&mut wake, t),
+        }
+        for (i, p) in self.procs.iter().enumerate() {
+            match self.open_sources[i].as_ref() {
+                Some(src) => {
+                    if !src.outbox_is_empty() {
+                        return None;
+                    }
+                    fold(&mut wake, src.next_arrival_at());
+                }
+                None => {
+                    if p.needs_clock() {
+                        return None;
+                    }
+                }
+            }
+        }
+        Some(wake)
+    }
+
+    /// If the system is provably idle, fast-forward the clock to the next
+    /// wakeup (bounded by `deadline`), folding the skipped cycles into the
+    /// interconnect/fabric statistics so they match naive stepping.
+    fn skip_idle(&mut self, deadline: Option<Ps>) {
+        if !self.idle_skip {
+            return;
+        }
+        let Some(wake) = self.idle_until() else {
+            return;
+        };
+        let target = match (wake, deadline) {
+            (Some(w), Some(d)) => w.min(d),
+            (Some(w), None) => w,
+            (None, Some(d)) => d,
+            (None, None) => return,
+        };
+        if target <= self.clk.now() {
+            return;
+        }
+        let mut skipped = std::mem::take(&mut self.skip_scratch);
+        self.clk.skip_until(target, &mut skipped);
+        let n = skipped[self.noc_dom.0];
+        if n > 0 {
+            self.net.account_idle_cycles(n);
+            // Processors (when not replaced by open-loop sources) count
+            // every NoC edge in `total_cycles` even while awaiting; fold
+            // the skipped ones in so the counter matches naive stepping.
+            for (i, p) in self.procs.iter_mut().enumerate() {
+                if self.open_sources[i].is_none() {
+                    p.account_idle_cycles(n);
+                }
+            }
+        }
+        let n = skipped[self.iface_dom.0];
+        if n > 0 {
+            self.fabric.account_idle_iface_cycles(n);
+        }
+        self.skip_scratch = skipped;
+    }
+
+    /// Advance the whole system by one clock event, fast-forwarding first
+    /// when everything is idle.
     pub fn step(&mut self) -> Ps {
+        self.skip_idle(None);
+        self.step_edge()
+    }
+
+    /// Dispatch exactly one clock event (no idle skipping).
+    fn step_edge(&mut self) -> Ps {
+        self.edges_stepped += 1;
         let mut ticking = std::mem::take(&mut self.ticking);
         let t = self.clk.advance(&mut ticking);
         for d in &ticking {
@@ -428,10 +550,13 @@ impl System {
     }
 
     /// Run until every processor's program completes (or deadline).
-    /// Returns true on completion.
+    /// Returns true on completion. The completion check fires before any
+    /// idle skip, so `now()` on success is the drain time, not the
+    /// deadline; a deadlocked-idle system fast-forwards to the deadline.
     pub fn run_until_done(&mut self, deadline_ps: Ps) -> bool {
         while self.clk.now() < deadline_ps {
-            self.step();
+            self.skip_idle(Some(deadline_ps));
+            self.step_edge();
             if self.procs.iter().all(|p| p.done())
                 && self.net.idle()
                 && self.mmu.idle()
@@ -447,7 +572,8 @@ impl System {
     pub fn run_for(&mut self, window_ps: Ps) {
         let end = self.clk.now() + window_ps;
         while self.clk.now() < end {
-            self.step();
+            self.skip_idle(Some(end));
+            self.step_edge();
         }
     }
 
@@ -573,5 +699,85 @@ mod tests {
             axi > noc,
             "axi mean latency {axi} should exceed noc {noc}"
         );
+    }
+
+    /// Idle skipping must be invisible to every task-level observable:
+    /// same completions, same latencies, same flit/cycle statistics.
+    #[test]
+    fn idle_skip_matches_per_edge_stepping_open_loop() {
+        let observe = |skip: bool, net: NetKind| {
+            let mut cfg = SystemConfig::paper(vec![
+                spec_by_name("izigzag").unwrap();
+                4
+            ]);
+            cfg.net = net;
+            let mut sys = System::new(cfg);
+            sys.set_idle_skip(skip);
+            sys.set_open_loop(0.5, 9);
+            sys.run_for(40 * crate::clock::PS_PER_US);
+            let lat: Vec<(u64, u64, Vec<u64>)> = sys
+                .open_sources
+                .iter()
+                .flatten()
+                .map(|s| {
+                    (s.requests_issued, s.results_done, s.latencies_ps.clone())
+                })
+                .collect();
+            let (fin, fout) = sys.fabric.flits_in_out();
+            (lat, fin, fout, sys.fabric.tasks_executed())
+        };
+        for net in [NetKind::Noc, NetKind::Axi] {
+            assert_eq!(observe(true, net), observe(false, net), "{net:?}");
+        }
+    }
+
+    /// The scheduler's whole point: a low-injection open-loop run must
+    /// dispatch far fewer edges with skipping than per-edge stepping.
+    #[test]
+    fn idle_skip_reduces_dispatched_edges() {
+        let edges = |skip: bool| {
+            let cfg = SystemConfig::paper(vec![
+                spec_by_name("izigzag").unwrap();
+                4
+            ]);
+            let mut sys = System::new(cfg);
+            sys.set_idle_skip(skip);
+            sys.set_open_loop(0.25, 7);
+            sys.run_for(100 * crate::clock::PS_PER_US);
+            (sys.edges_stepped, sys.open_loop_completions())
+        };
+        let (skipped, done_s) = edges(true);
+        let (naive, done_n) = edges(false);
+        assert_eq!(done_s, done_n, "same work either way");
+        assert!(
+            skipped * 2 < naive,
+            "idle skipping should cut dispatched edges >=2x: {skipped} vs {naive}"
+        );
+    }
+
+    /// Skipped cycles are folded into the stats that feed busy fractions.
+    #[test]
+    fn idle_skip_preserves_cycle_accounting() {
+        let cycles = |skip: bool| {
+            let cfg = SystemConfig::paper(vec![
+                spec_by_name("izigzag").unwrap();
+                2
+            ]);
+            let mut sys = System::new(cfg);
+            sys.set_idle_skip(skip);
+            sys.set_open_loop(1.0, 3);
+            sys.run_for(20 * crate::clock::PS_PER_US);
+            let mesh_cycles = match &sys.net {
+                Net::Noc(m) => m.cycles,
+                Net::Axi(b) => b.cycles,
+            };
+            let iface_cycles = sys
+                .fabric
+                .buffered()
+                .map(|f| f.stats.iface_cycles)
+                .unwrap_or(0);
+            (mesh_cycles, iface_cycles)
+        };
+        assert_eq!(cycles(true), cycles(false));
     }
 }

@@ -86,6 +86,17 @@ impl OpenLoopSource {
         }
     }
 
+    /// True when no flits are queued for injection (scheduler probe).
+    pub fn outbox_is_empty(&self) -> bool {
+        self.outbox.is_empty()
+    }
+
+    /// Time of the next scheduled request arrival — the idle-skipping
+    /// scheduler's wakeup when the whole system has drained.
+    pub fn next_arrival_at(&self) -> Ps {
+        self.next_arrival
+    }
+
     /// One NoC/CMP cycle: emit at most one flit.
     pub fn step(&mut self, now: Ps, can_inject: bool) -> Option<Flit> {
         if self.outstanding.len() != self.specs.len() {

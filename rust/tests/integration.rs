@@ -4,11 +4,12 @@
 
 use accnoc::clock::PS_PER_US;
 use accnoc::cmp::core::{InvokeSpec, Processor, Segment};
-use accnoc::flit::Direction;
 use accnoc::fpga::hwa::spec_by_name;
 use accnoc::runtime::native::{self, DEFAULT_QTABLE};
-use accnoc::runtime::{NativeCompute, PjrtCompute, Runtime};
-use accnoc::sim::system::{FabricKind, NetKind, System, SystemConfig};
+use accnoc::runtime::NativeCompute;
+#[cfg(feature = "pjrt")]
+use accnoc::runtime::{PjrtCompute, Runtime};
+use accnoc::sim::system::{System, SystemConfig};
 use accnoc::workload::jpeg::BlockImage;
 
 fn jpeg_system() -> System {
@@ -55,6 +56,7 @@ fn chained_jpeg_decode_with_native_compute_is_bit_correct() {
     assert_eq!(got, want.to_vec(), "decoded pixels via simulated fabric");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn chained_jpeg_decode_with_pjrt_compute() {
     let Ok(rt) = Runtime::load_default() else {

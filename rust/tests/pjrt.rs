@@ -5,6 +5,9 @@
 //!
 //! Requires `make artifacts`; tests are skipped (pass vacuously, loudly)
 //! when artifacts/ is absent so `cargo test` works on a fresh checkout.
+//! The whole file is gated on the `pjrt` feature: the default offline
+//! build compiles none of it (the `xla` dependency is optional).
+#![cfg(feature = "pjrt")]
 
 use accnoc::fpga::hwa::{spec_by_name, HwaCompute};
 use accnoc::runtime::native::{self, DEFAULT_QTABLE};

@@ -2,7 +2,7 @@
 //! network invariants under randomized inputs.
 
 use accnoc::flit::{
-    fields::{encode_body, HeadFields, RawFlit},
+    fields::{HeadFields, RawFlit},
     Direction, FlitKind, PacketBuilder, PacketType,
 };
 use accnoc::noc::mesh::{Mesh, MeshConfig};
