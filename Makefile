@@ -1,6 +1,6 @@
 # Convenience targets; see README.md.
 
-.PHONY: artifacts test bench
+.PHONY: artifacts test bench sweep docs
 
 # AOT-lower the JAX/Pallas kernels to artifacts/*.hlo.txt + manifest.txt
 # (prerequisite for `cargo {test,run} --features pjrt`).
@@ -12,3 +12,16 @@ test:
 
 bench:
 	cargo bench --no-run
+
+# Regenerate every figure's machine-readable BENCH_*.json via the sweep
+# harness (docs/EXPERIMENTS.md).
+sweep:
+	cargo run --release -- sweep configs/fig6.toml
+	cargo run --release -- sweep configs/fig8.toml
+	cargo run --release -- sweep configs/fig9_jpeg.toml
+	cargo run --release -- sweep configs/fig10.toml
+	cargo run --release -- sweep configs/fig13.toml
+
+docs:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	cargo test --doc

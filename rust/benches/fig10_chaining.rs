@@ -1,4 +1,7 @@
-//! Bench/regenerator for Fig. 10 (chaining-depth speedup).
+//! Bench/regenerator for Fig. 10 (chaining-depth speedup). The four
+//! depths run concurrently as a sweep grid -> `BENCH_fig10.json`.
+use std::path::Path;
+
 use accnoc::sim::experiments::fig10;
 use accnoc::util::bench::{sim_config, Bench};
 
@@ -6,6 +9,10 @@ fn main() {
     let mut b = Bench::new(sim_config());
     let mut fig = None;
     b.run("fig10 depths 0..3", || fig = Some(fig10::run()));
-    fig.unwrap().table().print();
+    let fig = fig.unwrap();
+    fig.table().print();
     b.report("fig10_chaining");
+    let out = Path::new("BENCH_fig10.json");
+    fig.report.write_json(out).expect("write BENCH_fig10.json");
+    println!("wrote {}", out.display());
 }

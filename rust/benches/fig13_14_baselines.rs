@@ -1,14 +1,30 @@
-//! Bench/regenerator for Figs. 13-14 (three-prototype comparison).
+//! Bench/regenerator for Figs. 13-14 (three-prototype comparison). The
+//! 36 fig13 rate points and 3 fig14 latency scenarios are sweep grids;
+//! both reports merge into `BENCH_fig13_14.json`.
+use std::path::Path;
+
 use accnoc::sim::experiments::fig13_14::{run_fig13, run_fig14};
+use accnoc::sweep::SweepReport;
 use accnoc::util::bench::{sim_config, Bench};
 
 fn main() {
     let mut b = Bench::new(sim_config());
     let mut f13 = None;
     b.run("fig13 3x3 grid", || f13 = Some(run_fig13(3, 15)));
-    f13.unwrap().table().print();
+    let f13 = f13.unwrap();
+    f13.table().print();
     let mut f14 = None;
     b.run("fig14 loaded latency", || f14 = Some(run_fig14()));
-    f14.unwrap().table().print();
+    let f14 = f14.unwrap();
+    f14.table().print();
     b.report("fig13_14_baselines");
+    let mut scenarios = f13.report.scenarios;
+    scenarios.extend(f14.report.scenarios);
+    let merged = SweepReport {
+        name: "fig13_14".to_string(),
+        scenarios,
+    };
+    let out = Path::new("BENCH_fig13_14.json");
+    merged.write_json(out).expect("write BENCH_fig13_14.json");
+    println!("wrote {}", out.display());
 }

@@ -1,5 +1,8 @@
 //! Bench/regenerator for Fig. 6 (task-buffer sweep). Prints the paper-style
-//! table and wall-clock cost of the simulation itself.
+//! table, wall-clock cost of the simulation, and writes the
+//! machine-readable `BENCH_fig6.json` sweep report.
+use std::path::Path;
+
 use accnoc::sim::experiments::fig6;
 use accnoc::util::bench::{sim_config, Bench};
 
@@ -7,6 +10,10 @@ fn main() {
     let mut b = Bench::new(sim_config());
     let mut fig = None;
     b.run("fig6 full sweep", || fig = Some(fig6::run()));
-    fig.unwrap().table().print();
+    let fig = fig.unwrap();
+    fig.table().print();
     b.report("fig6_task_buffers");
+    let out = Path::new("BENCH_fig6.json");
+    fig.report.write_json(out).expect("write BENCH_fig6.json");
+    println!("wrote {}", out.display());
 }

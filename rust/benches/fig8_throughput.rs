@@ -1,21 +1,30 @@
 //! Bench/regenerator for Fig. 8 (a/b/c): injection vs throughput sweeps.
-use accnoc::sim::experiments::fig8::{run, Workload};
+//! All 24 rate points run as ONE sweep grid across every host core;
+//! the combined report lands in `BENCH_fig8.json`.
+use std::path::Path;
+
+use accnoc::sim::experiments::fig8::run_all;
 use accnoc::util::bench::{sim_config, Bench};
 
 fn main() {
     let (warm, win) = (3, 15);
     let mut b = Bench::new(sim_config());
-    for wl in [Workload::IzigzagHwa, Workload::EightHwa, Workload::DfdivHwa] {
-        let mut s = None;
-        b.run(wl.name(), || s = Some(run(wl, warm, win)));
-        let s = s.unwrap();
+    let mut out = None;
+    b.run("fig8 full grid (3 workloads x 8 rates)", || {
+        out = Some(run_all(warm, win))
+    });
+    let (series, report) = out.unwrap();
+    for s in &series {
         s.table().print();
         println!(
             "{}: max injection {:.2}, max throughput {:.2} flits/µs\n",
-            wl.name(),
+            s.workload.name(),
             s.max_injection(),
             s.max_throughput()
         );
     }
     b.report("fig8_throughput");
+    let path = Path::new("BENCH_fig8.json");
+    report.write_json(path).expect("write BENCH_fig8.json");
+    println!("wrote {}", path.display());
 }

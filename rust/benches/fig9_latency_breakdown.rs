@@ -1,4 +1,8 @@
 //! Bench/regenerator for Fig. 9 (GSM/JPEG partition latency breakdown).
+//! The ten partitions run as one sweep grid; the per-partition breakdown
+//! lands in `BENCH_fig9.json`.
+use std::path::Path;
+
 use accnoc::sim::experiments::fig9;
 use accnoc::util::bench::{sim_config, Bench};
 
@@ -6,6 +10,10 @@ fn main() {
     let mut b = Bench::new(sim_config());
     let mut fig = None;
     b.run("fig9 all partitions", || fig = Some(fig9::run()));
-    fig.unwrap().table().print();
+    let fig = fig.unwrap();
+    fig.table().print();
     b.report("fig9_latency_breakdown");
+    let out = Path::new("BENCH_fig9.json");
+    fig.report.write_json(out).expect("write BENCH_fig9.json");
+    println!("wrote {}", out.display());
 }

@@ -1,4 +1,4 @@
-//! Hot-path micro-benchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! Hot-path micro-benchmarks for the perf pass (docs/EXPERIMENTS.md §Perf):
 //! flit codec, router allocation, mesh stepping, channel stepping, and
 //! whole-system step rate.
 use accnoc::clock::PS_PER_US;

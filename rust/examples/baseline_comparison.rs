@@ -18,6 +18,6 @@ fn main() {
     println!(
         "\n(Paper: AXI loses 27%/53%, cache 22.5%/28.2% max throughput;\n\
          NoC communication latency 2.42x better than AXI, 1.63x than cache.\n\
-         See EXPERIMENTS.md for measured-vs-paper discussion.)"
+         See docs/EXPERIMENTS.md for measured-vs-paper discussion.)"
     );
 }

@@ -12,6 +12,7 @@
 //! of HLS speedups for these kernels).
 
 use crate::flit::Direction;
+use crate::fpga::hwa::{spec_by_name, HwaSpec, Resources};
 
 use super::core::{InvokeSpec, Segment};
 
@@ -260,6 +261,44 @@ pub fn jpeg_chain_depth_program(depth: u8) -> Vec<Segment> {
         }));
     }
     prog
+}
+
+/// HWA spec for an app function that has no Table 3 entry (JPEG entropy
+/// decode and the GSM stages) — Huffman/LPC-class HLS kernels.
+fn custom_spec(
+    name: &'static str,
+    exec: u64,
+    words: usize,
+    fmax: f64,
+) -> HwaSpec {
+    HwaSpec {
+        name,
+        exec_cycles: exec,
+        in_words: words,
+        out_words: words,
+        fmax_mhz: fmax,
+        resources: Resources::new(5000, 2, 8, 4000),
+        artifact: None,
+    }
+}
+
+/// HWA specs for an app's functions, `hwa_id` = function index (the
+/// Fig. 9 scenario layout used by `sweep`'s `app_partition` workload).
+pub fn app_specs(app: &App) -> Vec<HwaSpec> {
+    app.functions
+        .iter()
+        .map(|f| match f.name {
+            "izigzag" => spec_by_name("izigzag").unwrap(),
+            "iquantize" => spec_by_name("iquantize").unwrap(),
+            "idct" => spec_by_name("idct").unwrap(),
+            "shiftbound" => spec_by_name("shiftbound").unwrap(),
+            "autocorrelation" => custom_spec("autocorr", 180, 8, 260.0),
+            "reflection_coeff" => custom_spec("reflect", 140, 8, 260.0),
+            "lar_quantize" => custom_spec("larq", 60, 8, 300.0),
+            "entropy_decode" => custom_spec("entropy", 500, 64, 250.0),
+            other => panic!("no spec mapping for {other}"),
+        })
+        .collect()
 }
 
 #[cfg(test)]

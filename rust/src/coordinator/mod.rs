@@ -2,8 +2,8 @@
 //! dispatch and reporting — the surface behind the `accnoc` CLI.
 
 use crate::sim::experiments::{fig10, fig13_14, fig6, fig7, fig8, fig9, tables};
+use crate::sweep::{SweepRunner, SweepSpec};
 use crate::util::cli::Args;
-use crate::util::config_text::ConfigText;
 
 pub const USAGE: &str = "\
 accnoc — FPGA multi-accelerator / NoC-CMP integration simulator
@@ -16,8 +16,13 @@ SUBCOMMANDS:
     experiment <id>   regenerate a paper result:
                       fig6 | fig7 | fig8 | fig9 | fig10 | fig13 | fig14 |
                       table2 | table3 | table4 | all
-    run               run a custom simulation from a config file
-                      (--config path, see configs/ samples)
+    sweep <spec>      cartesian-expand a TOML/JSON sweep spec, run the
+                      scenario grid on all host cores, and write the
+                      machine-readable BENCH_*.json report
+                      (see configs/ and docs/EXPERIMENTS.md)
+    run               run one scenario from a config file
+                      (--config path; same [system]/[workload] keys as a
+                      sweep spec, without list values)
     synth             print the synthesis model sweep (fmax + resources)
     list              list HWA benchmarks and artifacts
     selftest          quick end-to-end smoke of all three prototypes
@@ -27,6 +32,11 @@ OPTIONS:
     --warmup-us N     measurement warmup (default 5)
     --window-us N     measurement window (default 40)
     --csv             CSV output instead of tables
+    --threads N       sweep worker threads (default: all host cores)
+    --out PATH        sweep JSON report path (default: the spec's
+                      `output`, else BENCH_<name>.json)
+    --csv-out PATH    also write the sweep report as CSV
+    --dry-run         expand and list the sweep grid without running
 ";
 
 fn emit(t: crate::util::table::Table, csv: bool) {
@@ -51,6 +61,7 @@ pub fn main_with(args: Args) -> Result<(), String> {
             run_experiment(id, warmup, window, csv)
         }
         Some("run") => run_custom(&args, csv),
+        Some("sweep") => run_sweep(&args, csv),
         Some("synth") => {
             emit(fig7::run().table(), csv);
             emit(fig7::run().component_table(), csv);
@@ -122,66 +133,76 @@ pub fn run_experiment(
     Ok(())
 }
 
-/// Custom run: config-file-driven single simulation.
+/// Custom run: one scenario from a config file (a sweep spec whose
+/// values are all single — the same parser, minus the grid).
 fn run_custom(args: &Args, csv: bool) -> Result<(), String> {
-    use crate::fpga::hwa::{spec_by_name, table3};
-    use crate::sim::system::{FabricKind, NetKind, System, SystemConfig};
-    use crate::workload::random::measure_open_rate_point;
-
-    let cfg_text = match args.get("config") {
-        Some(path) => ConfigText::load(std::path::Path::new(path))?,
-        None => ConfigText::parse("")?,
+    let sweep = match args.get("config") {
+        Some(path) => SweepSpec::load(std::path::Path::new(path))?,
+        None => SweepSpec::parse_toml("name = custom")?,
     };
-    let hwas = cfg_text
-        .get("system.hwas")
-        .map(|s| s.to_string())
-        .unwrap_or_else(|| "first8".to_string());
-    let specs = match hwas.as_str() {
-        "first8" => table3().into_iter().take(8).collect(),
-        "jpeg" => vec![
-            spec_by_name("izigzag").unwrap(),
-            spec_by_name("iquantize").unwrap(),
-            spec_by_name("idct").unwrap(),
-            spec_by_name("shiftbound").unwrap(),
-        ],
-        list => list
-            .split(|c| c == '+' || c == ',')
-            .map(|n| {
-                spec_by_name(n.trim())
-                    .ok_or_else(|| format!("unknown HWA {n:?}"))
-            })
-            .collect::<Result<Vec<_>, _>>()?,
-    };
-    let mut sys_cfg = SystemConfig::paper(specs);
-    sys_cfg.n_tbs = cfg_text.get_or("system.task_buffers", 2usize)?;
-    sys_cfg.pr_group = cfg_text.get_or("system.pr_group", 4usize)?;
-    sys_cfg.ps_group = cfg_text.get_or("system.ps_group", 4usize)?;
-    sys_cfg.net = match cfg_text.get("system.net").unwrap_or("noc") {
-        "axi" => NetKind::Axi,
-        _ => NetKind::Noc,
-    };
-    if cfg_text.get("system.fabric") == Some("shared_cache") {
-        sys_cfg.fabric = FabricKind::SharedCache {
-            cache_bytes: cfg_text.get_or("system.cache_kib", 128u32)? * 1024,
-        };
+    let scenarios = sweep.expand()?;
+    if scenarios.len() != 1 {
+        return Err(format!(
+            "run: config expands to {} scenarios; use `accnoc sweep` for \
+             grids",
+            scenarios.len()
+        ));
     }
-    let rate: f64 = cfg_text.get_or("workload.rate_per_us", 4.0)?;
-    let seed: u64 = cfg_text.get_or("workload.seed", 7u64)?;
-    let warmup: u64 = cfg_text.get_or("workload.warmup_us", 5u64)?;
-    let window: u64 = cfg_text.get_or("workload.window_us", 40u64)?;
-    let mut sys = System::new(sys_cfg);
-    sys.set_open_loop(rate, seed);
-    let p = measure_open_rate_point(&mut sys, warmup, window);
-    let mut t = crate::util::table::Table::new(
-        "custom run",
-        &["metric", "value"],
+    let report = SweepRunner::with_threads(1).run(&sweep.name, scenarios)?;
+    emit(report.table(), csv);
+    Ok(())
+}
+
+/// The `sweep` verb: expand a TOML/JSON spec, run the grid on all host
+/// cores, write the machine-readable report.
+fn run_sweep(args: &Args, csv: bool) -> Result<(), String> {
+    let path = args
+        .positional
+        .first()
+        .ok_or("sweep: missing spec path (see configs/)")?;
+    let sweep = SweepSpec::load(std::path::Path::new(path))?;
+    let scenarios = sweep.expand()?;
+    if args.has_flag("dry-run") {
+        println!(
+            "sweep {}: {} scenarios from {} axes",
+            sweep.name,
+            scenarios.len(),
+            sweep.axes().len()
+        );
+        for s in &scenarios {
+            println!("  {}", s.name);
+        }
+        return Ok(());
+    }
+    let runner = match args.get_parse::<usize>("threads")? {
+        Some(n) => SweepRunner::with_threads(n),
+        None => SweepRunner::new(),
+    };
+    eprintln!(
+        "sweep {}: {} scenarios on {} threads",
+        sweep.name,
+        scenarios.len(),
+        runner.threads()
     );
-    t.row(&["injection (flits/us)".into(), format!("{:.2}", p.injection_flits_per_us)]);
-    t.row(&["throughput (flits/us)".into(), format!("{:.2}", p.throughput_flits_per_us)]);
-    t.row(&["busy fraction".into(), format!("{:.3}", p.busy_fraction)]);
-    t.row(&["completions (/us)".into(), format!("{:.2}", p.completions_per_us)]);
-    t.row(&["tasks executed".into(), sys.fabric.tasks_executed().to_string()]);
-    emit(t, csv);
+    let t0 = std::time::Instant::now();
+    let report = runner.run(&sweep.name, scenarios)?;
+    let wall = t0.elapsed();
+    emit(report.table(), csv);
+    let out = args
+        .get("out")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| sweep.output_path());
+    report.write_json(std::path::Path::new(&out))?;
+    eprintln!(
+        "sweep {}: {} scenarios in {:.2} s -> {out}",
+        sweep.name,
+        report.scenarios.len(),
+        wall.as_secs_f64()
+    );
+    if let Some(csv_out) = args.get("csv-out") {
+        report.write_csv(std::path::Path::new(csv_out))?;
+        eprintln!("sweep {}: CSV -> {csv_out}", sweep.name);
+    }
     Ok(())
 }
 

@@ -26,5 +26,6 @@ pub mod flit;
 pub mod noc;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod workload;
 pub mod util;

@@ -4,76 +4,62 @@
 //! Paper result: speedup grows with chaining depth, because each chained
 //! hop eliminates a result+request+payload round trip over the NoC whose
 //! processor-side packet send/receive cost dominates.
+//!
+//! One `jpeg_chain` scenario per depth, all four running concurrently in
+//! a [`sweep`](crate::sweep) grid.
 
-use crate::clock::PS_PER_US;
-use crate::cmp::apps::jpeg_chain_depth_program;
-use crate::fpga::hwa::spec_by_name;
-use crate::sim::system::{System, SystemConfig};
+use crate::sweep::{ScenarioSpec, SweepReport, SweepRunner, WorkloadSpec};
 use crate::util::table::Table;
-use crate::workload::jpeg::BlockImage;
 
 /// Blocks decoded per run.
 pub const N_BLOCKS: usize = 12;
 
-fn chain_system() -> System {
-    let mut cfg = SystemConfig::paper(vec![
-        spec_by_name("izigzag").unwrap(),
-        spec_by_name("iquantize").unwrap(),
-        spec_by_name("idct").unwrap(),
-        spec_by_name("shiftbound").unwrap(),
-    ]);
-    cfg.chain_groups = vec![vec![0, 1, 2, 3]];
-    System::new(cfg)
-}
+/// The synthetic-image seed (also the scenario seed).
+const IMAGE_SEED: u64 = 0xF16;
 
-pub struct Fig10Point {
-    pub depth: u8,
-    pub total_us: f64,
-}
-
-pub fn run_depth(depth: u8) -> Fig10Point {
-    let mut sys = chain_system();
-    let img = BlockImage::synthetic(N_BLOCKS, 0xF16);
-    let words = img.coefficient_words();
-    // One processor decodes block after block (the §6.6 experiment).
-    let mut prog = Vec::new();
-    for block in words.iter() {
-        for seg in jpeg_chain_depth_program(depth) {
-            // Patch the real coefficients into the first invocation of
-            // each block's program (the chain entry).
-            prog.push(match seg {
-                crate::cmp::core::Segment::Invoke(mut spec) => {
-                    if spec.hwa_id == 0 {
-                        spec.words = block.clone();
-                    }
-                    crate::cmp::core::Segment::Invoke(spec)
-                }
-                other => other,
-            });
-        }
-    }
-    sys.load_program(0, prog);
-    let done = sys.run_until_done(100_000 * PS_PER_US);
-    assert!(done, "fig10 depth {depth} did not finish");
-    let total_us =
-        sys.procs[0].finished_at.unwrap() as f64 / PS_PER_US as f64;
-    Fig10Point { depth, total_us }
+/// The Fig. 10 grid: chaining depths 0..=3 over the chained JPEG system.
+pub fn grid() -> Vec<ScenarioSpec> {
+    (0..=3u8)
+        .map(|depth| {
+            ScenarioSpec::new(&format!("fig10[depth={depth}]"))
+                .hwas("jpeg")
+                .chain(true)
+                .workload(WorkloadSpec::JpegChain {
+                    depth,
+                    blocks: N_BLOCKS,
+                })
+                .seed(IMAGE_SEED)
+                .deadline_us(100_000)
+        })
+        .collect()
 }
 
 pub struct Fig10 {
-    pub points: Vec<Fig10Point>,
+    pub report: SweepReport,
 }
 
 pub fn run() -> Fig10 {
     Fig10 {
-        points: (0..=3).map(run_depth).collect(),
+        report: SweepRunner::new()
+            .run("fig10", grid())
+            .expect("fig10 sweep drains"),
     }
 }
 
 impl Fig10 {
+    pub fn total_us(&self, depth: u8) -> f64 {
+        self.report
+            .stats_where(|s| {
+                matches!(
+                    s.workload,
+                    WorkloadSpec::JpegChain { depth: d, .. } if d == depth
+                )
+            })
+            .total_us
+    }
+
     pub fn speedup(&self, depth: u8) -> f64 {
-        let base = self.points[0].total_us;
-        base / self.points[depth as usize].total_us
+        self.total_us(0) / self.total_us(depth)
     }
 
     pub fn table(&self) -> Table {
@@ -81,11 +67,11 @@ impl Fig10 {
             "Fig. 10 — chaining speedup vs depth 0 (JPEG chain)",
             &["chaining depth", "total time (us)", "speedup"],
         );
-        for p in &self.points {
+        for depth in 0..=3u8 {
             t.row(&[
-                p.depth.to_string(),
-                format!("{:.2}", p.total_us),
-                format!("{:.2}x", self.speedup(p.depth)),
+                depth.to_string(),
+                format!("{:.2}", self.total_us(depth)),
+                format!("{:.2}x", self.speedup(depth)),
             ]);
         }
         t

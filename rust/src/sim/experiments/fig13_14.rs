@@ -8,11 +8,11 @@
 //! Dfdiv-HWA is execution-bound and identical everywhere. Communication
 //! latency: NoC 2.42x better than AXI, 1.63x better than the cache.
 
-use crate::clock::PS_PER_US;
-use crate::sim::system::{FabricKind, NetKind, System, SystemConfig};
+use crate::sim::system::{FabricKind, NetKind};
+use crate::sweep::{ScenarioSpec, SweepRunner, WorkloadSpec};
 use crate::util::table::Table;
 
-use super::fig8::{run_series, Workload};
+use super::fig8::Workload;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Prototype {
@@ -57,27 +57,62 @@ pub const PROTOTYPES: [Prototype; 3] =
 pub struct Fig13 {
     /// (prototype, workload, max throughput flits/µs)
     pub results: Vec<(Prototype, Workload, f64)>,
+    /// All 36 underlying rate-point scenarios (3 prototypes x 3
+    /// workloads x 4 rates) for `BENCH_fig13_14.json`.
+    pub report: crate::sweep::SweepReport,
+}
+
+/// Rates probed per (prototype, workload) cell; the cell's result is the
+/// max throughput across them.
+pub const FIG13_RATES: [f64; 4] = [2.0, 8.0, 16.0, 24.0];
+
+const FIG13_WORKLOADS: [Workload; 3] =
+    [Workload::IzigzagHwa, Workload::EightHwa, Workload::DfdivHwa];
+
+/// The full Fig. 13 grid, one sweep across every prototype and workload
+/// (sharded over all host cores at once instead of nine serial series).
+pub fn fig13_grid(warmup_us: u64, window_us: u64) -> Vec<ScenarioSpec> {
+    let mut specs = Vec::new();
+    for proto in PROTOTYPES {
+        for wl in FIG13_WORKLOADS {
+            for rate in FIG13_RATES {
+                specs.push(
+                    ScenarioSpec::new(&format!(
+                        "fig13[{},{},rate={rate}]",
+                        proto.name(),
+                        wl.name()
+                    ))
+                    .net(proto.net())
+                    .fabric(proto.fabric())
+                    .hwas(wl.hwa_mix())
+                    .workload(WorkloadSpec::OpenLoop { rate_per_us: rate })
+                    .warmup_us(warmup_us)
+                    .window_us(window_us)
+                    .seed(0x1314),
+                );
+            }
+        }
+    }
+    specs
 }
 
 pub fn run_fig13(warmup_us: u64, window_us: u64) -> Fig13 {
-    let rates = [2.0, 8.0, 16.0, 24.0];
+    let report = SweepRunner::new()
+        .run("fig13", fig13_grid(warmup_us, window_us))
+        .expect("fig13 open-loop sweep");
     let mut results = Vec::new();
+    let mut cells = report.scenarios.chunks(FIG13_RATES.len());
     for proto in PROTOTYPES {
-        for wl in [Workload::IzigzagHwa, Workload::EightHwa, Workload::DfdivHwa]
-        {
-            let series = run_series(
-                wl,
-                &rates,
-                proto.net(),
-                proto.fabric(),
-                warmup_us,
-                window_us,
-                0x1314,
-            );
-            results.push((proto, wl, series.max_throughput()));
+        for wl in FIG13_WORKLOADS {
+            let cell = cells.next().expect("grid covers every cell");
+            let max = cell
+                .iter()
+                .map(|s| s.stats.throughput_flits_per_us)
+                .fold(0.0, f64::max);
+            results.push((proto, wl, max));
         }
     }
-    Fig13 { results }
+    Fig13 { results, report }
 }
 
 impl Fig13 {
@@ -127,6 +162,26 @@ impl Fig13 {
 pub struct Fig14 {
     /// (prototype, mean communication latency µs)
     pub results: Vec<(Prototype, f64)>,
+    /// The three underlying scenarios (latency percentiles included).
+    pub report: crate::sweep::SweepReport,
+}
+
+/// The Fig. 14 scenario grid: one loaded open-loop run per prototype.
+pub fn fig14_grid() -> Vec<ScenarioSpec> {
+    const RATE: f64 = 8.0;
+    PROTOTYPES
+        .iter()
+        .map(|proto| {
+            ScenarioSpec::new(&format!("fig14[{}]", proto.name()))
+                .net(proto.net())
+                .fabric(proto.fabric())
+                .hwas(Workload::IzigzagHwa.hwa_mix())
+                .workload(WorkloadSpec::OpenLoop { rate_per_us: RATE })
+                .warmup_us(5)
+                .window_us(25)
+                .seed(0x1414)
+        })
+        .collect()
 }
 
 /// Mean request->result latency for invocations completing inside a
@@ -136,41 +191,22 @@ pub struct Fig14 {
 /// baselines are saturated at this rate, so their queueing delay is the
 /// latency gap the paper reports.
 pub fn run_fig14() -> Fig14 {
-    const RATE: f64 = 8.0;
-    let mut results = Vec::new();
-    for proto in PROTOTYPES {
-        let mut cfg = SystemConfig::paper(Workload::IzigzagHwa.specs());
-        cfg.net = proto.net();
-        cfg.fabric = proto.fabric();
-        let mut sys = System::new(cfg);
-        sys.set_open_loop(RATE, 0x1414);
-        // Warmup, then measure latencies of completions in the window.
-        let warm_end = sys.now() + 5 * PS_PER_US;
-        while sys.now() < warm_end {
-            sys.step();
-        }
-        let skip: Vec<usize> = sys
-            .open_sources
-            .iter()
-            .flatten()
-            .map(|s| s.latencies_ps.len())
-            .collect();
-        let end = sys.now() + 25 * PS_PER_US;
-        while sys.now() < end {
-            sys.step();
-        }
-        let mut total = 0f64;
-        let mut count = 0f64;
-        for (s, skip_n) in sys.open_sources.iter().flatten().zip(&skip) {
-            for l in s.latencies_ps.iter().skip(*skip_n) {
-                total += *l as f64;
-                count += 1.0;
-            }
-        }
-        assert!(count > 0.0, "fig14 {}: no completions", proto.name());
-        results.push((proto, total / count / PS_PER_US as f64));
-    }
-    Fig14 { results }
+    let report = SweepRunner::new()
+        .run("fig14", fig14_grid())
+        .expect("fig14 open-loop sweep");
+    let results = PROTOTYPES
+        .iter()
+        .zip(&report.scenarios)
+        .map(|(proto, s)| {
+            assert!(
+                s.stats.latency.count > 0,
+                "fig14 {}: no completions",
+                proto.name()
+            );
+            (*proto, s.stats.latency.mean_us)
+        })
+        .collect();
+    Fig14 { results, report }
 }
 
 impl Fig14 {
@@ -229,7 +265,7 @@ mod tests {
         assert!(prop > 1.15 * f.get(Prototype::Axi, wl), "axi margin");
         assert!(prop > 1.15 * f.get(Prototype::SharedCache, wl), "cache margin");
         // Eight-HWA: mixed exec times damp the gap in our calibration
-        // (paper reports larger losses; see EXPERIMENTS.md §Deviations) —
+        // (paper reports larger losses; see docs/EXPERIMENTS.md §Deviations) —
         // assert the proposal is never materially beaten.
         let wl = Workload::EightHwa;
         let prop = f.get(Prototype::Proposed, wl);

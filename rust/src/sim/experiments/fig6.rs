@@ -4,109 +4,89 @@
 //!
 //! Paper result: Dfdiv flat across TB counts; Izigzag improves ~28.4%
 //! going from 1 to 2 TBs and is flat beyond.
+//!
+//! The experiment is a [`sweep`](crate::sweep) grid: 2 HWAs x 4 TB
+//! depths, each scenario a burst of back-to-back requests from every
+//! processor (§6.2: "multiple requests for the same HWA ... from
+//! different processors simultaneously").
 
-use crate::clock::PS_PER_US;
-use crate::cmp::core::{InvokeSpec, Segment};
-use crate::fpga::hwa::spec_by_name;
-use crate::sim::system::{System, SystemConfig};
+use crate::sweep::{ScenarioSpec, SweepReport, SweepRunner, WorkloadSpec};
 use crate::util::table::Table;
 
-/// Requests per processor issued back-to-back at the same HWA (§6.2:
-/// "multiple requests for the same HWA ... from different processors
-/// simultaneously").
+/// Requests per processor issued back-to-back at the same HWA.
 const REQUESTS_PER_PROC: usize = 8;
 
-pub struct Fig6Point {
-    pub hwa: &'static str,
-    pub n_tbs: usize,
-    pub total_us: f64,
-}
+/// The swept TB depths.
+pub const TB_DEPTHS: [usize; 4] = [1, 2, 3, 4];
 
-pub fn run_point(hwa: &'static str, n_tbs: usize) -> Fig6Point {
-    let spec = spec_by_name(hwa).expect("known benchmark");
-    let mut cfg = SystemConfig::paper(vec![spec.clone()]);
-    cfg.n_tbs = n_tbs;
-    let mut sys = System::new(cfg);
-    for i in 0..sys.n_procs() {
-        let prog: Vec<Segment> = (0..REQUESTS_PER_PROC)
-            .map(|_| {
-                Segment::Invoke(InvokeSpec::direct(
-                    0,
-                    (0..spec.in_words as u32).collect(),
-                    spec.out_words,
-                ))
-            })
-            .collect();
-        sys.load_program(i, prog);
+/// The two extreme-pattern benchmarks.
+pub const HWAS: [&str; 2] = ["dfdiv", "izigzag"];
+
+/// The Fig. 6 scenario grid (8 points).
+pub fn grid() -> Vec<ScenarioSpec> {
+    let mut specs = Vec::new();
+    for hwa in HWAS {
+        for n_tbs in TB_DEPTHS {
+            specs.push(
+                ScenarioSpec::new(&format!("fig6[{hwa},tbs={n_tbs}]"))
+                    .hwas(&format!("{hwa}*1"))
+                    .task_buffers(n_tbs)
+                    .workload(WorkloadSpec::Burst {
+                        requests_per_proc: REQUESTS_PER_PROC,
+                    })
+                    .deadline_us(2_000),
+            );
+        }
     }
-    let done = sys.run_until_done(2_000 * PS_PER_US);
-    assert!(done, "fig6 run did not drain ({hwa}, {n_tbs} TBs)");
-    let total_us = sys
-        .procs
-        .iter()
-        .filter_map(|p| p.finished_at)
-        .max()
-        .unwrap_or(0) as f64
-        / PS_PER_US as f64;
-    Fig6Point {
-        hwa,
-        n_tbs,
-        total_us,
-    }
+    specs
 }
 
 pub struct Fig6 {
-    pub points: Vec<Fig6Point>,
+    pub report: SweepReport,
 }
 
 pub fn run() -> Fig6 {
-    let mut points = Vec::new();
-    for hwa in ["dfdiv", "izigzag"] {
-        for n_tbs in 1..=4 {
-            points.push(run_point(hwa, n_tbs));
-        }
+    Fig6 {
+        report: SweepRunner::new()
+            .run("fig6", grid())
+            .expect("fig6 sweep drains"),
     }
-    Fig6 { points }
 }
 
 impl Fig6 {
+    /// Drain time (µs) for one (hwa, TB depth) grid point.
+    pub fn total_us(&self, hwa: &str, n_tbs: usize) -> f64 {
+        self.report
+            .stats_where(|s| {
+                s.hwas.to_string() == format!("{hwa}*1") && s.n_tbs == n_tbs
+            })
+            .total_us
+    }
+
     pub fn table(&self) -> Table {
         let mut t = Table::new(
             "Fig. 6 — execution time vs number of task buffers",
             &["hwa", "task buffers", "total time (us)", "vs 1 TB"],
         );
-        for hwa in ["dfdiv", "izigzag"] {
-            let base = self
-                .points
-                .iter()
-                .find(|p| p.hwa == hwa && p.n_tbs == 1)
-                .map(|p| p.total_us)
-                .unwrap_or(f64::NAN);
-            for p in self.points.iter().filter(|p| p.hwa == hwa) {
+        for hwa in HWAS {
+            let base = self.total_us(hwa, 1);
+            for n_tbs in TB_DEPTHS {
+                let total = self.total_us(hwa, n_tbs);
                 t.row(&[
-                    p.hwa.to_string(),
-                    p.n_tbs.to_string(),
-                    format!("{:.2}", p.total_us),
-                    format!("{:+.1}%", 100.0 * (p.total_us - base) / base),
+                    hwa.to_string(),
+                    n_tbs.to_string(),
+                    format!("{total:.2}"),
+                    format!("{:+.1}%", 100.0 * (total - base) / base),
                 ]);
             }
         }
         t
     }
 
+    /// Percentage improvement going from one to two task buffers.
     pub fn improvement_1_to_2(&self, hwa: &str) -> f64 {
-        let t1 = self
-            .points
-            .iter()
-            .find(|p| p.hwa == hwa && p.n_tbs == 1)
-            .unwrap()
-            .total_us;
-        let t2 = self
-            .points
-            .iter()
-            .find(|p| p.hwa == hwa && p.n_tbs == 2)
-            .unwrap()
-            .total_us;
+        let t1 = self.total_us(hwa, 1);
+        let t2 = self.total_us(hwa, 2);
         100.0 * (t1 - t2) / t1
     }
 }
@@ -133,18 +113,8 @@ mod tests {
     #[test]
     fn no_further_gain_beyond_two_tbs() {
         let fig = run();
-        let t2 = fig
-            .points
-            .iter()
-            .find(|p| p.hwa == "izigzag" && p.n_tbs == 2)
-            .unwrap()
-            .total_us;
-        let t4 = fig
-            .points
-            .iter()
-            .find(|p| p.hwa == "izigzag" && p.n_tbs == 4)
-            .unwrap()
-            .total_us;
+        let t2 = fig.total_us("izigzag", 2);
+        let t4 = fig.total_us("izigzag", 4);
         let gain = 100.0 * (t2 - t4) / t2;
         assert!(gain < 6.0, "beyond 2 TBs gain should be small: {gain:.1}%");
     }

@@ -7,11 +7,16 @@
 //! throughput 24.81 flits/µs (~5.7% below injection), drooping slightly
 //! past saturation; (b) saturates later, throughput well below injection;
 //! (c) throughput flat — execution-bound.
+//!
+//! Each series is a [`sweep`](crate::sweep) grid over the request-rate
+//! axis; all points of a series run concurrently.
 
-use crate::fpga::hwa::{spec_by_name, table3, HwaSpec};
-use crate::sim::system::{FabricKind, NetKind, System, SystemConfig};
+use crate::fpga::hwa::HwaSpec;
+use crate::sim::system::{FabricKind, NetKind};
+use crate::sweep::{
+    RunStats, ScenarioSpec, SweepReport, SweepRunner, WorkloadSpec,
+};
 use crate::util::table::Table;
-use crate::workload::random::{measure_open_rate_point, RatePoint};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Workload {
@@ -29,14 +34,20 @@ impl Workload {
         }
     }
 
-    pub fn specs(&self) -> Vec<HwaSpec> {
+    /// The accelerator mix, in [`crate::sweep::HwaMix`] syntax.
+    pub fn hwa_mix(&self) -> &'static str {
         match self {
-            Workload::IzigzagHwa => {
-                vec![spec_by_name("izigzag").unwrap(); 8]
-            }
-            Workload::EightHwa => table3().into_iter().take(8).collect(),
-            Workload::DfdivHwa => vec![spec_by_name("dfdiv").unwrap(); 8],
+            Workload::IzigzagHwa => "izigzag*8",
+            Workload::EightHwa => "first8",
+            Workload::DfdivHwa => "dfdiv*8",
         }
+    }
+
+    pub fn specs(&self) -> Vec<HwaSpec> {
+        crate::sweep::HwaMix::parse(self.hwa_mix())
+            .unwrap()
+            .to_specs()
+            .unwrap()
     }
 }
 
@@ -48,9 +59,39 @@ pub fn default_rates() -> Vec<f64> {
 pub struct Fig8Series {
     pub workload: Workload,
     pub rates: Vec<f64>,
-    pub points: Vec<RatePoint>,
+    pub report: SweepReport,
 }
 
+/// The scenario grid for one series (one point per rate).
+#[allow(clippy::too_many_arguments)]
+pub fn grid(
+    workload: Workload,
+    rates: &[f64],
+    net: NetKind,
+    fabric: FabricKind,
+    warmup_us: u64,
+    window_us: u64,
+    seed: u64,
+) -> Vec<ScenarioSpec> {
+    rates
+        .iter()
+        .map(|rate| {
+            ScenarioSpec::new(&format!(
+                "fig8[{},rate={rate}]",
+                workload.name()
+            ))
+            .net(net)
+            .fabric(fabric)
+            .hwas(workload.hwa_mix())
+            .workload(WorkloadSpec::OpenLoop { rate_per_us: *rate })
+            .warmup_us(warmup_us)
+            .window_us(window_us)
+            .seed(seed)
+        })
+        .collect()
+}
+
+#[allow(clippy::too_many_arguments)]
 pub fn run_series(
     workload: Workload,
     rates: &[f64],
@@ -60,20 +101,59 @@ pub fn run_series(
     window_us: u64,
     seed: u64,
 ) -> Fig8Series {
-    let mut points = Vec::new();
-    for rate in rates {
-        let mut cfg = SystemConfig::paper(workload.specs());
-        cfg.net = net;
-        cfg.fabric = fabric;
-        let mut sys = System::new(cfg);
-        sys.set_open_loop(*rate, seed);
-        points.push(measure_open_rate_point(&mut sys, warmup_us, window_us));
-    }
+    let report = SweepRunner::new()
+        .run(
+            &format!("fig8-{}", workload.name()),
+            grid(workload, rates, net, fabric, warmup_us, window_us, seed),
+        )
+        .expect("fig8 open-loop sweep cannot miss a deadline");
     Fig8Series {
         workload,
         rates: rates.to_vec(),
-        points,
+        report,
     }
+}
+
+/// All three paper series as ONE sweep grid (24 scenarios sharded across
+/// every host core at once) — the bench/CLI path. Returns the per-series
+/// views plus the combined report for `BENCH_fig8.json`.
+pub fn run_all(
+    warmup_us: u64,
+    window_us: u64,
+) -> (Vec<Fig8Series>, SweepReport) {
+    let workloads =
+        [Workload::IzigzagHwa, Workload::EightHwa, Workload::DfdivHwa];
+    let rates = default_rates();
+    let mut specs = Vec::new();
+    for wl in workloads {
+        specs.extend(grid(
+            wl,
+            &rates,
+            NetKind::Noc,
+            FabricKind::Buffered,
+            warmup_us,
+            window_us,
+            0xF18,
+        ));
+    }
+    let report = SweepRunner::new()
+        .run("fig8", specs)
+        .expect("fig8 open-loop sweep cannot miss a deadline");
+    let series = workloads
+        .iter()
+        .enumerate()
+        .map(|(i, wl)| Fig8Series {
+            workload: *wl,
+            rates: rates.clone(),
+            report: SweepReport {
+                name: format!("fig8-{}", wl.name()),
+                scenarios: report.scenarios
+                    [i * rates.len()..(i + 1) * rates.len()]
+                    .to_vec(),
+            },
+        })
+        .collect();
+    (series, report)
 }
 
 /// The paper's configuration: NoC + buffered fabric.
@@ -90,6 +170,15 @@ pub fn run(workload: Workload, warmup_us: u64, window_us: u64) -> Fig8Series {
 }
 
 impl Fig8Series {
+    /// Stats per rate point, in rate order.
+    pub fn points(&self) -> Vec<&RunStats> {
+        self.report.scenarios.iter().map(|s| &s.stats).collect()
+    }
+
+    pub fn point(&self, i: usize) -> &RunStats {
+        &self.report.scenarios[i].stats
+    }
+
     pub fn table(&self) -> Table {
         let mut t = Table::new(
             &format!("Fig. 8 — {}", self.workload.name()),
@@ -99,29 +188,31 @@ impl Fig8Series {
                 "throughput (flits/us)",
                 "busy",
                 "done (/us)",
+                "lat p99 (us)",
             ],
         );
-        for (r, p) in self.rates.iter().zip(&self.points) {
+        for (r, p) in self.rates.iter().zip(self.points()) {
             t.row(&[
                 format!("{r:.2}"),
                 format!("{:.2}", p.injection_flits_per_us),
                 format!("{:.2}", p.throughput_flits_per_us),
                 format!("{:.0}%", 100.0 * p.busy_fraction),
                 format!("{:.2}", p.completions_per_us),
+                format!("{:.3}", p.latency.p99_us),
             ]);
         }
         t
     }
 
     pub fn max_throughput(&self) -> f64 {
-        self.points
+        self.points()
             .iter()
             .map(|p| p.throughput_flits_per_us)
             .fold(0.0, f64::max)
     }
 
     pub fn max_injection(&self) -> f64 {
-        self.points
+        self.points()
             .iter()
             .map(|p| p.injection_flits_per_us)
             .fold(0.0, f64::max)
@@ -158,8 +249,8 @@ mod tests {
         let s = quick(Workload::DfdivHwa);
         // Throughput flat: the two highest-rate points differ little
         // while injection grows.
-        let t_hi = s.points[3].throughput_flits_per_us;
-        let t_mid = s.points[2].throughput_flits_per_us;
+        let t_hi = s.point(3).throughput_flits_per_us;
+        let t_mid = s.point(2).throughput_flits_per_us;
         assert!(
             (t_hi - t_mid).abs() / t_mid.max(1e-9) < 0.25,
             "dfdiv throughput should plateau: {t_mid} -> {t_hi}"

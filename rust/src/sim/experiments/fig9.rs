@@ -4,127 +4,81 @@
 //! Paper result: the all-FPGA partitions (GSM.p3, JPEG.p5) have the
 //! smallest overall latency; FPGA acceleration wins in every partition
 //! even including communication overhead.
+//!
+//! Each (app, partition) pair is one `app_partition` scenario in a
+//! [`sweep`](crate::sweep) grid; the breakdown lands in
+//! `RunStats::{processor_us, fpga_us, transmission_us}`.
 
-use crate::clock::{Ps, PS_PER_US};
-use crate::cmp::apps::{gsm_app, jpeg_app, App};
-use crate::fpga::hwa::{spec_by_name, HwaSpec, Resources};
-use crate::sim::system::{System, SystemConfig};
+use crate::sweep::{
+    AppKind, RunStats, ScenarioSpec, SweepReport, SweepRunner, WorkloadSpec,
+};
 use crate::util::table::Table;
 
-/// HWA spec for an app function that has no Table 3 entry (JPEG entropy
-/// decode and the GSM stages) — Huffman/LPC-class HLS kernels.
-fn custom_spec(name: &'static str, exec: u64, words: usize, fmax: f64) -> HwaSpec {
-    HwaSpec {
-        name,
-        exec_cycles: exec,
-        in_words: words,
-        out_words: words,
-        fmax_mhz: fmax,
-        resources: Resources::new(5000, 2, 8, 4000),
-        artifact: None,
+// The spec mapping for app functions lives with the apps themselves.
+pub use crate::cmp::apps::app_specs;
+
+/// One partition's scenario (deadline per the §6.5 budget).
+pub fn scenario(app: AppKind, partition: usize) -> ScenarioSpec {
+    ScenarioSpec::new(&format!("fig9[{}.p{partition}]", app.name()))
+        .workload(WorkloadSpec::AppPartition { app, partition })
+        .deadline_us(50_000)
+}
+
+/// The full grid: every partition of both apps (4 + 6 scenarios).
+pub fn grid() -> Vec<ScenarioSpec> {
+    let mut specs = Vec::new();
+    for app in [AppKind::Gsm, AppKind::Jpeg] {
+        for k in 0..app.app().n_partitions() {
+            specs.push(scenario(app, k));
+        }
     }
-}
-
-/// Specs for the app's functions, hwa_id = function index.
-pub fn app_specs(app: &App) -> Vec<HwaSpec> {
-    app.functions
-        .iter()
-        .map(|f| match f.name {
-            "izigzag" => spec_by_name("izigzag").unwrap(),
-            "iquantize" => spec_by_name("iquantize").unwrap(),
-            "idct" => spec_by_name("idct").unwrap(),
-            "shiftbound" => spec_by_name("shiftbound").unwrap(),
-            "autocorrelation" => custom_spec("autocorr", 180, 8, 260.0),
-            "reflection_coeff" => custom_spec("reflect", 140, 8, 260.0),
-            "lar_quantize" => custom_spec("larq", 60, 8, 300.0),
-            "entropy_decode" => custom_spec("entropy", 500, 64, 250.0),
-            other => panic!("no spec mapping for {other}"),
-        })
-        .collect()
-}
-
-#[derive(Debug, Clone, Copy)]
-pub struct Breakdown {
-    pub partition: usize,
-    /// µs of pure software execution on the core.
-    pub processor_us: f64,
-    /// µs of HWA execution on the FPGA.
-    pub fpga_us: f64,
-    /// µs of everything else (request/grant/payload/result transmission).
-    pub transmission_us: f64,
-}
-
-impl Breakdown {
-    pub fn total_us(&self) -> f64 {
-        self.processor_us + self.fpga_us + self.transmission_us
-    }
+    specs
 }
 
 /// Run one partition of an app on a single processor.
-pub fn run_partition(app: &App, k: usize) -> Breakdown {
-    let mut cfg = SystemConfig::paper(app_specs(app));
-    cfg.chain_groups = vec![];
-    let mut sys = System::new(cfg);
-    sys.load_program(0, app.partition_program(k));
-    let done = sys.run_until_done(50_000 * PS_PER_US);
-    assert!(done, "{}.p{k} did not finish", app.name);
-    let end: Ps = sys.procs[0].finished_at.expect("finished");
-    let processor_ps = sys.procs[0].sw_cycles * 1000; // 1 GHz core
-    // FPGA execution time: sum over completed tasks of exec intervals.
-    let fpga_ps: u64 = sys
-        .fabric
-        .buffered()
-        .map(|f| {
-            f.channels
-                .iter()
-                .flat_map(|c| c.completed.iter())
-                .map(|t| t.t_exec_end.saturating_sub(t.t_exec_start))
-                .sum()
-        })
-        .unwrap_or(0);
-    let transmission_ps = end.saturating_sub(processor_ps + fpga_ps);
-    Breakdown {
-        partition: k,
-        processor_us: processor_ps as f64 / PS_PER_US as f64,
-        fpga_us: fpga_ps as f64 / PS_PER_US as f64,
-        transmission_us: transmission_ps as f64 / PS_PER_US as f64,
-    }
+pub fn run_partition(app: AppKind, k: usize) -> RunStats {
+    crate::sweep::run_scenario(&scenario(app, k))
+        .expect("fig9 partition drains")
 }
 
 pub struct Fig9 {
-    pub gsm: Vec<Breakdown>,
-    pub jpeg: Vec<Breakdown>,
+    pub report: SweepReport,
 }
 
 pub fn run() -> Fig9 {
-    let gsm = gsm_app(0);
-    let jpeg = jpeg_app(0);
     Fig9 {
-        gsm: (0..=gsm.functions.len())
-            .map(|k| run_partition(&gsm, k))
-            .collect(),
-        jpeg: (0..=jpeg.functions.len())
-            .map(|k| run_partition(&jpeg, k))
-            .collect(),
+        report: SweepRunner::new()
+            .run("fig9", grid())
+            .expect("fig9 sweep drains"),
     }
 }
 
 impl Fig9 {
+    pub fn breakdown(&self, app: AppKind, partition: usize) -> &RunStats {
+        self.report.stats_where(|s| {
+            s.workload
+                == WorkloadSpec::AppPartition { app, partition }
+        })
+    }
+
     pub fn table(&self) -> Table {
         let mut t = Table::new(
             "Fig. 9 — latency breakdown per partition (µs)",
             &["partition", "processor", "FPGA", "transmission", "total"],
         );
-        for (name, rows) in [("GSM", &self.gsm), ("JPEG", &self.jpeg)] {
-            for b in rows.iter() {
-                t.row(&[
-                    format!("{name}.p{}", b.partition),
-                    format!("{:.2}", b.processor_us),
-                    format!("{:.2}", b.fpga_us),
-                    format!("{:.2}", b.transmission_us),
-                    format!("{:.2}", b.total_us()),
-                ]);
-            }
+        for s in &self.report.scenarios {
+            let b = &s.stats;
+            t.row(&[
+                s.spec
+                    .name
+                    .trim_start_matches("fig9[")
+                    .trim_end_matches(']')
+                    .to_string(),
+                format!("{:.2}", b.processor_us),
+                format!("{:.2}", b.fpga_us),
+                format!("{:.2}", b.transmission_us),
+                format!("{:.2}", b.total_us),
+            ]);
         }
         t
     }
@@ -136,33 +90,30 @@ mod tests {
 
     #[test]
     fn all_fpga_partition_is_fastest_gsm() {
-        let app = gsm_app(0);
-        let p0 = run_partition(&app, 0);
-        let p3 = run_partition(&app, 3);
+        let p0 = run_partition(AppKind::Gsm, 0);
+        let p3 = run_partition(AppKind::Gsm, 3);
         assert!(
-            p3.total_us() < p0.total_us(),
+            p3.total_us < p0.total_us,
             "GSM.p3 {:.2} should beat GSM.p0 {:.2}",
-            p3.total_us(),
-            p0.total_us()
+            p3.total_us,
+            p0.total_us
         );
         assert!(p3.processor_us < p0.processor_us);
     }
 
     #[test]
     fn jpeg_p5_beats_all_software() {
-        let app = jpeg_app(0);
-        let p0 = run_partition(&app, 0);
-        let p5 = run_partition(&app, 5);
-        assert!(p5.total_us() < p0.total_us());
+        let p0 = run_partition(AppKind::Jpeg, 0);
+        let p5 = run_partition(AppKind::Jpeg, 5);
+        assert!(p5.total_us < p0.total_us);
     }
 
     #[test]
     fn offloading_monotonically_helps_jpeg() {
         // Each additional offloaded function reduces (or at worst nearly
         // preserves) total latency — the Fig. 9 staircase.
-        let app = jpeg_app(0);
         let totals: Vec<f64> = (0..=5)
-            .map(|k| run_partition(&app, k).total_us())
+            .map(|k| run_partition(AppKind::Jpeg, k).total_us)
             .collect();
         for w in totals.windows(2) {
             assert!(
@@ -170,5 +121,16 @@ mod tests {
                 "partition step should not regress >10%: {totals:?}"
             );
         }
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let b = run_partition(AppKind::Gsm, 2);
+        let sum = b.processor_us + b.fpga_us + b.transmission_us;
+        assert!(
+            (sum - b.total_us).abs() < 1e-6,
+            "breakdown {sum} vs total {}",
+            b.total_us
+        );
     }
 }

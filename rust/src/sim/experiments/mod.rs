@@ -1,4 +1,12 @@
 //! One driver per paper figure/table (DESIGN.md §4 per-experiment index).
+//!
+//! Since ISSUE 2, every simulation-backed figure (fig6, fig8, fig9,
+//! fig10, fig13/14) is a declarative [`crate::sweep`] grid — the drivers
+//! here only build `ScenarioSpec`s, run them through `SweepRunner`
+//! (sharded across host cores) and render paper-style tables; benches
+//! additionally persist each `SweepReport` as `BENCH_fig*.json`. Table
+//! and fig7 outputs are closed-form (no simulation) and stay direct.
+//! See `docs/EXPERIMENTS.md` for the figure -> command -> artifact map.
 
 pub mod fig10;
 pub mod fig13_14;

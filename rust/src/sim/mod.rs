@@ -1,4 +1,26 @@
-//! Full-system simulation: system assembly and experiment drivers.
+//! Full-system simulation: system assembly ([`System`]) and the paper's
+//! experiment drivers (`experiments`, each a thin grid over
+//! [`crate::sweep`]).
+//!
+//! A [`System`] wires CMP cores, the interconnect (mesh NoC or AXI
+//! baseline), the FPGA fabric (distributed buffers or shared-cache
+//! baseline) and the MMU onto a multi-domain picosecond clock, with
+//! idle-skipping event-driven scheduling on top. Minimal closed loop:
+//!
+//! ```
+//! use accnoc::cmp::core::{InvokeSpec, Segment};
+//! use accnoc::fpga::hwa::spec_by_name;
+//! use accnoc::sim::{System, SystemConfig};
+//!
+//! let cfg = SystemConfig::paper(vec![spec_by_name("dfadd").unwrap()]);
+//! let mut sys = System::new(cfg);
+//! sys.load_program(
+//!     0,
+//!     vec![Segment::Invoke(InvokeSpec::direct(0, vec![1, 2, 3, 4], 2))],
+//! );
+//! assert!(sys.run_until_done(50_000_000)); // 50 simulated µs
+//! assert_eq!(sys.fabric.tasks_executed(), 1);
+//! ```
 
 pub mod experiments;
 pub mod system;

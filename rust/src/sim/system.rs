@@ -220,6 +220,19 @@ impl Fabric {
             Fabric::Cached(_) => {}
         }
     }
+
+    /// Malformed/over-capacity flits dropped by the channels (summed
+    /// across HWAs; the shared-cache baseline keeps no such counter).
+    pub fn rejected_flits(&self) -> u64 {
+        match self {
+            Fabric::Buffered(f) => f
+                .channels
+                .iter()
+                .map(|c| c.stats.rejected_flits)
+                .sum(),
+            Fabric::Cached(_) => 0,
+        }
+    }
 }
 
 pub struct System {
@@ -244,6 +257,10 @@ pub struct System {
     /// Clock edges actually dispatched (skipped edges excluded) — the
     /// scheduler's work metric, used by perf tests and hotpath_micro.
     pub edges_stepped: u64,
+    /// Clock edges the idle-skipping scheduler proved no-ops and
+    /// fast-forwarded past (summed over all domains) — reported per
+    /// scenario by `sweep::RunStats`.
+    pub edges_skipped: u64,
 }
 
 impl System {
@@ -340,6 +357,7 @@ impl System {
             idle_skip: true,
             skip_scratch: Vec::new(),
             edges_stepped: 0,
+            edges_skipped: 0,
         }
     }
 
@@ -447,6 +465,7 @@ impl System {
         }
         let mut skipped = std::mem::take(&mut self.skip_scratch);
         self.clk.skip_until(target, &mut skipped);
+        self.edges_skipped += skipped.iter().sum::<u64>();
         let n = skipped[self.noc_dom.0];
         if n > 0 {
             self.net.account_idle_cycles(n);

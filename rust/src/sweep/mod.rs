@@ -1,0 +1,30 @@
+//! Parallel scenario-sweep harness — the substrate behind every paper
+//! figure regeneration and scaling experiment.
+//!
+//! Three pieces (see `docs/EXPERIMENTS.md` for the figure-by-figure
+//! recipes):
+//!
+//! * [`ScenarioSpec`] / [`SweepSpec`] (`spec`) — declarative description
+//!   of one simulation (interconnect, mesh, accelerator mix, workload,
+//!   injection rate, buffer depths, chaining, seed) and of a parameter
+//!   grid that cartesian-expands into many;
+//! * [`SweepRunner`] (`runner`) — shards the expanded grid across host
+//!   threads; every scenario is an independent `sim::System` with its
+//!   seed in the spec, so results are bit-identical on any thread count;
+//! * [`SweepReport`] (`report`) — ordered per-scenario [`RunStats`]
+//!   (latency percentiles, throughput, rejected flits, skipped edges)
+//!   serializing to `BENCH_*.json` and CSV.
+//!
+//! The `accnoc sweep <spec.toml>` CLI verb drives all three; the
+//! `fig6`/`fig8`/`fig9`/`fig10`/`fig13_14` experiments and benches are
+//! thin grids over this module.
+
+pub mod report;
+pub mod runner;
+pub mod spec;
+
+pub use runner::{
+    run_scenario, LatencySummary, RunStats, ScenarioResult, SweepReport,
+    SweepRunner,
+};
+pub use spec::{AppKind, HwaMix, ScenarioSpec, SweepSpec, WorkloadSpec};

@@ -1,0 +1,287 @@
+//! Machine-readable sweep results: the `BENCH_*.json` trajectory format
+//! plus a CSV flattening and a human summary table.
+//!
+//! The JSON layout is `{"schema": 1, "name": ..., "scenarios": [{"spec":
+//! {flat key map}, "stats": {...}}, ...]}` — each scenario embeds its
+//! fully-resolved spec, so an artifact is self-describing and can be
+//! re-run (`ScenarioSpec::from_map`) without the original TOML.
+
+use std::path::Path;
+
+use crate::util::json::{fmt_num, Json};
+use crate::util::table::Table;
+
+use super::runner::{RunStats, SweepReport};
+
+impl RunStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total_us", Json::Num(self.total_us)),
+            ("tasks_executed", Json::from(self.tasks_executed)),
+            (
+                "injection_flits_per_us",
+                Json::Num(self.injection_flits_per_us),
+            ),
+            (
+                "throughput_flits_per_us",
+                Json::Num(self.throughput_flits_per_us),
+            ),
+            ("completions_per_us", Json::Num(self.completions_per_us)),
+            ("busy_fraction", Json::Num(self.busy_fraction)),
+            ("rejected_flits", Json::from(self.rejected_flits)),
+            ("edges_stepped", Json::from(self.edges_stepped)),
+            ("edges_skipped", Json::from(self.edges_skipped)),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    ("count", Json::from(self.latency.count)),
+                    ("mean", Json::Num(self.latency.mean_us)),
+                    ("p50", Json::Num(self.latency.p50_us)),
+                    ("p90", Json::Num(self.latency.p90_us)),
+                    ("p99", Json::Num(self.latency.p99_us)),
+                    ("min", Json::Num(self.latency.min_us)),
+                    ("max", Json::Num(self.latency.max_us)),
+                ]),
+            ),
+            ("processor_us", Json::Num(self.processor_us)),
+            ("fpga_us", Json::Num(self.fpga_us)),
+            ("transmission_us", Json::Num(self.transmission_us)),
+        ])
+    }
+}
+
+impl SweepReport {
+    pub fn to_json(&self) -> Json {
+        let scenarios: Vec<Json> = self
+            .scenarios
+            .iter()
+            .map(|s| {
+                let spec: Vec<(String, Json)> = s
+                    .spec
+                    .to_map()
+                    .into_iter()
+                    .map(|(k, v)| (k, Json::Str(v)))
+                    .collect();
+                Json::obj(vec![
+                    ("scenario", Json::from(s.spec.name.as_str())),
+                    ("spec", Json::Obj(spec)),
+                    ("stats", s.stats.to_json()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::from(1u64)),
+            ("name", Json::from(self.name.as_str())),
+            ("scenarios", Json::Arr(scenarios)),
+        ])
+    }
+
+    /// The `BENCH_*.json` artifact text. Byte-identical for identical
+    /// specs regardless of runner thread count.
+    pub fn render_json(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// One CSV row per scenario: every spec key that appears anywhere in
+    /// the grid (blank when absent), then the stats columns.
+    pub fn render_csv(&self) -> String {
+        let mut spec_keys: Vec<String> = Vec::new();
+        for s in &self.scenarios {
+            for (k, _) in s.spec.to_map() {
+                if !spec_keys.contains(&k) {
+                    spec_keys.push(k);
+                }
+            }
+        }
+        let stat_cols = [
+            "total_us",
+            "tasks_executed",
+            "injection_flits_per_us",
+            "throughput_flits_per_us",
+            "completions_per_us",
+            "busy_fraction",
+            "rejected_flits",
+            "edges_stepped",
+            "edges_skipped",
+            "latency_count",
+            "latency_mean_us",
+            "latency_p50_us",
+            "latency_p90_us",
+            "latency_p99_us",
+            "latency_min_us",
+            "latency_max_us",
+            "processor_us",
+            "fpga_us",
+            "transmission_us",
+        ];
+        let mut out = String::new();
+        out.push_str("scenario");
+        for k in &spec_keys {
+            out.push(',');
+            out.push_str(k);
+        }
+        for c in stat_cols {
+            out.push(',');
+            out.push_str(c);
+        }
+        out.push('\n');
+        for s in &self.scenarios {
+            let map: std::collections::BTreeMap<String, String> =
+                s.spec.to_map().into_iter().collect();
+            out.push_str(&csv_cell(&s.spec.name));
+            for k in &spec_keys {
+                out.push(',');
+                out.push_str(&csv_cell(
+                    map.get(k).map(|v| v.as_str()).unwrap_or(""),
+                ));
+            }
+            let t = &s.stats;
+            let nums = [
+                fmt_num(t.total_us),
+                t.tasks_executed.to_string(),
+                fmt_num(t.injection_flits_per_us),
+                fmt_num(t.throughput_flits_per_us),
+                fmt_num(t.completions_per_us),
+                fmt_num(t.busy_fraction),
+                t.rejected_flits.to_string(),
+                t.edges_stepped.to_string(),
+                t.edges_skipped.to_string(),
+                t.latency.count.to_string(),
+                fmt_num(t.latency.mean_us),
+                fmt_num(t.latency.p50_us),
+                fmt_num(t.latency.p90_us),
+                fmt_num(t.latency.p99_us),
+                fmt_num(t.latency.min_us),
+                fmt_num(t.latency.max_us),
+                fmt_num(t.processor_us),
+                fmt_num(t.fpga_us),
+                fmt_num(t.transmission_us),
+            ];
+            for n in nums {
+                out.push(',');
+                out.push_str(&n);
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.render_json())
+            .map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.render_csv())
+            .map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Human summary (one row per scenario) for CLI output.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!("sweep {} — {} scenarios", self.name, self.scenarios.len()),
+            &[
+                "scenario",
+                "total (µs)",
+                "inj (fl/µs)",
+                "thr (fl/µs)",
+                "busy",
+                "done/µs",
+                "lat p50 (µs)",
+                "lat p99 (µs)",
+            ],
+        );
+        for s in &self.scenarios {
+            let st = &s.stats;
+            t.row(&[
+                s.spec.name.clone(),
+                format!("{:.2}", st.total_us),
+                format!("{:.2}", st.injection_flits_per_us),
+                format!("{:.2}", st.throughput_flits_per_us),
+                format!("{:.0}%", 100.0 * st.busy_fraction),
+                format!("{:.2}", st.completions_per_us),
+                format!("{:.3}", st.latency.p50_us),
+                format!("{:.3}", st.latency.p99_us),
+            ]);
+        }
+        t
+    }
+}
+
+/// Quote a CSV cell only when it needs it.
+fn csv_cell(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::runner::{LatencySummary, ScenarioResult};
+    use crate::sweep::spec::{ScenarioSpec, WorkloadSpec};
+
+    fn dummy_report() -> SweepReport {
+        let spec = ScenarioSpec::new("d[net=noc,rate_per_us=1]")
+            .hwas("izigzag*2")
+            .workload(WorkloadSpec::OpenLoop { rate_per_us: 1.0 });
+        let stats = RunStats {
+            total_us: 10.0,
+            tasks_executed: 3,
+            injection_flits_per_us: 1.5,
+            throughput_flits_per_us: 1.25,
+            completions_per_us: 0.3,
+            busy_fraction: 0.5,
+            rejected_flits: 0,
+            edges_stepped: 100,
+            edges_skipped: 50,
+            latency: LatencySummary::from_us_samples(&[1.0, 2.0, 3.0]),
+            processor_us: 0.0,
+            fpga_us: 0.0,
+            transmission_us: 0.0,
+        };
+        SweepReport {
+            name: "d".to_string(),
+            scenarios: vec![ScenarioResult { spec, stats }],
+        }
+    }
+
+    #[test]
+    fn json_is_parseable_and_self_describing() {
+        let r = dummy_report();
+        let v = Json::parse(&r.render_json()).unwrap();
+        assert_eq!(v.get("schema").and_then(Json::as_f64), Some(1.0));
+        let sc = &v.get("scenarios").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(
+            sc.get("spec")
+                .and_then(|s| s.get("workload.kind"))
+                .and_then(Json::as_str),
+            Some("openloop")
+        );
+        assert_eq!(
+            sc.get("stats")
+                .and_then(|s| s.get("tasks_executed"))
+                .and_then(Json::as_f64),
+            Some(3.0)
+        );
+    }
+
+    #[test]
+    fn csv_has_header_plus_one_row_per_scenario() {
+        let r = dummy_report();
+        let csv = r.render_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("scenario,"));
+        assert!(lines[0].contains("latency_p99_us"));
+        // The scenario name contains a comma and must be quoted.
+        assert!(lines[1].starts_with("\"d[net=noc,rate_per_us=1]\""));
+    }
+
+    #[test]
+    fn table_renders() {
+        assert!(dummy_report().table().render().contains("d[net=noc,rate_per_us=1]"));
+    }
+}

@@ -1,0 +1,501 @@
+//! Parallel scenario execution: shard independent `sim::System` runs
+//! across host threads and collect per-run statistics.
+//!
+//! Each expanded [`ScenarioSpec`] is a self-contained simulation (its
+//! seed is part of the spec), so the grid is embarrassingly parallel:
+//! workers pull scenario indices from an atomic counter and write
+//! results back into per-index slots. Report order is grid order, never
+//! completion order, so a [`SweepReport`] is **bit-identical for any
+//! thread count** (`rust/tests/sweep.rs` proves it on 2 vs 8 threads).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::clock::PS_PER_US;
+use crate::cmp::apps::jpeg_chain_depth_program;
+use crate::cmp::core::{InvokeSpec, Segment};
+use crate::sim::system::{Fabric, System};
+use crate::util::stats::{mean, percentile};
+use crate::workload::jpeg::BlockImage;
+
+use super::spec::{AppKind, ScenarioSpec, SweepSpec, WorkloadSpec};
+
+/// Percentile summary of a latency sample, in microseconds. All fields
+/// are 0 when `count == 0` (keeps the JSON NaN-free).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+    pub min_us: f64,
+    pub max_us: f64,
+}
+
+impl LatencySummary {
+    pub fn from_us_samples(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        Self {
+            count: samples.len() as u64,
+            mean_us: mean(samples),
+            p50_us: percentile(samples, 50.0),
+            p90_us: percentile(samples, 90.0),
+            p99_us: percentile(samples, 99.0),
+            min_us: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_us: samples.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+}
+
+/// Everything measured from one scenario run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunStats {
+    /// Closed-loop: drain time of the whole program. Open-loop: the
+    /// measurement window length.
+    pub total_us: f64,
+    pub tasks_executed: u64,
+    /// Flits entering the fabric per µs (over the measurement interval).
+    pub injection_flits_per_us: f64,
+    /// Flits leaving the fabric per µs.
+    pub throughput_flits_per_us: f64,
+    /// Completed invocations per µs.
+    pub completions_per_us: f64,
+    /// Fraction of interface cycles with at least one busy HWA.
+    pub busy_fraction: f64,
+    /// Malformed/over-capacity flits the channels dropped.
+    pub rejected_flits: u64,
+    /// Clock edges the event-driven scheduler actually dispatched.
+    pub edges_stepped: u64,
+    /// Clock edges the idle-skipping scheduler proved no-ops and skipped.
+    pub edges_skipped: u64,
+    /// Request -> final-result latency of completed invocations.
+    pub latency: LatencySummary,
+    /// Fig. 9 breakdown (app_partition workloads only; else 0).
+    pub processor_us: f64,
+    pub fpga_us: f64,
+    pub transmission_us: f64,
+}
+
+/// One grid point: the resolved spec plus its measured stats.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub spec: ScenarioSpec,
+    pub stats: RunStats,
+}
+
+/// Ordered results of a whole sweep (see `sweep::report` for the
+/// `BENCH_*.json` / CSV serialization).
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub name: String,
+    pub scenarios: Vec<ScenarioResult>,
+}
+
+impl SweepReport {
+    /// Stats of the scenario whose spec satisfies `pred` (panics if
+    /// absent — grid lookups are programmer errors).
+    pub fn stats_where<F: Fn(&ScenarioSpec) -> bool>(
+        &self,
+        pred: F,
+    ) -> &RunStats {
+        &self
+            .scenarios
+            .iter()
+            .find(|s| pred(&s.spec))
+            .expect("no scenario matches predicate")
+            .stats
+    }
+}
+
+/// Shards a scenario grid across host threads.
+///
+/// ```
+/// use accnoc::sweep::{ScenarioSpec, SweepRunner, WorkloadSpec};
+///
+/// let grid = vec![ScenarioSpec::new("tiny")
+///     .hwas("dfadd*1")
+///     .workload(WorkloadSpec::Burst { requests_per_proc: 1 })];
+/// let report = SweepRunner::with_threads(2).run("tiny", grid).unwrap();
+/// assert_eq!(report.scenarios[0].stats.tasks_executed, 7); // 7 procs x 1
+/// ```
+#[derive(Debug, Clone)]
+pub struct SweepRunner {
+    threads: usize,
+}
+
+impl Default for SweepRunner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SweepRunner {
+    /// Use every host core (`std::thread::available_parallelism`).
+    pub fn new() -> Self {
+        Self {
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        }
+    }
+
+    pub fn with_threads(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Expand `sweep` and run the grid.
+    pub fn run_sweep(&self, sweep: &SweepSpec) -> Result<SweepReport, String> {
+        self.run(&sweep.name, sweep.expand()?)
+    }
+
+    /// Run an explicit scenario list. Scenarios execute concurrently;
+    /// results keep list order. The first scenario error (e.g. a
+    /// closed-loop run missing its deadline) fails the whole sweep.
+    pub fn run(
+        &self,
+        name: &str,
+        specs: Vec<ScenarioSpec>,
+    ) -> Result<SweepReport, String> {
+        let n = specs.len();
+        if n == 0 {
+            return Err("empty scenario grid".to_string());
+        }
+        type Slot = Mutex<Option<Result<RunStats, String>>>;
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Slot> = (0..n).map(|_| Mutex::new(None)).collect();
+        let workers = self.threads.min(n);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let result = run_scenario(&specs[i]);
+                    *slots[i].lock().unwrap() = Some(result);
+                });
+            }
+        });
+        let mut scenarios = Vec::with_capacity(n);
+        for (spec, slot) in specs.into_iter().zip(slots) {
+            let stats = slot
+                .into_inner()
+                .unwrap()
+                .expect("every slot written")
+                .map_err(|e| format!("{}: {e}", spec.name))?;
+            scenarios.push(ScenarioResult { spec, stats });
+        }
+        Ok(SweepReport {
+            name: name.to_string(),
+            scenarios,
+        })
+    }
+}
+
+/// Run one scenario to completion and measure it. Deterministic: the
+/// simulation consumes only the spec (including its seed).
+pub fn run_scenario(spec: &ScenarioSpec) -> Result<RunStats, String> {
+    let mut sys = System::new(spec.system_config()?);
+    match &spec.workload {
+        WorkloadSpec::OpenLoop { rate_per_us } => {
+            run_open_loop(spec, &mut sys, *rate_per_us)
+        }
+        WorkloadSpec::Burst { requests_per_proc } => {
+            run_burst(spec, &mut sys, *requests_per_proc)
+        }
+        WorkloadSpec::JpegChain { depth, blocks } => {
+            run_jpeg_chain(spec, &mut sys, *depth, *blocks)
+        }
+        WorkloadSpec::AppPartition { app, partition } => {
+            run_app_partition(spec, &mut sys, *app, *partition)
+        }
+    }
+}
+
+/// (busy interface cycles, total interface cycles) — denominator 1 for
+/// the cache baseline, which has no per-HWA busy accounting.
+fn iface_busy(sys: &System) -> (u64, u64) {
+    match &sys.fabric {
+        Fabric::Buffered(f) => {
+            (f.stats.busy_iface_cycles, f.stats.iface_cycles)
+        }
+        _ => (0, 1),
+    }
+}
+
+fn run_open_loop(
+    spec: &ScenarioSpec,
+    sys: &mut System,
+    rate_per_us: f64,
+) -> Result<RunStats, String> {
+    sys.set_open_loop(rate_per_us, spec.seed);
+    let warm_end = sys.now() + spec.warmup_us * PS_PER_US;
+    while sys.now() < warm_end {
+        sys.step();
+    }
+    let (in0, out0) = sys.fabric.flits_in_out();
+    let done0 = sys.open_loop_completions();
+    let (busy0, cyc0) = iface_busy(sys);
+    // Latencies recorded before the window belong to warmup.
+    let lat_skip: Vec<usize> = sys
+        .open_sources
+        .iter()
+        .flatten()
+        .map(|s| s.latencies_ps.len())
+        .collect();
+    let end = sys.now() + spec.window_us * PS_PER_US;
+    while sys.now() < end {
+        sys.step();
+    }
+    let (in1, out1) = sys.fabric.flits_in_out();
+    let done1 = sys.open_loop_completions();
+    let (busy1, cyc1) = iface_busy(sys);
+    let window = spec.window_us as f64;
+    let latencies: Vec<f64> = sys
+        .open_sources
+        .iter()
+        .flatten()
+        .zip(&lat_skip)
+        .flat_map(|(s, skip)| {
+            s.latencies_ps[*skip..]
+                .iter()
+                .map(|l| *l as f64 / PS_PER_US as f64)
+        })
+        .collect();
+    Ok(RunStats {
+        total_us: window,
+        tasks_executed: sys.fabric.tasks_executed(),
+        injection_flits_per_us: (in1 - in0) as f64 / window,
+        throughput_flits_per_us: (out1 - out0) as f64 / window,
+        completions_per_us: (done1 - done0) as f64 / window,
+        busy_fraction: if cyc1 > cyc0 {
+            (busy1 - busy0) as f64 / (cyc1 - cyc0) as f64
+        } else {
+            0.0
+        },
+        rejected_flits: sys.fabric.rejected_flits(),
+        edges_stepped: sys.edges_stepped,
+        edges_skipped: sys.edges_skipped,
+        latency: LatencySummary::from_us_samples(&latencies),
+        processor_us: 0.0,
+        fpga_us: 0.0,
+        transmission_us: 0.0,
+    })
+}
+
+/// Stats shared by every closed-loop (run-until-drained) workload.
+fn closed_loop_stats(sys: &System, total_us: f64) -> RunStats {
+    let (fin, fout) = sys.fabric.flits_in_out();
+    let done: usize = sys.procs.iter().map(|p| p.invocations_done()).sum();
+    let (busy, cyc) = iface_busy(sys);
+    let latencies: Vec<f64> = sys
+        .procs
+        .iter()
+        .flat_map(|p| {
+            p.records
+                .iter()
+                .map(|r| r.total() as f64 / PS_PER_US as f64)
+        })
+        .collect();
+    let denom = total_us.max(f64::MIN_POSITIVE);
+    RunStats {
+        total_us,
+        tasks_executed: sys.fabric.tasks_executed(),
+        injection_flits_per_us: fin as f64 / denom,
+        throughput_flits_per_us: fout as f64 / denom,
+        completions_per_us: done as f64 / denom,
+        busy_fraction: if cyc > 0 {
+            busy as f64 / cyc as f64
+        } else {
+            0.0
+        },
+        rejected_flits: sys.fabric.rejected_flits(),
+        edges_stepped: sys.edges_stepped,
+        edges_skipped: sys.edges_skipped,
+        latency: LatencySummary::from_us_samples(&latencies),
+        processor_us: 0.0,
+        fpga_us: 0.0,
+        transmission_us: 0.0,
+    }
+}
+
+fn drain(spec: &ScenarioSpec, sys: &mut System) -> Result<f64, String> {
+    if !sys.run_until_done(spec.deadline_us * PS_PER_US) {
+        return Err(format!(
+            "did not drain within deadline_us = {}",
+            spec.deadline_us
+        ));
+    }
+    let end = sys
+        .procs
+        .iter()
+        .filter_map(|p| p.finished_at)
+        .max()
+        .unwrap_or(0);
+    Ok(end as f64 / PS_PER_US as f64)
+}
+
+fn run_burst(
+    spec: &ScenarioSpec,
+    sys: &mut System,
+    requests_per_proc: usize,
+) -> Result<RunStats, String> {
+    let (in_words, out_words) = {
+        let s = &sys.config.specs[0];
+        (s.in_words, s.out_words)
+    };
+    for i in 0..sys.n_procs() {
+        let prog: Vec<Segment> = (0..requests_per_proc)
+            .map(|_| {
+                Segment::Invoke(InvokeSpec::direct(
+                    0,
+                    (0..in_words as u32).collect(),
+                    out_words,
+                ))
+            })
+            .collect();
+        sys.load_program(i, prog);
+    }
+    let total_us = drain(spec, sys)?;
+    Ok(closed_loop_stats(sys, total_us))
+}
+
+fn run_jpeg_chain(
+    spec: &ScenarioSpec,
+    sys: &mut System,
+    depth: u8,
+    blocks: usize,
+) -> Result<RunStats, String> {
+    let img = BlockImage::synthetic(blocks, spec.seed);
+    let words = img.coefficient_words();
+    // One processor decodes block after block (the §6.6 experiment),
+    // patching the real coefficients into each block's chain entry.
+    let mut prog = Vec::new();
+    for block in words.iter() {
+        for seg in jpeg_chain_depth_program(depth) {
+            prog.push(match seg {
+                Segment::Invoke(mut invoke) => {
+                    if invoke.hwa_id == 0 {
+                        invoke.words = block.clone();
+                    }
+                    Segment::Invoke(invoke)
+                }
+                other => other,
+            });
+        }
+    }
+    sys.load_program(0, prog);
+    let total_us = drain(spec, sys)?;
+    Ok(closed_loop_stats(sys, total_us))
+}
+
+fn run_app_partition(
+    spec: &ScenarioSpec,
+    sys: &mut System,
+    app: AppKind,
+    partition: usize,
+) -> Result<RunStats, String> {
+    let app = app.app();
+    sys.load_program(0, app.partition_program(partition));
+    let total_us = drain(spec, sys)?;
+    let mut stats = closed_loop_stats(sys, total_us);
+    // Fig. 9 breakdown: core cycles, HWA execution intervals, and the
+    // transmission remainder.
+    let end_ps = total_us * PS_PER_US as f64;
+    let processor_ps = sys.procs[0].sw_cycles as f64 * 1000.0; // 1 GHz core
+    let fpga_ps: u64 = sys
+        .fabric
+        .buffered()
+        .map(|f| {
+            f.channels
+                .iter()
+                .flat_map(|c| c.completed.iter())
+                .map(|t| t.t_exec_end.saturating_sub(t.t_exec_start))
+                .sum()
+        })
+        .unwrap_or(0);
+    stats.processor_us = processor_ps / PS_PER_US as f64;
+    stats.fpga_us = fpga_ps as f64 / PS_PER_US as f64;
+    stats.transmission_us = (end_ps - processor_ps - fpga_ps as f64)
+        .max(0.0)
+        / PS_PER_US as f64;
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::spec::WorkloadSpec;
+
+    fn tiny_burst(name: &str) -> ScenarioSpec {
+        ScenarioSpec::new(name)
+            .hwas("izigzag*2")
+            .workload(WorkloadSpec::Burst {
+                requests_per_proc: 2,
+            })
+            .deadline_us(2_000)
+    }
+
+    #[test]
+    fn burst_scenario_matches_direct_simulation() {
+        let stats = run_scenario(&tiny_burst("t")).unwrap();
+        // 7 processors x 2 requests.
+        assert_eq!(stats.tasks_executed, 14);
+        assert_eq!(stats.latency.count, 14);
+        assert!(stats.total_us > 0.0);
+        assert!(stats.latency.p50_us >= stats.latency.min_us);
+        assert!(stats.latency.p99_us <= stats.latency.max_us);
+    }
+
+    #[test]
+    fn open_loop_scenario_measures_throughput() {
+        // 0.5 req/µs: low enough that the idle skipper provably engages
+        // (same regime as tests/event_driven.rs), high enough for several
+        // completions inside the window.
+        let spec = ScenarioSpec::new("ol")
+            .hwas("izigzag*8")
+            .workload(WorkloadSpec::OpenLoop { rate_per_us: 0.5 })
+            .warmup_us(2)
+            .window_us(20)
+            .seed(42);
+        let stats = run_scenario(&spec).unwrap();
+        assert!(stats.injection_flits_per_us > 0.5, "{stats:?}");
+        assert!(stats.throughput_flits_per_us > 0.5, "{stats:?}");
+        assert!(stats.latency.count > 0, "{stats:?}");
+        assert!(stats.edges_skipped > 0, "idle skipper should engage");
+    }
+
+    #[test]
+    fn runner_keeps_grid_order_and_is_thread_count_invariant() {
+        let grid: Vec<ScenarioSpec> = (1..=4)
+            .map(|n| tiny_burst(&format!("t{n}")).task_buffers(n))
+            .collect();
+        let one = SweepRunner::with_threads(1)
+            .run("order", grid.clone())
+            .unwrap();
+        let four = SweepRunner::with_threads(4).run("order", grid).unwrap();
+        for (a, b) in one.scenarios.iter().zip(&four.scenarios) {
+            assert_eq!(a.spec, b.spec);
+            assert_eq!(a.stats, b.stats);
+        }
+        assert_eq!(one.scenarios[2].spec.n_tbs, 3);
+    }
+
+    #[test]
+    fn deadline_miss_is_an_error_not_a_panic() {
+        let spec = tiny_burst("dl").deadline_us(1); // 1 µs: cannot finish
+        let err = SweepRunner::with_threads(2)
+            .run("dl", vec![spec])
+            .unwrap_err();
+        assert!(err.contains("deadline"), "{err}");
+    }
+}

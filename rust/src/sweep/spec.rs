@@ -1,0 +1,889 @@
+//! Declarative scenario description: what to simulate (interconnect,
+//! mesh, fabric, accelerator mix, chaining) and how to drive it
+//! (workload kind, injection rate, warmup/window, seeds).
+//!
+//! A [`ScenarioSpec`] describes exactly one `sim::System` run. A
+//! [`SweepSpec`] is a scenario template whose values may be lists; it
+//! cartesian-expands into a grid of `ScenarioSpec`s (one per
+//! combination) for `SweepRunner` to shard across host threads.
+//!
+//! Specs load from a TOML subset (via `util::config_text`, a list is a
+//! comma-separated value) or JSON (via `util::json`, a list is an
+//! array), and can be built programmatically:
+//!
+//! ```
+//! use accnoc::sweep::{ScenarioSpec, WorkloadSpec};
+//!
+//! let spec = ScenarioSpec::new("smoke")
+//!     .hwas("izigzag*8")
+//!     .workload(WorkloadSpec::OpenLoop { rate_per_us: 2.0 })
+//!     .seed(42);
+//! assert_eq!(spec.system_config().unwrap().specs.len(), 8);
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::cmp::apps::{app_specs, gsm_app, jpeg_app, App};
+use crate::fpga::hwa::{spec_by_name, table3, HwaSpec};
+use crate::noc::mesh::MeshConfig;
+use crate::sim::system::{FabricKind, NetKind, SystemConfig};
+use crate::util::config_text::ConfigText;
+use crate::util::json::Json;
+
+/// Accelerator mix: which Table 3 HWA specs populate the fabric.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HwaMix {
+    /// The first `n` Table 3 benchmarks (`"first8"`).
+    First(usize),
+    /// `n` copies of one benchmark (`"izigzag*8"`).
+    Repeat(String, usize),
+    /// An explicit `+`-separated list (`"izigzag+idct"`).
+    Named(Vec<String>),
+    /// The four-stage JPEG decode set (`"jpeg"`):
+    /// izigzag, iquantize, idct, shiftbound.
+    Jpeg,
+}
+
+impl HwaMix {
+    pub fn parse(text: &str) -> Result<HwaMix, String> {
+        let text = text.trim();
+        if text == "jpeg" {
+            return Ok(HwaMix::Jpeg);
+        }
+        if let Some(n) = text.strip_prefix("first") {
+            let n: usize = n
+                .parse()
+                .map_err(|_| format!("bad hwa mix {text:?}"))?;
+            return Ok(HwaMix::First(n));
+        }
+        if let Some((name, n)) = text.split_once('*') {
+            let n: usize = n
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad hwa repeat count in {text:?}"))?;
+            return Ok(HwaMix::Repeat(name.trim().to_string(), n));
+        }
+        Ok(HwaMix::Named(
+            text.split('+').map(|s| s.trim().to_string()).collect(),
+        ))
+    }
+
+    /// Resolve to concrete HWA specs (error on unknown names or an
+    /// empty/oversized mix — `hwa_id` is 5 bits, so at most 32).
+    pub fn to_specs(&self) -> Result<Vec<HwaSpec>, String> {
+        let specs = match self {
+            HwaMix::First(n) => {
+                let all = table3();
+                if *n == 0 || *n > all.len() {
+                    return Err(format!(
+                        "first{n}: need 1..={} benchmarks",
+                        all.len()
+                    ));
+                }
+                all.into_iter().take(*n).collect()
+            }
+            HwaMix::Repeat(name, n) => {
+                let spec = spec_by_name(name)
+                    .ok_or_else(|| format!("unknown HWA {name:?}"))?;
+                if *n == 0 || *n > 32 {
+                    return Err(format!("{name}*{n}: need 1..=32 copies"));
+                }
+                vec![spec; *n]
+            }
+            HwaMix::Named(names) => names
+                .iter()
+                .map(|n| {
+                    spec_by_name(n)
+                        .ok_or_else(|| format!("unknown HWA {n:?}"))
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+            HwaMix::Jpeg => ["izigzag", "iquantize", "idct", "shiftbound"]
+                .iter()
+                .map(|n| spec_by_name(n).unwrap())
+                .collect(),
+        };
+        if specs.is_empty() {
+            return Err("empty HWA mix".to_string());
+        }
+        Ok(specs)
+    }
+}
+
+impl std::fmt::Display for HwaMix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HwaMix::First(n) => write!(f, "first{n}"),
+            HwaMix::Repeat(name, n) => write!(f, "{name}*{n}"),
+            HwaMix::Named(names) => write!(f, "{}", names.join("+")),
+            HwaMix::Jpeg => write!(f, "jpeg"),
+        }
+    }
+}
+
+/// Which application the `app_partition` workload runs (paper Fig. 9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppKind {
+    Gsm,
+    Jpeg,
+}
+
+impl AppKind {
+    pub fn app(&self) -> App {
+        match self {
+            AppKind::Gsm => gsm_app(0),
+            AppKind::Jpeg => jpeg_app(0),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppKind::Gsm => "gsm",
+            AppKind::Jpeg => "jpeg",
+        }
+    }
+}
+
+/// How the scenario drives the system.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WorkloadSpec {
+    /// §6.4: every processor becomes an open-loop source at the given
+    /// aggregate rate; stats are measured over warmup+window.
+    OpenLoop { rate_per_us: f64 },
+    /// §6.2 (Fig. 6): every processor issues `requests_per_proc`
+    /// back-to-back invocations of HWA 0, then the system drains.
+    Burst { requests_per_proc: usize },
+    /// §6.6 (Fig. 10): one processor decodes `blocks` JPEG blocks at the
+    /// given chaining depth (0 = full round trips).
+    JpegChain { depth: u8, blocks: usize },
+    /// §6.5 (Fig. 9): one processor runs partition `partition` of `app`,
+    /// reporting the processor/FPGA/transmission latency breakdown.
+    AppPartition { app: AppKind, partition: usize },
+}
+
+impl WorkloadSpec {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            WorkloadSpec::OpenLoop { .. } => "openloop",
+            WorkloadSpec::Burst { .. } => "burst",
+            WorkloadSpec::JpegChain { .. } => "jpeg_chain",
+            WorkloadSpec::AppPartition { .. } => "app_partition",
+        }
+    }
+}
+
+/// One fully-resolved simulation scenario. Every field that shapes the
+/// simulated hardware or workload lives here; two runs of the same spec
+/// produce bit-identical statistics on any thread count, because the
+/// seed is part of the spec itself.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub net: NetKind,
+    /// `buffered` or `shared_cache` (see `cache_kib`).
+    pub fabric: FabricKind,
+    pub mesh: (u8, u8),
+    /// Task buffers per channel (the Fig. 6 independent variable).
+    pub n_tbs: usize,
+    pub pr_group: usize,
+    pub ps_group: usize,
+    pub iface_mhz: f64,
+    pub hwas: HwaMix,
+    /// Chain all HWAs into one group (Fig. 10 setup).
+    pub chain: bool,
+    pub workload: WorkloadSpec,
+    pub seed: u64,
+    pub warmup_us: u64,
+    pub window_us: u64,
+    /// Closed-loop runs failing to drain by this simulated time error out.
+    pub deadline_us: u64,
+}
+
+impl ScenarioSpec {
+    /// Paper defaults (3x3 NoC mesh, buffered fabric, 2 TBs, PR4-PS4,
+    /// first eight Table 3 HWAs, 1 req/µs open loop).
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            net: NetKind::Noc,
+            fabric: FabricKind::Buffered,
+            mesh: (3, 3),
+            n_tbs: 2,
+            pr_group: 4,
+            ps_group: 4,
+            iface_mhz: 300.0,
+            hwas: HwaMix::First(8),
+            chain: false,
+            workload: WorkloadSpec::OpenLoop { rate_per_us: 1.0 },
+            seed: 7,
+            warmup_us: 5,
+            window_us: 40,
+            deadline_us: 100_000,
+        }
+    }
+
+    pub fn net(mut self, net: NetKind) -> Self {
+        self.net = net;
+        self
+    }
+
+    pub fn fabric(mut self, fabric: FabricKind) -> Self {
+        self.fabric = fabric;
+        self
+    }
+
+    pub fn mesh(mut self, width: u8, height: u8) -> Self {
+        self.mesh = (width, height);
+        self
+    }
+
+    pub fn task_buffers(mut self, n: usize) -> Self {
+        self.n_tbs = n;
+        self
+    }
+
+    /// Accelerator mix, in [`HwaMix::parse`] syntax; panics on a syntax
+    /// error (use `HwaMix::parse` + field assignment for fallible input).
+    pub fn hwas(mut self, mix: &str) -> Self {
+        self.hwas = HwaMix::parse(mix).expect("valid hwa mix");
+        self
+    }
+
+    pub fn chain(mut self, on: bool) -> Self {
+        self.chain = on;
+        self
+    }
+
+    pub fn workload(mut self, workload: WorkloadSpec) -> Self {
+        self.workload = workload;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn warmup_us(mut self, us: u64) -> Self {
+        self.warmup_us = us;
+        self
+    }
+
+    pub fn window_us(mut self, us: u64) -> Self {
+        self.window_us = us;
+        self
+    }
+
+    pub fn deadline_us(mut self, us: u64) -> Self {
+        self.deadline_us = us;
+        self
+    }
+
+    /// Resolve into the `sim::System` configuration this scenario runs.
+    pub fn system_config(&self) -> Result<SystemConfig, String> {
+        let specs = match &self.workload {
+            // Fig. 9 scenarios derive their specs from the app's
+            // function list (hwa_id = function index).
+            WorkloadSpec::AppPartition { app, .. } => app_specs(&app.app()),
+            _ => self.hwas.to_specs()?,
+        };
+        if self.mesh.0 < 2 || self.mesh.1 < 2 {
+            return Err(format!(
+                "mesh {}x{} too small (need >=2x2 for FPGA+MMU nodes)",
+                self.mesh.0, self.mesh.1
+            ));
+        }
+        if self.n_tbs == 0 {
+            return Err("task_buffers must be >= 1".to_string());
+        }
+        let chain_groups = if self.chain {
+            vec![(0..specs.len()).collect()]
+        } else {
+            Vec::new()
+        };
+        Ok(SystemConfig {
+            mesh: MeshConfig {
+                width: self.mesh.0,
+                height: self.mesh.1,
+                ..MeshConfig::default()
+            },
+            net: self.net,
+            fabric: self.fabric,
+            n_tbs: self.n_tbs,
+            pr_group: self.pr_group,
+            ps_group: self.ps_group,
+            iface_mhz: self.iface_mhz,
+            specs,
+            chain_groups,
+        })
+    }
+
+    /// Flatten to the canonical `section.key -> value` map (the TOML/JSON
+    /// wire format; also embedded per scenario in `BENCH_*.json`).
+    pub fn to_map(&self) -> Vec<(String, String)> {
+        let mut m: Vec<(String, String)> = Vec::new();
+        let mut put = |k: &str, v: String| m.push((k.to_string(), v));
+        put("system.net", net_name(self.net).to_string());
+        match self.fabric {
+            FabricKind::Buffered => {
+                put("system.fabric", "buffered".to_string());
+            }
+            FabricKind::SharedCache { cache_bytes } => {
+                put("system.fabric", "shared_cache".to_string());
+                put("system.cache_kib", (cache_bytes / 1024).to_string());
+            }
+        }
+        put("system.mesh", format!("{}x{}", self.mesh.0, self.mesh.1));
+        put("system.task_buffers", self.n_tbs.to_string());
+        put("system.pr_group", self.pr_group.to_string());
+        put("system.ps_group", self.ps_group.to_string());
+        put("system.iface_mhz", format!("{}", self.iface_mhz));
+        put("system.hwas", self.hwas.to_string());
+        put("system.chain", self.chain.to_string());
+        put("workload.kind", self.workload.kind().to_string());
+        match &self.workload {
+            WorkloadSpec::OpenLoop { rate_per_us } => {
+                put("workload.rate_per_us", format!("{rate_per_us}"));
+            }
+            WorkloadSpec::Burst { requests_per_proc } => {
+                put(
+                    "workload.requests_per_proc",
+                    requests_per_proc.to_string(),
+                );
+            }
+            WorkloadSpec::JpegChain { depth, blocks } => {
+                put("workload.depth", depth.to_string());
+                put("workload.blocks", blocks.to_string());
+            }
+            WorkloadSpec::AppPartition { app, partition } => {
+                put("workload.app", app.name().to_string());
+                put("workload.partition", partition.to_string());
+            }
+        }
+        put("workload.seed", self.seed.to_string());
+        put("workload.warmup_us", self.warmup_us.to_string());
+        put("workload.window_us", self.window_us.to_string());
+        put("workload.deadline_us", self.deadline_us.to_string());
+        m
+    }
+
+    /// Parse from a flat `section.key -> value` map. Unknown keys and
+    /// unparsable values are errors (specs are hand-written; silently
+    /// ignoring a typo would quietly run the wrong experiment).
+    pub fn from_map(
+        name: &str,
+        map: &BTreeMap<String, String>,
+    ) -> Result<Self, String> {
+        for k in map.keys() {
+            if !KNOWN_KEYS.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown spec key {k:?} (known: {})",
+                    KNOWN_KEYS.join(", ")
+                ));
+            }
+        }
+        let mut spec = ScenarioSpec::new(name);
+        if let Some(v) = map.get("system.net") {
+            spec.net = match v.as_str() {
+                "noc" => NetKind::Noc,
+                "axi" => NetKind::Axi,
+                other => return Err(format!("system.net: {other:?} (noc|axi)")),
+            };
+        }
+        let cache_kib: u32 = get_parse(map, "system.cache_kib")?.unwrap_or(128);
+        if let Some(v) = map.get("system.fabric") {
+            spec.fabric = match v.as_str() {
+                "buffered" => FabricKind::Buffered,
+                "shared_cache" => FabricKind::SharedCache {
+                    cache_bytes: cache_kib * 1024,
+                },
+                other => {
+                    return Err(format!(
+                        "system.fabric: {other:?} (buffered|shared_cache)"
+                    ))
+                }
+            };
+        }
+        if let Some(v) = map.get("system.mesh") {
+            let (w, h) = v
+                .split_once('x')
+                .ok_or_else(|| format!("system.mesh: {v:?} (want WxH)"))?;
+            spec.mesh = (
+                w.trim().parse().map_err(|_| format!("bad mesh width {w:?}"))?,
+                h.trim()
+                    .parse()
+                    .map_err(|_| format!("bad mesh height {h:?}"))?,
+            );
+        }
+        spec.n_tbs = get_parse(map, "system.task_buffers")?.unwrap_or(spec.n_tbs);
+        spec.pr_group = get_parse(map, "system.pr_group")?.unwrap_or(spec.pr_group);
+        spec.ps_group = get_parse(map, "system.ps_group")?.unwrap_or(spec.ps_group);
+        spec.iface_mhz =
+            get_parse(map, "system.iface_mhz")?.unwrap_or(spec.iface_mhz);
+        if let Some(v) = map.get("system.hwas") {
+            spec.hwas = HwaMix::parse(v)?;
+            spec.hwas.to_specs()?; // validate names eagerly
+        }
+        if let Some(v) = map.get("system.chain") {
+            spec.chain = v
+                .parse()
+                .map_err(|_| format!("system.chain: {v:?} (true|false)"))?;
+        }
+        let kind = map
+            .get("workload.kind")
+            .map(|s| s.as_str())
+            .unwrap_or("openloop");
+        spec.workload = match kind {
+            "openloop" => WorkloadSpec::OpenLoop {
+                rate_per_us: get_parse(map, "workload.rate_per_us")?
+                    .unwrap_or(1.0),
+            },
+            "burst" => WorkloadSpec::Burst {
+                requests_per_proc: get_parse(map, "workload.requests_per_proc")?
+                    .unwrap_or(8),
+            },
+            "jpeg_chain" => WorkloadSpec::JpegChain {
+                depth: get_parse(map, "workload.depth")?.unwrap_or(0),
+                blocks: get_parse(map, "workload.blocks")?.unwrap_or(12),
+            },
+            "app_partition" => WorkloadSpec::AppPartition {
+                app: match map
+                    .get("workload.app")
+                    .map(|s| s.as_str())
+                    .unwrap_or("jpeg")
+                {
+                    "gsm" => AppKind::Gsm,
+                    "jpeg" => AppKind::Jpeg,
+                    other => {
+                        return Err(format!(
+                            "workload.app: {other:?} (gsm|jpeg)"
+                        ))
+                    }
+                },
+                partition: get_parse(map, "workload.partition")?.unwrap_or(0),
+            },
+            other => {
+                return Err(format!(
+                    "workload.kind: {other:?} \
+                     (openloop|burst|jpeg_chain|app_partition)"
+                ))
+            }
+        };
+        if let WorkloadSpec::OpenLoop { rate_per_us } = spec.workload {
+            if !rate_per_us.is_finite() || rate_per_us <= 0.0 {
+                return Err(format!(
+                    "workload.rate_per_us must be > 0, got {rate_per_us}"
+                ));
+            }
+        }
+        if let WorkloadSpec::JpegChain { depth, .. } = spec.workload {
+            if depth > 3 {
+                return Err(format!("workload.depth {depth} > 3"));
+            }
+        }
+        if let WorkloadSpec::AppPartition { app, partition } = spec.workload {
+            let n = app.app().n_partitions();
+            if partition >= n {
+                return Err(format!(
+                    "workload.partition {partition} out of range for {} \
+                     (has {n} partitions)",
+                    app.name()
+                ));
+            }
+        }
+        spec.seed = get_parse(map, "workload.seed")?.unwrap_or(spec.seed);
+        spec.warmup_us =
+            get_parse(map, "workload.warmup_us")?.unwrap_or(spec.warmup_us);
+        spec.window_us =
+            get_parse(map, "workload.window_us")?.unwrap_or(spec.window_us);
+        spec.deadline_us =
+            get_parse(map, "workload.deadline_us")?.unwrap_or(spec.deadline_us);
+        spec.system_config()?; // validate the whole shape eagerly
+        Ok(spec)
+    }
+}
+
+fn net_name(net: NetKind) -> &'static str {
+    match net {
+        NetKind::Noc => "noc",
+        NetKind::Axi => "axi",
+    }
+}
+
+fn get_parse<T: std::str::FromStr>(
+    map: &BTreeMap<String, String>,
+    key: &str,
+) -> Result<Option<T>, String> {
+    match map.get(key) {
+        None => Ok(None),
+        Some(s) => s
+            .parse()
+            .map(Some)
+            .map_err(|_| format!("{key}: cannot parse {s:?}")),
+    }
+}
+
+/// Every key `ScenarioSpec::from_map` accepts (anything else is a typo).
+const KNOWN_KEYS: &[&str] = &[
+    "system.net",
+    "system.fabric",
+    "system.cache_kib",
+    "system.mesh",
+    "system.task_buffers",
+    "system.pr_group",
+    "system.ps_group",
+    "system.iface_mhz",
+    "system.hwas",
+    "system.chain",
+    "workload.kind",
+    "workload.rate_per_us",
+    "workload.requests_per_proc",
+    "workload.depth",
+    "workload.blocks",
+    "workload.app",
+    "workload.partition",
+    "workload.seed",
+    "workload.warmup_us",
+    "workload.window_us",
+    "workload.deadline_us",
+];
+
+/// A scenario template whose values may be lists: the cartesian product
+/// over all list-valued keys is the sweep grid.
+///
+/// ```
+/// use accnoc::sweep::SweepSpec;
+///
+/// let sweep = SweepSpec::parse_toml(
+///     "name = demo\n\
+///      [system]\n\
+///      net = noc,axi\n\
+///      hwas = izigzag*8\n\
+///      [workload]\n\
+///      kind = openloop\n\
+///      rate_per_us = 0.5,1.0,2.0\n",
+/// )
+/// .unwrap();
+/// let grid = sweep.expand().unwrap();
+/// assert_eq!(grid.len(), 6); // 2 nets x 3 rates
+/// assert_eq!(grid[0].name, "demo[net=noc,rate_per_us=0.5]");
+/// ```
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub name: String,
+    /// Default output path for the JSON report (`BENCH_<name>.json`).
+    pub output: Option<String>,
+    /// `section.key` -> one or more candidate values.
+    values: BTreeMap<String, Vec<String>>,
+}
+
+impl SweepSpec {
+    /// Start an empty template (programmatic alternative to TOML/JSON).
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            output: None,
+            values: BTreeMap::new(),
+        }
+    }
+
+    /// Set a single value (replacing any previous entry for the key).
+    pub fn set(mut self, key: &str, value: &str) -> Self {
+        self.values
+            .insert(key.to_string(), vec![value.to_string()]);
+        self
+    }
+
+    /// Set a sweep axis: one scenario per value.
+    pub fn axis<S: std::fmt::Display>(mut self, key: &str, values: &[S]) -> Self {
+        self.values.insert(
+            key.to_string(),
+            values.iter().map(|v| v.to_string()).collect(),
+        );
+        self
+    }
+
+    /// Parse the TOML subset: `[system]`/`[workload]` sections, one
+    /// `key = value` per line, comma-separated values forming axes.
+    pub fn parse_toml(text: &str) -> Result<Self, String> {
+        let cfg = ConfigText::parse(text)?;
+        let mut spec = SweepSpec::new("sweep");
+        for key in cfg.keys() {
+            let raw = cfg.get(key).unwrap();
+            match key {
+                "name" => spec.name = raw.to_string(),
+                "output" => spec.output = Some(raw.to_string()),
+                _ => {
+                    let vals = split_list(raw);
+                    if vals.is_empty() {
+                        return Err(format!("{key}: empty value"));
+                    }
+                    spec.values.insert(key.to_string(), vals);
+                }
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse the JSON form: `{"name": ..., "system": {...}, "workload":
+    /// {...}}`; arrays are sweep axes.
+    pub fn parse_json(text: &str) -> Result<Self, String> {
+        let root = Json::parse(text)?;
+        let members = root
+            .as_obj()
+            .ok_or("sweep spec JSON must be an object")?;
+        let mut spec = SweepSpec::new("sweep");
+        for (key, value) in members {
+            match key.as_str() {
+                "name" => {
+                    spec.name = value
+                        .as_str()
+                        .ok_or("name must be a string")?
+                        .to_string();
+                }
+                "output" => {
+                    spec.output = Some(
+                        value
+                            .as_str()
+                            .ok_or("output must be a string")?
+                            .to_string(),
+                    );
+                }
+                section => {
+                    let fields = value.as_obj().ok_or_else(|| {
+                        format!("{section}: expected an object")
+                    })?;
+                    for (k, v) in fields {
+                        let key = format!("{section}.{k}");
+                        let vals = json_scalar_list(v)
+                            .map_err(|e| format!("{key}: {e}"))?;
+                        spec.values.insert(key, vals);
+                    }
+                }
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load from a path, dispatching on the `.json` extension (anything
+    /// else parses as TOML).
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        if path.extension().and_then(|e| e.to_str()) == Some("json") {
+            Self::parse_json(&text)
+        } else {
+            Self::parse_toml(&text)
+        }
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        // Expanding validates every combination; a tiny grid is cheap to
+        // check eagerly, and load-time errors beat mid-sweep panics.
+        self.expand().map(|_| ())
+    }
+
+    /// The list-valued keys, in deterministic (sorted-key) order.
+    pub fn axes(&self) -> Vec<(&str, &[String])> {
+        self.values
+            .iter()
+            .filter(|(_, v)| v.len() > 1)
+            .map(|(k, v)| (k.as_str(), v.as_slice()))
+            .collect()
+    }
+
+    /// Cartesian-expand into the scenario grid. Scenario order (and thus
+    /// report order) is deterministic: axes iterate in sorted-key order,
+    /// last axis fastest.
+    pub fn expand(&self) -> Result<Vec<ScenarioSpec>, String> {
+        let keys: Vec<&String> = self.values.keys().collect();
+        let mut grid = vec![BTreeMap::new()];
+        for key in keys {
+            let vals = &self.values[key];
+            if vals.is_empty() {
+                return Err(format!("{key}: empty value list"));
+            }
+            let mut next = Vec::with_capacity(grid.len() * vals.len());
+            for base in &grid {
+                for v in vals {
+                    let mut m = base.clone();
+                    m.insert(key.clone(), v.clone());
+                    next.push(m);
+                }
+            }
+            grid = next;
+        }
+        let axis_keys: Vec<String> =
+            self.axes().iter().map(|(k, _)| k.to_string()).collect();
+        grid.iter()
+            .map(|m| {
+                let name = if axis_keys.is_empty() {
+                    self.name.clone()
+                } else {
+                    let parts: Vec<String> = axis_keys
+                        .iter()
+                        .map(|k| {
+                            let short =
+                                k.rsplit('.').next().unwrap_or(k.as_str());
+                            format!("{short}={}", m[k])
+                        })
+                        .collect();
+                    format!("{}[{}]", self.name, parts.join(","))
+                };
+                ScenarioSpec::from_map(&name, m)
+            })
+            .collect()
+    }
+
+    /// Default report path: the spec's `output` or `BENCH_<name>.json`.
+    pub fn output_path(&self) -> String {
+        self.output
+            .clone()
+            .unwrap_or_else(|| format!("BENCH_{}.json", self.name))
+    }
+}
+
+fn split_list(raw: &str) -> Vec<String> {
+    raw.split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+fn json_scalar_list(v: &Json) -> Result<Vec<String>, String> {
+    let scalar = |v: &Json| -> Result<String, String> {
+        match v {
+            Json::Str(s) => Ok(s.clone()),
+            Json::Num(x) => Ok(crate::util::json::fmt_num(*x)),
+            Json::Bool(b) => Ok(b.to_string()),
+            other => Err(format!("expected a scalar, got {other:?}")),
+        }
+    };
+    match v {
+        Json::Arr(items) => items.iter().map(scalar).collect(),
+        other => Ok(vec![scalar(other)?]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_round_trips_through_map() {
+        let spec = ScenarioSpec::new("rt")
+            .net(NetKind::Axi)
+            .fabric(FabricKind::SharedCache {
+                cache_bytes: 64 * 1024,
+            })
+            .mesh(4, 4)
+            .task_buffers(3)
+            .hwas("izigzag*4")
+            .workload(WorkloadSpec::OpenLoop { rate_per_us: 2.5 })
+            .seed(99)
+            .warmup_us(1)
+            .window_us(2)
+            .deadline_us(3);
+        let map: BTreeMap<String, String> =
+            spec.to_map().into_iter().collect();
+        let back = ScenarioSpec::from_map("rt", &map).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn every_workload_kind_round_trips() {
+        for wl in [
+            WorkloadSpec::Burst {
+                requests_per_proc: 5,
+            },
+            WorkloadSpec::JpegChain {
+                depth: 2,
+                blocks: 6,
+            },
+            WorkloadSpec::AppPartition {
+                app: AppKind::Gsm,
+                partition: 1,
+            },
+        ] {
+            let spec = ScenarioSpec::new("w")
+                .hwas("jpeg")
+                .chain(true)
+                .workload(wl);
+            let map: BTreeMap<String, String> =
+                spec.to_map().into_iter().collect();
+            let back = ScenarioSpec::from_map("w", &map).unwrap();
+            assert_eq!(spec, back);
+        }
+    }
+
+    #[test]
+    fn toml_grid_expands_in_sorted_axis_order() {
+        let sweep = SweepSpec::parse_toml(
+            "name = g\n\
+             [system]\n\
+             task_buffers = 1,2\n\
+             hwas = dfdiv*1\n\
+             [workload]\n\
+             kind = burst\n\
+             requests_per_proc = 2\n",
+        )
+        .unwrap();
+        let grid = sweep.expand().unwrap();
+        assert_eq!(grid.len(), 2);
+        assert_eq!(grid[0].n_tbs, 1);
+        assert_eq!(grid[1].n_tbs, 2);
+        assert_eq!(grid[0].name, "g[task_buffers=1]");
+    }
+
+    #[test]
+    fn json_form_matches_toml_form() {
+        let toml = SweepSpec::parse_toml(
+            "name = j\n\
+             [workload]\n\
+             kind = openloop\n\
+             rate_per_us = 0.5,1\n",
+        )
+        .unwrap();
+        let json = SweepSpec::parse_json(
+            r#"{"name": "j",
+                "workload": {"kind": "openloop", "rate_per_us": [0.5, 1]}}"#,
+        )
+        .unwrap();
+        assert_eq!(toml.expand().unwrap(), json.expand().unwrap());
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(SweepSpec::parse_toml("[system]\ntypo_key = 1\n").is_err());
+        assert!(SweepSpec::parse_toml("[system]\nnet = tokenring\n").is_err());
+        assert!(SweepSpec::parse_toml("[system]\nhwas = nonsense99\n").is_err());
+        assert!(SweepSpec::parse_toml("[system]\nmesh = 1x1\n").is_err());
+        assert!(SweepSpec::parse_toml("[system]\ntask_buffers = 0\n").is_err());
+        assert!(
+            SweepSpec::parse_toml("[workload]\nkind = openloop\nrate_per_us = 0\n")
+                .is_err()
+        );
+        assert!(
+            SweepSpec::parse_toml("[workload]\nkind = jpeg_chain\ndepth = 7\n")
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn hwa_mix_syntax() {
+        assert_eq!(HwaMix::parse("first8").unwrap(), HwaMix::First(8));
+        assert_eq!(
+            HwaMix::parse("izigzag*3").unwrap(),
+            HwaMix::Repeat("izigzag".to_string(), 3)
+        );
+        assert_eq!(HwaMix::parse("jpeg").unwrap(), HwaMix::Jpeg);
+        assert_eq!(HwaMix::Jpeg.to_specs().unwrap().len(), 4);
+        assert_eq!(HwaMix::First(8).to_specs().unwrap().len(), 8);
+        assert!(HwaMix::Named(vec!["bogus".to_string()])
+            .to_specs()
+            .is_err());
+        assert!(HwaMix::First(0).to_specs().is_err());
+    }
+}

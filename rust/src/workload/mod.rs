@@ -1,9 +1,12 @@
-//! Workload generators: random rate-driven requests (§6.4) and real
-//! JPEG coefficient blocks (§6.6 / end-to-end example).
+//! Workload generators: random rate-driven requests (§6.4, closed- and
+//! open-loop) and real JPEG coefficient blocks (§6.6 / end-to-end
+//! example). The `sweep` module composes these into declarative
+//! scenarios; see `WorkloadSpec` there for the catalogue.
 
 pub mod jpeg;
 pub mod openloop;
 pub mod random;
 
 pub use jpeg::BlockImage;
+pub use openloop::OpenLoopSource;
 pub use random::{measure_rate_point, RandomWorkload, RandomWorkloadConfig, RatePoint};

@@ -1,6 +1,10 @@
 //! Rate-controlled random request workload (paper §6.4): each processor
 //! randomly sends requests to specific HWAs under a configurable request
 //! frequency (Poisson arrivals per processor).
+//!
+//! This closed-loop driver blocks each processor on its in-flight
+//! invocation. The open-loop variant the Fig. 8 sweeps use lives in
+//! `workload::openloop` and is measured by `sweep::run_scenario`.
 
 use crate::clock::{Ps, PS_PER_US};
 use crate::cmp::core::{InvokeSpec, Segment};
@@ -126,49 +130,6 @@ pub struct RatePoint {
     pub throughput_flits_per_us: f64,
     pub busy_fraction: f64,
     pub completions_per_us: f64,
-}
-
-/// Open-loop variant (the §6.4 semantics): sources installed via
-/// `System::set_open_loop` keep issuing without blocking on results.
-pub fn measure_open_rate_point(
-    sys: &mut System,
-    warmup_us: u64,
-    window_us: u64,
-) -> RatePoint {
-    let warmup_end = sys.now() + warmup_us * PS_PER_US;
-    while sys.now() < warmup_end {
-        sys.step();
-    }
-    let (in0, out0) = sys.fabric.flits_in_out();
-    let done0 = sys.open_loop_completions();
-    let (busy0, cyc0) = match &sys.fabric {
-        crate::sim::system::Fabric::Buffered(f) => {
-            (f.stats.busy_iface_cycles, f.stats.iface_cycles)
-        }
-        _ => (0, 1),
-    };
-    let end = sys.now() + window_us * PS_PER_US;
-    while sys.now() < end {
-        sys.step();
-    }
-    let (in1, out1) = sys.fabric.flits_in_out();
-    let done1 = sys.open_loop_completions();
-    let (busy1, cyc1) = match &sys.fabric {
-        crate::sim::system::Fabric::Buffered(f) => {
-            (f.stats.busy_iface_cycles, f.stats.iface_cycles)
-        }
-        _ => (0, 1),
-    };
-    RatePoint {
-        injection_flits_per_us: (in1 - in0) as f64 / window_us as f64,
-        throughput_flits_per_us: (out1 - out0) as f64 / window_us as f64,
-        busy_fraction: if cyc1 > cyc0 {
-            (busy1 - busy0) as f64 / (cyc1 - cyc0) as f64
-        } else {
-            0.0
-        },
-        completions_per_us: (done1 - done0) as f64 / window_us as f64,
-    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,132 @@
+//! Sweep-harness integration tests: thread-count invariance of the
+//! machine-readable report, TOML/JSON round-trips, and invalid-spec
+//! rejection (ISSUE 2 acceptance criteria).
+
+use std::collections::BTreeMap;
+
+use accnoc::sweep::{ScenarioSpec, SweepRunner, SweepSpec};
+use accnoc::util::json::Json;
+
+const DET_SPEC: &str = "\
+name = det\n\
+[system]\n\
+hwas = izigzag*2\n\
+task_buffers = 1,2\n\
+[workload]\n\
+kind = openloop\n\
+rate_per_us = 0.5,2\n\
+warmup_us = 1\n\
+window_us = 4\n\
+seed = 11\n";
+
+/// The acceptance bar: the same spec swept on 2 and on 8 threads emits
+/// byte-identical `BENCH_*.json` text. Every scenario carries its own
+/// seed and runs in an independent `System`, and report order is grid
+/// order, so scheduling must be invisible.
+#[test]
+fn two_and_eight_thread_sweeps_emit_identical_json() {
+    let sweep = SweepSpec::parse_toml(DET_SPEC).unwrap();
+    let grid = sweep.expand().unwrap();
+    assert_eq!(grid.len(), 4, "2 TB depths x 2 rates");
+    let two = SweepRunner::with_threads(2)
+        .run(&sweep.name, grid.clone())
+        .unwrap();
+    let eight = SweepRunner::with_threads(8)
+        .run(&sweep.name, grid)
+        .unwrap();
+    assert_eq!(two.render_json(), eight.render_json());
+    assert_eq!(two.render_csv(), eight.render_csv());
+}
+
+/// A closed-loop (burst) grid must be thread-count invariant too.
+#[test]
+fn burst_sweep_is_thread_count_invariant() {
+    let sweep = SweepSpec::parse_toml(
+        "name = det_burst\n\
+         [system]\n\
+         hwas = dfadd*1\n\
+         task_buffers = 1,2\n\
+         [workload]\n\
+         kind = burst\n\
+         requests_per_proc = 2\n\
+         deadline_us = 2000\n",
+    )
+    .unwrap();
+    let one = SweepRunner::with_threads(1).run_sweep(&sweep).unwrap();
+    let eight = SweepRunner::with_threads(8).run_sweep(&sweep).unwrap();
+    assert_eq!(one.render_json(), eight.render_json());
+}
+
+/// Every spec embedded in a report reconstructs the exact scenario that
+/// produced it (the artifact is self-describing).
+#[test]
+fn report_specs_round_trip_through_json() {
+    let sweep = SweepSpec::parse_toml(DET_SPEC).unwrap();
+    let grid = sweep.expand().unwrap();
+    let report = SweepRunner::with_threads(4)
+        .run(&sweep.name, grid.clone())
+        .unwrap();
+    let parsed = Json::parse(&report.render_json()).unwrap();
+    let scenarios = parsed.get("scenarios").and_then(Json::as_arr).unwrap();
+    assert_eq!(scenarios.len(), grid.len());
+    for (json_scenario, expected) in scenarios.iter().zip(&grid) {
+        let name = json_scenario
+            .get("scenario")
+            .and_then(Json::as_str)
+            .unwrap();
+        let map: BTreeMap<String, String> = json_scenario
+            .get("spec")
+            .and_then(Json::as_obj)
+            .unwrap()
+            .iter()
+            .map(|(k, v)| {
+                (k.clone(), v.as_str().expect("spec values are strings").to_string())
+            })
+            .collect();
+        let rebuilt = ScenarioSpec::from_map(name, &map).unwrap();
+        assert_eq!(&rebuilt, expected);
+    }
+}
+
+/// TOML and JSON spec forms expand to the same grid.
+#[test]
+fn toml_and_json_specs_expand_identically() {
+    let toml = SweepSpec::parse_toml(DET_SPEC).unwrap();
+    let json = SweepSpec::parse_json(
+        r#"{
+            "name": "det",
+            "system": {"hwas": "izigzag*2", "task_buffers": [1, 2]},
+            "workload": {
+                "kind": "openloop",
+                "rate_per_us": [0.5, 2],
+                "warmup_us": 1,
+                "window_us": 4,
+                "seed": 11
+            }
+        }"#,
+    )
+    .unwrap();
+    assert_eq!(toml.expand().unwrap(), json.expand().unwrap());
+}
+
+#[test]
+fn invalid_specs_are_rejected_at_load_time() {
+    // Unknown key (typo'd section member).
+    assert!(SweepSpec::parse_toml("[system]\ntask_bufers = 2\n").is_err());
+    // Unknown HWA name.
+    assert!(SweepSpec::parse_toml("[system]\nhwas = warpcore*8\n").is_err());
+    // Unparsable number on an axis.
+    assert!(SweepSpec::parse_toml(
+        "[workload]\nkind = openloop\nrate_per_us = 1,fast\n"
+    )
+    .is_err());
+    // Structurally broken TOML.
+    assert!(SweepSpec::parse_toml("[system\nnet = noc\n").is_err());
+    // Structurally broken JSON.
+    assert!(SweepSpec::parse_json("{\"system\": ").is_err());
+    // JSON with a non-scalar axis element.
+    assert!(
+        SweepSpec::parse_json(r#"{"system": {"hwas": [["izigzag"]]}}"#)
+            .is_err()
+    );
+}
