@@ -1,6 +1,6 @@
 # Convenience targets; see README.md.
 
-.PHONY: artifacts test bench sweep docs
+.PHONY: artifacts test bench sweep docs selftest
 
 # AOT-lower the JAX/Pallas kernels to artifacts/*.hlo.txt + manifest.txt
 # (prerequisite for `cargo {test,run} --features pjrt`).
@@ -25,3 +25,8 @@ sweep:
 docs:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 	cargo test --doc
+
+# CLI smoke: the three prototypes + the driver-API demo
+# (examples/driver_api.rs runs the same scenario).
+selftest:
+	cargo run --release -- selftest

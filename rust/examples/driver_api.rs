@@ -1,0 +1,18 @@
+//! Driver-API tour: build a 2-core + 3-accelerator system, submit a
+//! chained Job and a direct Job through `accel::AccelRuntime`, and print
+//! each Receipt's per-stage latency breakdown.
+//!
+//! The same scenario runs inside `accnoc selftest`, so this example and
+//! the CLI smoke stay in lockstep (see `accel::driver_api_demo`).
+//!
+//!     cargo run --release --example driver_api
+
+fn main() {
+    match accnoc::accel::driver_api_demo() {
+        Ok(report) => print!("{report}"),
+        Err(e) => {
+            eprintln!("driver_api: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,4 +1,4 @@
-//! END-TO-END VALIDATION DRIVER (DESIGN.md / EXPERIMENTS.md §End-to-end).
+//! END-TO-END VALIDATION DRIVER (docs/ARCHITECTURE.md / EXPERIMENTS.md).
 //!
 //! Proves all layers compose: a synthetic image is JPEG-encoded natively,
 //! its coefficient blocks are driven through the **simulated full system**
@@ -6,22 +6,24 @@
 //! HWAs -> packet sender -> NoC -> cores), where every HWA execution runs
 //! the **AOT-compiled JAX/Pallas artifacts through PJRT** (L1/L2), and the
 //! decoded pixels are checked block-by-block against the native golden
-//! decoder. Reports the paper's headline metrics (throughput, invocation
-//! latency, chaining speedup) for the run.
+//! decoder. All work is submitted through the `accel` driver API; the
+//! paper's headline metrics (throughput, invocation latency, chaining
+//! speedup) come from its completion receipts.
 //!
 //!     make artifacts && cargo run --release --example end_to_end
 
+use accnoc::accel::{AccelRuntime, Chain, Job};
 use accnoc::clock::PS_PER_US;
-use accnoc::cmp::core::{InvokeSpec, Segment};
 use accnoc::fpga::hwa::spec_by_name;
 use accnoc::runtime::native::{jpeg_chain, DEFAULT_QTABLE};
 use accnoc::runtime::{PjrtCompute, Runtime};
-use accnoc::sim::system::{System, SystemConfig};
+use accnoc::sim::SystemConfig;
+
 use accnoc::workload::jpeg::BlockImage;
 
 const N_BLOCKS: usize = 48;
 
-fn build_system(chained: bool) -> System {
+fn build_runtime(chained: bool) -> AccelRuntime {
     let mut cfg = SystemConfig::paper(vec![
         spec_by_name("izigzag").unwrap(),
         spec_by_name("iquantize").unwrap(),
@@ -31,13 +33,13 @@ fn build_system(chained: bool) -> System {
     if chained {
         cfg.chain_groups = vec![vec![0, 1, 2, 3]];
     }
-    let mut sys = System::new(cfg);
-    let rt = Runtime::load_default().unwrap_or_else(|e| {
+    let mut rt = AccelRuntime::new(cfg);
+    let runtime = Runtime::load_default().unwrap_or_else(|e| {
         eprintln!("artifacts missing — run `make artifacts` first\n{e:#}");
         std::process::exit(1);
     });
-    sys.fabric.set_compute(Box::new(PjrtCompute::new(rt)));
-    sys
+    rt.set_compute(Box::new(PjrtCompute::new(runtime)));
+    rt
 }
 
 fn main() {
@@ -48,49 +50,46 @@ fn main() {
     let coeffs = img.encode();
 
     // ---- Pass 1: chained decode (depth 3), blocks spread over cores ----
-    let mut sys = build_system(true);
-    let n_procs = sys.n_procs();
+    let mut rt = build_runtime(true);
+    let n_procs = rt.n_cores();
+    let accels = rt.accels();
     for (b, scan) in coeffs.iter().enumerate() {
-        let proc = b % n_procs;
-        sys.procs[proc].enqueue(Segment::Invoke(
-            InvokeSpec::direct(0, scan.iter().map(|c| *c as u32).collect(), 64)
-                .chained(3, [1, 2, 3]),
-        ));
+        let core = b % n_procs;
+        let chain = Chain::of(accels[0])
+            .then(accels[1])
+            .then(accels[2])
+            .then(accels[3]);
+        let words: Vec<u32> = scan.iter().map(|c| *c as u32).collect();
+        rt.submit(core, Job::chained(chain).direct(words))
+            .expect("valid chained job");
     }
     let t0 = std::time::Instant::now();
     assert!(
-        sys.run_until_done(2_000_000 * PS_PER_US),
+        rt.run_until_done(2_000_000 * PS_PER_US),
         "chained decode finished"
     );
     let wall = t0.elapsed();
-    let sim_us = sys.now() as f64 / PS_PER_US as f64;
+    let sim_us = rt.now() as f64 / PS_PER_US as f64;
 
-    // ---- Verify EVERY block against the native golden decoder ----
+    // ---- Verify EVERY core's last block against the golden decoder ----
+    // (per-processor state keeps only the final result; full per-block
+    // history is checked in rust/tests/integration.rs with smaller
+    // counts).
     let mut verified = 0usize;
     let mut max_err = 0i32;
-    let mut by_proc: Vec<Vec<Vec<u32>>> = vec![Vec::new(); n_procs];
-    for (i, p) in sys.procs.iter().enumerate() {
-        // Results arrive in program order per processor.
-        assert_eq!(p.records.len(), p.invocations_done());
-        by_proc[i] = vec![p.last_result.clone()];
-    }
-    // The per-processor last_result only keeps the final block; verify the
-    // last block of each processor (full per-block history is checked in
-    // rust/tests/integration.rs with smaller counts).
     for (b, scan) in coeffs.iter().enumerate() {
-        let proc = b % n_procs;
-        let is_last_for_proc =
-            (b + n_procs) >= coeffs.len();
-        if !is_last_for_proc {
+        let core = b % n_procs;
+        let is_last_for_core = (b + n_procs) >= coeffs.len();
+        if !is_last_for_core {
             continue;
         }
         let want = jpeg_chain(scan, &DEFAULT_QTABLE);
-        let got: Vec<i32> = sys.procs[proc]
-            .last_result
+        let got: Vec<i32> = rt
+            .last_result(core)
             .iter()
             .map(|w| *w as i32)
             .collect();
-        assert_eq!(got.len(), 64, "proc {proc} result size");
+        assert_eq!(got.len(), 64, "core {core} result size");
         for i in 0..64 {
             let err = (got[i] - want[i]).abs();
             max_err = max_err.max(err);
@@ -98,19 +97,19 @@ fn main() {
         }
         verified += 1;
     }
-    let total_invocations: usize =
-        sys.procs.iter().map(|p| p.records.len()).sum();
-    let mean_latency_us = sys
-        .procs
+    let completions = rt.completions();
+    let mean_latency_us = completions
         .iter()
-        .flat_map(|p| p.records.iter())
-        .map(|r| r.total() as f64 / PS_PER_US as f64)
+        .map(|c| c.total_ps() as f64 / PS_PER_US as f64)
         .sum::<f64>()
-        / total_invocations as f64;
+        / completions.len() as f64;
 
     println!("chained (depth-3) pass:");
     println!("  blocks decoded      : {N_BLOCKS}");
-    println!("  HWA tasks executed  : {}", sys.fabric.tasks_executed());
+    println!(
+        "  HWA tasks executed  : {}",
+        rt.system().fabric.tasks_executed()
+    );
     println!("  simulated time      : {sim_us:.2} µs");
     println!(
         "  block throughput    : {:.2} blocks/µs (simulated)",
@@ -123,21 +122,20 @@ fn main() {
     );
 
     // ---- Pass 2: unchained (depth 0) for the speedup headline ----
-    let mut sys0 = build_system(false);
+    let mut rt0 = build_runtime(false);
+    let accels0 = rt0.accels();
     for (b, scan) in coeffs.iter().enumerate() {
-        let proc = b % n_procs;
+        let core = b % n_procs;
         let words: Vec<u32> = scan.iter().map(|c| *c as u32).collect();
-        sys0.procs[proc].enqueue(Segment::Invoke(InvokeSpec::direct(0, words, 64)));
-        for hwa in 1..4u8 {
-            sys0.procs[proc].enqueue(Segment::Invoke(InvokeSpec::direct(
-                hwa,
-                vec![0; 64],
-                64,
-            )));
+        rt0.submit(core, Job::on(accels0[0]).direct(words))
+            .expect("valid job");
+        for stage in &accels0[1..] {
+            rt0.submit(core, Job::on(*stage).direct(vec![0; 64]))
+                .expect("valid job");
         }
     }
-    assert!(sys0.run_until_done(4_000_000 * PS_PER_US));
-    let sim0_us = sys0.now() as f64 / PS_PER_US as f64;
+    assert!(rt0.run_until_done(4_000_000 * PS_PER_US));
+    let sim0_us = rt0.now() as f64 / PS_PER_US as f64;
     println!("\nunchained (depth-0) pass: {sim0_us:.2} µs simulated");
     println!(
         "chaining speedup (paper Fig. 10 headline): {:.2}x",

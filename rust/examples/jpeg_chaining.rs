@@ -2,15 +2,18 @@
 //! blocks through the four-HWA chain at every chaining depth and verify
 //! the decoded pixels against the native golden model.
 //!
+//! Programs come from `cmp::apps::jpeg_chain_block_program` (typed
+//! driver phases) and are submitted through `accel::AccelRuntime`.
+//!
 //!     cargo run --release --example jpeg_chaining
 
+use accnoc::accel::{AccelRuntime, Program};
 use accnoc::clock::PS_PER_US;
-use accnoc::cmp::apps::jpeg_chain_depth_program;
-use accnoc::cmp::core::Segment;
+use accnoc::cmp::apps::jpeg_chain_block_program;
 use accnoc::fpga::hwa::spec_by_name;
 use accnoc::runtime::native::{jpeg_chain, DEFAULT_QTABLE};
 use accnoc::runtime::NativeCompute;
-use accnoc::sim::system::{System, SystemConfig};
+use accnoc::sim::SystemConfig;
 use accnoc::workload::jpeg::BlockImage;
 
 fn main() {
@@ -28,29 +31,19 @@ fn main() {
             spec_by_name("shiftbound").unwrap(),
         ]);
         cfg.chain_groups = vec![vec![0, 1, 2, 3]];
-        let mut sys = System::new(cfg);
-        sys.fabric.set_compute(Box::new(NativeCompute::default()));
+        let mut rt = AccelRuntime::new(cfg);
+        rt.set_compute(Box::new(NativeCompute::default()));
         // Per block: one chained invocation covering `depth` hops plus
         // separate invocations for the remaining stages.
-        let mut prog = Vec::new();
+        let mut prog = Program::new();
         for scan in &coeffs {
-            for seg in jpeg_chain_depth_program(depth) {
-                prog.push(match seg {
-                    Segment::Invoke(mut spec) => {
-                        if spec.hwa_id == 0 {
-                            spec.words =
-                                scan.iter().map(|c| *c as u32).collect();
-                        }
-                        Segment::Invoke(spec)
-                    }
-                    other => other,
-                });
-            }
+            let block: Vec<u32> = scan.iter().map(|c| *c as u32).collect();
+            prog.extend(jpeg_chain_block_program(depth, block));
         }
-        sys.load_program(0, prog);
-        assert!(sys.run_until_done(500_000 * PS_PER_US));
-        let total_us =
-            sys.procs[0].finished_at.unwrap() as f64 / PS_PER_US as f64;
+        rt.load(0, prog).expect("valid chain programs");
+        assert!(rt.run_until_done(500_000 * PS_PER_US));
+        let total_us = rt.system().procs[0].finished_at.unwrap() as f64
+            / PS_PER_US as f64;
         if depth == 0 {
             base_us = total_us;
         }
@@ -62,8 +55,8 @@ fn main() {
         // Functional check at full depth: simulated pixels == golden.
         if depth == 3 {
             let want = jpeg_chain(coeffs.last().unwrap(), &DEFAULT_QTABLE);
-            let got: Vec<i32> = sys.procs[0]
-                .last_result
+            let got: Vec<i32> = rt
+                .last_result(0)
                 .iter()
                 .map(|w| *w as i32)
                 .collect();

@@ -1,67 +1,75 @@
 //! Quickstart: build the paper's default system (3x3 mesh NoC, FPGA with
-//! eight HWAs at PR4-PS4/2-TB), run one accelerated invocation from a
-//! processor, and print the latency breakdown.
+//! eight HWAs at PR4-PS4/2-TB), run one accelerated invocation through
+//! the typed driver API, and print the receipt's latency breakdown.
 //!
 //!     cargo run --release --example quickstart
 
+use accnoc::accel::{AccelRuntime, Job};
 use accnoc::clock::PS_PER_US;
-use accnoc::cmp::core::{InvokeSpec, Segment};
 use accnoc::fpga::hwa::table3;
 use accnoc::runtime::NativeCompute;
-use accnoc::sim::system::{System, SystemConfig};
+use accnoc::sim::SystemConfig;
 
 fn main() {
-    // 1. System: paper defaults + the first eight Table 3 HWAs.
+    // 1. Driver runtime over the paper-default system with the first
+    // eight Table 3 HWAs. Functional compute is the native golden model
+    // (swap in PjrtCompute for artifact-backed math — see
+    // examples/end_to_end.rs).
     let cfg = SystemConfig::paper(table3().into_iter().take(8).collect());
-    let mut sys = System::new(cfg);
-    // Functional compute (swap in PjrtCompute for artifact-backed math —
-    // see examples/end_to_end.rs).
-    sys.fabric.set_compute(Box::new(NativeCompute::default()));
+    let mut rt = AccelRuntime::new(cfg);
+    rt.set_compute(Box::new(NativeCompute::default()));
 
-    // 2. Program processor 0: some software work, then a D_HWA_invoke of
-    // the GSM autocorrelation HWA (id 5), then more software.
+    // 2. Discover the GSM autocorrelation accelerator and program core
+    // 0's session: some software work, one D_HWA_invoke, more software.
     // GSM samples travel as f32 bit patterns on the wire.
+    let gsm = rt.accel_named("gsm").expect("gsm HWA configured");
     let frame: Vec<u32> = (0..8).map(|i| (i as f32 * 100.0).to_bits()).collect();
-    sys.load_program(
-        0,
-        vec![
-            Segment::Compute(2_000),
-            Segment::Invoke(InvokeSpec::direct(5, frame, 8)),
-            Segment::Compute(1_000),
-        ],
-    );
+    let receipt = {
+        let mut session = rt.session(0).expect("core 0 exists");
+        session.compute(2_000);
+        let receipt = session
+            .submit(Job::on(gsm).direct(frame))
+            .expect("valid job");
+        session.compute(1_000);
+        receipt
+    };
 
-    // 3. Run until the program finishes.
-    assert!(sys.run_until_done(10_000 * PS_PER_US), "system finished");
+    // 3. Run until the program finishes and resolve the receipt.
+    assert!(rt.run_until_done(10_000 * PS_PER_US), "system finished");
+    let done = rt.poll(receipt).expect("invocation completed");
 
     // 4. Report.
-    let r = sys.procs[0].records[0];
+    let r = done.record();
+    let b = done.breakdown();
     println!("quickstart: one GSM invocation through the full system");
     println!("  request sent        @ {:>8} ps", r.t_request);
     println!(
         "  grant received      @ {:>8} ps  (+{} ns)",
         r.t_grant,
-        (r.t_grant - r.t_request) / 1000
+        b.grant_ps / 1000
     );
     println!(
         "  payload delivered   @ {:>8} ps  (+{} ns)",
         r.t_payload_done,
-        (r.t_payload_done - r.t_grant) / 1000
+        b.payload_ps / 1000
     );
     println!(
         "  result complete     @ {:>8} ps  (+{} ns)",
         r.t_result_last,
-        (r.t_result_last - r.t_payload_done) / 1000
+        b.execute_ps / 1000
     );
     println!(
         "  total invocation latency: {:.3} µs",
-        r.total() as f64 / PS_PER_US as f64
+        done.total_ps() as f64 / PS_PER_US as f64
     );
-    let autocorr: Vec<f32> = sys.procs[0]
-        .last_result
+    let autocorr: Vec<f32> = rt
+        .last_result(0)
         .iter()
         .map(|w| f32::from_bits(*w))
         .collect();
     println!("  autocorrelation lags: {autocorr:?}");
-    println!("  tasks executed on FPGA: {}", sys.fabric.tasks_executed());
+    println!(
+        "  tasks executed on FPGA: {}",
+        rt.system().fabric.tasks_executed()
+    );
 }

@@ -1,0 +1,247 @@
+//! The chaining builder: an ordered hop list validated at construction.
+//!
+//! The wire format gives chaining a 2-bit depth and three 2-bit group
+//! indexes (§4.2 B.3). The old `InvokeSpec::chained(depth, [u8; 3])`
+//! accepted any combination and silently truncated whatever did not fit;
+//! [`Chain`] rejects bad chains before a single flit is packed.
+
+use super::{AccelError, AccelHandle, CompileCtx};
+
+/// Maximum hops in one chain: the first accelerator plus the three
+/// chain-index lanes the head flit can carry.
+pub(crate) const MAX_HOPS: usize = 4;
+
+/// An ordered accelerator chain built hop by hop:
+///
+/// ```
+/// use accnoc::accel::{AccelError, AccelHandle, Chain};
+///
+/// let h = |id| AccelHandle::new(id, 64, 64);
+/// let ok = Chain::of(h(0)).then(h(1)).then(h(2)).then(h(3));
+/// assert_eq!(ok.depth(), 3);
+/// assert!(ok.validate().is_ok());
+///
+/// // A fifth hop exceeds the 2-bit wire depth field:
+/// let deep = Chain::of(h(0)).then(h(1)).then(h(2)).then(h(3)).then(h(4));
+/// assert_eq!(deep.validate(), Err(AccelError::ChainTooDeep { hops: 5 }));
+///
+/// // Revisiting an accelerator is rejected at construction:
+/// let dup = Chain::of(h(0)).then(h(1)).then(h(0));
+/// assert_eq!(dup.validate(), Err(AccelError::DuplicateHop { hwa_id: 0 }));
+/// ```
+///
+/// `then` records the first violation instead of panicking, so builder
+/// expressions stay chainable; the stored error surfaces from
+/// [`Chain::validate`] and from every submit path.
+#[derive(Debug, Clone)]
+pub struct Chain {
+    hops: Vec<AccelHandle>,
+    err: Option<AccelError>,
+}
+
+impl Chain {
+    /// Start a chain at its first (request-receiving) accelerator.
+    pub fn of(first: AccelHandle) -> Self {
+        Self {
+            hops: vec![first],
+            err: None,
+        }
+    }
+
+    /// Append the next hop. Depth and duplicate violations are recorded
+    /// here, at construction, and reported by [`Chain::validate`].
+    pub fn then(mut self, next: AccelHandle) -> Self {
+        if self.err.is_some() {
+            return self;
+        }
+        if self.hops.iter().any(|h| h.id() == next.id()) {
+            self.err = Some(AccelError::DuplicateHop { hwa_id: next.id() });
+            return self;
+        }
+        if self.hops.len() >= MAX_HOPS {
+            self.err = Some(AccelError::ChainTooDeep {
+                hops: self.hops.len() + 1,
+            });
+            return self;
+        }
+        self.hops.push(next);
+        self
+    }
+
+    /// Chaining depth: hops after the first (0 for a single accelerator).
+    pub fn depth(&self) -> u8 {
+        (self.hops.len() - 1) as u8
+    }
+
+    /// The hop sequence, first accelerator included.
+    pub fn hops(&self) -> &[AccelHandle] {
+        &self.hops
+    }
+
+    /// First construction violation, if any.
+    pub fn validate(&self) -> Result<(), AccelError> {
+        match self.err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Resolve to the wire encoding `(first hwa_id, depth, chain_index)`
+    /// against a concrete system: every hop must exist, and each hand-off
+    /// must target a member of the producing hop's (unique) chain group —
+    /// the index lanes address group members, not channels.
+    pub(crate) fn resolve(
+        &self,
+        ctx: &CompileCtx<'_>,
+    ) -> Result<(u8, u8, [u8; 3]), AccelError> {
+        self.validate()?;
+        for h in &self.hops {
+            if (h.id() as usize) >= ctx.n_accels {
+                return Err(AccelError::UnknownAccelerator { hwa_id: h.id() });
+            }
+        }
+        let first = self.hops[0].id();
+        let depth = self.depth();
+        let mut index = [0u8; 3];
+        // Each hand-off is interpreted by the fabric's chain controllers
+        // against the FIRST configured group containing the producing
+        // channel (`fpga::fabric::step_chain_controllers` polls groups in
+        // config order). Encode every index lane against exactly that
+        // group, and reject producers sitting in more than one group —
+        // the fabric could route their hand-off either way depending on
+        // buffer occupancy.
+        for (lane, pair) in self.hops.windows(2).enumerate() {
+            let prod = pair[0];
+            let next = pair[1];
+            let mut groups = ctx
+                .chain_groups
+                .iter()
+                .filter(|g| g.contains(&(prod.id() as usize)));
+            let group = groups
+                .next()
+                .ok_or(AccelError::NotChainable { hwa_id: prod.id() })?;
+            if groups.next().is_some() {
+                return Err(AccelError::AmbiguousChainGroup {
+                    hwa_id: prod.id(),
+                });
+            }
+            let pos = group
+                .iter()
+                .position(|&m| m == next.id() as usize)
+                .ok_or(AccelError::NotChainable { hwa_id: next.id() })?;
+            if pos >= MAX_HOPS {
+                // Unreachable through System construction today (the
+                // fabric asserts groups of <= 4 members), but kept so the
+                // driver stays safe against future larger groups.
+                return Err(AccelError::ChainIndexOverflow {
+                    hwa_id: next.id(),
+                });
+            }
+            index[lane] = pos as u8;
+        }
+        Ok((first, depth, index))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h(id: u8) -> AccelHandle {
+        AccelHandle::new(id, 8, 8)
+    }
+
+    fn ctx(n: usize, groups: &[Vec<usize>]) -> CompileCtx<'_> {
+        CompileCtx {
+            n_accels: n,
+            chain_groups: groups,
+        }
+    }
+
+    #[test]
+    fn depth_zero_to_three_resolve() {
+        let groups = vec![vec![0, 1, 2, 3]];
+        let mut chain = Chain::of(h(0));
+        assert_eq!(chain.resolve(&ctx(4, &groups)).unwrap(), (0, 0, [0; 3]));
+        chain = chain.then(h(1));
+        assert_eq!(
+            chain.resolve(&ctx(4, &groups)).unwrap(),
+            (0, 1, [1, 0, 0])
+        );
+        chain = chain.then(h(2)).then(h(3));
+        assert_eq!(
+            chain.resolve(&ctx(4, &groups)).unwrap(),
+            (0, 3, [1, 2, 3])
+        );
+    }
+
+    #[test]
+    fn rejects_depth_beyond_three() {
+        let c = Chain::of(h(0)).then(h(1)).then(h(2)).then(h(3)).then(h(4));
+        assert_eq!(c.validate(), Err(AccelError::ChainTooDeep { hops: 5 }));
+        // The error is sticky: further hops do not mask it.
+        let c = c.then(h(5));
+        assert_eq!(c.validate(), Err(AccelError::ChainTooDeep { hops: 5 }));
+    }
+
+    #[test]
+    fn rejects_duplicate_hops() {
+        let c = Chain::of(h(2)).then(h(2));
+        assert_eq!(c.validate(), Err(AccelError::DuplicateHop { hwa_id: 2 }));
+        let c = Chain::of(h(0)).then(h(1)).then(h(1));
+        assert_eq!(c.validate(), Err(AccelError::DuplicateHop { hwa_id: 1 }));
+    }
+
+    #[test]
+    fn rejects_absent_accelerator() {
+        let groups = vec![vec![0, 1]];
+        let c = Chain::of(h(0)).then(h(7));
+        assert_eq!(
+            c.resolve(&ctx(2, &groups)),
+            Err(AccelError::UnknownAccelerator { hwa_id: 7 })
+        );
+    }
+
+    #[test]
+    fn resolves_each_lane_against_the_producers_first_group() {
+        // Index lanes encode member positions of the group the fabric
+        // will consult for each hand-off: the first configured group
+        // containing the producing channel.
+        let groups = vec![vec![4, 5], vec![0, 2, 3]];
+        let c = Chain::of(h(0)).then(h(2)).then(h(3));
+        assert_eq!(
+            c.resolve(&ctx(6, &groups)).unwrap(),
+            (0, 2, [1, 2, 0])
+        );
+    }
+
+    #[test]
+    fn rejects_producers_in_overlapping_groups() {
+        // Channel 0 sits in two groups: the fabric's chain controllers
+        // could interpret its hand-off against either, so the driver
+        // refuses the chain instead of guessing.
+        let groups = vec![vec![0, 1], vec![0, 2, 3]];
+        let c = Chain::of(h(0)).then(h(2));
+        assert_eq!(
+            c.resolve(&ctx(4, &groups)),
+            Err(AccelError::AmbiguousChainGroup { hwa_id: 0 })
+        );
+    }
+
+    #[test]
+    fn rejects_hops_outside_the_chain_group() {
+        // Accelerator 2 exists but is not in hop 0's group.
+        let groups = vec![vec![0, 1]];
+        let c = Chain::of(h(0)).then(h(2));
+        assert_eq!(
+            c.resolve(&ctx(3, &groups)),
+            Err(AccelError::NotChainable { hwa_id: 2 })
+        );
+        // No group at all: chaining is not configured.
+        let c = Chain::of(h(0)).then(h(1));
+        assert_eq!(
+            c.resolve(&ctx(3, &[])),
+            Err(AccelError::NotChainable { hwa_id: 0 })
+        );
+    }
+}

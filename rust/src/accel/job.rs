@@ -1,0 +1,208 @@
+//! The typed invocation builder: what to run, what data to feed it, how
+//! urgent it is — compiled to the wire-level `InvokeSpec` only after
+//! validation.
+
+use crate::cmp::core::InvokeSpec;
+use crate::flit::Direction;
+
+use super::{AccelError, AccelHandle, Chain, CompileCtx};
+
+/// How the task's input reaches the fabric (paper §5, Fig. 5).
+#[derive(Debug, Clone)]
+enum Access {
+    /// Direct access (Fig. 5a): the core sends the payload words itself.
+    Direct { words: Vec<u32> },
+    /// Memory access (Fig. 5b): the MMU DMAs `bytes` from `start_addr`
+    /// and the result is written back to memory.
+    Memory { start_addr: u32, bytes: u16 },
+}
+
+/// One accelerator invocation, built fluently and validated before any
+/// flit is packed:
+///
+/// ```
+/// use accnoc::accel::{AccelHandle, Chain, Job};
+///
+/// let izigzag = AccelHandle::new(0, 64, 64);
+/// let iquantize = AccelHandle::new(1, 64, 64);
+///
+/// // A direct invocation with an urgent priority:
+/// let single = Job::on(izigzag).direct((0..64).collect()).priority(3);
+/// assert_eq!(single.target().depth(), 0);
+///
+/// // A chained invocation: one request, one payload, one result.
+/// let chained =
+///     Job::chained(Chain::of(izigzag).then(iquantize)).direct(vec![7; 64]);
+/// assert_eq!(chained.target().depth(), 1);
+/// ```
+#[derive(Debug, Clone)]
+pub struct Job {
+    chain: Chain,
+    access: Access,
+    priority: u8,
+    expect_words: Option<usize>,
+}
+
+impl Job {
+    /// Invoke a single accelerator.
+    pub fn on(target: AccelHandle) -> Self {
+        Self::chained(Chain::of(target))
+    }
+
+    /// Invoke an accelerator chain (see [`Chain`]).
+    pub fn chained(chain: Chain) -> Self {
+        Self {
+            chain,
+            access: Access::Direct { words: Vec::new() },
+            priority: 0,
+            expect_words: None,
+        }
+    }
+
+    /// Direct access (Fig. 5a): the core marshals `words` to the fabric.
+    pub fn direct(mut self, words: Vec<u32>) -> Self {
+        self.access = Access::Direct { words };
+        self
+    }
+
+    /// Memory access (Fig. 5b): the MMU fetches `bytes` from
+    /// `start_addr`; the result is written back to memory and the core
+    /// only receives a completion notify.
+    pub fn via_memory(mut self, start_addr: u32, bytes: u16) -> Self {
+        self.access = Access::Memory { start_addr, bytes };
+        self
+    }
+
+    /// Packet priority, 0 (default) to 3 (most urgent, 2-bit field).
+    pub fn priority(mut self, priority: u8) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Override the expected result-word count (defaults to the last
+    /// hop's `out_words` for direct access, 0 for memory access).
+    pub fn expect_words(mut self, words: usize) -> Self {
+        self.expect_words = Some(words);
+        self
+    }
+
+    /// The accelerator chain this job targets (length 1 for [`Job::on`]).
+    pub fn target(&self) -> &Chain {
+        &self.chain
+    }
+
+    /// Compile to the wire-level invocation, validating the chain, hop
+    /// identities and priority against the target system.
+    pub(crate) fn compile(
+        self,
+        ctx: &CompileCtx<'_>,
+    ) -> Result<InvokeSpec, AccelError> {
+        if self.priority > 3 {
+            return Err(AccelError::PriorityOutOfRange {
+                priority: self.priority,
+            });
+        }
+        let (hwa_id, chain_depth, chain_index) = self.chain.resolve(ctx)?;
+        let last_out = self
+            .chain
+            .hops()
+            .last()
+            .expect("chain has at least one hop")
+            .out_words();
+        Ok(match self.access {
+            Access::Direct { words } => InvokeSpec {
+                hwa_id,
+                words,
+                chain_depth,
+                chain_index,
+                priority: self.priority,
+                direction: Direction::ProcToHwa,
+                start_addr: 0,
+                mem_bytes: 0,
+                expect_words: self.expect_words.unwrap_or(last_out),
+            },
+            Access::Memory { start_addr, bytes } => InvokeSpec {
+                hwa_id,
+                words: Vec::new(),
+                chain_depth,
+                chain_index,
+                priority: self.priority,
+                direction: Direction::MemToHwa,
+                start_addr,
+                mem_bytes: bytes,
+                expect_words: self.expect_words.unwrap_or(0),
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(groups: &[Vec<usize>]) -> CompileCtx<'_> {
+        CompileCtx {
+            n_accels: 4,
+            chain_groups: groups,
+        }
+    }
+
+    #[test]
+    fn direct_job_compiles_to_the_legacy_invoke_spec() {
+        let h = AccelHandle::new(2, 8, 6);
+        let spec = Job::on(h)
+            .direct(vec![1, 2, 3])
+            .priority(1)
+            .compile(&ctx(&[]))
+            .unwrap();
+        assert_eq!(spec.hwa_id, 2);
+        assert_eq!(spec.words, vec![1, 2, 3]);
+        assert_eq!(spec.chain_depth, 0);
+        assert_eq!(spec.chain_index, [0; 3]);
+        assert_eq!(spec.priority, 1);
+        assert_eq!(spec.direction, Direction::ProcToHwa);
+        assert_eq!(spec.expect_words, 6, "defaults to the hop's out_words");
+    }
+
+    #[test]
+    fn memory_job_compiles_to_the_mmu_scenario() {
+        let h = AccelHandle::new(0, 64, 64);
+        let spec = Job::on(h).via_memory(0x4000, 256).compile(&ctx(&[])).unwrap();
+        assert_eq!(spec.direction, Direction::MemToHwa);
+        assert_eq!(spec.start_addr, 0x4000);
+        assert_eq!(spec.mem_bytes, 256);
+        assert!(spec.words.is_empty());
+        assert_eq!(spec.expect_words, 0);
+    }
+
+    #[test]
+    fn chained_job_expects_the_last_hops_output() {
+        let groups = vec![vec![0, 1, 2, 3]];
+        let a = AccelHandle::new(0, 64, 64);
+        let b = AccelHandle::new(1, 64, 32);
+        let spec = Job::chained(Chain::of(a).then(b))
+            .direct(vec![0; 64])
+            .compile(&ctx(&groups))
+            .unwrap();
+        assert_eq!(spec.chain_depth, 1);
+        assert_eq!(spec.chain_index, [1, 0, 0]);
+        assert_eq!(spec.expect_words, 32);
+    }
+
+    #[test]
+    fn out_of_range_priority_is_rejected() {
+        let h = AccelHandle::new(0, 4, 4);
+        let err = Job::on(h).priority(4).compile(&ctx(&[])).unwrap_err();
+        assert_eq!(err, AccelError::PriorityOutOfRange { priority: 4 });
+    }
+
+    #[test]
+    fn invalid_chain_fails_compilation() {
+        let h = AccelHandle::new(0, 4, 4);
+        let err = Job::chained(Chain::of(h).then(h))
+            .direct(vec![1])
+            .compile(&ctx(&[]))
+            .unwrap_err();
+        assert_eq!(err, AccelError::DuplicateHop { hwa_id: 0 });
+    }
+}

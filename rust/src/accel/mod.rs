@@ -1,0 +1,182 @@
+//! The typed accelerator-driver API — the public surface every workload
+//! and frontend submits FPGA work through.
+//!
+//! The paper's headline claim is *light-weight programmable* integration:
+//! software invokes accelerators and configures chaining through a thin
+//! driver layer (the Fig. 4 C functions), not by hand-packing flits. This
+//! module is that driver for the simulator:
+//!
+//! * [`AccelRuntime`] — a session facade over [`crate::sim::System`]
+//!   owning accelerator discovery (one [`AccelHandle`] per configured
+//!   `HwaSpec`) and per-core [`Session`]s;
+//! * [`Job`] — a typed invocation builder
+//!   (`Job::on(h).direct(words)` / `.via_memory(addr, bytes)` /
+//!   `.priority(p)`) replacing raw `InvokeSpec` construction;
+//! * [`Chain`] — a chaining builder (`Chain::of(h0).then(h1).then(h2)`)
+//!   that validates depth and hop identity at construction instead of
+//!   silently truncating a `[u8; 3]` index on the wire;
+//! * [`Receipt`] — a poll-able completion token carrying issue/complete
+//!   timestamps and the per-stage latency breakdown every
+//!   `sweep::RunStats` percentile is computed from;
+//! * [`Program`] — an iterator of typed [`Phase`]s (software compute and
+//!   accelerator jobs) compiled down to the core's segment stream.
+//!
+//! Life of a job:
+//!
+//! ```
+//! use accnoc::accel::{AccelRuntime, Job};
+//! use accnoc::fpga::hwa::spec_by_name;
+//! use accnoc::sim::SystemConfig;
+//!
+//! let cfg = SystemConfig::paper(vec![spec_by_name("dfadd").unwrap()]);
+//! let mut rt = AccelRuntime::new(cfg);
+//! let dfadd = rt.accel_named("dfadd").unwrap();
+//! let receipt = rt.submit(0, Job::on(dfadd).direct(vec![1, 2, 3, 4])).unwrap();
+//! assert!(rt.run_until_done(50_000_000)); // 50 simulated µs
+//! let done = rt.poll(receipt).expect("completed");
+//! assert!(done.total_ps() > 0);
+//! ```
+
+mod chain;
+mod job;
+mod program;
+mod receipt;
+mod runtime;
+
+pub use chain::Chain;
+pub use job::Job;
+pub use program::{Phase, Program};
+pub use receipt::{Completion, Receipt, StageBreakdown};
+pub use runtime::{driver_api_demo, AccelRuntime, Session};
+
+use crate::fpga::hwa::HwaSpec;
+
+/// Why a job, chain or program was rejected before any flit was packed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccelError {
+    /// Chain longer than the 2-bit wire depth field allows (4 hops max).
+    ChainTooDeep { hops: usize },
+    /// The same accelerator appears twice in one chain.
+    DuplicateHop { hwa_id: u8 },
+    /// A job or chain hop names an accelerator the system does not have.
+    UnknownAccelerator { hwa_id: u8 },
+    /// The chained hops are not members of one configured chain group.
+    NotChainable { hwa_id: u8 },
+    /// A producing hop sits in more than one configured chain group, so
+    /// the fabric's chain controllers could route its hand-off either
+    /// way — the driver refuses ambiguous chains.
+    AmbiguousChainGroup { hwa_id: u8 },
+    /// The hop is in the chain group, but at a member position beyond
+    /// what a 2-bit index lane can address (positions 0-3).
+    ChainIndexOverflow { hwa_id: u8 },
+    /// Priority exceeds the 2-bit wire field.
+    PriorityOutOfRange { priority: u8 },
+    /// Session target is not a configured core.
+    UnknownCore { core: usize },
+    /// The receipt's job did not complete before the deadline.
+    Timeout { receipt: Receipt },
+}
+
+impl std::fmt::Display for AccelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AccelError::ChainTooDeep { hops } => {
+                write!(f, "chain of {hops} hops exceeds the depth-3 limit")
+            }
+            AccelError::DuplicateHop { hwa_id } => {
+                write!(f, "accelerator {hwa_id} appears twice in the chain")
+            }
+            AccelError::UnknownAccelerator { hwa_id } => {
+                write!(f, "no accelerator with id {hwa_id} in this system")
+            }
+            AccelError::NotChainable { hwa_id } => {
+                write!(
+                    f,
+                    "accelerator {hwa_id} is not in the invocation's chain \
+                     group"
+                )
+            }
+            AccelError::AmbiguousChainGroup { hwa_id } => {
+                write!(
+                    f,
+                    "accelerator {hwa_id} belongs to more than one chain \
+                     group; its hand-offs would be ambiguous"
+                )
+            }
+            AccelError::ChainIndexOverflow { hwa_id } => {
+                write!(
+                    f,
+                    "accelerator {hwa_id} sits beyond group position 3; \
+                     a 2-bit chain-index lane cannot address it"
+                )
+            }
+            AccelError::PriorityOutOfRange { priority } => {
+                write!(f, "priority {priority} exceeds the 2-bit field (0-3)")
+            }
+            AccelError::UnknownCore { core } => {
+                write!(f, "no processor core {core} in this system")
+            }
+            AccelError::Timeout { receipt } => {
+                write!(
+                    f,
+                    "job {}/{} did not complete before the deadline",
+                    receipt.core(),
+                    receipt.seq()
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for AccelError {}
+
+/// A discovered accelerator: the identity plus the I/O shape a [`Job`]
+/// needs to derive payload and result sizes. Obtained from
+/// [`AccelRuntime::accels`]/[`AccelRuntime::accel`]; constructing one by
+/// hand is allowed (application tables do) — the ids are validated when
+/// the job is submitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AccelHandle {
+    id: u8,
+    in_words: usize,
+    out_words: usize,
+}
+
+impl AccelHandle {
+    /// Handle with an explicit I/O shape (validated against the system at
+    /// submit time).
+    pub fn new(id: u8, in_words: usize, out_words: usize) -> Self {
+        Self {
+            id,
+            in_words,
+            out_words,
+        }
+    }
+
+    /// Handle for a configured `HwaSpec` at channel `id`.
+    pub fn from_spec(id: u8, spec: &HwaSpec) -> Self {
+        Self::new(id, spec.in_words, spec.out_words)
+    }
+
+    /// The accelerator's `hwa_id` (channel index) on the wire.
+    pub fn id(&self) -> u8 {
+        self.id
+    }
+
+    /// Input words one task consumes.
+    pub fn in_words(&self) -> usize {
+        self.in_words
+    }
+
+    /// Result words one task produces.
+    pub fn out_words(&self) -> usize {
+        self.out_words
+    }
+}
+
+/// Everything job compilation needs to know about the target system:
+/// how many accelerators exist and which channel indices may chain.
+pub(crate) struct CompileCtx<'a> {
+    pub n_accels: usize,
+    pub chain_groups: &'a [Vec<usize>],
+}

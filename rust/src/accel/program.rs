@@ -1,0 +1,190 @@
+//! A processor program as typed phases — software compute interleaved
+//! with accelerator jobs — compiled down to the core model's segment
+//! stream in one place.
+
+use crate::cmp::core::Segment;
+
+use super::{AccelError, CompileCtx, Job};
+
+/// One program phase.
+#[derive(Debug, Clone)]
+pub enum Phase {
+    /// Pure software execution for this many core cycles.
+    Compute(u64),
+    /// An accelerator invocation (the core blocks on its completion).
+    Invoke(Job),
+}
+
+/// An ordered list of [`Phase`]s for one core. `Program` is the single
+/// representation application tables (`cmp::apps`), workload drivers and
+/// the sweep runner hand to [`super::AccelRuntime::load`]; the runtime
+/// compiles it to the legacy `Segment` stream after validating every job.
+///
+/// ```
+/// use accnoc::accel::{AccelHandle, Job, Phase, Program};
+///
+/// let dfadd = AccelHandle::new(0, 4, 2);
+/// let program = Program::new()
+///     .compute(1_000)
+///     .invoke(Job::on(dfadd).direct(vec![1, 2, 3, 4]))
+///     .compute(500);
+/// assert_eq!(program.len(), 3);
+/// assert_eq!(program.invocations(), 1);
+/// assert!(matches!(program.phases()[0], Phase::Compute(1_000)));
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    phases: Vec<Phase>,
+}
+
+impl Program {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a software-compute phase.
+    pub fn compute(mut self, cycles: u64) -> Self {
+        self.phases.push(Phase::Compute(cycles));
+        self
+    }
+
+    /// Append an accelerator job.
+    pub fn invoke(mut self, job: Job) -> Self {
+        self.phases.push(Phase::Invoke(job));
+        self
+    }
+
+    /// Append a phase in place.
+    pub fn push(&mut self, phase: Phase) {
+        self.phases.push(phase);
+    }
+
+    /// Append every phase of `other`.
+    pub fn extend(&mut self, other: Program) {
+        self.phases.extend(other.phases);
+    }
+
+    pub fn len(&self) -> usize {
+        self.phases.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.phases.is_empty()
+    }
+
+    /// The phases, in execution order.
+    pub fn phases(&self) -> &[Phase] {
+        &self.phases
+    }
+
+    /// Number of [`Phase::Invoke`] phases — each yields one receipt.
+    pub fn invocations(&self) -> usize {
+        self.phases
+            .iter()
+            .filter(|p| matches!(p, Phase::Invoke(_)))
+            .count()
+    }
+
+    /// Compile to the core model's segment stream, validating every job
+    /// first (no phase is enqueued if any phase is invalid).
+    pub(crate) fn compile(
+        self,
+        ctx: &CompileCtx<'_>,
+    ) -> Result<Vec<Segment>, AccelError> {
+        self.phases
+            .into_iter()
+            .map(|phase| match phase {
+                Phase::Compute(cycles) => Ok(Segment::Compute(cycles)),
+                Phase::Invoke(job) => job.compile(ctx).map(Segment::Invoke),
+            })
+            .collect()
+    }
+}
+
+impl IntoIterator for Program {
+    type Item = Phase;
+    type IntoIter = std::vec::IntoIter<Phase>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.phases.into_iter()
+    }
+}
+
+impl<'a> IntoIterator for &'a Program {
+    type Item = &'a Phase;
+    type IntoIter = std::slice::Iter<'a, Phase>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.phases.iter()
+    }
+}
+
+impl FromIterator<Phase> for Program {
+    fn from_iter<T: IntoIterator<Item = Phase>>(iter: T) -> Self {
+        Self {
+            phases: iter.into_iter().collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::AccelHandle;
+
+    #[test]
+    fn compile_preserves_phase_order() {
+        let h = AccelHandle::new(0, 4, 4);
+        let prog = Program::new()
+            .compute(10)
+            .invoke(Job::on(h).direct(vec![1]))
+            .compute(20);
+        let ctx = CompileCtx {
+            n_accels: 1,
+            chain_groups: &[],
+        };
+        let segs = prog.compile(&ctx).unwrap();
+        assert_eq!(segs.len(), 3);
+        assert!(matches!(segs[0], Segment::Compute(10)));
+        assert!(matches!(segs[1], Segment::Invoke(_)));
+        assert!(matches!(segs[2], Segment::Compute(20)));
+    }
+
+    #[test]
+    fn compile_is_atomic_over_invalid_jobs() {
+        let ok = AccelHandle::new(0, 4, 4);
+        let ghost = AccelHandle::new(9, 4, 4);
+        let prog = Program::new()
+            .invoke(Job::on(ok).direct(vec![1]))
+            .invoke(Job::on(ghost).direct(vec![2]));
+        let ctx = CompileCtx {
+            n_accels: 1,
+            chain_groups: &[],
+        };
+        assert_eq!(
+            prog.compile(&ctx).unwrap_err(),
+            AccelError::UnknownAccelerator { hwa_id: 9 }
+        );
+    }
+
+    #[test]
+    fn program_is_an_iterator_of_phases() {
+        let h = AccelHandle::new(0, 4, 4);
+        let prog: Program = vec![
+            Phase::Compute(5),
+            Phase::Invoke(Job::on(h).direct(vec![])),
+        ]
+        .into_iter()
+        .collect();
+        assert_eq!(prog.len(), 2);
+        assert_eq!(prog.invocations(), 1);
+        let kinds: Vec<bool> = prog
+            .phases()
+            .iter()
+            .map(|p| matches!(p, Phase::Invoke(_)))
+            .collect();
+        assert_eq!(kinds, vec![false, true]);
+        // The by-reference iterator matches the slice view.
+        assert_eq!((&prog).into_iter().count(), prog.len());
+    }
+}

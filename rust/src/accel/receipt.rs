@@ -1,0 +1,141 @@
+//! Completion receipts: poll-able tokens for submitted jobs, carrying
+//! issue/complete timestamps and the per-stage latency breakdown that
+//! `sweep::RunStats` percentiles are computed from.
+
+use crate::clock::Ps;
+use crate::cmp::core::InvokeRecord;
+
+/// A poll-able token for one submitted [`super::Job`]: the `seq`-th
+/// invocation on core `core`. Copyable and inert — pass it back to
+/// [`super::AccelRuntime::poll`]/[`super::AccelRuntime::wait`] to observe
+/// completion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Receipt {
+    core: usize,
+    seq: usize,
+}
+
+impl Receipt {
+    pub(crate) fn new(core: usize, seq: usize) -> Self {
+        Self { core, seq }
+    }
+
+    /// Core the job was submitted on.
+    pub fn core(&self) -> usize {
+        self.core
+    }
+
+    /// Submission index of the job among this core's invocations.
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+}
+
+/// Per-stage latency breakdown of one completed invocation, in
+/// picoseconds (the Fig. 9 / Fig. 14 decomposition).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageBreakdown {
+    /// Request sent → grant received (request/grant handshake + NoC).
+    pub grant_ps: Ps,
+    /// Grant received → payload marshalled out (send overhead + NoC).
+    pub payload_ps: Ps,
+    /// Payload delivered → last result flit (fabric queueing, execution
+    /// and the result's return trip).
+    pub execute_ps: Ps,
+    /// Request sent → last result flit.
+    pub total_ps: Ps,
+}
+
+/// A completed invocation, resolved from a [`Receipt`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Completion {
+    receipt: Receipt,
+    record: InvokeRecord,
+}
+
+impl Completion {
+    pub(crate) fn new(receipt: Receipt, record: InvokeRecord) -> Self {
+        Self { receipt, record }
+    }
+
+    pub fn receipt(&self) -> Receipt {
+        self.receipt
+    }
+
+    /// The raw timestamp record (request/grant/payload/result, ps).
+    pub fn record(&self) -> &InvokeRecord {
+        &self.record
+    }
+
+    /// When the request left the core.
+    pub fn issued_at(&self) -> Ps {
+        self.record.t_request
+    }
+
+    /// When the last result flit (or completion notify) arrived.
+    pub fn completed_at(&self) -> Ps {
+        self.record.t_result_last
+    }
+
+    /// Total invocation latency (request → last result).
+    pub fn total_ps(&self) -> Ps {
+        self.record.total()
+    }
+
+    /// The per-stage breakdown. Memory-access jobs have no payload stage
+    /// (the MMU sends the data), so their time lands in `execute_ps`.
+    pub fn breakdown(&self) -> StageBreakdown {
+        let r = &self.record;
+        let payload_end = if r.t_payload_done > 0 {
+            r.t_payload_done
+        } else {
+            r.t_grant
+        };
+        StageBreakdown {
+            grant_ps: r.grant_latency(),
+            payload_ps: payload_end.saturating_sub(r.t_grant),
+            execute_ps: r.t_result_last.saturating_sub(payload_end),
+            total_ps: r.total(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_partitions_the_total() {
+        let record = InvokeRecord {
+            t_request: 100,
+            t_grant: 350,
+            t_payload_done: 900,
+            t_result_first: 4_000,
+            t_result_last: 4_200,
+        };
+        let c = Completion::new(Receipt::new(0, 0), record);
+        let b = c.breakdown();
+        assert_eq!(b.grant_ps, 250);
+        assert_eq!(b.payload_ps, 550);
+        assert_eq!(b.execute_ps, 3_300);
+        assert_eq!(b.total_ps, 4_100);
+        assert_eq!(b.grant_ps + b.payload_ps + b.execute_ps, b.total_ps);
+        assert_eq!(c.issued_at(), 100);
+        assert_eq!(c.completed_at(), 4_200);
+    }
+
+    #[test]
+    fn memory_jobs_without_payload_stage_stay_consistent() {
+        // Memory-access completions never set t_payload_done.
+        let record = InvokeRecord {
+            t_request: 100,
+            t_grant: 300,
+            t_payload_done: 0,
+            t_result_first: 0,
+            t_result_last: 5_000,
+        };
+        let b = Completion::new(Receipt::new(1, 3), record).breakdown();
+        assert_eq!(b.payload_ps, 0);
+        assert_eq!(b.grant_ps + b.payload_ps + b.execute_ps, b.total_ps);
+    }
+}

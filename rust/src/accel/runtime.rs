@@ -1,0 +1,463 @@
+//! The session facade over [`System`]: accelerator discovery, per-core
+//! sessions, job submission and receipt resolution.
+
+use crate::clock::{Ps, PS_PER_US};
+use crate::cmp::core::Segment;
+use crate::fpga::hwa::HwaCompute;
+use crate::sim::system::{System, SystemConfig};
+
+use super::{
+    AccelError, AccelHandle, Chain, CompileCtx, Completion, Job, Program,
+    Receipt,
+};
+
+/// The accelerator driver: owns a [`System`] and is the one place work is
+/// submitted to it. Discovery hands out [`AccelHandle`]s, jobs are
+/// validated and compiled here, and every submission yields a [`Receipt`]
+/// that resolves to the invocation's timestamp record.
+///
+/// ```
+/// use accnoc::accel::{AccelRuntime, Chain, Job};
+/// use accnoc::fpga::hwa::spec_by_name;
+/// use accnoc::sim::SystemConfig;
+///
+/// let mut cfg = SystemConfig::paper(vec![
+///     spec_by_name("izigzag").unwrap(),
+///     spec_by_name("iquantize").unwrap(),
+/// ]);
+/// cfg.chain_groups = vec![vec![0, 1]];
+/// let mut rt = AccelRuntime::new(cfg);
+///
+/// // Discovery: one handle per configured accelerator.
+/// let accels = rt.accels();
+/// assert_eq!(accels.len(), 2);
+///
+/// // A depth-1 chained job through the typed builders:
+/// let chain = Chain::of(accels[0]).then(accels[1]);
+/// let receipt = rt
+///     .submit(0, Job::chained(chain).direct((0..64).collect()))
+///     .unwrap();
+/// assert!(rt.run_until_done(100_000_000)); // 100 simulated µs
+/// let done = rt.poll(receipt).expect("chain completed");
+/// assert!(done.completed_at() > done.issued_at());
+/// ```
+pub struct AccelRuntime {
+    sys: System,
+    /// Invocations submitted so far, per core (receipt sequence numbers).
+    submitted: Vec<usize>,
+}
+
+impl AccelRuntime {
+    /// Build a runtime over a freshly-constructed system.
+    pub fn new(config: SystemConfig) -> Self {
+        Self::over(System::new(config))
+    }
+
+    /// Wrap an existing system. The runtime assumes it is the only work
+    /// submitter from here on: receipt sequence numbers continue from the
+    /// invocations already recorded *or still in flight*, so receipts
+    /// never resolve to a pre-existing job's record.
+    pub fn over(sys: System) -> Self {
+        let submitted = sys
+            .procs
+            .iter()
+            .map(|p| p.invocations_done() + p.pending_invocations())
+            .collect();
+        Self { sys, submitted }
+    }
+
+    /// The underlying system (statistics, fabric, clock).
+    pub fn system(&self) -> &System {
+        &self.sys
+    }
+
+    /// Mutable access to the underlying system (compute hooks, stepping).
+    pub fn system_mut(&mut self) -> &mut System {
+        &mut self.sys
+    }
+
+    /// Unwrap the runtime back into its system.
+    pub fn into_system(self) -> System {
+        self.sys
+    }
+
+    /// Install the functional compute hook (native/PJRT/echo).
+    pub fn set_compute(&mut self, compute: Box<dyn HwaCompute>) {
+        self.sys.fabric.set_compute(compute);
+    }
+
+    // ------------------------------------------------------------------
+    // Discovery
+    // ------------------------------------------------------------------
+
+    /// Handles for every configured accelerator, in channel order.
+    pub fn accels(&self) -> Vec<AccelHandle> {
+        self.sys
+            .config
+            .specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| AccelHandle::from_spec(i as u8, s))
+            .collect()
+    }
+
+    /// Handle for the accelerator at channel `id`, if configured.
+    pub fn accel(&self, id: u8) -> Option<AccelHandle> {
+        self.sys
+            .config
+            .specs
+            .get(id as usize)
+            .map(|s| AccelHandle::from_spec(id, s))
+    }
+
+    /// Handle for the first accelerator with this benchmark name.
+    pub fn accel_named(&self, name: &str) -> Option<AccelHandle> {
+        self.sys
+            .config
+            .specs
+            .iter()
+            .position(|s| s.name == name)
+            .and_then(|i| self.accel(i as u8))
+    }
+
+    /// Number of processor cores available for sessions.
+    pub fn n_cores(&self) -> usize {
+        self.sys.n_procs()
+    }
+
+    // ------------------------------------------------------------------
+    // Submission
+    // ------------------------------------------------------------------
+
+    /// A per-core session (the Fig. 4 software context).
+    pub fn session(&mut self, core: usize) -> Result<Session<'_>, AccelError> {
+        if core >= self.sys.n_procs() {
+            return Err(AccelError::UnknownCore { core });
+        }
+        Ok(Session { rt: self, core })
+    }
+
+    /// Submit one job on `core`; returns its completion receipt.
+    pub fn submit(
+        &mut self,
+        core: usize,
+        job: Job,
+    ) -> Result<Receipt, AccelError> {
+        let receipts = self.load(core, Program::new().invoke(job))?;
+        Ok(receipts[0])
+    }
+
+    /// Validate, compile and enqueue a whole [`Program`] on `core`.
+    /// Returns one receipt per [`super::Phase::Invoke`], in program
+    /// order. Nothing is enqueued if any phase is invalid.
+    pub fn load(
+        &mut self,
+        core: usize,
+        program: Program,
+    ) -> Result<Vec<Receipt>, AccelError> {
+        if core >= self.sys.n_procs() {
+            return Err(AccelError::UnknownCore { core });
+        }
+        let n_jobs = program.invocations();
+        let segments = {
+            let ctx = CompileCtx {
+                n_accels: self.sys.config.specs.len(),
+                chain_groups: &self.sys.config.chain_groups,
+            };
+            program.compile(&ctx)?
+        };
+        let first = self.submitted[core];
+        self.submitted[core] += n_jobs;
+        self.sys.load_program(core, segments);
+        Ok((0..n_jobs).map(|k| Receipt::new(core, first + k)).collect())
+    }
+
+    // ------------------------------------------------------------------
+    // Completion
+    // ------------------------------------------------------------------
+
+    /// Resolve a receipt without advancing time: `Some` once the job's
+    /// final result (or completion notify) has arrived.
+    pub fn poll(&self, receipt: Receipt) -> Option<Completion> {
+        let proc = self.sys.procs.get(receipt.core())?;
+        let record = proc.records.get(receipt.seq())?;
+        Some(Completion::new(receipt, *record))
+    }
+
+    /// Run the system until the receipt resolves (or `deadline_ps`).
+    pub fn wait(
+        &mut self,
+        receipt: Receipt,
+        deadline_ps: Ps,
+    ) -> Result<Completion, AccelError> {
+        while self.sys.now() < deadline_ps {
+            if let Some(done) = self.poll(receipt) {
+                return Ok(done);
+            }
+            self.sys.step();
+        }
+        self.poll(receipt).ok_or(AccelError::Timeout { receipt })
+    }
+
+    /// Every completed invocation, core by core in submission order —
+    /// the single latency source for `sweep::RunStats` percentiles.
+    pub fn completions(&self) -> Vec<Completion> {
+        let mut out = Vec::new();
+        for (core, proc) in self.sys.procs.iter().enumerate() {
+            for (seq, record) in proc.records.iter().enumerate() {
+                out.push(Completion::new(Receipt::new(core, seq), *record));
+            }
+        }
+        out
+    }
+
+    /// Completed invocations across all cores (cheap count).
+    pub fn invocations_done(&self) -> usize {
+        self.sys.procs.iter().map(|p| p.records.len()).sum()
+    }
+
+    /// True when `core` has drained its program (idle for new work).
+    pub fn core_done(&self, core: usize) -> bool {
+        self.sys.procs[core].done()
+    }
+
+    /// Result words of `core`'s most recent completed invocation.
+    pub fn last_result(&self, core: usize) -> &[u32] {
+        &self.sys.procs[core].last_result
+    }
+
+    // ------------------------------------------------------------------
+    // Time
+    // ------------------------------------------------------------------
+
+    pub fn now(&self) -> Ps {
+        self.sys.now()
+    }
+
+    /// Advance the system by one clock event (see [`System::step`]).
+    pub fn step(&mut self) -> Ps {
+        self.sys.step()
+    }
+
+    /// Run until every core's program drains (or the deadline).
+    pub fn run_until_done(&mut self, deadline_ps: Ps) -> bool {
+        self.sys.run_until_done(deadline_ps)
+    }
+
+    /// Run for a fixed simulated window.
+    pub fn run_for(&mut self, window_ps: Ps) {
+        self.sys.run_for(window_ps)
+    }
+
+    // ------------------------------------------------------------------
+    // Open-loop clients (§6.4)
+    // ------------------------------------------------------------------
+
+    /// Replace every core with an open-loop source at the given aggregate
+    /// request rate (requests/µs across all sources). Sessions and
+    /// receipts only cover closed-loop cores; open-loop latencies are
+    /// read from the sources themselves.
+    pub fn set_open_loop(&mut self, total_rate_per_us: f64, seed: u64) {
+        self.sys.set_open_loop(total_rate_per_us, seed);
+    }
+
+    /// Total completed invocations across open-loop sources.
+    pub fn open_loop_completions(&self) -> u64 {
+        self.sys.open_loop_completions()
+    }
+}
+
+/// A per-core driver session borrowed from the runtime: the software
+/// context that interleaves local compute with accelerator jobs.
+pub struct Session<'rt> {
+    rt: &'rt mut AccelRuntime,
+    core: usize,
+}
+
+impl Session<'_> {
+    pub fn core(&self) -> usize {
+        self.core
+    }
+
+    /// Enqueue pure software work (core cycles) before the next job.
+    pub fn compute(&mut self, cycles: u64) -> &mut Self {
+        self.rt
+            .sys
+            .load_program(self.core, vec![Segment::Compute(cycles)]);
+        self
+    }
+
+    /// Submit a job on this session's core.
+    pub fn submit(&mut self, job: Job) -> Result<Receipt, AccelError> {
+        self.rt.submit(self.core, job)
+    }
+
+    /// Enqueue a whole program on this session's core.
+    pub fn load(&mut self, program: Program) -> Result<Vec<Receipt>, AccelError> {
+        self.rt.load(self.core, program)
+    }
+}
+
+/// Build a 2-core + 3-accelerator system, run a chained job and a direct
+/// job through the driver API, and render their receipt breakdowns.
+/// Shared by `examples/driver_api.rs` and the `accnoc selftest` verb.
+pub fn driver_api_demo() -> Result<String, AccelError> {
+    use std::fmt::Write as _;
+
+    use crate::fpga::hwa::spec_by_name;
+    use crate::noc::mesh::MeshConfig;
+    use crate::runtime::NativeCompute;
+
+    // 2x2 mesh: FPGA + MMU + two processor cores.
+    let mut cfg = SystemConfig::paper(vec![
+        spec_by_name("izigzag").unwrap(),
+        spec_by_name("iquantize").unwrap(),
+        spec_by_name("idct").unwrap(),
+    ]);
+    cfg.mesh = MeshConfig {
+        width: 2,
+        height: 2,
+        ..MeshConfig::default()
+    };
+    cfg.chain_groups = vec![vec![0, 1, 2]];
+    let mut rt = AccelRuntime::new(cfg);
+    rt.set_compute(Box::new(NativeCompute::default()));
+    assert_eq!(rt.n_cores(), 2, "2x2 mesh leaves two processor nodes");
+
+    let izigzag = rt.accel_named("izigzag").expect("configured");
+    let iquantize = rt.accel_named("iquantize").expect("configured");
+    let idct = rt.accel_named("idct").expect("configured");
+
+    let chain = Chain::of(izigzag).then(iquantize).then(idct);
+    let chained = rt.submit(
+        0,
+        Job::chained(chain).direct((0..64).collect()).priority(1),
+    )?;
+    let direct = rt.submit(1, Job::on(idct).direct(vec![8; 64]))?;
+
+    let deadline = 10_000 * PS_PER_US;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "driver_api: 2 cores, 3 accelerators ({} handles discovered)",
+        rt.accels().len()
+    );
+    for (label, receipt) in [
+        ("chained izigzag->iquantize->idct (core 0)", chained),
+        ("direct idct (core 1)", direct),
+    ] {
+        let done = rt.wait(receipt, deadline)?;
+        let b = done.breakdown();
+        let _ = writeln!(out, "  {label}");
+        let _ = writeln!(
+            out,
+            "    grant {:>7} ps | payload {:>7} ps | execute+result \
+             {:>7} ps | total {:.3} us",
+            b.grant_ps,
+            b.payload_ps,
+            b.execute_ps,
+            b.total_ps as f64 / PS_PER_US as f64
+        );
+    }
+    let _ = writeln!(
+        out,
+        "  tasks executed on the fabric: {}",
+        rt.system().fabric.tasks_executed()
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::hwa::spec_by_name;
+
+    fn runtime(n_hwas: usize) -> AccelRuntime {
+        let spec = spec_by_name("izigzag").unwrap();
+        AccelRuntime::new(SystemConfig::paper(vec![spec; n_hwas]))
+    }
+
+    #[test]
+    fn discovery_matches_the_configured_specs() {
+        let rt = runtime(3);
+        assert_eq!(rt.accels().len(), 3);
+        let h = rt.accel(2).unwrap();
+        assert_eq!(h.id(), 2);
+        assert_eq!(h.in_words(), 64);
+        assert!(rt.accel(3).is_none());
+        assert!(rt.accel_named("izigzag").is_some());
+        assert!(rt.accel_named("bogus").is_none());
+    }
+
+    #[test]
+    fn submit_poll_wait_roundtrip() {
+        let mut rt = runtime(1);
+        let h = rt.accel(0).unwrap();
+        let r = rt.submit(0, Job::on(h).direct((0..64).collect())).unwrap();
+        assert!(rt.poll(r).is_none(), "not complete before running");
+        let done = rt.wait(r, 50_000 * PS_PER_US).unwrap();
+        assert_eq!(done.receipt(), r);
+        assert!(done.total_ps() > 0);
+        assert!(done.completed_at() > done.issued_at());
+        assert_eq!(rt.invocations_done(), 1);
+        assert_eq!(rt.completions().len(), 1);
+        assert_eq!(rt.last_result(0).len(), 64);
+    }
+
+    #[test]
+    fn receipts_number_jobs_per_core_in_order() {
+        let mut rt = runtime(2);
+        let h = rt.accel(0).unwrap();
+        let r0 = rt.submit(0, Job::on(h).direct(vec![0; 64])).unwrap();
+        let r1 = rt.submit(0, Job::on(h).direct(vec![1; 64])).unwrap();
+        let r2 = rt.submit(1, Job::on(h).direct(vec![2; 64])).unwrap();
+        assert_eq!((r0.core(), r0.seq()), (0, 0));
+        assert_eq!((r1.core(), r1.seq()), (0, 1));
+        assert_eq!((r2.core(), r2.seq()), (1, 0));
+        assert!(rt.run_until_done(200_000 * PS_PER_US));
+        for r in [r0, r1, r2] {
+            assert!(rt.poll(r).is_some(), "{r:?} resolved");
+        }
+    }
+
+    #[test]
+    fn unknown_core_and_accelerator_are_rejected() {
+        let mut rt = runtime(1);
+        let h = rt.accel(0).unwrap();
+        assert_eq!(
+            rt.submit(99, Job::on(h).direct(vec![])).unwrap_err(),
+            AccelError::UnknownCore { core: 99 }
+        );
+        let ghost = AccelHandle::new(7, 64, 64);
+        assert_eq!(
+            rt.submit(0, Job::on(ghost).direct(vec![])).unwrap_err(),
+            AccelError::UnknownAccelerator { hwa_id: 7 }
+        );
+        assert_eq!(rt.invocations_done(), 0, "nothing was enqueued");
+    }
+
+    #[test]
+    fn session_interleaves_compute_and_jobs() {
+        let mut rt = runtime(1);
+        let h = rt.accel(0).unwrap();
+        let receipt = {
+            let mut session = rt.session(0).unwrap();
+            session.compute(1_000);
+            let r = session.submit(Job::on(h).direct(vec![3; 64])).unwrap();
+            session.compute(500);
+            r
+        };
+        assert!(rt.session(9).is_err());
+        assert!(rt.run_until_done(50_000 * PS_PER_US));
+        let done = rt.poll(receipt).expect("job between compute phases");
+        // The leading compute phase delays the request past 1000 cycles.
+        assert!(done.issued_at() >= 1_000_000, "{}", done.issued_at());
+    }
+
+    #[test]
+    fn demo_runs_clean() {
+        let report = driver_api_demo().expect("demo completes");
+        assert!(report.contains("chained izigzag->iquantize->idct"));
+        assert!(report.contains("total"));
+    }
+}

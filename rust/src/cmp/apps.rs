@@ -3,6 +3,11 @@
 //! into functions that can run in software on the core or as HWAs on the
 //! FPGA.
 //!
+//! Programs are expressed in the typed driver layer ([`crate::accel`]):
+//! every function is a [`Job`] on its accelerator's [`AccelHandle`], and
+//! the chained variants build [`Chain`]s instead of hand-packing the
+//! 2-bit chain-index lanes.
+//!
 //! Software cycle counts are calibrated constants (DESIGN.md substitution
 //! 3): they reflect the relative cost of the C implementations on a
 //! MicroBlaze-class in-order core (the paper's Fig. 9 shows FPGA
@@ -11,10 +16,8 @@
 //! ordering, with software ~10-40x slower than the HWA datapath, typical
 //! of HLS speedups for these kernels).
 
-use crate::flit::Direction;
+use crate::accel::{AccelHandle, Chain, Job, Phase, Program};
 use crate::fpga::hwa::{spec_by_name, HwaSpec, Resources};
-
-use super::core::{InvokeSpec, Segment};
 
 /// One application function: software cost vs. HWA offload.
 #[derive(Debug, Clone)]
@@ -30,6 +33,18 @@ pub struct AppFunction {
     pub out_words: usize,
 }
 
+impl AppFunction {
+    /// Driver handle for this function's accelerator.
+    pub fn handle(&self) -> AccelHandle {
+        AccelHandle::new(self.hwa_id, self.in_words, self.out_words)
+    }
+
+    /// Synthetic input words (the Fig. 9 workloads are shape-driven).
+    fn input_words(&self) -> Vec<u32> {
+        (0..self.in_words as u32).collect()
+    }
+}
+
 /// A partitioned application: functions 0..k run on the FPGA, the rest in
 /// software ("partition k" = `k` leading functions offloaded; the paper's
 /// GSM.p3 / JPEG.p5 all-FPGA cases are `k = functions.len()`).
@@ -37,9 +52,9 @@ pub struct AppFunction {
 pub struct App {
     pub name: &'static str,
     pub functions: Vec<AppFunction>,
-    /// When all functions are offloaded AND chainable, the invocation can
-    /// use the chaining mechanism: (first hwa, depth, index path).
-    pub chain_path: Option<(u8, u8, [u8; 3])>,
+    /// When all functions are offloaded AND their HWAs share a chain
+    /// group, the invocation can use the chaining mechanism.
+    pub chainable: bool,
 }
 
 impl App {
@@ -49,50 +64,32 @@ impl App {
 
     /// Program for partition `k`: the first `k` functions offloaded as
     /// individual HWA invocations, the rest as software compute.
-    pub fn partition_program(&self, k: usize) -> Vec<Segment> {
+    pub fn partition_program(&self, k: usize) -> Program {
         assert!(k <= self.functions.len());
-        let mut prog = Vec::new();
+        let mut prog = Program::new();
         for (i, f) in self.functions.iter().enumerate() {
             if i < k {
-                let words: Vec<u32> = (0..f.in_words as u32).collect();
-                prog.push(Segment::Invoke(InvokeSpec {
-                    hwa_id: f.hwa_id,
-                    words,
-                    chain_depth: 0,
-                    chain_index: [0; 3],
-                    priority: 0,
-                    direction: Direction::ProcToHwa,
-                    start_addr: 0,
-                    mem_bytes: 0,
-                    expect_words: f.out_words,
-                }));
+                prog.push(Phase::Invoke(
+                    Job::on(f.handle()).direct(f.input_words()),
+                ));
             } else {
-                prog.push(Segment::Compute(f.sw_cycles));
+                prog.push(Phase::Compute(f.sw_cycles));
             }
         }
         prog
     }
 
     /// All-FPGA program using the chaining mechanism (one invocation).
-    pub fn chained_program(&self) -> Option<Vec<Segment>> {
-        let (first_hwa, depth, index) = self.chain_path?;
-        let first = &self.functions[0];
-        let last = self.functions.last().unwrap();
-        let words: Vec<u32> = (0..first.in_words as u32).collect();
-        Some(vec![Segment::Invoke(
-            InvokeSpec {
-                hwa_id: first_hwa,
-                words,
-                chain_depth: 0,
-                chain_index: [0; 3],
-                priority: 0,
-                direction: Direction::ProcToHwa,
-                start_addr: 0,
-                mem_bytes: 0,
-                expect_words: last.out_words,
-            }
-            .chained(depth, index),
-        )])
+    pub fn chained_program(&self) -> Option<Program> {
+        if !self.chainable || self.functions.is_empty() {
+            return None;
+        }
+        let mut chain = Chain::of(self.functions[0].handle());
+        for f in &self.functions[1..] {
+            chain = chain.then(f.handle());
+        }
+        let words = self.functions[0].input_words();
+        Some(Program::new().invoke(Job::chained(chain).direct(words)))
     }
 
     /// Total software-only cycles (partition 0 baseline).
@@ -130,7 +127,7 @@ pub fn gsm_app(hwa_base: u8) -> App {
                 out_words: 8,
             },
         ],
-        chain_path: None,
+        chainable: false,
     }
 }
 
@@ -178,9 +175,9 @@ pub fn jpeg_app(hwa_base: u8) -> App {
                 out_words: 64,
             },
         ],
-        // izigzag (member 1) -> iquantize (2) -> idct (3) -> shiftbound
-        // ... chaining applies to the four-JPEG-HWA group; see fig10.
-        chain_path: None,
+        // Chaining applies to the four-JPEG-HWA group, not the whole app
+        // (five hops would exceed the depth field anyway); see fig10.
+        chainable: false,
     }
 }
 
@@ -219,48 +216,32 @@ pub fn jpeg_chain_app() -> App {
                 out_words: 64,
             },
         ],
-        chain_path: Some((0, 3, [1, 2, 3])),
+        chainable: true,
     }
 }
 
 /// Program that chains only the first `depth + 1` functions, running the
-/// rest as separate invocations — the Fig. 10 sweep (chaining depth 0-3).
-pub fn jpeg_chain_depth_program(depth: u8) -> Vec<Segment> {
+/// rest as separate invocations — the Fig. 10 sweep (chaining depth 0-3),
+/// with the first stage fed `block` as input.
+pub fn jpeg_chain_block_program(depth: u8, block: Vec<u32>) -> Program {
     let app = jpeg_chain_app();
-    let mut prog = Vec::new();
-    let f0 = &app.functions[0];
-    let words: Vec<u32> = (0..f0.in_words as u32).collect();
-    let index = [1u8, 2, 3];
-    prog.push(Segment::Invoke(
-        InvokeSpec {
-            hwa_id: 0,
-            words,
-            chain_depth: 0,
-            chain_index: [0; 3],
-            priority: 0,
-            direction: Direction::ProcToHwa,
-            start_addr: 0,
-            mem_bytes: 0,
-            expect_words: app.functions[depth as usize].out_words,
-        }
-        .chained(depth, index),
-    ));
+    assert!((depth as usize) < app.functions.len());
+    let mut chain = Chain::of(app.functions[0].handle());
+    for f in &app.functions[1..=depth as usize] {
+        chain = chain.then(f.handle());
+    }
+    let mut prog = Program::new().invoke(Job::chained(chain).direct(block));
     // Remaining functions invoked individually.
     for f in app.functions.iter().skip(depth as usize + 1) {
-        let words: Vec<u32> = (0..f.in_words as u32).collect();
-        prog.push(Segment::Invoke(InvokeSpec {
-            hwa_id: f.hwa_id,
-            words,
-            chain_depth: 0,
-            chain_index: [0; 3],
-            priority: 0,
-            direction: Direction::ProcToHwa,
-            start_addr: 0,
-            mem_bytes: 0,
-            expect_words: f.out_words,
-        }));
+        prog.push(Phase::Invoke(Job::on(f.handle()).direct(f.input_words())));
     }
     prog
+}
+
+/// [`jpeg_chain_block_program`] with the default synthetic input.
+pub fn jpeg_chain_depth_program(depth: u8) -> Program {
+    let input = jpeg_chain_app().functions[0].input_words();
+    jpeg_chain_block_program(depth, input)
 }
 
 /// HWA spec for an app function that has no Table 3 entry (JPEG entropy
@@ -309,11 +290,14 @@ mod tests {
     fn partition_k_offloads_prefix() {
         let app = gsm_app(0);
         let p1 = app.partition_program(1);
-        assert!(matches!(p1[0], Segment::Invoke(_)));
-        assert!(matches!(p1[1], Segment::Compute(_)));
-        assert!(matches!(p1[2], Segment::Compute(_)));
+        assert!(matches!(p1.phases()[0], Phase::Invoke(_)));
+        assert!(matches!(p1.phases()[1], Phase::Compute(_)));
+        assert!(matches!(p1.phases()[2], Phase::Compute(_)));
         let p3 = app.partition_program(3);
-        assert!(p3.iter().all(|s| matches!(s, Segment::Invoke(_))));
+        assert!(p3
+            .phases()
+            .iter()
+            .all(|s| matches!(s, Phase::Invoke(_))));
     }
 
     #[test]
@@ -328,6 +312,18 @@ mod tests {
         assert_eq!(jpeg_chain_depth_program(3).len(), 1);
         assert_eq!(jpeg_chain_depth_program(0).len(), 4);
         assert_eq!(jpeg_chain_depth_program(1).len(), 3);
+    }
+
+    #[test]
+    fn chain_depth_program_targets_valid_chains() {
+        for depth in 0..=3u8 {
+            let prog = jpeg_chain_depth_program(depth);
+            let Phase::Invoke(job) = &prog.phases()[0] else {
+                panic!("first phase is the chained invocation");
+            };
+            assert_eq!(job.target().depth(), depth);
+            assert!(job.target().validate().is_ok());
+        }
     }
 
     #[test]

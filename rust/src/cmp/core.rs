@@ -26,7 +26,12 @@ pub const RECV_CYCLES_PER_FLIT: u64 = 6;
 /// Fixed software overhead per `*_HWA_invoke` call (argument setup).
 pub const INVOKE_OVERHEAD_CYCLES: u64 = 40;
 
-/// One HWA invocation request (the Fig. 4 function arguments).
+/// One HWA invocation request (the Fig. 4 function arguments), in wire
+/// terms. This is the **compiled form** that [`crate::accel::Job`] lowers
+/// to after validation — application code should build jobs through the
+/// typed driver API rather than packing these fields by hand (the raw
+/// constructors remain for wire-level tests: nothing here checks that
+/// `chain_index` lanes name real accelerators).
 #[derive(Debug, Clone)]
 pub struct InvokeSpec {
     pub hwa_id: u8,
@@ -87,6 +92,8 @@ impl InvokeSpec {
     }
 }
 
+/// One step of a core's program — the stream [`crate::accel::Program`]
+/// compiles down to.
 #[derive(Debug, Clone)]
 pub enum Segment {
     /// Pure software execution for this many core cycles.
@@ -195,6 +202,19 @@ impl Processor {
     /// Number of completed invocations.
     pub fn invocations_done(&self) -> usize {
         self.records.len()
+    }
+
+    /// Invocations accepted but not yet completed: the in-flight one (if
+    /// any) plus queued `Invoke` segments. `invocations_done() +
+    /// pending_invocations()` is the sequence number the next submitted
+    /// invocation will complete at — the driver's receipt numbering.
+    pub fn pending_invocations(&self) -> usize {
+        self.current.is_some() as usize
+            + self
+                .program
+                .iter()
+                .filter(|s| matches!(s, Segment::Invoke(_)))
+                .count()
     }
 
     /// True while the core needs clock edges to make progress (computing,

@@ -1,10 +1,17 @@
 //! CMP cores (MicroBlaze-class timing model) and the Fig. 9 partitioned
 //! applications; the software interface semantics of Fig. 4.
+//!
+//! `core` is the compilation target of the typed driver layer
+//! ([`crate::accel`]): applications describe work as `accel::Program`s,
+//! which the driver validates and lowers to `Segment` streams.
 
 pub mod apps;
 pub mod core;
 
-pub use apps::{gsm_app, jpeg_app, jpeg_chain_app, jpeg_chain_depth_program, App, AppFunction};
+pub use apps::{
+    gsm_app, jpeg_app, jpeg_chain_app, jpeg_chain_block_program,
+    jpeg_chain_depth_program, App, AppFunction,
+};
 pub use core::{
     mmu_payload_packet, InvokeRecord, InvokeSpec, Processor, Segment,
     INVOKE_OVERHEAD_CYCLES, RECV_CYCLES_PER_FLIT, SEND_CYCLES_PER_FLIT,

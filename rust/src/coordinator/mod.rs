@@ -7,7 +7,7 @@ use crate::util::cli::Args;
 
 pub const USAGE: &str = "\
 accnoc — FPGA multi-accelerator / NoC-CMP integration simulator
-(reproduction of Lin et al., IEEE TMSCS 2017; see DESIGN.md)
+(reproduction of Lin et al., IEEE TMSCS 2017; see docs/ARCHITECTURE.md)
 
 USAGE:
     accnoc <subcommand> [options]
@@ -207,9 +207,9 @@ fn run_sweep(args: &Args, csv: bool) -> Result<(), String> {
 }
 
 fn selftest() -> Result<(), String> {
-    use crate::cmp::core::{InvokeSpec, Segment};
+    use crate::accel::{AccelRuntime, Job};
     use crate::fpga::hwa::table3;
-    use crate::sim::system::{FabricKind, NetKind, System, SystemConfig};
+    use crate::sim::system::{FabricKind, NetKind, SystemConfig};
 
     for (name, net, fabric) in [
         ("noc+buffers", NetKind::Noc, FabricKind::Buffered),
@@ -225,26 +225,56 @@ fn selftest() -> Result<(), String> {
         let mut cfg = SystemConfig::paper(table3().into_iter().take(8).collect());
         cfg.net = net;
         cfg.fabric = fabric;
-        let mut sys = System::new(cfg);
-        for i in 0..sys.n_procs() {
-            let spec = sys.config.specs[i % 8].clone();
-            sys.load_program(
-                i,
-                vec![Segment::Invoke(InvokeSpec::direct(
-                    (i % 8) as u8,
-                    (0..spec.in_words as u32).collect(),
-                    spec.out_words,
-                ))],
-            );
+        let mut rt = AccelRuntime::new(cfg);
+        let mut receipts = Vec::new();
+        for core in 0..rt.n_cores() {
+            let hwa = rt.accel((core % 8) as u8).expect("eight accelerators");
+            let words: Vec<u32> = (0..hwa.in_words() as u32).collect();
+            let receipt = rt
+                .submit(core, Job::on(hwa).direct(words))
+                .map_err(|e| e.to_string())?;
+            receipts.push(receipt);
         }
-        let ok = sys.run_until_done(100_000 * crate::clock::PS_PER_US);
-        if !ok {
+        if !rt.run_until_done(100_000 * crate::clock::PS_PER_US) {
             return Err(format!("selftest {name}: did not complete"));
+        }
+        for receipt in receipts {
+            if rt.poll(receipt).is_none() {
+                return Err(format!(
+                    "selftest {name}: unresolved receipt {receipt:?}"
+                ));
+            }
         }
         println!(
             "selftest {name}: OK ({} tasks executed)",
-            sys.fabric.tasks_executed()
+            rt.system().fabric.tasks_executed()
         );
     }
+    // The driver-API demo (same scenario as examples/driver_api.rs):
+    // chained + direct jobs through AccelRuntime with receipt breakdowns.
+    let report = crate::accel::driver_api_demo().map_err(|e| e.to_string())?;
+    print!("{report}");
+    println!("selftest driver-api: OK");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The `accnoc help` text must point at living documentation (the CI
+    /// workflow greps the same string from the built binary).
+    #[test]
+    fn usage_points_at_architecture_doc() {
+        assert!(USAGE.contains("docs/ARCHITECTURE.md"), "{USAGE}");
+        assert!(!USAGE.contains("DESIGN.md"), "stale doc reference");
+    }
+
+    #[test]
+    fn usage_lists_every_subcommand() {
+        for verb in ["experiment", "sweep", "run", "synth", "list", "selftest"]
+        {
+            assert!(USAGE.contains(verb), "usage missing {verb}");
+        }
+    }
 }

@@ -109,4 +109,27 @@ mod tests {
         assert_eq!(t.chain_remaining(), 0);
         assert_eq!(t.chain_hops, 3);
     }
+
+    /// Exhausting a chain zero-fills the shifted index lanes: a task
+    /// whose depth has decremented to 0 carries no stale hop indexes
+    /// that a later (buggy or forged) depth bump could act on.
+    #[test]
+    fn chain_exhaustion_zero_fills_index_lanes() {
+        let mut t = Task::new(
+            HeadFields {
+                chain_depth: 2,
+                chain_index: [1, 3, 0],
+                ..HeadFields::default()
+            },
+            vec![],
+            0,
+        );
+        assert_eq!(t.advance_chain(), 1);
+        assert_eq!(t.head.chain_index, [3, 0, 0]);
+        assert_eq!(t.chain_remaining(), 1);
+        assert_eq!(t.advance_chain(), 3);
+        assert_eq!(t.head.chain_index, [0, 0, 0]);
+        assert_eq!(t.chain_remaining(), 0);
+        assert_eq!(t.chain_hops, 2);
+    }
 }

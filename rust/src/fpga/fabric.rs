@@ -249,8 +249,12 @@ impl Fpga {
                 };
                 let next_idx = task.head.chain_index[0] as usize;
                 if next_idx >= m {
-                    // Malformed index: drop the task (counted as forward
-                    // to nowhere). Keeps the fabric live.
+                    // Malformed index (a hop naming no group member — the
+                    // driver rejects these at construction, so only forged
+                    // wire traffic reaches here): drop the task and count
+                    // it like every other untrusted-header rejection.
+                    // Keeps the fabric live.
+                    self.channels[prod].stats.rejected_flits += 1;
                     self.channels[prod].chain_out.pop_front();
                     continue;
                 }
@@ -544,6 +548,51 @@ mod tests {
         assert_eq!(result_heads.len(), 1);
         assert_eq!(result_heads[0].hwa_id, 3, "shiftbound emits the result");
         assert!(rig.fpga.quiescent(rig.mc.now()));
+    }
+
+    #[test]
+    fn chain_hop_to_out_of_range_member_is_dropped_and_counted() {
+        // A forged header chains izigzag (group member 0) to member 3 of
+        // a 2-member group: no such accelerator exists. The chaining
+        // controller must drop the task, count the rejection against the
+        // producing channel, and keep the fabric live for well-formed
+        // traffic. (The accel::Chain builder rejects this at
+        // construction; only raw wire traffic can carry it.)
+        let specs = vec![
+            spec_by_name("izigzag").unwrap(),
+            spec_by_name("iquantize").unwrap(),
+        ];
+        let mut rig = Rig::new(specs);
+        rig.fpga.add_chain_group(vec![0, 1]);
+        rig.request(0, 1, Some((1, [3, 0, 0])));
+        rig.run(1_000_000);
+        let grants = rig.take_grants();
+        assert_eq!(grants.len(), 1);
+        let words: Vec<u32> = (0..64).collect();
+        rig.payload_for_grant(&grants[0], &words);
+        rig.run(rig.mc.now() + 8_000_000);
+        assert_eq!(
+            rig.fpga.tasks_executed(),
+            1,
+            "first hop ran, forged hand-off did not"
+        );
+        assert_eq!(
+            rig.fpga.channels[0].stats.rejected_flits,
+            1,
+            "dropped chain hand-off counted"
+        );
+        assert_eq!(rig.fpga.channels[1].stats.chain_receives, 0);
+        assert!(rig.fpga.quiescent(rig.mc.now()), "fabric stays live");
+        // A well-formed chained invocation still works afterwards.
+        rig.request(0, 1, Some((1, [1, 0, 0])));
+        rig.run(rig.mc.now() + 1_000_000);
+        let grants = rig.take_grants();
+        assert_eq!(grants.len(), 1);
+        let words: Vec<u32> = (0..64).collect();
+        rig.payload_for_grant(&grants[0], &words);
+        rig.run(rig.mc.now() + 8_000_000);
+        assert_eq!(rig.fpga.tasks_executed(), 3, "both chain hops ran");
+        assert_eq!(rig.fpga.channels[1].stats.chain_receives, 1);
     }
 
     #[test]

@@ -14,7 +14,13 @@
 //!   compute, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **runtime** — loads the artifacts through PJRT (`xla` crate) so HWA
 //!   invocations in the simulator produce real numerics.
+//!
+//! Work is submitted through the typed driver layer in [`accel`]
+//! (`AccelRuntime` sessions, `Job`/`Chain` builders, completion
+//! `Receipt`s); the raw `cmp::core` segment stream is its compilation
+//! target.
 
+pub mod accel;
 pub mod baseline;
 pub mod clock;
 pub mod cmp;

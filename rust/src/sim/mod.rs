@@ -5,21 +5,21 @@
 //! A [`System`] wires CMP cores, the interconnect (mesh NoC or AXI
 //! baseline), the FPGA fabric (distributed buffers or shared-cache
 //! baseline) and the MMU onto a multi-domain picosecond clock, with
-//! idle-skipping event-driven scheduling on top. Minimal closed loop:
+//! idle-skipping event-driven scheduling on top. Work is submitted
+//! through the [`crate::accel`] driver layer; a minimal closed loop:
 //!
 //! ```
-//! use accnoc::cmp::core::{InvokeSpec, Segment};
+//! use accnoc::accel::{AccelRuntime, Job};
 //! use accnoc::fpga::hwa::spec_by_name;
-//! use accnoc::sim::{System, SystemConfig};
+//! use accnoc::sim::SystemConfig;
 //!
 //! let cfg = SystemConfig::paper(vec![spec_by_name("dfadd").unwrap()]);
-//! let mut sys = System::new(cfg);
-//! sys.load_program(
-//!     0,
-//!     vec![Segment::Invoke(InvokeSpec::direct(0, vec![1, 2, 3, 4], 2))],
-//! );
-//! assert!(sys.run_until_done(50_000_000)); // 50 simulated µs
-//! assert_eq!(sys.fabric.tasks_executed(), 1);
+//! let mut rt = AccelRuntime::new(cfg);
+//! let dfadd = rt.accel(0).unwrap();
+//! let receipt = rt.submit(0, Job::on(dfadd).direct(vec![1, 2, 3, 4])).unwrap();
+//! assert!(rt.run_until_done(50_000_000)); // 50 simulated µs
+//! assert_eq!(rt.system().fabric.tasks_executed(), 1);
+//! assert!(rt.poll(receipt).is_some());
 //! ```
 
 pub mod experiments;

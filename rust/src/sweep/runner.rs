@@ -7,14 +7,17 @@
 //! results back into per-index slots. Report order is grid order, never
 //! completion order, so a [`SweepReport`] is **bit-identical for any
 //! thread count** (`rust/tests/sweep.rs` proves it on 2 vs 8 threads).
+//!
+//! Every closed-loop workload submits its work through the typed driver
+//! layer ([`crate::accel::AccelRuntime`]); latency percentiles come from
+//! the driver's completion receipts, not from fabric internals.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::accel::{AccelRuntime, Job, Program};
 use crate::clock::PS_PER_US;
-use crate::cmp::apps::jpeg_chain_depth_program;
-use crate::cmp::core::{InvokeSpec, Segment};
-use crate::sim::system::{Fabric, System};
+use crate::cmp::apps::jpeg_chain_block_program;
 use crate::util::stats::{mean, percentile};
 use crate::workload::jpeg::BlockImage;
 
@@ -202,63 +205,55 @@ impl SweepRunner {
 }
 
 /// Run one scenario to completion and measure it. Deterministic: the
-/// simulation consumes only the spec (including its seed).
+/// simulation consumes only the spec (including its seed). All work is
+/// submitted through the [`AccelRuntime`] driver.
 pub fn run_scenario(spec: &ScenarioSpec) -> Result<RunStats, String> {
-    let mut sys = System::new(spec.system_config()?);
+    let mut rt = AccelRuntime::new(spec.system_config()?);
     match &spec.workload {
         WorkloadSpec::OpenLoop { rate_per_us } => {
-            run_open_loop(spec, &mut sys, *rate_per_us)
+            run_open_loop(spec, &mut rt, *rate_per_us)
         }
         WorkloadSpec::Burst { requests_per_proc } => {
-            run_burst(spec, &mut sys, *requests_per_proc)
+            run_burst(spec, &mut rt, *requests_per_proc)
         }
         WorkloadSpec::JpegChain { depth, blocks } => {
-            run_jpeg_chain(spec, &mut sys, *depth, *blocks)
+            run_jpeg_chain(spec, &mut rt, *depth, *blocks)
         }
         WorkloadSpec::AppPartition { app, partition } => {
-            run_app_partition(spec, &mut sys, *app, *partition)
+            run_app_partition(spec, &mut rt, *app, *partition)
         }
-    }
-}
-
-/// (busy interface cycles, total interface cycles) — denominator 1 for
-/// the cache baseline, which has no per-HWA busy accounting.
-fn iface_busy(sys: &System) -> (u64, u64) {
-    match &sys.fabric {
-        Fabric::Buffered(f) => {
-            (f.stats.busy_iface_cycles, f.stats.iface_cycles)
-        }
-        _ => (0, 1),
     }
 }
 
 fn run_open_loop(
     spec: &ScenarioSpec,
-    sys: &mut System,
+    rt: &mut AccelRuntime,
     rate_per_us: f64,
 ) -> Result<RunStats, String> {
-    sys.set_open_loop(rate_per_us, spec.seed);
-    let warm_end = sys.now() + spec.warmup_us * PS_PER_US;
-    while sys.now() < warm_end {
-        sys.step();
+    rt.set_open_loop(rate_per_us, spec.seed);
+    let warm_end = rt.now() + spec.warmup_us * PS_PER_US;
+    while rt.now() < warm_end {
+        rt.step();
     }
-    let (in0, out0) = sys.fabric.flits_in_out();
-    let done0 = sys.open_loop_completions();
-    let (busy0, cyc0) = iface_busy(sys);
+    let (in0, out0) = rt.system().fabric.flits_in_out();
+    let done0 = rt.open_loop_completions();
+    let (busy0, cyc0) = rt.system().fabric.iface_busy();
     // Latencies recorded before the window belong to warmup.
-    let lat_skip: Vec<usize> = sys
+    let lat_skip: Vec<usize> = rt
+        .system()
         .open_sources
         .iter()
         .flatten()
         .map(|s| s.latencies_ps.len())
         .collect();
-    let end = sys.now() + spec.window_us * PS_PER_US;
-    while sys.now() < end {
-        sys.step();
+    let end = rt.now() + spec.window_us * PS_PER_US;
+    while rt.now() < end {
+        rt.step();
     }
+    let sys = rt.system();
     let (in1, out1) = sys.fabric.flits_in_out();
-    let done1 = sys.open_loop_completions();
-    let (busy1, cyc1) = iface_busy(sys);
+    let done1 = rt.open_loop_completions();
+    let (busy1, cyc1) = sys.fabric.iface_busy();
     let window = spec.window_us as f64;
     let latencies: Vec<f64> = sys
         .open_sources
@@ -292,19 +287,16 @@ fn run_open_loop(
     })
 }
 
-/// Stats shared by every closed-loop (run-until-drained) workload.
-fn closed_loop_stats(sys: &System, total_us: f64) -> RunStats {
+/// Stats shared by every closed-loop (run-until-drained) workload. The
+/// latency sample is the driver's completion receipts.
+fn closed_loop_stats(rt: &AccelRuntime, total_us: f64) -> RunStats {
+    let sys = rt.system();
     let (fin, fout) = sys.fabric.flits_in_out();
-    let done: usize = sys.procs.iter().map(|p| p.invocations_done()).sum();
-    let (busy, cyc) = iface_busy(sys);
-    let latencies: Vec<f64> = sys
-        .procs
+    let completions = rt.completions();
+    let (busy, cyc) = sys.fabric.iface_busy();
+    let latencies: Vec<f64> = completions
         .iter()
-        .flat_map(|p| {
-            p.records
-                .iter()
-                .map(|r| r.total() as f64 / PS_PER_US as f64)
-        })
+        .map(|c| c.total_ps() as f64 / PS_PER_US as f64)
         .collect();
     let denom = total_us.max(f64::MIN_POSITIVE);
     RunStats {
@@ -312,7 +304,7 @@ fn closed_loop_stats(sys: &System, total_us: f64) -> RunStats {
         tasks_executed: sys.fabric.tasks_executed(),
         injection_flits_per_us: fin as f64 / denom,
         throughput_flits_per_us: fout as f64 / denom,
-        completions_per_us: done as f64 / denom,
+        completions_per_us: completions.len() as f64 / denom,
         busy_fraction: if cyc > 0 {
             busy as f64 / cyc as f64
         } else {
@@ -328,14 +320,15 @@ fn closed_loop_stats(sys: &System, total_us: f64) -> RunStats {
     }
 }
 
-fn drain(spec: &ScenarioSpec, sys: &mut System) -> Result<f64, String> {
-    if !sys.run_until_done(spec.deadline_us * PS_PER_US) {
+fn drain(spec: &ScenarioSpec, rt: &mut AccelRuntime) -> Result<f64, String> {
+    if !rt.run_until_done(spec.deadline_us * PS_PER_US) {
         return Err(format!(
             "did not drain within deadline_us = {}",
             spec.deadline_us
         ));
     }
-    let end = sys
+    let end = rt
+        .system()
         .procs
         .iter()
         .filter_map(|p| p.finished_at)
@@ -346,70 +339,55 @@ fn drain(spec: &ScenarioSpec, sys: &mut System) -> Result<f64, String> {
 
 fn run_burst(
     spec: &ScenarioSpec,
-    sys: &mut System,
+    rt: &mut AccelRuntime,
     requests_per_proc: usize,
 ) -> Result<RunStats, String> {
-    let (in_words, out_words) = {
-        let s = &sys.config.specs[0];
-        (s.in_words, s.out_words)
-    };
-    for i in 0..sys.n_procs() {
-        let prog: Vec<Segment> = (0..requests_per_proc)
-            .map(|_| {
-                Segment::Invoke(InvokeSpec::direct(
-                    0,
-                    (0..in_words as u32).collect(),
-                    out_words,
-                ))
-            })
-            .collect();
-        sys.load_program(i, prog);
+    let hwa = rt.accel(0).expect("scenario configures at least one HWA");
+    for core in 0..rt.n_cores() {
+        let mut prog = Program::new();
+        for _ in 0..requests_per_proc {
+            prog = prog.invoke(
+                Job::on(hwa).direct((0..hwa.in_words() as u32).collect()),
+            );
+        }
+        rt.load(core, prog).map_err(|e| e.to_string())?;
     }
-    let total_us = drain(spec, sys)?;
-    Ok(closed_loop_stats(sys, total_us))
+    let total_us = drain(spec, rt)?;
+    Ok(closed_loop_stats(rt, total_us))
 }
 
 fn run_jpeg_chain(
     spec: &ScenarioSpec,
-    sys: &mut System,
+    rt: &mut AccelRuntime,
     depth: u8,
     blocks: usize,
 ) -> Result<RunStats, String> {
     let img = BlockImage::synthetic(blocks, spec.seed);
-    let words = img.coefficient_words();
     // One processor decodes block after block (the §6.6 experiment),
-    // patching the real coefficients into each block's chain entry.
-    let mut prog = Vec::new();
-    for block in words.iter() {
-        for seg in jpeg_chain_depth_program(depth) {
-            prog.push(match seg {
-                Segment::Invoke(mut invoke) => {
-                    if invoke.hwa_id == 0 {
-                        invoke.words = block.clone();
-                    }
-                    Segment::Invoke(invoke)
-                }
-                other => other,
-            });
-        }
+    // each block one chained invocation plus the unchained remainder.
+    let mut prog = Program::new();
+    for block in img.coefficient_words() {
+        prog.extend(jpeg_chain_block_program(depth, block));
     }
-    sys.load_program(0, prog);
-    let total_us = drain(spec, sys)?;
-    Ok(closed_loop_stats(sys, total_us))
+    rt.load(0, prog).map_err(|e| e.to_string())?;
+    let total_us = drain(spec, rt)?;
+    Ok(closed_loop_stats(rt, total_us))
 }
 
 fn run_app_partition(
     spec: &ScenarioSpec,
-    sys: &mut System,
+    rt: &mut AccelRuntime,
     app: AppKind,
     partition: usize,
 ) -> Result<RunStats, String> {
     let app = app.app();
-    sys.load_program(0, app.partition_program(partition));
-    let total_us = drain(spec, sys)?;
-    let mut stats = closed_loop_stats(sys, total_us);
+    rt.load(0, app.partition_program(partition))
+        .map_err(|e| e.to_string())?;
+    let total_us = drain(spec, rt)?;
+    let mut stats = closed_loop_stats(rt, total_us);
     // Fig. 9 breakdown: core cycles, HWA execution intervals, and the
     // transmission remainder.
+    let sys = rt.system();
     let end_ps = total_us * PS_PER_US as f64;
     let processor_ps = sys.procs[0].sw_cycles as f64 * 1000.0; // 1 GHz core
     let fpga_ps: u64 = sys

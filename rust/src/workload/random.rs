@@ -3,12 +3,12 @@
 //! frequency (Poisson arrivals per processor).
 //!
 //! This closed-loop driver blocks each processor on its in-flight
-//! invocation. The open-loop variant the Fig. 8 sweeps use lives in
-//! `workload::openloop` and is measured by `sweep::run_scenario`.
+//! invocation and submits every request through the typed driver layer
+//! ([`AccelRuntime`]). The open-loop variant the Fig. 8 sweeps use lives
+//! in `workload::openloop` and is measured by `sweep::run_scenario`.
 
+use crate::accel::{AccelRuntime, Job};
 use crate::clock::{Ps, PS_PER_US};
-use crate::cmp::core::{InvokeSpec, Segment};
-use crate::sim::system::System;
 use crate::util::rng::Pcg32;
 
 #[derive(Debug, Clone)]
@@ -41,29 +41,24 @@ impl RandomWorkload {
         }
     }
 
-    /// Called periodically: enqueue new invocations on idle processors
-    /// whose next arrival time has come.
-    pub fn drive(&mut self, sys: &mut System, now: Ps) {
-        let per_proc =
-            self.cfg.total_rate_per_us / sys.n_procs() as f64;
+    /// Called periodically: submit new jobs on idle cores whose next
+    /// arrival time has come.
+    pub fn drive(&mut self, rt: &mut AccelRuntime, now: Ps) {
+        let per_proc = self.cfg.total_rate_per_us / rt.n_cores() as f64;
         let mean_gap_ps = PS_PER_US as f64 / per_proc.max(1e-9);
-        for i in 0..sys.n_procs() {
-            if now >= self.next_arrival[i] && sys.procs[i].done() {
-                let n_hwas = sys.config.specs.len();
+        for core in 0..rt.n_cores() {
+            if now >= self.next_arrival[core] && rt.core_done(core) {
+                let n_hwas = rt.system().config.specs.len();
                 let hwa = self.rng.range(0, n_hwas);
-                let spec = &sys.config.specs[hwa];
-                let words: Vec<u32> = (0..spec.in_words)
+                let handle = rt.accel(hwa as u8).expect("in range");
+                let words: Vec<u32> = (0..handle.in_words())
                     .map(|_| self.rng.next_u32())
                     .collect();
-                let expect = spec.out_words;
-                sys.load_program(
-                    i,
-                    vec![Segment::Invoke(InvokeSpec::direct(
-                        hwa as u8, words, expect,
-                    ))],
-                );
+                rt.submit(core, Job::on(handle).direct(words))
+                    .expect("random workload jobs are always valid");
                 self.issued += 1;
-                self.next_arrival[i] = now + self.rng.exp(mean_gap_ps) as Ps;
+                self.next_arrival[core] =
+                    now + self.rng.exp(mean_gap_ps) as Ps;
             }
         }
     }
@@ -73,45 +68,35 @@ impl RandomWorkload {
 /// window. Returns (injection flits/µs, throughput flits/µs, busy frac,
 /// completed invocations/µs).
 pub fn measure_rate_point(
-    sys: &mut System,
+    rt: &mut AccelRuntime,
     workload: &mut RandomWorkload,
     warmup_us: u64,
     window_us: u64,
 ) -> RatePoint {
     let drive_every = 200_000; // 0.2 µs granularity for arrivals
     let mut next_drive = 0;
-    let warmup_end = sys.now() + warmup_us * PS_PER_US;
-    while sys.now() < warmup_end {
-        let t = sys.step();
+    let warmup_end = rt.now() + warmup_us * PS_PER_US;
+    while rt.now() < warmup_end {
+        let t = rt.step();
         if t >= next_drive {
-            workload.drive(sys, t);
+            workload.drive(rt, t);
             next_drive = t + drive_every;
         }
     }
-    let (in0, out0) = sys.fabric.flits_in_out();
-    let done0: usize = sys.procs.iter().map(|p| p.invocations_done()).sum();
-    let (busy0, cyc0) = match &sys.fabric {
-        crate::sim::system::Fabric::Buffered(f) => {
-            (f.stats.busy_iface_cycles, f.stats.iface_cycles)
-        }
-        _ => (0, 1),
-    };
-    let end = sys.now() + window_us * PS_PER_US;
-    while sys.now() < end {
-        let t = sys.step();
+    let (in0, out0) = rt.system().fabric.flits_in_out();
+    let done0 = rt.invocations_done();
+    let (busy0, cyc0) = rt.system().fabric.iface_busy();
+    let end = rt.now() + window_us * PS_PER_US;
+    while rt.now() < end {
+        let t = rt.step();
         if t >= next_drive {
-            workload.drive(sys, t);
+            workload.drive(rt, t);
             next_drive = t + drive_every;
         }
     }
-    let (in1, out1) = sys.fabric.flits_in_out();
-    let done1: usize = sys.procs.iter().map(|p| p.invocations_done()).sum();
-    let (busy1, cyc1) = match &sys.fabric {
-        crate::sim::system::Fabric::Buffered(f) => {
-            (f.stats.busy_iface_cycles, f.stats.iface_cycles)
-        }
-        _ => (0, 1),
-    };
+    let (in1, out1) = rt.system().fabric.flits_in_out();
+    let done1 = rt.invocations_done();
+    let (busy1, cyc1) = rt.system().fabric.iface_busy();
     RatePoint {
         injection_flits_per_us: (in1 - in0) as f64 / window_us as f64,
         throughput_flits_per_us: (out1 - out0) as f64 / window_us as f64,
@@ -141,15 +126,15 @@ mod tests {
     #[test]
     fn workload_issues_requests_at_rate() {
         let cfg = SystemConfig::paper(vec![spec_by_name("izigzag").unwrap(); 8]);
-        let mut sys = System::new(cfg);
+        let mut rt = AccelRuntime::new(cfg);
         let mut wl = RandomWorkload::new(
             RandomWorkloadConfig {
                 total_rate_per_us: 2.0,
                 seed: 1,
             },
-            sys.n_procs(),
+            rt.n_cores(),
         );
-        let p = measure_rate_point(&mut sys, &mut wl, 5, 20);
+        let p = measure_rate_point(&mut rt, &mut wl, 5, 20);
         // 2 requests/µs * 17-flit payloads + commands: injection well
         // above zero and throughput within a factor of the injection.
         assert!(p.injection_flits_per_us > 5.0, "{p:?}");
@@ -162,26 +147,26 @@ mod tests {
         let mk = || {
             let cfg =
                 SystemConfig::paper(vec![spec_by_name("izigzag").unwrap(); 8]);
-            System::new(cfg)
+            AccelRuntime::new(cfg)
         };
-        let mut lo_sys = mk();
+        let mut lo_rt = mk();
         let mut lo_wl = RandomWorkload::new(
             RandomWorkloadConfig {
                 total_rate_per_us: 0.5,
                 seed: 2,
             },
-            lo_sys.n_procs(),
+            lo_rt.n_cores(),
         );
-        let lo = measure_rate_point(&mut lo_sys, &mut lo_wl, 5, 20);
-        let mut hi_sys = mk();
+        let lo = measure_rate_point(&mut lo_rt, &mut lo_wl, 5, 20);
+        let mut hi_rt = mk();
         let mut hi_wl = RandomWorkload::new(
             RandomWorkloadConfig {
                 total_rate_per_us: 4.0,
                 seed: 2,
             },
-            hi_sys.n_procs(),
+            hi_rt.n_cores(),
         );
-        let hi = measure_rate_point(&mut hi_sys, &mut hi_wl, 5, 20);
+        let hi = measure_rate_point(&mut hi_rt, &mut hi_wl, 5, 20);
         assert!(hi.injection_flits_per_us > lo.injection_flits_per_us);
     }
 }

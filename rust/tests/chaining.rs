@@ -1,0 +1,186 @@
+//! Chaining edge cases through the public driver API (`accnoc::accel`):
+//! depth 0/1/3 round-trips with golden-model verification, receipt
+//! accounting, and construction-time rejection of every invalid chain
+//! shape the old `InvokeSpec::chained` silently accepted.
+
+use accnoc::accel::{
+    AccelError, AccelHandle, AccelRuntime, Chain, Job, Program,
+};
+use accnoc::clock::PS_PER_US;
+use accnoc::fpga::hwa::spec_by_name;
+use accnoc::runtime::native::{self, DEFAULT_QTABLE};
+use accnoc::runtime::NativeCompute;
+use accnoc::sim::SystemConfig;
+use accnoc::workload::jpeg::BlockImage;
+
+/// The four-stage JPEG fabric with its chain group, native compute.
+fn jpeg_runtime() -> AccelRuntime {
+    let mut cfg = SystemConfig::paper(vec![
+        spec_by_name("izigzag").unwrap(),
+        spec_by_name("iquantize").unwrap(),
+        spec_by_name("idct").unwrap(),
+        spec_by_name("shiftbound").unwrap(),
+    ]);
+    cfg.chain_groups = vec![vec![0, 1, 2, 3]];
+    let mut rt = AccelRuntime::new(cfg);
+    rt.set_compute(Box::new(NativeCompute::default()));
+    rt
+}
+
+fn block_words() -> Vec<u32> {
+    let img = BlockImage::synthetic(1, 42);
+    let scan = img.encode()[0];
+    scan.iter().map(|c| *c as u32).collect()
+}
+
+#[test]
+fn depth0_round_trip_one_receipt_per_stage() {
+    let mut rt = jpeg_runtime();
+    let accels = rt.accels();
+    let mut receipts = Vec::new();
+    receipts.push(
+        rt.submit(0, Job::on(accels[0]).direct(block_words())).unwrap(),
+    );
+    for stage in &accels[1..] {
+        receipts.push(
+            rt.submit(0, Job::on(*stage).direct(vec![0; 64])).unwrap(),
+        );
+    }
+    assert!(rt.run_until_done(200_000 * PS_PER_US));
+    assert_eq!(rt.system().fabric.tasks_executed(), 4);
+    assert_eq!(rt.completions().len(), 4, "four separate round trips");
+    let mut last_end = 0;
+    for r in receipts {
+        let done = rt.poll(r).expect("completed");
+        assert!(done.issued_at() >= last_end, "stages run back-to-back");
+        last_end = done.completed_at();
+    }
+}
+
+#[test]
+fn depth1_round_trip_single_result_for_two_stages() {
+    let mut rt = jpeg_runtime();
+    let accels = rt.accels();
+    let chain = Chain::of(accels[0]).then(accels[1]);
+    let r = rt
+        .submit(0, Job::chained(chain).direct(block_words()))
+        .unwrap();
+    // The remaining two stages individually.
+    let r2 = rt.submit(0, Job::on(accels[2]).direct(vec![0; 64])).unwrap();
+    let r3 = rt.submit(0, Job::on(accels[3]).direct(vec![0; 64])).unwrap();
+    assert!(rt.run_until_done(200_000 * PS_PER_US));
+    assert_eq!(
+        rt.system().fabric.tasks_executed(),
+        4,
+        "chain hop + three visible invocations"
+    );
+    assert_eq!(rt.completions().len(), 3, "one receipt covers two stages");
+    for receipt in [r, r2, r3] {
+        assert!(rt.poll(receipt).is_some());
+    }
+    // The chained receipt's breakdown covers both stages in one trip.
+    let b = rt.poll(r).unwrap().breakdown();
+    assert!(b.execute_ps > 0);
+    assert_eq!(b.grant_ps + b.payload_ps + b.execute_ps, b.total_ps);
+}
+
+#[test]
+fn depth3_round_trip_matches_golden_decoder() {
+    let mut rt = jpeg_runtime();
+    let accels = rt.accels();
+    let chain = Chain::of(accels[0])
+        .then(accels[1])
+        .then(accels[2])
+        .then(accels[3]);
+    let img = BlockImage::synthetic(1, 7);
+    let scan = img.encode()[0];
+    let words: Vec<u32> = scan.iter().map(|c| *c as u32).collect();
+    let r = rt.submit(0, Job::chained(chain).direct(words)).unwrap();
+    assert!(rt.run_until_done(200_000 * PS_PER_US));
+    let done = rt.poll(r).expect("chain completed");
+    assert!(done.total_ps() > 0);
+    assert_eq!(rt.system().fabric.tasks_executed(), 4, "all four stages");
+    assert_eq!(rt.completions().len(), 1, "one result packet");
+    let want = native::jpeg_chain(&scan, &DEFAULT_QTABLE);
+    let got: Vec<i32> =
+        rt.last_result(0).iter().map(|w| *w as i32).collect();
+    assert_eq!(got, want.to_vec(), "decoded pixels via the driver API");
+}
+
+#[test]
+fn chain_builder_rejects_depth_beyond_three() {
+    let h = |id| AccelHandle::new(id, 64, 64);
+    let chain = Chain::of(h(0)).then(h(1)).then(h(2)).then(h(3)).then(h(4));
+    assert_eq!(
+        chain.validate(),
+        Err(AccelError::ChainTooDeep { hops: 5 })
+    );
+    // Submission surfaces the same construction error.
+    let mut rt = jpeg_runtime();
+    let err = rt
+        .submit(0, Job::chained(chain).direct(vec![0; 64]))
+        .unwrap_err();
+    assert_eq!(err, AccelError::ChainTooDeep { hops: 5 });
+    assert_eq!(rt.completions().len(), 0);
+}
+
+#[test]
+fn chain_builder_rejects_duplicate_hops() {
+    let mut rt = jpeg_runtime();
+    let accels = rt.accels();
+    let chain = Chain::of(accels[0]).then(accels[1]).then(accels[0]);
+    assert_eq!(
+        chain.validate(),
+        Err(AccelError::DuplicateHop { hwa_id: 0 })
+    );
+    let err = rt
+        .submit(0, Job::chained(chain).direct(vec![0; 64]))
+        .unwrap_err();
+    assert_eq!(err, AccelError::DuplicateHop { hwa_id: 0 });
+}
+
+#[test]
+fn chain_naming_absent_accelerator_is_rejected_at_submit() {
+    let mut rt = jpeg_runtime();
+    let first = rt.accel(0).unwrap();
+    let ghost = AccelHandle::new(9, 64, 64);
+    let err = rt
+        .submit(0, Job::chained(Chain::of(first).then(ghost)).direct(vec![]))
+        .unwrap_err();
+    assert_eq!(err, AccelError::UnknownAccelerator { hwa_id: 9 });
+    // A single-hop job on an absent accelerator fails identically.
+    let err = rt.submit(0, Job::on(ghost).direct(vec![])).unwrap_err();
+    assert_eq!(err, AccelError::UnknownAccelerator { hwa_id: 9 });
+}
+
+#[test]
+fn chain_outside_any_group_is_rejected() {
+    // Same accelerators, but no chain group configured.
+    let cfg = SystemConfig::paper(vec![
+        spec_by_name("izigzag").unwrap(),
+        spec_by_name("iquantize").unwrap(),
+    ]);
+    let mut rt = AccelRuntime::new(cfg);
+    let a = rt.accel(0).unwrap();
+    let b = rt.accel(1).unwrap();
+    let err = rt
+        .submit(0, Job::chained(Chain::of(a).then(b)).direct(vec![0; 64]))
+        .unwrap_err();
+    assert_eq!(err, AccelError::NotChainable { hwa_id: 0 });
+}
+
+#[test]
+fn invalid_phase_aborts_the_whole_program_load() {
+    let mut rt = jpeg_runtime();
+    let ok = rt.accel(0).unwrap();
+    let ghost = AccelHandle::new(17, 64, 64);
+    let program = Program::new()
+        .invoke(Job::on(ok).direct(vec![1; 64]))
+        .compute(100)
+        .invoke(Job::on(ghost).direct(vec![2; 64]));
+    let err = rt.load(0, program).unwrap_err();
+    assert_eq!(err, AccelError::UnknownAccelerator { hwa_id: 17 });
+    // Nothing ran: the valid leading job was not enqueued either.
+    assert!(rt.run_until_done(1_000 * PS_PER_US));
+    assert_eq!(rt.system().fabric.tasks_executed(), 0);
+}

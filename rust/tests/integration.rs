@@ -1,18 +1,20 @@
 //! Full-system integration: every subsystem composed, including the
 //! memory-access scenario (§5, Fig. 5b), chaining across the NoC, and
-//! the PJRT compute hook inside the simulated fabric.
+//! the PJRT compute hook inside the simulated fabric. All work is
+//! submitted through the `accel` driver API (wire-level forgery tests
+//! live in the fabric/channel unit tests instead).
 
+use accnoc::accel::{AccelRuntime, Chain, Job};
 use accnoc::clock::PS_PER_US;
-use accnoc::cmp::core::{InvokeSpec, Processor, Segment};
 use accnoc::fpga::hwa::spec_by_name;
 use accnoc::runtime::native::{self, DEFAULT_QTABLE};
 use accnoc::runtime::NativeCompute;
 #[cfg(feature = "pjrt")]
 use accnoc::runtime::{PjrtCompute, Runtime};
-use accnoc::sim::system::{System, SystemConfig};
+use accnoc::sim::system::SystemConfig;
 use accnoc::workload::jpeg::BlockImage;
 
-fn jpeg_system() -> System {
+fn jpeg_runtime() -> AccelRuntime {
     let mut cfg = SystemConfig::paper(vec![
         spec_by_name("izigzag").unwrap(),
         spec_by_name("iquantize").unwrap(),
@@ -20,81 +22,69 @@ fn jpeg_system() -> System {
         spec_by_name("shiftbound").unwrap(),
     ]);
     cfg.chain_groups = vec![vec![0, 1, 2, 3]];
-    System::new(cfg)
+    AccelRuntime::new(cfg)
+}
+
+fn full_jpeg_chain(rt: &AccelRuntime) -> Chain {
+    let accels = rt.accels();
+    Chain::of(accels[0])
+        .then(accels[1])
+        .then(accels[2])
+        .then(accels[3])
 }
 
 #[test]
 fn chained_jpeg_decode_with_native_compute_is_bit_correct() {
-    let mut sys = jpeg_system();
-    sys.fabric.set_compute(Box::new(NativeCompute::default()));
+    let mut rt = jpeg_runtime();
+    rt.set_compute(Box::new(NativeCompute::default()));
     let img = BlockImage::synthetic(4, 42);
     let coeffs = img.encode();
     // One chained invocation per block from processor 0.
-    let prog: Vec<Segment> = coeffs
-        .iter()
-        .map(|scan| {
-            Segment::Invoke(
-                InvokeSpec::direct(
-                    0,
-                    scan.iter().map(|c| *c as u32).collect(),
-                    64,
-                )
-                .chained(3, [1, 2, 3]),
-            )
-        })
-        .collect();
-    sys.load_program(0, prog);
-    assert!(sys.run_until_done(200_000 * PS_PER_US));
-    assert_eq!(sys.procs[0].records.len(), 4);
+    for scan in &coeffs {
+        let chain = full_jpeg_chain(&rt);
+        let words: Vec<u32> = scan.iter().map(|c| *c as u32).collect();
+        rt.submit(0, Job::chained(chain).direct(words)).unwrap();
+    }
+    assert!(rt.run_until_done(200_000 * PS_PER_US));
+    assert_eq!(rt.completions().len(), 4);
     // The final invocation's result words must equal the native chain.
     let want = native::jpeg_chain(coeffs.last().unwrap(), &DEFAULT_QTABLE);
-    let got: Vec<i32> = sys.procs[0]
-        .last_result
-        .iter()
-        .map(|w| *w as i32)
-        .collect();
+    let got: Vec<i32> =
+        rt.last_result(0).iter().map(|w| *w as i32).collect();
     assert_eq!(got, want.to_vec(), "decoded pixels via simulated fabric");
 }
 
 #[cfg(feature = "pjrt")]
 #[test]
 fn chained_jpeg_decode_with_pjrt_compute() {
-    let Ok(rt) = Runtime::load_default() else {
+    let Ok(runtime) = Runtime::load_default() else {
         eprintln!("SKIP: artifacts not built");
         return;
     };
-    let mut sys = jpeg_system();
-    sys.fabric.set_compute(Box::new(PjrtCompute::new(rt)));
+    let mut rt = jpeg_runtime();
+    rt.set_compute(Box::new(PjrtCompute::new(runtime)));
     let img = BlockImage::synthetic(2, 77);
     let coeffs = img.encode();
-    let prog: Vec<Segment> = coeffs
-        .iter()
-        .map(|scan| {
-            Segment::Invoke(
-                InvokeSpec::direct(
-                    0,
-                    scan.iter().map(|c| *c as u32).collect(),
-                    64,
-                )
-                .chained(3, [1, 2, 3]),
-            )
-        })
-        .collect();
-    sys.load_program(0, prog);
-    assert!(sys.run_until_done(200_000 * PS_PER_US));
+    for scan in &coeffs {
+        let chain = full_jpeg_chain(&rt);
+        let words: Vec<u32> = scan.iter().map(|c| *c as u32).collect();
+        rt.submit(0, Job::chained(chain).direct(words)).unwrap();
+    }
+    assert!(rt.run_until_done(200_000 * PS_PER_US));
     let want = native::jpeg_chain(coeffs.last().unwrap(), &DEFAULT_QTABLE);
-    let got: Vec<i32> = sys.procs[0]
-        .last_result
-        .iter()
-        .map(|w| *w as i32)
-        .collect();
+    let got: Vec<i32> =
+        rt.last_result(0).iter().map(|w| *w as i32).collect();
     for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
         assert!(
             (g - w).abs() <= 1,
             "pixel {i}: pjrt-through-fabric {g} vs native {w}"
         );
     }
-    assert_eq!(sys.fabric.tasks_executed(), 8, "4 stages x 2 blocks");
+    assert_eq!(
+        rt.system().fabric.tasks_executed(),
+        8,
+        "4 stages x 2 blocks"
+    );
 }
 
 #[test]
@@ -102,17 +92,24 @@ fn memory_access_scenario_roundtrips_through_mmu() {
     // M_HWA_invoke (Fig. 5b): grant goes to the MMU, which DMAs the input
     // from DRAM; the result is written back to memory and the processor
     // is notified.
-    let mut cfg = SystemConfig::paper(vec![spec_by_name("izigzag").unwrap()]);
-    cfg.chain_groups = vec![];
-    let mut sys = System::new(cfg);
-    sys.fabric.set_compute(Box::new(NativeCompute::default()));
+    let cfg = SystemConfig::paper(vec![spec_by_name("izigzag").unwrap()]);
+    let mut rt = AccelRuntime::new(cfg);
+    rt.set_compute(Box::new(NativeCompute::default()));
     // Stage input data in DRAM.
     let scan: Vec<u32> = (0..64u32).map(|i| (i * 3) % 101).collect();
     let addr = 0x4000;
-    sys.mmu.dram.write_words(addr, &scan);
-    let spec = InvokeSpec::memory(0, addr, 256);
-    sys.load_program(0, vec![Segment::Invoke(spec)]);
-    assert!(sys.run_until_done(100_000 * PS_PER_US), "memory scenario done");
+    rt.system_mut().mmu.dram.write_words(addr, &scan);
+    let izigzag = rt.accel(0).unwrap();
+    let receipt = rt
+        .submit(0, Job::on(izigzag).via_memory(addr, 256))
+        .unwrap();
+    assert!(
+        rt.run_until_done(100_000 * PS_PER_US),
+        "memory scenario done"
+    );
+    let done = rt.poll(receipt).expect("notify received");
+    assert!(done.total_ps() > 0);
+    let sys = rt.system();
     assert_eq!(sys.mmu.stats.grants_decoded, 1);
     assert_eq!(sys.mmu.stats.dma_reads, 1);
     assert_eq!(sys.mmu.stats.results_written, 1);
@@ -133,27 +130,20 @@ fn priority_bits_reorder_result_packets() {
     // result leaves the PS first when both are queued (§4.1 A.2).
     let mut cfg = SystemConfig::paper(vec![spec_by_name("idct").unwrap()]);
     cfg.n_tbs = 2;
-    let mut sys = System::new(cfg);
+    let mut rt = AccelRuntime::new(cfg);
+    let idct = rt.accel(0).unwrap();
     let words: Vec<u32> = (0..64).collect();
-    sys.load_program(
-        0,
-        vec![Segment::Invoke(
-            InvokeSpec::direct(0, words.clone(), 64).with_priority(0),
-        )],
-    );
-    sys.load_program(
-        1,
-        vec![Segment::Invoke(
-            InvokeSpec::direct(0, words, 64).with_priority(3),
-        )],
-    );
-    assert!(sys.run_until_done(200_000 * PS_PER_US));
+    let lo = rt
+        .submit(0, Job::on(idct).direct(words.clone()).priority(0))
+        .unwrap();
+    let hi = rt.submit(1, Job::on(idct).direct(words).priority(3)).unwrap();
+    assert!(rt.run_until_done(200_000 * PS_PER_US));
     // Both complete; sanity that records exist. (Exact PS-order is
     // covered by the unit test; here we assert the system-level effect:
     // the high-priority invocation never finishes materially later.)
-    let lo = sys.procs[0].records[0].t_result_last;
-    let hi = sys.procs[1].records[0].t_result_last;
-    assert!(hi <= lo + 2_000_000, "hi {hi} vs lo {lo}");
+    let lo_done = rt.poll(lo).unwrap().completed_at();
+    let hi_done = rt.poll(hi).unwrap().completed_at();
+    assert!(hi_done <= lo_done + 2_000_000, "hi {hi_done} vs lo {lo_done}");
 }
 
 #[test]
@@ -161,42 +151,44 @@ fn all_twelve_hwas_execute_in_one_system() {
     let mut cfg = SystemConfig::paper(accnoc::fpga::hwa::table3());
     cfg.mesh.width = 4; // more processors for 12 channels
     cfg.mesh.height = 4;
-    let mut sys = System::new(cfg);
-    let n = sys.n_procs().min(8);
-    for i in 0..n {
-        let mut prog = Vec::new();
-        for hwa in (i..12).step_by(n.max(1)) {
-            let spec = sys.config.specs[hwa].clone();
-            prog.push(Segment::Invoke(InvokeSpec::direct(
-                hwa as u8,
-                (0..spec.in_words as u32).collect(),
-                spec.out_words,
-            )));
+    let mut rt = AccelRuntime::new(cfg);
+    let n = rt.n_cores().min(8);
+    for core in 0..n {
+        for hwa in (core..12).step_by(n.max(1)) {
+            let handle = rt.accel(hwa as u8).unwrap();
+            let words: Vec<u32> = (0..handle.in_words() as u32).collect();
+            rt.submit(core, Job::on(handle).direct(words)).unwrap();
         }
-        sys.load_program(i, prog);
     }
-    assert!(sys.run_until_done(500_000 * PS_PER_US));
-    assert_eq!(sys.fabric.tasks_executed(), 12);
+    assert!(rt.run_until_done(500_000 * PS_PER_US));
+    assert_eq!(rt.system().fabric.tasks_executed(), 12);
 }
 
 #[test]
 fn processor_records_monotone_timestamps() {
-    let mut cfg = SystemConfig::paper(vec![spec_by_name("gsm").unwrap()]);
-    cfg.chain_groups = vec![];
-    let mut sys = System::new(cfg);
-    let prog: Vec<Segment> = (0..3)
-        .map(|_| {
-            Segment::Invoke(InvokeSpec::direct(0, (0..8).collect(), 8))
-        })
-        .collect();
-    sys.load_program(2, prog);
-    assert!(sys.run_until_done(200_000 * PS_PER_US));
-    let p: &Processor = &sys.procs[2];
-    assert_eq!(p.records.len(), 3);
-    for r in &p.records {
+    let cfg = SystemConfig::paper(vec![spec_by_name("gsm").unwrap()]);
+    let mut rt = AccelRuntime::new(cfg);
+    let gsm = rt.accel(0).unwrap();
+    let mut receipts = Vec::new();
+    for _ in 0..3 {
+        receipts.push(
+            rt.submit(2, Job::on(gsm).direct((0..8).collect())).unwrap(),
+        );
+    }
+    assert!(rt.run_until_done(200_000 * PS_PER_US));
+    assert_eq!(rt.completions().len(), 3);
+    for receipt in receipts {
+        let done = rt.poll(receipt).expect("completed");
+        let r = done.record();
         assert!(r.t_request < r.t_grant);
         assert!(r.t_grant < r.t_payload_done);
         assert!(r.t_payload_done < r.t_result_first);
         assert!(r.t_result_first <= r.t_result_last);
+        let b = done.breakdown();
+        assert_eq!(
+            b.grant_ps + b.payload_ps + b.execute_ps,
+            b.total_ps,
+            "breakdown partitions the total"
+        );
     }
 }
