@@ -1,6 +1,6 @@
 # Convenience targets; see README.md.
 
-.PHONY: artifacts test bench sweep docs selftest
+.PHONY: artifacts test bench bench-smoke sweep docs selftest
 
 # AOT-lower the JAX/Pallas kernels to artifacts/*.hlo.txt + manifest.txt
 # (prerequisite for `cargo {test,run} --features pjrt`).
@@ -12,6 +12,12 @@ test:
 
 bench:
 	cargo bench --no-run
+
+# Short-budget hot-path run: prints the perf table, writes
+# BENCH_hotpath.json (name -> ns/iter; uploaded as a CI artifact) and
+# asserts the scheduler's >=3x low-injection speedup.
+bench-smoke:
+	ACCNOC_BENCH_FAST=1 cargo bench --bench hotpath_micro
 
 # Regenerate every figure's machine-readable BENCH_*.json via the sweep
 # harness (docs/EXPERIMENTS.md).

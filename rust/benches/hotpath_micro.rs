@@ -1,6 +1,11 @@
 //! Hot-path micro-benchmarks for the perf pass (docs/EXPERIMENTS.md §Perf):
 //! flit codec, router allocation, mesh stepping, channel stepping, and
 //! whole-system step rate.
+//!
+//! Emits `BENCH_hotpath.json` (name -> ns/iter) next to the text report so
+//! CI can upload the perf trajectory as an artifact. Set
+//! `ACCNOC_BENCH_FAST=1` (the `make bench-smoke` target) for a short
+//! measurement budget.
 use accnoc::clock::PS_PER_US;
 use accnoc::flit::{HeadFields, PacketBuilder};
 use accnoc::fpga::hwa::{spec_by_name, table3};
@@ -10,7 +15,17 @@ use accnoc::util::bench::{Bench, BenchConfig};
 use accnoc::util::rng::Pcg32;
 
 fn main() {
-    let mut b = Bench::new(BenchConfig::default());
+    let fast = std::env::var_os("ACCNOC_BENCH_FAST").is_some();
+    let config = if fast {
+        BenchConfig {
+            warmup: std::time::Duration::from_millis(20),
+            min_time: std::time::Duration::from_millis(80),
+            min_iters: 3,
+        }
+    } else {
+        BenchConfig::default()
+    };
+    let mut b = Bench::new(config);
 
     // Flit codec.
     let h = HeadFields {
@@ -55,6 +70,42 @@ fn main() {
         mesh.cycles
     });
 
+    // Active-set headline: stepping cost scales with traffic, not mesh
+    // size. A 9x9 mesh (81 routers) carrying one flit per ~30 cycles
+    // should step at nearly the cost of an empty mesh.
+    b.run("mesh 9x9: 1000 cycles @ 1 flit/30cy", || {
+        let cfg = MeshConfig {
+            width: 9,
+            height: 9,
+            ..MeshConfig::default()
+        };
+        let mut mesh = Mesh::new(cfg);
+        let mut rng = Pcg32::seeded(6);
+        let mut bld = PacketBuilder::new(3);
+        // Track in-flight destinations so the drain probe is O(activity)
+        // too — an 81-queue scan per cycle would mask exactly the
+        // structure-size term this metric isolates.
+        let mut pending_dsts: Vec<usize> = Vec::new();
+        for cycle in 0..1000u64 {
+            if cycle % 30 == 0 {
+                let src = rng.range(0, 81);
+                let dst = rng.range(0, 81);
+                if src != dst {
+                    let p = bld.command(HeadFields {
+                        routing: dst as u8,
+                        ..HeadFields::default()
+                    });
+                    if mesh.try_inject(src, p.flits[0]) {
+                        pending_dsts.push(dst);
+                    }
+                }
+            }
+            mesh.step();
+            pending_dsts.retain(|&d| mesh.eject_pop(d).is_none());
+        }
+        mesh.cycles
+    });
+
     // Full system: simulated µs per wall second (the sim-rate headline).
     b.run("system: simulate 20 µs izigzag saturation", || {
         let cfg = SystemConfig::paper(vec![spec_by_name("izigzag").unwrap(); 8]);
@@ -72,7 +123,7 @@ fn main() {
         sys.fabric.tasks_executed()
     });
 
-    // Idle-skipping scheduler headline: a low-injection fig8-style open
+    // Event-horizon scheduler headline: a low-injection fig8-style open
     // loop (0.25 req/µs, mostly idle) stepped naively vs event-driven.
     let low_injection_run = |idle_skip: bool| {
         let cfg = SystemConfig::paper(vec![spec_by_name("izigzag").unwrap(); 8]);
@@ -101,6 +152,12 @@ fn main() {
 
     b.report("hotpath_micro");
 
+    // Machine-readable trajectory artifact (uploaded by CI).
+    let json_path = std::path::Path::new("BENCH_hotpath.json");
+    b.write_json("hotpath_micro", json_path)
+        .expect("write BENCH_hotpath.json");
+    println!("wrote {}", json_path.display());
+
     // Determinism check: identical per-task latency records either way.
     let (lat_naive, edges_naive) = low_injection_run(false);
     let (lat_skip, edges_skip) = low_injection_run(true);
@@ -109,15 +166,29 @@ fn main() {
         "idle skipping changed per-task latency records"
     );
     let speedup = naive_mean.as_secs_f64() / skip_mean.as_secs_f64().max(1e-12);
+    let edge_ratio = edges_naive as f64 / edges_skip.max(1) as f64;
     println!(
         "idle-skip: {speedup:.1}x wall-clock speedup on the low-injection \
-         open loop ({edges_naive} -> {edges_skip} dispatched edges); \
-         per-task latency records identical"
+         open loop ({edges_naive} -> {edges_skip} dispatched edges, \
+         {edge_ratio:.1}x); per-task latency records identical"
     );
+    // The deterministic gate (runs in CI's short-budget bench-smoke too):
+    // dispatched-edge counts are noise-free, so the >=3x scheduler floor
+    // can't flake on a loaded runner.
     assert!(
-        speedup >= 2.0,
-        "idle-skipping must be >=2x on the low-injection open loop, got {speedup:.2}x"
+        edge_ratio >= 3.0,
+        "per-domain event horizons must cut dispatched edges >=3x on the \
+         low-injection open loop (ISSUE 4 acceptance), got {edge_ratio:.2}x"
     );
+    // Wall-clock floor only under the full measurement budget: timing on
+    // shared CI runners is too noisy for a hard gate.
+    if !fast {
+        assert!(
+            speedup >= 3.0,
+            "per-domain event horizons must be >=3x wall-clock on the \
+             low-injection open loop (ISSUE 4 acceptance), got {speedup:.2}x"
+        );
+    }
     // Derived sim-rate metric for §Perf.
     if let Some(m) = b
         .results()

@@ -318,6 +318,12 @@ impl CacheFpga {
         f
     }
 
+    /// NoC-side scheduler probe: flits queued toward the interconnect
+    /// (even if not yet CDC-visible) keep the NoC domain busy.
+    pub fn noc_tx_pending(&self) -> bool {
+        !self.router_in.is_empty()
+    }
+
     pub fn tasks_executed(&self) -> u64 {
         self.channels.iter().map(|c| c.tasks_executed).sum()
     }

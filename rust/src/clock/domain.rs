@@ -94,6 +94,38 @@ impl ClockDomain {
     }
 }
 
+/// What a clock-domain-resident component needs from the scheduler — the
+/// `next_event_at` contract (docs/ARCHITECTURE.md §Activity tracking).
+/// Every probe is a **lower bound** on when the component can next change
+/// state, given that everything outside its domain stays frozen; the
+/// scheduler (`System::skip_idle`) combines the probes into a skip target
+/// that never crosses any dispatched edge of a `Busy` domain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activity {
+    /// Mid-work: every edge of the domain must be dispatched.
+    Busy,
+    /// Purely event-driven right now: the component cannot act until some
+    /// other domain hands it work (no self-scheduled future event).
+    Idle,
+    /// Nothing can happen before this instant (a DMA completion, a
+    /// Poisson arrival, an HWA pipeline stage's `done_at`, a TB's CDC
+    /// visibility edge); edges strictly before it are provable no-ops.
+    NextEventAt(Ps),
+}
+
+impl Activity {
+    /// Combine two probes: the earlier need wins.
+    pub fn join(self, other: Activity) -> Activity {
+        match (self, other) {
+            (Activity::Busy, _) | (_, Activity::Busy) => Activity::Busy,
+            (Activity::Idle, x) | (x, Activity::Idle) => x,
+            (Activity::NextEventAt(a), Activity::NextEventAt(b)) => {
+                Activity::NextEventAt(a.min(b))
+            }
+        }
+    }
+}
+
 /// Identifier of a registered domain in a [`MultiClock`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct DomainId(pub usize);
@@ -150,6 +182,13 @@ impl MultiClock {
         self.domains.len()
     }
 
+    /// The next scheduled (not yet dispatched) edge of `id` — the
+    /// earliest instant a `Busy` domain can act, and therefore the bound
+    /// per-domain idle skipping must never cross.
+    pub fn next_edge_of(&self, id: DomainId) -> Ps {
+        self.next_edges[id.0]
+    }
+
     /// Advance to the earliest pending edge; returns (time, ticking ids).
     pub fn advance(&mut self, ticking: &mut Vec<DomainId>) -> Ps {
         debug_assert!(!self.domains.is_empty(), "no domains registered");
@@ -192,7 +231,7 @@ impl MultiClock {
     /// keep cycle statistics consistent with naive per-edge stepping.
     ///
     /// Soundness is the caller's obligation: every skipped edge must be a
-    /// provable no-op (see `System::idle_until`).
+    /// provable no-op (see `System::skip_idle`'s per-domain horizons).
     pub fn skip_until(&mut self, t: Ps, skipped: &mut Vec<u64>) {
         skipped.clear();
         skipped.resize(self.domains.len(), 0);

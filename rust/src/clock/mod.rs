@@ -6,5 +6,6 @@ pub mod domain;
 
 pub use async_fifo::AsyncFifo;
 pub use domain::{
-    mhz_to_period_ps, ClockDomain, DomainId, MultiClock, Ps, PS_PER_US,
+    mhz_to_period_ps, Activity, ClockDomain, DomainId, MultiClock, Ps,
+    PS_PER_US,
 };

@@ -11,7 +11,7 @@
 
 use std::collections::VecDeque;
 
-use crate::clock::Ps;
+use crate::clock::{Activity, Ps};
 use crate::flit::{
     Direction, Flit, FlitKind, HeadFields, Packet, PacketBuilder, PacketType,
 };
@@ -228,6 +228,18 @@ impl Processor {
             | CoreState::RecvOverhead { .. } => true,
             CoreState::AwaitGrant | CoreState::AwaitResult { .. } => false,
             CoreState::Done => !self.program.is_empty(),
+        }
+    }
+
+    /// Scheduler probe (the [`Activity`] contract): a core is clock-driven
+    /// while working and purely event-driven while awaiting a grant or
+    /// result — it never self-schedules a future event, so the report is
+    /// binary.
+    pub fn activity(&self) -> Activity {
+        if self.needs_clock() {
+            Activity::Busy
+        } else {
+            Activity::Idle
         }
     }
 

@@ -13,7 +13,7 @@ pub mod task_buffer;
 
 use std::collections::VecDeque;
 
-use crate::clock::{ClockDomain, Ps};
+use crate::clock::{Activity, ClockDomain, Ps};
 use crate::flit::{
     payload_packet_flits, Direction, FlitKind, HeadFields, Packet,
     PacketBuilder, PacketType,
@@ -248,6 +248,53 @@ impl Channel {
     /// True when the HWA datapath is mid-task.
     pub fn busy(&self) -> bool {
         !matches!(self.hwac, Hwac::Idle)
+    }
+
+    /// Interface-clock work pending: the LGC, chaining controller or
+    /// packet sender would act on this channel at the next interface
+    /// edge. (TBs that are `Granted`/`Filling` wait on PR input, which
+    /// keeps the interface domain busy through `router_out` instead.)
+    pub fn iface_pending(&self) -> bool {
+        !self.rb.is_empty()
+            || !self.cmd_out.is_empty()
+            || !self.pob.is_empty()
+            || !self.chain_out.is_empty()
+    }
+
+    /// Scheduler probe for this channel's HWA clock domain (the
+    /// [`Activity`] contract). The pipeline FSM's `done_at` deadlines and
+    /// the TBs' CDC visibility edges are exact lower bounds: every HWA
+    /// edge before them is a no-op except for the `busy_cycles` counter,
+    /// which [`Channel::account_idle_cycles`] folds back in.
+    pub fn hwa_activity(&self) -> Activity {
+        match &self.hwac {
+            Hwac::Idle => {
+                if self.chain_in.is_some() {
+                    return Activity::Busy;
+                }
+                let mut act = Activity::Idle;
+                for tb in &self.tbs {
+                    if let Some(t) = tb.ready_wake() {
+                        act = act.join(Activity::NextEventAt(t));
+                    }
+                }
+                act
+            }
+            Hwac::Fetching { done_at, .. }
+            | Hwac::Executing { done_at, .. }
+            | Hwac::Draining { done_at, .. } => Activity::NextEventAt(*done_at),
+            Hwac::Blocked { .. } => Activity::Busy,
+        }
+    }
+
+    /// Fold `n` skipped HWA-clock edges into this channel's counters.
+    /// Sound only over a window where `busy()` cannot change (guaranteed
+    /// by `System::skip_idle`: the skip target never crosses this
+    /// domain's `done_at`/wake horizon).
+    pub fn account_idle_cycles(&mut self, n: u64) {
+        if self.busy() {
+            self.stats.busy_cycles += n;
+        }
     }
 
     /// One HWA-clock cycle.

@@ -77,6 +77,17 @@ impl TaskBuffer {
         self.state == TbState::Ready && now >= self.ready_at
     }
 
+    /// CDC visibility time of a filled task, if one is waiting: the
+    /// scheduler's `next_event_at` lower bound for an otherwise idle HWA
+    /// (nothing can leave this buffer before `ready_at`).
+    pub fn ready_wake(&self) -> Option<Ps> {
+        if self.state == TbState::Ready {
+            Some(self.ready_at)
+        } else {
+            None
+        }
+    }
+
     /// The task arbiter hands the buffer to the HWA controller.
     pub fn take(&mut self, expected_words: usize, now: Ps) -> Task {
         debug_assert!(self.is_ready(now));

@@ -7,7 +7,7 @@
 //! `step_channel` per HWA clock domain. The simulation system drives
 //! these from a [`crate::clock::MultiClock`].
 
-use crate::clock::{AsyncFifo, ClockDomain, Ps};
+use crate::clock::{Activity, AsyncFifo, ClockDomain, Ps};
 use crate::flit::Flit;
 
 use super::channel::Channel;
@@ -178,16 +178,67 @@ impl Fpga {
         self.router_in.peek(now)
     }
 
+    /// NoC-side scheduler probe: flits queued (even if not yet CDC-
+    /// visible) toward the interconnect keep the NoC domain busy.
+    pub fn noc_tx_pending(&self) -> bool {
+        !self.router_in.is_empty()
+    }
+
     // ------------------------------------------------------------------
     // Interface-clock side
     // ------------------------------------------------------------------
 
-    /// Fold `n` interface cycles the idle-skipping scheduler fast-forwarded
-    /// past (the fabric was quiescent, so stepping them would only have
-    /// bumped `iface_cycles`); keeps busy-fraction denominators identical
-    /// to naive per-edge stepping.
+    /// Fold `n` skipped interface cycles into the busy-fraction counters.
+    /// The numerator folds too: with per-domain event horizons the
+    /// interface domain skips edges while an HWA is mid-execution (its
+    /// channel reports `NextEventAt(done_at)`), and naive stepping would
+    /// have counted every one of those edges as busy. Sound because
+    /// `busy()` cannot change inside a skipped window (no HWA edge is
+    /// skipped past its horizon).
     pub fn account_idle_iface_cycles(&mut self, n: u64) {
         self.stats.iface_cycles += n;
+        if self.channels.iter().any(|c| c.busy()) {
+            self.stats.busy_iface_cycles += n;
+        }
+    }
+
+    /// Interface-domain scheduler probe (the [`Activity`] contract): the
+    /// PR path (router_out + receivers), PS path (sender + every
+    /// channel's grant/result queues) and chaining controllers all run on
+    /// the interface clock; any of them holding work makes every
+    /// interface edge meaningful. With all of them drained the domain is
+    /// purely event-driven — channels mid-execution only affect the
+    /// busy-cycle statistics, which the idle fold reproduces.
+    pub fn iface_activity(&self) -> Activity {
+        if !self.router_out.is_empty()
+            || self.prs.iter().any(|p| !p.idle())
+            || !self.ps.idle()
+            || self.channels.iter().any(|c| c.iface_pending())
+        {
+            Activity::Busy
+        } else {
+            Activity::Idle
+        }
+    }
+
+    /// Scheduler probe for one HWA clock domain (`chans` = the channels
+    /// sharing it, from [`Fpga::hwa_domains`]).
+    pub fn hwa_domain_activity(&self, chans: &[usize]) -> Activity {
+        let mut act = Activity::Idle;
+        for &i in chans {
+            act = act.join(self.channels[i].hwa_activity());
+            if act == Activity::Busy {
+                break;
+            }
+        }
+        act
+    }
+
+    /// Fold `n` skipped HWA-clock edges into each of `chans`' counters.
+    pub fn account_idle_hwa_cycles(&mut self, chans: &[usize], n: u64) {
+        for &i in chans {
+            self.channels[i].account_idle_cycles(n);
+        }
     }
 
     pub fn step_iface(&mut self, now: Ps) {

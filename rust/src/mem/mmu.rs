@@ -4,7 +4,7 @@
 
 use std::collections::VecDeque;
 
-use crate::clock::Ps;
+use crate::clock::{Activity, Ps};
 use crate::flit::{
     Direction, Flit, FlitKind, HeadFields, PacketBuilder, PacketType,
 };
@@ -140,27 +140,18 @@ impl Mmu {
         self.jobs.is_empty() && self.outbox.is_empty() && self.rx_head.is_none()
     }
 
-    /// Scheduler activity probe (see `System::idle_until`).
-    pub fn activity(&self) -> MmuActivity {
+    /// Scheduler activity probe (the [`Activity`] contract): mid-stream
+    /// work needs every NoC edge; queued DMA jobs bound the next event by
+    /// the earliest memory completion.
+    pub fn activity(&self) -> Activity {
         if !self.outbox.is_empty() || self.rx_head.is_some() {
-            return MmuActivity::Busy;
+            return Activity::Busy;
         }
         match self.jobs.iter().map(|j| j.ready_at).min() {
-            None => MmuActivity::Idle,
-            Some(t) => MmuActivity::WaitUntil(t),
+            None => Activity::Idle,
+            Some(t) => Activity::NextEventAt(t),
         }
     }
-}
-
-/// What the MMU needs from the clock right now.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum MmuActivity {
-    /// Nothing queued or in flight.
-    Idle,
-    /// Mid-stream work that needs every NoC edge.
-    Busy,
-    /// Only DMA jobs waiting on memory; nothing can happen earlier.
-    WaitUntil(Ps),
 }
 
 #[cfg(test)]

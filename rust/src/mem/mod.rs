@@ -4,4 +4,4 @@ pub mod dram;
 pub mod mmu;
 
 pub use dram::{Dram, DRAM_LATENCY_CYCLES, DRAM_WORDS_PER_CYCLE};
-pub use mmu::{Mmu, MmuActivity};
+pub use mmu::Mmu;

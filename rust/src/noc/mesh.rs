@@ -1,5 +1,16 @@
 //! W×H mesh: router wiring, injection/ejection interfaces (FSL-like NIs,
 //! §6.1) and the per-cycle stepping engine with one-cycle credit return.
+//!
+//! Stepping cost scales with **activity, not structure size** (§Perf):
+//! the mesh keeps a worklist of active routers (buffered flits or a held
+//! wormhole lock) and visits only those each cycle. Routers are activated
+//! by [`Mesh::try_inject`] and by flit delivery in phase B, and retire
+//! from the worklist when [`Router::is_active`] goes false after
+//! allocation (credit returns never need to re-activate: a usable credit
+//! implies the router still holds flits and is therefore still queued).
+//! `in_flight`/`idle` are O(1) via incrementally maintained totals. The
+//! pre-worklist full-scan stepper survives behind `#[cfg(test)]` as the
+//! reference for the equivalence property test.
 
 use std::collections::VecDeque;
 
@@ -41,6 +52,15 @@ pub struct Mesh {
     pending_credits: Vec<(usize, usize)>,
     /// Scratch to avoid per-cycle allocation.
     moves_scratch: Vec<(usize, Move)>,
+    /// Active-router worklist: the only routers `step` visits (§Perf).
+    active: Vec<usize>,
+    /// Membership flag per router (keeps the worklist duplicate-free).
+    queued: Vec<bool>,
+    /// Flits buffered in routers (excluding eject queues), maintained
+    /// incrementally so `in_flight`/`idle` are O(1).
+    buffered_total: u32,
+    /// Flits sitting in eject queues, maintained incrementally.
+    eject_total: u32,
     pub cycles: u64,
     pub flits_injected: u64,
     pub flits_ejected: u64,
@@ -54,6 +74,10 @@ impl Mesh {
             let x = (id % config.width as usize) as u8;
             let y = (id / config.width as usize) as u8;
             let mut credits = [0u32; PORTS];
+            // The Local output's credits ARE the eject cap: allocation
+            // stalls Local-port moves on a full eject queue exactly like
+            // any other backpressured output (enforced by the assert in
+            // phase B and the hotspot regression test below).
             credits[Port::Local as usize] = config.eject_cap;
             if y > 0 {
                 credits[Port::North as usize] = config.in_buf_cap;
@@ -75,6 +99,10 @@ impl Mesh {
             inject_credits: vec![config.in_buf_cap; n],
             pending_credits: Vec::new(),
             moves_scratch: Vec::new(),
+            active: Vec::with_capacity(n),
+            queued: vec![false; n],
+            buffered_total: 0,
+            eject_total: 0,
             cycles: 0,
             flits_injected: 0,
             flits_ejected: 0,
@@ -97,6 +125,14 @@ impl Mesh {
         }
     }
 
+    #[inline]
+    fn activate(&mut self, router: usize) {
+        if !self.queued[router] {
+            self.queued[router] = true;
+            self.active.push(router);
+        }
+    }
+
     /// Inject a flit at `node`'s NI. Returns false on backpressure.
     pub fn try_inject(&mut self, node: usize, flit: Flit) -> bool {
         if self.inject_credits[node] == 0 {
@@ -105,6 +141,8 @@ impl Mesh {
         self.inject_credits[node] -= 1;
         let w = self.config.width;
         self.routers[node].accept(Port::Local as usize, flit, w);
+        self.buffered_total += 1;
+        self.activate(node);
         self.flits_injected += 1;
         true
     }
@@ -118,6 +156,7 @@ impl Mesh {
         let f = self.eject[node].pop_front();
         if f.is_some() {
             self.pending_credits.push((node, Port::Local as usize));
+            self.eject_total -= 1;
             self.flits_ejected += 1;
         }
         f
@@ -131,22 +170,61 @@ impl Mesh {
         self.eject[node].len()
     }
 
-    /// Advance the NoC by one clock cycle.
+    /// Advance the NoC by one clock cycle, visiting only active routers.
     pub fn step(&mut self) {
+        self.step_impl(false);
+    }
+
+    /// Reference stepper: visits every router every cycle (the
+    /// pre-activity-tracking behavior). Exists solely for the equivalence
+    /// property test below; release builds carry only the active-set path.
+    #[cfg(test)]
+    pub fn step_full_scan(&mut self) {
+        self.step_impl(true);
+    }
+
+    fn step_impl(&mut self, full_scan: bool) {
         self.cycles += 1;
-        // Apply credits freed last cycle.
+        // Apply credits freed last cycle. No re-activation needed: a
+        // credit is only *usable* by a router that still holds flits (or
+        // a lock) toward that output, and such a router never retired —
+        // retirement requires `!is_active()`.
         for (router, out) in self.pending_credits.drain(..) {
             self.routers[router].return_credit(out);
+            debug_assert!(
+                self.queued[router] || !self.routers[router].is_active(),
+                "credit returned to an active router that fell off the \
+                 worklist"
+            );
         }
-        // Phase A: allocation on the pre-cycle state of every router
-        // (allocation-free: moves land in the reused scratch buffer).
+        // Phase A: allocation on the pre-cycle state of every active
+        // router (allocation-free: moves land in the reused scratch
+        // buffer). Allocation only touches the router's own state and
+        // per-(input,output) queues are single-writer, so visit order is
+        // state-neutral — the equivalence test pins this.
         let mut moves = std::mem::take(&mut self.moves_scratch);
         moves.clear();
-        for i in 0..self.routers.len() {
-            self.routers[i].allocate_into(i, &mut |tag, m| moves.push((tag, m)));
+        if full_scan {
+            for i in 0..self.routers.len() {
+                self.routers[i].allocate_into(i, &mut |tag, m| moves.push((tag, m)));
+            }
+        } else {
+            let mut k = 0;
+            while k < self.active.len() {
+                let i = self.active[k];
+                self.routers[i].allocate_into(i, &mut |tag, m| moves.push((tag, m)));
+                if self.routers[i].is_active() {
+                    k += 1;
+                } else {
+                    // Retire drained routers from the worklist.
+                    self.queued[i] = false;
+                    self.active.swap_remove(k);
+                }
+            }
         }
         // Phase B: traversal + credit scheduling.
         for (i, m) in moves.drain(..) {
+            self.buffered_total -= 1;
             // Credit back to whoever feeds (i, m.in_port).
             if m.in_port == Port::Local as usize {
                 self.inject_credits[i] += 1;
@@ -157,16 +235,37 @@ impl Mesh {
             }
             // Deliver.
             if m.out_port == Port::Local as usize {
-                debug_assert!(
+                // Hard cap even in release builds: the Local output's
+                // credits stall allocation on a full queue, so an
+                // overflow here means the credit accounting broke.
+                assert!(
                     self.eject[i].len() < self.config.eject_cap as usize,
-                    "eject overflow at node {i}"
+                    "eject overflow at node {i}: Local-port move escaped \
+                     eject-credit backpressure"
                 );
                 self.eject[i].push_back(m.flit);
+                self.eject_total += 1;
             } else {
                 let j = self.neighbor(i, m.out_port);
                 let in_port = Port::from_index(m.out_port).opposite() as usize;
                 let w = self.config.width;
                 self.routers[j].accept(in_port, m.flit, w);
+                self.buffered_total += 1;
+                self.activate(j);
+            }
+        }
+        // Full-scan mode must keep the worklist invariant (every active
+        // router is queued) so the two steppers stay interchangeable.
+        if full_scan {
+            let mut k = 0;
+            while k < self.active.len() {
+                let i = self.active[k];
+                if self.routers[i].is_active() {
+                    k += 1;
+                } else {
+                    self.queued[i] = false;
+                    self.active.swap_remove(k);
+                }
             }
         }
         self.moves_scratch = moves;
@@ -179,17 +278,24 @@ impl Mesh {
     }
 
     /// Flits currently buffered anywhere in the network (excluding eject).
+    /// O(1): incrementally maintained counter, not a router scan.
     pub fn in_flight(&self) -> u32 {
-        self.routers.iter().map(|r| r.buffered()).sum()
+        self.buffered_total
     }
 
     /// True when nothing is buffered and all eject queues are drained.
+    /// O(1): both totals are maintained incrementally.
     pub fn idle(&self) -> bool {
-        self.in_flight() == 0 && self.eject.iter().all(|q| q.is_empty())
+        self.buffered_total == 0 && self.eject_total == 0
     }
 
     pub fn router(&self, id: usize) -> &Router {
         &self.routers[id]
+    }
+
+    /// Routers currently on the active worklist (scheduler work metric).
+    pub fn active_routers(&self) -> usize {
+        self.active.len()
     }
 
     /// Node id of coordinates.
@@ -202,6 +308,7 @@ impl Mesh {
 mod tests {
     use super::*;
     use crate::flit::{HeadFields, PacketBuilder};
+    use crate::util::rng::Pcg32;
 
     fn single(dest: u8, flow: u32) -> Flit {
         let mut b = PacketBuilder::new(flow);
@@ -301,7 +408,6 @@ mod tests {
 
     #[test]
     fn no_flit_loss_under_random_traffic() {
-        use crate::util::rng::Pcg32;
         let mut mesh = Mesh::new(MeshConfig::default());
         let mut rng = Pcg32::seeded(42);
         let n = mesh.node_count();
@@ -362,5 +468,196 @@ mod tests {
         }
         assert_eq!(sent, 0, "all flits eventually delivered");
         assert!(mesh.idle(), "network drains (no deadlock)");
+    }
+
+    /// ISSUE 4 satellite: the eject cap must hold in release builds under
+    /// a hotspot that never drains — Local-port moves stall on eject
+    /// credits like any other backpressured output. The tiny cap makes
+    /// any leak overflow within a few cycles.
+    #[test]
+    fn eject_cap_enforced_under_undrained_hotspot() {
+        let cfg = MeshConfig {
+            eject_cap: 2,
+            ..MeshConfig::default()
+        };
+        let mut mesh = Mesh::new(cfg);
+        for _ in 0..2000 {
+            for src in 0..9 {
+                if src != 4 {
+                    mesh.try_inject(src, single(4, src as u32));
+                }
+            }
+            mesh.step(); // asserts internally on any eject overflow
+            for node in 0..9 {
+                assert!(
+                    mesh.eject_len(node) <= 2,
+                    "eject queue at node {node} exceeded its cap"
+                );
+            }
+            // Never pop node 4: the hotspot's eject queue stays full and
+            // every upstream buffer backs up behind it.
+        }
+        assert_eq!(mesh.eject_len(4), 2, "hotspot eject pinned at cap");
+        assert!(!mesh.idle());
+    }
+
+    /// The worklist retires drained routers: an idle mesh visits nobody.
+    #[test]
+    fn active_set_drains_to_empty() {
+        let mut mesh = Mesh::new(MeshConfig::default());
+        assert_eq!(mesh.active_routers(), 0);
+        assert!(mesh.try_inject(0, single(8, 1)));
+        assert!(mesh.active_routers() > 0);
+        for _ in 0..20 {
+            mesh.step();
+            while mesh.eject_pop(8).is_some() {}
+        }
+        // One extra step applies the final eject credit (no re-activation
+        // needed) and leaves the worklist drained.
+        mesh.step();
+        assert!(mesh.idle());
+        assert_eq!(mesh.active_routers(), 0, "worklist drained");
+        assert_eq!(mesh.in_flight(), 0);
+    }
+
+    // ------------------------------------------------------------------
+    // Equivalence property test (ISSUE 4): the active-set stepper and
+    // the reference full-scan stepper, fed identical seeded random
+    // traffic for >= 5k cycles, must agree on every observable — eject
+    // streams, per-router credit state, occupancies and cycle counts.
+    // ------------------------------------------------------------------
+
+    fn assert_meshes_equal(a: &Mesh, b: &Mesh, ctx: &str) {
+        assert_eq!(a.cycles, b.cycles, "{ctx}: cycles");
+        assert_eq!(a.flits_injected, b.flits_injected, "{ctx}: injected");
+        assert_eq!(a.flits_ejected, b.flits_ejected, "{ctx}: ejected");
+        assert_eq!(a.in_flight(), b.in_flight(), "{ctx}: in_flight");
+        assert_eq!(a.idle(), b.idle(), "{ctx}: idle");
+        let mut scan = 0u32;
+        for i in 0..a.node_count() {
+            let (ra, rb) = (a.router(i), b.router(i));
+            assert_eq!(ra.credits, rb.credits, "{ctx}: credits of router {i}");
+            assert_eq!(
+                ra.buffered(),
+                rb.buffered(),
+                "{ctx}: occupancy of router {i}"
+            );
+            assert_eq!(
+                ra.flits_routed, rb.flits_routed,
+                "{ctx}: flits routed by router {i}"
+            );
+            assert_eq!(
+                a.inject_credits[i], b.inject_credits[i],
+                "{ctx}: inject credits at node {i}"
+            );
+            assert_eq!(
+                a.eject_len(i),
+                b.eject_len(i),
+                "{ctx}: eject backlog at node {i}"
+            );
+            scan += ra.buffered();
+        }
+        assert_eq!(
+            scan,
+            a.in_flight(),
+            "{ctx}: maintained in_flight total matches a router scan"
+        );
+    }
+
+    #[test]
+    fn active_set_matches_full_scan_under_random_traffic() {
+        for seed in [1u64, 7, 42, 20260801] {
+            let cfg = MeshConfig {
+                width: 4,
+                height: 4,
+                in_buf_cap: 4,
+                eject_cap: 4,
+            };
+            let mut a = Mesh::new(cfg.clone());
+            let mut b = Mesh::new(cfg);
+            let mut rng = Pcg32::seeded(seed);
+            let mut builder = PacketBuilder::new(1);
+            let n = a.node_count();
+            // Per-node outboxes keep multi-flit packets contiguous at
+            // each local input (as every real injector does).
+            let mut outbox: Vec<VecDeque<Flit>> =
+                (0..n).map(|_| VecDeque::new()).collect();
+            for cycle in 0..5500u64 {
+                // Random offered traffic: single-flit commands and 1/4/12
+                // word wormhole payloads.
+                if rng.chance(0.5) {
+                    let src = rng.range(0, n);
+                    let dst = rng.range(0, n);
+                    if src != dst && outbox[src].len() < 32 {
+                        let words = [0usize, 1, 4, 12][rng.range(0, 4)];
+                        let head = HeadFields {
+                            routing: dst as u8,
+                            ..HeadFields::default()
+                        };
+                        let p = if words == 0 {
+                            builder.command(head)
+                        } else {
+                            builder
+                                .payload(head, &vec![cycle as u32; words])
+                        };
+                        outbox[src].extend(p.flits);
+                    }
+                }
+                // One injection attempt per node per cycle, identical on
+                // both meshes (their NI state must agree).
+                for (node, q) in outbox.iter_mut().enumerate() {
+                    if let Some(f) = q.front().copied() {
+                        let ok_a = a.try_inject(node, f);
+                        let ok_b = b.try_inject(node, f);
+                        assert_eq!(ok_a, ok_b, "inject decision diverged");
+                        if ok_a {
+                            q.pop_front();
+                        }
+                    }
+                }
+                a.step();
+                b.step_full_scan();
+                // Random partial draining exercises credit returns and
+                // re-activation.
+                for node in 0..n {
+                    if rng.chance(0.6) {
+                        loop {
+                            match (a.eject_pop(node), b.eject_pop(node)) {
+                                (Some(x), Some(y)) => {
+                                    assert_eq!(x, y, "eject stream diverged")
+                                }
+                                (None, None) => break,
+                                (x, y) => panic!(
+                                    "eject length diverged at node \
+                                     {node}: {x:?} vs {y:?}"
+                                ),
+                            }
+                        }
+                    }
+                }
+                if cycle % 128 == 0 {
+                    assert_meshes_equal(&a, &b, &format!("seed {seed} cycle {cycle}"));
+                }
+            }
+            // Stop offering traffic and drain both meshes completely.
+            for _ in 0..4000 {
+                a.step();
+                b.step_full_scan();
+                for node in 0..n {
+                    loop {
+                        match (a.eject_pop(node), b.eject_pop(node)) {
+                            (Some(x), Some(y)) => assert_eq!(x, y),
+                            (None, None) => break,
+                            (x, y) => panic!("drain diverged: {x:?} vs {y:?}"),
+                        }
+                    }
+                }
+                if a.idle() && b.idle() {
+                    break;
+                }
+            }
+            assert!(a.idle() && b.idle(), "seed {seed}: both drained");
+            assert_meshes_equal(&a, &b, &format!("seed {seed} final"));
+        }
     }
 }

@@ -7,8 +7,13 @@
 //! traversal collapsed into the allocation step, as in CONNECT's
 //! low-latency single-stage configuration); credits return to the upstream
 //! router one cycle after a flit departs an input buffer.
-
-use std::collections::VecDeque;
+//!
+//! Hot-path layout (§Perf): the 25 VOQs are fixed-capacity **inline ring
+//! buffers** (`VoqRing`) embedded directly in the router struct — no
+//! per-queue heap allocation, no pointer chasing — and the router
+//! maintains occupancy/lock counters so [`Router::is_active`] answers in
+//! O(1) whether stepping it this cycle can do anything at all. The mesh
+//! uses that to visit only active routers (`noc/mesh.rs`).
 
 use crate::flit::Flit;
 
@@ -51,6 +56,58 @@ impl Port {
 /// per-port buffers; 8 flits is representative and is swept in tests.
 pub const DEFAULT_IN_BUF: u32 = 8;
 
+/// Inline VOQ ring capacity in flits. Per-input occupancy is credit-bound
+/// by `in_buf_cap <= VOQ_RING_CAP` (asserted in [`Router::new`]), so no
+/// individual (input, output) ring can ever overflow it.
+pub const VOQ_RING_CAP: usize = DEFAULT_IN_BUF as usize;
+
+/// One virtual output queue: a fixed-capacity ring of flits stored inline
+/// (no heap). `Flit` is `Copy`, so push/pop are plain array writes.
+#[derive(Debug, Clone, Copy, Default)]
+struct VoqRing {
+    slots: [Flit; VOQ_RING_CAP],
+    head: u8,
+    len: u8,
+}
+
+impl VoqRing {
+    #[inline]
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    fn front(&self) -> Option<&Flit> {
+        if self.len == 0 {
+            None
+        } else {
+            Some(&self.slots[self.head as usize])
+        }
+    }
+
+    #[inline]
+    fn push_back(&mut self, flit: Flit) {
+        // Hard cap even in release builds (same reasoning as the mesh's
+        // eject assert): credits make this unreachable, and a silent
+        // wrap-around would overwrite a buffered flit undetectably.
+        assert!((self.len as usize) < VOQ_RING_CAP, "VOQ ring overflow");
+        let tail = (self.head as usize + self.len as usize) % VOQ_RING_CAP;
+        self.slots[tail] = flit;
+        self.len += 1;
+    }
+
+    #[inline]
+    fn pop_front(&mut self) -> Option<Flit> {
+        if self.len == 0 {
+            return None;
+        }
+        let flit = self.slots[self.head as usize];
+        self.head = ((self.head as usize + 1) % VOQ_RING_CAP) as u8;
+        self.len -= 1;
+        Some(flit)
+    }
+}
+
 /// A single selected flit movement for this cycle.
 #[derive(Debug, Clone)]
 pub struct Move {
@@ -64,16 +121,21 @@ pub struct Router {
     pub id: u8,
     pub x: u8,
     pub y: u8,
-    /// voq[in][out]
-    voq: Vec<Vec<VecDeque<Flit>>>,
+    /// voq[in][out]: inline rings, no heap (§Perf).
+    voq: [[VoqRing; PORTS]; PORTS],
     /// Occupancy per input port (sum over VOQs), for credit accounting.
     in_occupancy: [u32; PORTS],
     /// Occupancy per output port (sum over that output's VOQs): lets
     /// allocation skip idle outputs without scanning five queues (§Perf).
     out_occupancy: [u32; PORTS],
+    /// Total buffered flits (sum of `in_occupancy`), maintained so
+    /// [`Router::is_active`]/[`Router::buffered`] are O(1).
+    buffered: u32,
     in_buf_cap: u32,
     /// Wormhole lock per output: input port owning the output mid-packet.
     out_lock: [Option<usize>; PORTS],
+    /// Number of held wormhole locks (maintained for `is_active`).
+    locks_held: u8,
     /// Round-robin pointer per output.
     rr: [usize; PORTS],
     /// Credits per output link = free slots downstream.
@@ -84,17 +146,22 @@ pub struct Router {
 
 impl Router {
     pub fn new(id: u8, x: u8, y: u8, in_buf_cap: u32, out_credits: [u32; PORTS]) -> Self {
+        assert!(
+            in_buf_cap as usize <= VOQ_RING_CAP,
+            "in_buf_cap {in_buf_cap} exceeds the inline VOQ ring capacity \
+             {VOQ_RING_CAP} (raise VOQ_RING_CAP to sweep deeper buffers)"
+        );
         Self {
             id,
             x,
             y,
-            voq: (0..PORTS)
-                .map(|_| (0..PORTS).map(|_| VecDeque::new()).collect())
-                .collect(),
+            voq: [[VoqRing::default(); PORTS]; PORTS],
             in_occupancy: [0; PORTS],
             out_occupancy: [0; PORTS],
+            buffered: 0,
             in_buf_cap,
             out_lock: [None; PORTS],
+            locks_held: 0,
             rr: [0; PORTS],
             credits: out_credits,
             flits_routed: 0,
@@ -132,6 +199,7 @@ impl Router {
         let out = self.route(dx, dy);
         self.in_occupancy[in_port] += 1;
         self.out_occupancy[out] += 1;
+        self.buffered += 1;
         self.voq[in_port][out].push_back(flit);
         debug_assert!(
             self.in_occupancy[in_port] <= self.in_buf_cap,
@@ -159,7 +227,7 @@ impl Router {
         tag: usize,
         sink: &mut impl FnMut(usize, Move),
     ) {
-        if self.in_occupancy.iter().all(|o| *o == 0) {
+        if self.buffered == 0 {
             return;
         }
         let mut input_used = [false; PORTS];
@@ -211,11 +279,14 @@ impl Router {
                 self.credits[out] -= 1;
                 self.in_occupancy[inp] -= 1;
                 self.out_occupancy[out] -= 1;
+                self.buffered -= 1;
                 self.flits_routed += 1;
                 if flit.is_head() && !flit.is_tail() {
+                    debug_assert!(self.out_lock[out].is_none());
                     self.out_lock[out] = Some(inp);
-                } else if flit.is_tail() {
-                    self.out_lock[out] = None;
+                    self.locks_held += 1;
+                } else if flit.is_tail() && self.out_lock[out].take().is_some() {
+                    self.locks_held -= 1;
                 }
                 sink(
                     tag,
@@ -234,9 +305,18 @@ impl Router {
         self.credits[out] += 1;
     }
 
-    /// Total buffered flits (for drain checks).
+    /// Total buffered flits (for drain checks). O(1): maintained counter.
     pub fn buffered(&self) -> u32 {
-        self.in_occupancy.iter().sum()
+        self.buffered
+    }
+
+    /// Can stepping this router this cycle do anything at all? True when
+    /// flits are buffered or a wormhole lock is held mid-packet (the lock
+    /// keeps the router on the mesh's active worklist until its packet's
+    /// tail has passed — see the activation/retirement contract in
+    /// docs/ARCHITECTURE.md). O(1): derived from maintained state.
+    pub fn is_active(&self) -> bool {
+        self.buffered > 0 || self.locks_held > 0
     }
 }
 
@@ -368,5 +448,54 @@ mod tests {
         r.accept(Port::Local as usize, f, 3);
         r.allocate();
         assert!(r.out_lock.iter().all(|l| l.is_none()));
+        assert!(!r.is_active());
+    }
+
+    #[test]
+    fn voq_ring_wraps_and_keeps_fifo_order() {
+        let mut ring = VoqRing::default();
+        // Interleave pushes and pops so head walks around the ring twice.
+        let mut next_in = 0u32;
+        let mut next_out = 0u32;
+        for _ in 0..3 {
+            while (ring.len as usize) < VOQ_RING_CAP {
+                ring.push_back(head_flit((next_in % 9) as u8));
+                next_in += 1;
+            }
+            for _ in 0..VOQ_RING_CAP {
+                let f = ring.pop_front().expect("nonempty");
+                assert_eq!(f.dest(), (next_out % 9) as u8, "FIFO order");
+                next_out += 1;
+            }
+            assert!(ring.is_empty());
+        }
+        assert_eq!(next_out, 3 * VOQ_RING_CAP as u32);
+    }
+
+    #[test]
+    fn is_active_tracks_occupancy_and_locks() {
+        let mut r = Router::new(4, 1, 1, 8, [8; PORTS]);
+        assert!(!r.is_active(), "fresh router is inactive");
+        // A 2-flit packet: after the head moves, the router holds a lock
+        // (mid-packet) and the body flit — active throughout.
+        let mut b = PacketBuilder::new(3);
+        let p = b.payload(
+            HeadFields {
+                routing: 5,
+                ..HeadFields::default()
+            },
+            &[1],
+        );
+        assert_eq!(p.flits.len(), 2);
+        r.accept(Port::Local as usize, p.flits[0], 3);
+        assert!(r.is_active());
+        let moves = r.allocate();
+        assert_eq!(moves.len(), 1);
+        assert!(r.is_active(), "lock held mid-packet keeps router active");
+        assert_eq!(r.buffered(), 0);
+        r.accept(Port::Local as usize, p.flits[1], 3);
+        let moves = r.allocate();
+        assert_eq!(moves.len(), 1);
+        assert!(!r.is_active(), "tail released the lock; nothing buffered");
     }
 }

@@ -5,12 +5,12 @@
 
 use crate::baseline::axi::AxiBus;
 use crate::baseline::shared_cache::CacheFpga;
-use crate::clock::{ClockDomain, DomainId, MultiClock, Ps};
+use crate::clock::{Activity, ClockDomain, DomainId, MultiClock, Ps};
 use crate::cmp::core::{Processor, Segment};
 use crate::flit::Flit;
 use crate::fpga::fabric::{Fpga, FpgaConfig};
 use crate::fpga::hwa::{HwaCompute, HwaSpec};
-use crate::mem::mmu::{Mmu, MmuActivity};
+use crate::mem::mmu::Mmu;
 use crate::noc::mesh::{Mesh, MeshConfig};
 
 /// Interconnect selection (Fig. 13/14's three prototypes use Noc or Axi).
@@ -245,6 +245,47 @@ impl Fabric {
             Fabric::Cached(_) => 0,
         }
     }
+
+    /// Flits queued toward the interconnect: NoC-domain scheduler probe.
+    pub fn noc_tx_pending(&self) -> bool {
+        match self {
+            Fabric::Buffered(f) => f.noc_tx_pending(),
+            Fabric::Cached(f) => f.noc_tx_pending(),
+        }
+    }
+
+    /// Interface-domain scheduler probe. The shared-cache baseline drives
+    /// everything from the interface clock, so it is busy whenever it is
+    /// not fully quiescent.
+    pub fn iface_activity(&self) -> Activity {
+        match self {
+            Fabric::Buffered(f) => f.iface_activity(),
+            Fabric::Cached(f) => {
+                if f.quiescent() {
+                    Activity::Idle
+                } else {
+                    Activity::Busy
+                }
+            }
+        }
+    }
+
+    /// Scheduler probe for one HWA clock domain (buffered fabric only —
+    /// the shared-cache baseline registers no HWA domains).
+    pub fn hwa_activity(&self, chans: &[usize]) -> Activity {
+        match self {
+            Fabric::Buffered(f) => f.hwa_domain_activity(chans),
+            Fabric::Cached(_) => Activity::Idle,
+        }
+    }
+
+    /// Fold skipped HWA-clock edges into the owning channels' counters.
+    pub fn account_idle_hwa_cycles(&mut self, chans: &[usize], n: u64) {
+        match self {
+            Fabric::Buffered(f) => f.account_idle_hwa_cycles(chans, n),
+            Fabric::Cached(_) => {}
+        }
+    }
 }
 
 pub struct System {
@@ -261,9 +302,11 @@ pub struct System {
     pub open_sources: Vec<Option<crate::workload::openloop::OpenLoopSource>>,
     pub mmu: Mmu,
     ticking: Vec<DomainId>,
-    /// Idle-skipping event-driven scheduling (on by default). When every
-    /// component is provably idle, the clock fast-forwards to the next
-    /// injection/wakeup instead of ticking every domain edge.
+    /// Idle-skipping event-driven scheduling (on by default). Each clock
+    /// domain reports an [`Activity`] horizon every step; the scheduler
+    /// fast-forwards all domains to the earliest instant anything can
+    /// happen — a busy domain's next edge, a reported `next_event_at`, or
+    /// the caller's deadline — instead of ticking provably no-op edges.
     idle_skip: bool,
     skip_scratch: Vec<u64>,
     /// Clock edges actually dispatched (skipped edges excluded) — the
@@ -273,6 +316,9 @@ pub struct System {
     /// fast-forwarded past (summed over all domains) — reported per
     /// scenario by `sweep::RunStats`.
     pub edges_skipped: u64,
+    /// Per-domain breakdown of `edges_skipped`, indexed by `DomainId`
+    /// (surfaced through [`System::edges_skipped_breakdown`]).
+    edges_skipped_by: Vec<u64>,
 }
 
 impl System {
@@ -354,6 +400,7 @@ impl System {
             .collect();
         let mmu = Mmu::new(mmu_node, fpga_node, noc_clock.period_ps);
         let n_procs = proc_nodes.len().min(8);
+        let n_domains = clk.n_domains();
         Self {
             config,
             clk,
@@ -370,6 +417,7 @@ impl System {
             skip_scratch: Vec::new(),
             edges_stepped: 0,
             edges_skipped: 0,
+            edges_skipped_by: vec![0; n_domains],
         }
     }
 
@@ -418,66 +466,84 @@ impl System {
         self.clk.now()
     }
 
-    /// Activity probe for the idle-skipping scheduler. `None` means some
-    /// component is mid-work and every edge must be simulated. `Some(wake)`
-    /// means the whole system is idle — the interconnect holds no flits,
-    /// the fabric is quiescent, the MMU has nothing in flight and every
-    /// processor (or open-loop source) is between events — and nothing can
-    /// change state before `wake` (`None` = no future event at all).
-    fn idle_until(&self) -> Option<Option<Ps>> {
-        let now = self.clk.now();
-        if now == 0 || !self.net.idle() || !self.fabric.quiescent(now) {
-            return None;
+    /// Activity probe for the NoC+CMP clock domain: the interconnect, the
+    /// fabric's NoC-facing FIFO, the MMU and every processor / open-loop
+    /// source all act on NoC edges. `Busy` while any of them holds
+    /// in-flight work; otherwise the earliest self-scheduled event (DMA
+    /// completion, Poisson arrival) bounds the domain's horizon.
+    fn noc_domain_activity(&self) -> Activity {
+        if !self.net.idle() || self.fabric.noc_tx_pending() {
+            return Activity::Busy;
         }
-        let mut wake: Option<Ps> = None;
-        fn fold(wake: &mut Option<Ps>, t: Ps) {
-            *wake = Some(wake.map_or(t, |w| w.min(t)));
-        }
-        match self.mmu.activity() {
-            MmuActivity::Busy => return None,
-            MmuActivity::Idle => {}
-            MmuActivity::WaitUntil(t) => fold(&mut wake, t),
+        let mut act = self.mmu.activity();
+        if act == Activity::Busy {
+            return act;
         }
         for (i, p) in self.procs.iter().enumerate() {
-            match self.open_sources[i].as_ref() {
-                Some(src) => {
-                    if !src.outbox_is_empty() {
-                        return None;
-                    }
-                    fold(&mut wake, src.next_arrival_at());
-                }
-                None => {
-                    if p.needs_clock() {
-                        return None;
-                    }
-                }
+            let a = match self.open_sources[i].as_ref() {
+                Some(src) => src.activity(),
+                None => p.activity(),
+            };
+            act = act.join(a);
+            if act == Activity::Busy {
+                return act;
             }
         }
-        Some(wake)
+        act
     }
 
-    /// If the system is provably idle, fast-forward the clock to the next
-    /// wakeup (bounded by `deadline`), folding the skipped cycles into the
-    /// interconnect/fabric statistics so they match naive stepping.
+    /// Per-domain event horizons (the ISSUE 4 tentpole). Each clock
+    /// domain reports an [`Activity`]: the skip target is the earliest of
+    /// every busy domain's next edge, every reported `next_event_at`, and
+    /// the caller's deadline. Skipping all edges strictly before that
+    /// target is sound because cross-domain work can only be injected at
+    /// a dispatched edge, and no dispatched edge precedes the target; the
+    /// skipped cycles are folded into each domain's cycle accounting so
+    /// every statistic matches naive per-edge stepping (the
+    /// `rust/tests/event_driven.rs` property and the ci_smoke neutrality
+    /// test in `rust/tests/sweep.rs` enforce this).
     fn skip_idle(&mut self, deadline: Option<Ps>) {
         if !self.idle_skip {
             return;
         }
-        let Some(wake) = self.idle_until() else {
+        let now = self.clk.now();
+        if now == 0 {
             return;
-        };
-        let target = match (wake, deadline) {
-            (Some(w), Some(d)) => w.min(d),
-            (Some(w), None) => w,
+        }
+        fn fold(target: &mut Option<Ps>, t: Ps) {
+            *target = Some(target.map_or(t, |x| x.min(t)));
+        }
+        let mut target: Option<Ps> = None;
+        match self.noc_domain_activity() {
+            Activity::Busy => fold(&mut target, self.clk.next_edge_of(self.noc_dom)),
+            Activity::Idle => {}
+            Activity::NextEventAt(t) => fold(&mut target, t),
+        }
+        match self.fabric.iface_activity() {
+            Activity::Busy => fold(&mut target, self.clk.next_edge_of(self.iface_dom)),
+            Activity::Idle => {}
+            Activity::NextEventAt(t) => fold(&mut target, t),
+        }
+        for (d, chans) in &self.hwa_doms {
+            match self.fabric.hwa_activity(chans) {
+                Activity::Busy => fold(&mut target, self.clk.next_edge_of(*d)),
+                Activity::Idle => {}
+                Activity::NextEventAt(t) => fold(&mut target, t),
+            }
+        }
+        let target = match (target, deadline) {
+            (Some(t), Some(d)) => t.min(d),
+            (Some(t), None) => t,
             (None, Some(d)) => d,
+            // Every domain idle, nothing scheduled, no deadline: there is
+            // no provable horizon to skip to.
             (None, None) => return,
         };
-        if target <= self.clk.now() {
+        if target <= now {
             return;
         }
         let mut skipped = std::mem::take(&mut self.skip_scratch);
         self.clk.skip_until(target, &mut skipped);
-        self.edges_skipped += skipped.iter().sum::<u64>();
         let n = skipped[self.noc_dom.0];
         if n > 0 {
             self.net.account_idle_cycles(n);
@@ -494,11 +560,34 @@ impl System {
         if n > 0 {
             self.fabric.account_idle_iface_cycles(n);
         }
+        for (d, chans) in &self.hwa_doms {
+            let n = skipped[d.0];
+            if n > 0 {
+                self.fabric.account_idle_hwa_cycles(chans, n);
+            }
+        }
+        for (i, n) in skipped.iter().enumerate() {
+            self.edges_skipped += *n;
+            self.edges_skipped_by[i] += *n;
+        }
         self.skip_scratch = skipped;
     }
 
-    /// Advance the whole system by one clock event, fast-forwarding first
-    /// when everything is idle.
+    /// Skipped-edge counts as (NoC+CMP, fabric interface, all HWA
+    /// domains) — the per-domain breakdown `sweep::RunStats` reports.
+    pub fn edges_skipped_breakdown(&self) -> (u64, u64, u64) {
+        let noc = self.edges_skipped_by[self.noc_dom.0];
+        let iface = self.edges_skipped_by[self.iface_dom.0];
+        let hwa = self
+            .hwa_doms
+            .iter()
+            .map(|(d, _)| self.edges_skipped_by[d.0])
+            .sum();
+        (noc, iface, hwa)
+    }
+
+    /// Advance the whole system by one clock event, first fast-forwarding
+    /// past every edge the per-domain horizons prove to be a no-op.
     pub fn step(&mut self) -> Ps {
         self.skip_idle(None);
         self.step_edge()
@@ -793,5 +882,54 @@ mod tests {
             (mesh_cycles, iface_cycles)
         };
         assert_eq!(cycles(true), cycles(false));
+    }
+
+    /// Per-domain event horizons: on a low-rate open loop every domain
+    /// group skips edges, the breakdown sums to the total, and the 1 GHz
+    /// NoC+CMP domain (the most frequent clock) dominates the savings.
+    #[test]
+    fn edges_skipped_breakdown_covers_all_domain_groups() {
+        let cfg = SystemConfig::paper(vec![
+            spec_by_name("izigzag").unwrap();
+            4
+        ]);
+        let mut sys = System::new(cfg);
+        sys.set_open_loop(0.5, 11);
+        sys.run_for(50 * crate::clock::PS_PER_US);
+        let (noc, iface, hwa) = sys.edges_skipped_breakdown();
+        assert_eq!(noc + iface + hwa, sys.edges_skipped, "breakdown sums");
+        assert!(noc > 0, "NoC domain skipped nothing");
+        assert!(iface > 0, "interface domain skipped nothing");
+        assert!(hwa > 0, "HWA domains skipped nothing");
+        assert!(
+            noc > iface && noc > hwa,
+            "fastest clock should dominate: noc={noc} iface={iface} hwa={hwa}"
+        );
+    }
+
+    /// The tentpole's new regime: while an invocation is mid-flight the
+    /// system is never *fully* idle, yet per-domain horizons still skip
+    /// edges (e.g. NoC edges while an HWA pipeline stage runs). The old
+    /// all-or-nothing scheduler skipped zero edges on a closed-loop burst
+    /// with back-to-back work; the per-domain one must not.
+    #[test]
+    fn horizons_skip_edges_during_mid_flight_work() {
+        let mut rt = one_hwa_runtime(NetKind::Noc, FabricKind::Buffered);
+        let izigzag = rt.accel(1).unwrap();
+        for core in 0..rt.n_cores() {
+            rt.submit(core, Job::on(izigzag).direct((0..64).collect()))
+                .unwrap();
+        }
+        assert!(rt.run_until_done(100_000_000));
+        let sys = rt.system();
+        // The all-or-nothing scheduler skipped exactly zero edges here:
+        // with requests queued in the RB the fabric is never quiescent
+        // before the run completes. Any skipping at all is the horizons'.
+        assert!(
+            sys.edges_skipped > 0,
+            "per-domain horizons found nothing to skip mid-flight"
+        );
+        let (noc, _, _) = sys.edges_skipped_breakdown();
+        assert!(noc > 0, "the NoC domain should skip during HWA stages");
     }
 }

@@ -1,10 +1,12 @@
 //! Machine-readable sweep results: the `BENCH_*.json` trajectory format
 //! plus a CSV flattening and a human summary table.
 //!
-//! The JSON layout is `{"schema": 1, "name": ..., "scenarios": [{"spec":
+//! The JSON layout is `{"schema": 2, "name": ..., "scenarios": [{"spec":
 //! {flat key map}, "stats": {...}}, ...]}` — each scenario embeds its
 //! fully-resolved spec, so an artifact is self-describing and can be
 //! re-run (`ScenarioSpec::from_map`) without the original TOML.
+//! Schema 2 added the per-domain `edges_skipped_{noc,iface,hwa}`
+//! breakdown (ISSUE 4); every schema-1 field is unchanged.
 
 use std::path::Path;
 
@@ -31,6 +33,9 @@ impl RunStats {
             ("rejected_flits", Json::from(self.rejected_flits)),
             ("edges_stepped", Json::from(self.edges_stepped)),
             ("edges_skipped", Json::from(self.edges_skipped)),
+            ("edges_skipped_noc", Json::from(self.edges_skipped_noc)),
+            ("edges_skipped_iface", Json::from(self.edges_skipped_iface)),
+            ("edges_skipped_hwa", Json::from(self.edges_skipped_hwa)),
             (
                 "latency_us",
                 Json::obj(vec![
@@ -70,7 +75,7 @@ impl SweepReport {
             })
             .collect();
         Json::obj(vec![
-            ("schema", Json::from(1u64)),
+            ("schema", Json::from(2u64)),
             ("name", Json::from(self.name.as_str())),
             ("scenarios", Json::Arr(scenarios)),
         ])
@@ -103,6 +108,9 @@ impl SweepReport {
             "rejected_flits",
             "edges_stepped",
             "edges_skipped",
+            "edges_skipped_noc",
+            "edges_skipped_iface",
+            "edges_skipped_hwa",
             "latency_count",
             "latency_mean_us",
             "latency_p50_us",
@@ -146,6 +154,9 @@ impl SweepReport {
                 t.rejected_flits.to_string(),
                 t.edges_stepped.to_string(),
                 t.edges_skipped.to_string(),
+                t.edges_skipped_noc.to_string(),
+                t.edges_skipped_iface.to_string(),
+                t.edges_skipped_hwa.to_string(),
                 t.latency.count.to_string(),
                 fmt_num(t.latency.mean_us),
                 fmt_num(t.latency.p50_us),
@@ -237,6 +248,9 @@ mod tests {
             rejected_flits: 0,
             edges_stepped: 100,
             edges_skipped: 50,
+            edges_skipped_noc: 30,
+            edges_skipped_iface: 12,
+            edges_skipped_hwa: 8,
             latency: LatencySummary::from_us_samples(&[1.0, 2.0, 3.0]),
             processor_us: 0.0,
             fpga_us: 0.0,
@@ -252,7 +266,7 @@ mod tests {
     fn json_is_parseable_and_self_describing() {
         let r = dummy_report();
         let v = Json::parse(&r.render_json()).unwrap();
-        assert_eq!(v.get("schema").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(v.get("schema").and_then(Json::as_f64), Some(2.0));
         let sc = &v.get("scenarios").and_then(Json::as_arr).unwrap()[0];
         assert_eq!(
             sc.get("spec")
@@ -265,6 +279,13 @@ mod tests {
                 .and_then(|s| s.get("tasks_executed"))
                 .and_then(Json::as_f64),
             Some(3.0)
+        );
+        // Schema 2: per-domain skipped-edge breakdown.
+        assert_eq!(
+            sc.get("stats")
+                .and_then(|s| s.get("edges_skipped_noc"))
+                .and_then(Json::as_f64),
+            Some(30.0)
         );
     }
 

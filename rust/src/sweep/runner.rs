@@ -74,6 +74,12 @@ pub struct RunStats {
     pub edges_stepped: u64,
     /// Clock edges the idle-skipping scheduler proved no-ops and skipped.
     pub edges_skipped: u64,
+    /// Per-domain breakdown of `edges_skipped`: the 1 GHz NoC+CMP domain.
+    pub edges_skipped_noc: u64,
+    /// ... the FPGA interface domain.
+    pub edges_skipped_iface: u64,
+    /// ... all HWA clock domains combined.
+    pub edges_skipped_hwa: u64,
     /// Request -> final-result latency of completed invocations.
     pub latency: LatencySummary,
     /// Fig. 9 breakdown (app_partition workloads only; else 0).
@@ -208,7 +214,20 @@ impl SweepRunner {
 /// simulation consumes only the spec (including its seed). All work is
 /// submitted through the [`AccelRuntime`] driver.
 pub fn run_scenario(spec: &ScenarioSpec) -> Result<RunStats, String> {
+    run_scenario_with_idle_skip(spec, true)
+}
+
+/// [`run_scenario`] with the idle-skipping scheduler toggled. The
+/// per-edge reference (`idle_skip = false`) exists for measurement-
+/// neutrality tests (`rust/tests/sweep.rs`): both modes run the exact
+/// same measurement code, so results may differ only in the
+/// scheduler-work metrics (`edges_stepped` / `edges_skipped*`).
+pub fn run_scenario_with_idle_skip(
+    spec: &ScenarioSpec,
+    idle_skip: bool,
+) -> Result<RunStats, String> {
     let mut rt = AccelRuntime::new(spec.system_config()?);
+    rt.system_mut().set_idle_skip(idle_skip);
     match &spec.workload {
         WorkloadSpec::OpenLoop { rate_per_us } => {
             run_open_loop(spec, &mut rt, *rate_per_us)
@@ -231,10 +250,11 @@ fn run_open_loop(
     rate_per_us: f64,
 ) -> Result<RunStats, String> {
     rt.set_open_loop(rate_per_us, spec.seed);
-    let warm_end = rt.now() + spec.warmup_us * PS_PER_US;
-    while rt.now() < warm_end {
-        rt.step();
-    }
+    // run_for bounds idle skips by the window edge, so the measurement
+    // boundaries land on the same dispatched edge with skipping on or
+    // off (the ci_smoke neutrality test in rust/tests/sweep.rs pins
+    // this); a bare step() loop would overshoot to the next arrival.
+    rt.run_for(spec.warmup_us * PS_PER_US);
     let (in0, out0) = rt.system().fabric.flits_in_out();
     let done0 = rt.open_loop_completions();
     let (busy0, cyc0) = rt.system().fabric.iface_busy();
@@ -246,10 +266,7 @@ fn run_open_loop(
         .flatten()
         .map(|s| s.latencies_ps.len())
         .collect();
-    let end = rt.now() + spec.window_us * PS_PER_US;
-    while rt.now() < end {
-        rt.step();
-    }
+    rt.run_for(spec.window_us * PS_PER_US);
     let sys = rt.system();
     let (in1, out1) = sys.fabric.flits_in_out();
     let done1 = rt.open_loop_completions();
@@ -266,6 +283,7 @@ fn run_open_loop(
                 .map(|l| *l as f64 / PS_PER_US as f64)
         })
         .collect();
+    let (esk_noc, esk_iface, esk_hwa) = sys.edges_skipped_breakdown();
     Ok(RunStats {
         total_us: window,
         tasks_executed: sys.fabric.tasks_executed(),
@@ -280,6 +298,9 @@ fn run_open_loop(
         rejected_flits: sys.fabric.rejected_flits(),
         edges_stepped: sys.edges_stepped,
         edges_skipped: sys.edges_skipped,
+        edges_skipped_noc: esk_noc,
+        edges_skipped_iface: esk_iface,
+        edges_skipped_hwa: esk_hwa,
         latency: LatencySummary::from_us_samples(&latencies),
         processor_us: 0.0,
         fpga_us: 0.0,
@@ -299,6 +320,7 @@ fn closed_loop_stats(rt: &AccelRuntime, total_us: f64) -> RunStats {
         .map(|c| c.total_ps() as f64 / PS_PER_US as f64)
         .collect();
     let denom = total_us.max(f64::MIN_POSITIVE);
+    let (esk_noc, esk_iface, esk_hwa) = sys.edges_skipped_breakdown();
     RunStats {
         total_us,
         tasks_executed: sys.fabric.tasks_executed(),
@@ -313,6 +335,9 @@ fn closed_loop_stats(rt: &AccelRuntime, total_us: f64) -> RunStats {
         rejected_flits: sys.fabric.rejected_flits(),
         edges_stepped: sys.edges_stepped,
         edges_skipped: sys.edges_skipped,
+        edges_skipped_noc: esk_noc,
+        edges_skipped_iface: esk_iface,
+        edges_skipped_hwa: esk_hwa,
         latency: LatencySummary::from_us_samples(&latencies),
         processor_us: 0.0,
         fpga_us: 0.0,

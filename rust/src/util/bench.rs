@@ -6,8 +6,10 @@
 //! warmup, then timed batches until both a minimum iteration count and a
 //! minimum wall time are reached; reports mean/min/p50 per iteration.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::percentile;
 
 #[derive(Debug, Clone)]
@@ -128,6 +130,37 @@ impl Bench {
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
+
+    /// Machine-readable results — the `BENCH_hotpath.json` perf-trajectory
+    /// artifact CI uploads per run: `{"schema": 1, "name": ...,
+    /// "results": [{"name": ..., "mean_ns": ..., "min_ns": ...,
+    /// "p50_ns": ..., "iters": ...}, ...]}`.
+    pub fn to_json(&self, name: &str) -> Json {
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("name", Json::from(m.name.as_str())),
+                    ("mean_ns", Json::Num(m.mean.as_secs_f64() * 1e9)),
+                    ("min_ns", Json::Num(m.min.as_secs_f64() * 1e9)),
+                    ("p50_ns", Json::Num(m.p50.as_secs_f64() * 1e9)),
+                    ("iters", Json::from(m.iters)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::from(1u64)),
+            ("name", Json::from(name)),
+            ("results", Json::Arr(results)),
+        ])
+    }
+
+    /// Write the machine-readable results next to the text report.
+    pub fn write_json(&self, name: &str, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json(name).render())
+            .map_err(|e| format!("{}: {e}", path.display()))
+    }
 }
 
 pub fn fmt_duration(d: Duration) -> String {
@@ -157,6 +190,33 @@ mod tests {
         let m = b.run("noop-ish", || (0..100u64).sum::<u64>());
         assert!(m.iters >= 3);
         assert!(m.min <= m.mean);
+    }
+
+    #[test]
+    fn json_form_lists_every_measurement() {
+        let mut b = Bench::new(BenchConfig {
+            warmup: Duration::from_millis(1),
+            min_time: Duration::from_millis(2),
+            min_iters: 1,
+        });
+        b.run("alpha", || 1u64 + 1);
+        b.run("beta", || (0..10u64).product::<u64>());
+        let v = Json::parse(&b.to_json("micro").render()).unwrap();
+        assert_eq!(v.get("schema").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(v.get("name").and_then(Json::as_str), Some("micro"));
+        let results = v.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(
+            results[0].get("name").and_then(Json::as_str),
+            Some("alpha")
+        );
+        assert!(
+            results[0]
+                .get("mean_ns")
+                .and_then(Json::as_f64)
+                .is_some_and(|ns| ns >= 0.0),
+            "mean_ns present and non-negative"
+        );
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use std::collections::VecDeque;
 
-use crate::clock::{Ps, PS_PER_US};
+use crate::clock::{Activity, Ps, PS_PER_US};
 use crate::flit::{
     Direction, Flit, FlitKind, HeadFields, PacketBuilder, PacketType,
 };
@@ -95,6 +95,18 @@ impl OpenLoopSource {
     /// scheduler's wakeup when the whole system has drained.
     pub fn next_arrival_at(&self) -> Ps {
         self.next_arrival
+    }
+
+    /// Scheduler probe (the [`Activity`] contract): queued flits need
+    /// every NoC edge; otherwise nothing happens before the next Poisson
+    /// arrival (grants/results re-activate the source via `deliver`,
+    /// which only fires while the interconnect is busy anyway).
+    pub fn activity(&self) -> Activity {
+        if self.outbox.is_empty() {
+            Activity::NextEventAt(self.next_arrival)
+        } else {
+            Activity::Busy
+        }
     }
 
     /// One NoC/CMP cycle: emit at most one flit.

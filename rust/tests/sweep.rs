@@ -1,10 +1,15 @@
 //! Sweep-harness integration tests: thread-count invariance of the
-//! machine-readable report, TOML/JSON round-trips, and invalid-spec
-//! rejection (ISSUE 2 acceptance criteria).
+//! machine-readable report, TOML/JSON round-trips, invalid-spec
+//! rejection (ISSUE 2 acceptance criteria), and measurement neutrality
+//! of the activity-tracked scheduler on the pinned ci_smoke grid
+//! (ISSUE 4 acceptance criteria).
 
 use std::collections::BTreeMap;
 
-use accnoc::sweep::{ScenarioSpec, SweepRunner, SweepSpec};
+use accnoc::sweep::{
+    run_scenario, run_scenario_with_idle_skip, RunStats, ScenarioSpec,
+    SweepRunner, SweepSpec,
+};
 use accnoc::util::json::Json;
 
 const DET_SPEC: &str = "\
@@ -107,6 +112,57 @@ fn toml_and_json_specs_expand_identically() {
     )
     .unwrap();
     assert_eq!(toml.expand().unwrap(), json.expand().unwrap());
+}
+
+/// Strip the scheduler-work metrics, which legitimately differ between
+/// the activity-tracked scheduler and per-edge stepping (skipping more
+/// no-op edges is the whole point); everything else is physics and must
+/// be identical.
+fn physical(stats: &RunStats) -> RunStats {
+    let mut s = stats.clone();
+    s.edges_stepped = 0;
+    s.edges_skipped = 0;
+    s.edges_skipped_noc = 0;
+    s.edges_skipped_iface = 0;
+    s.edges_skipped_hwa = 0;
+    s
+}
+
+/// ISSUE 4 measurement neutrality, pinned to the CI config file: every
+/// physical observable of every `configs/ci_smoke.toml` scenario —
+/// latency percentiles, flit/task counts, busy fraction, cycle-derived
+/// rates — must be bit-identical between the activity-tracked hot path
+/// (active-set mesh + per-domain event horizons) and naive per-edge
+/// stepping of the same seeded simulation. Both runs go through the
+/// exact same measurement code (`run_scenario_with_idle_skip`), so the
+/// only degree of freedom is the scheduler itself.
+#[test]
+fn ci_smoke_physical_stats_match_per_edge_stepping() {
+    let toml = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../configs/ci_smoke.toml"
+    ))
+    .expect("configs/ci_smoke.toml readable");
+    let sweep = SweepSpec::parse_toml(&toml).unwrap();
+    let grid = sweep.expand().unwrap();
+    assert_eq!(grid.len(), 4, "ci_smoke pins a 2 net x 2 rate grid");
+    for spec in &grid {
+        let tracked = run_scenario(spec).unwrap();
+        let naive = run_scenario_with_idle_skip(spec, false).unwrap();
+        assert_eq!(
+            physical(&tracked),
+            physical(&naive),
+            "physical observables diverged on {}",
+            spec.name
+        );
+        assert!(
+            tracked.edges_stepped < naive.edges_stepped,
+            "{}: horizons should dispatch fewer edges ({} vs {})",
+            spec.name,
+            tracked.edges_stepped,
+            naive.edges_stepped
+        );
+    }
 }
 
 #[test]
