@@ -1,6 +1,6 @@
 # Convenience targets; see README.md.
 
-.PHONY: artifacts test bench bench-smoke sweep docs selftest
+.PHONY: artifacts test bench bench-smoke sweep topology docs selftest
 
 # AOT-lower the JAX/Pallas kernels to artifacts/*.hlo.txt + manifest.txt
 # (prerequisite for `cargo {test,run} --features pjrt`).
@@ -27,12 +27,21 @@ sweep:
 	cargo run --release -- sweep configs/fig9_jpeg.toml
 	cargo run --release -- sweep configs/fig10.toml
 	cargo run --release -- sweep configs/fig13.toml
+	cargo run --release -- sweep configs/fig_multi_fpga.toml
+
+# Resolve every shipped config's tile map without simulating.
+topology:
+	for f in configs/*.toml; do \
+		cargo run --release -- topology $$f || exit 1; \
+	done
 
 docs:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 	cargo test --doc
 
-# CLI smoke: the three prototypes + the driver-API demo
-# (examples/driver_api.rs runs the same scenario).
+# CLI smoke: the three prototypes + the driver-API and multi-FPGA demos
+# (examples/driver_api.rs and examples/multi_fpga.rs run the same
+# scenarios).
 selftest:
 	cargo run --release -- selftest
+	cargo run --release --example multi_fpga

@@ -112,7 +112,7 @@ fn main() {
         let mut sys = System::new(cfg);
         sys.set_open_loop(16.0, 3);
         sys.run_for(20 * PS_PER_US);
-        sys.fabric.tasks_executed()
+        sys.fabric().tasks_executed()
     });
 
     b.run("system: simulate 20 µs eight-hwa", || {
@@ -120,7 +120,7 @@ fn main() {
         let mut sys = System::new(cfg);
         sys.set_open_loop(8.0, 3);
         sys.run_for(20 * PS_PER_US);
-        sys.fabric.tasks_executed()
+        sys.fabric().tasks_executed()
     });
 
     // Event-horizon scheduler headline: a low-injection fig8-style open

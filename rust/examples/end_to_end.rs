@@ -31,7 +31,7 @@ fn build_runtime(chained: bool) -> AccelRuntime {
         spec_by_name("shiftbound").unwrap(),
     ]);
     if chained {
-        cfg.chain_groups = vec![vec![0, 1, 2, 3]];
+        cfg.fabrics[0].chain_groups = vec![vec![0, 1, 2, 3]];
     }
     let mut rt = AccelRuntime::new(cfg);
     let runtime = Runtime::load_default().unwrap_or_else(|e| {
@@ -108,7 +108,7 @@ fn main() {
     println!("  blocks decoded      : {N_BLOCKS}");
     println!(
         "  HWA tasks executed  : {}",
-        rt.system().fabric.tasks_executed()
+        rt.system().fabric().tasks_executed()
     );
     println!("  simulated time      : {sim_us:.2} µs");
     println!(

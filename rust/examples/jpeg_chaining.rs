@@ -30,7 +30,7 @@ fn main() {
             spec_by_name("idct").unwrap(),
             spec_by_name("shiftbound").unwrap(),
         ]);
-        cfg.chain_groups = vec![vec![0, 1, 2, 3]];
+        cfg.fabrics[0].chain_groups = vec![vec![0, 1, 2, 3]];
         let mut rt = AccelRuntime::new(cfg);
         rt.set_compute(Box::new(NativeCompute::default()));
         // Per block: one chained invocation covering `depth` hops plus

@@ -1,0 +1,22 @@
+//! Floorplanned multi-FPGA demo: a 3x3 mesh carrying TWO FPGA interface
+//! tiles (`F0 P P / P M P / P P F1`) — the scalability scenario the
+//! paper argues the NoC integration enables and the old hardcoded
+//! "FPGA at the last node" construction could not express.
+//!
+//! Fabric 0 carries the four JPEG-chain accelerators (one chained job),
+//! fabric 1 carries two floating-point accelerators (direct jobs from
+//! two other cores); the demo prints each receipt's latency breakdown
+//! and the per-fabric counters, then shows the driver rejecting a
+//! cross-fabric chain with a typed error.
+//!
+//!     cargo run --release --example multi_fpga
+
+fn main() {
+    match accnoc::accel::multi_fpga_demo() {
+        Ok(report) => print!("{report}"),
+        Err(e) => {
+            eprintln!("multi_fpga demo failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

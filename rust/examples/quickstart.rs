@@ -70,6 +70,6 @@ fn main() {
     println!("  autocorrelation lags: {autocorr:?}");
     println!(
         "  tasks executed on FPGA: {}",
-        rt.system().fabric.tasks_executed()
+        rt.system().fabric().tasks_executed()
     );
 }

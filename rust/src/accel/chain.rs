@@ -48,10 +48,19 @@ impl Chain {
         }
     }
 
-    /// Append the next hop. Depth and duplicate violations are recorded
-    /// here, at construction, and reported by [`Chain::validate`].
+    /// Append the next hop. Depth, duplicate and cross-fabric violations
+    /// are recorded here, at construction, and reported by
+    /// [`Chain::validate`]. Chaining is the fabric-internal CB hand-off,
+    /// so every hop must live on the first hop's fabric.
     pub fn then(mut self, next: AccelHandle) -> Self {
         if self.err.is_some() {
+            return self;
+        }
+        if next.fabric() != self.hops[0].fabric() {
+            self.err = Some(AccelError::CrossFabricChain {
+                first: self.hops[0].fabric(),
+                hop: next.fabric(),
+            });
             return self;
         }
         if self.hops.iter().any(|h| h.id() == next.id()) {
@@ -86,17 +95,28 @@ impl Chain {
         }
     }
 
+    /// The fabric this chain targets (the first hop's; construction
+    /// rejects mixed-fabric chains).
+    pub fn fabric(&self) -> u8 {
+        self.hops[0].fabric()
+    }
+
     /// Resolve to the wire encoding `(first hwa_id, depth, chain_index)`
-    /// against a concrete system: every hop must exist, and each hand-off
-    /// must target a member of the producing hop's (unique) chain group —
-    /// the index lanes address group members, not channels.
+    /// against a concrete system: the owning fabric must exist, every hop
+    /// must exist on it, and each hand-off must target a member of the
+    /// producing hop's (unique) chain group — the index lanes address
+    /// group members, not channels.
     pub(crate) fn resolve(
         &self,
         ctx: &CompileCtx<'_>,
     ) -> Result<(u8, u8, [u8; 3]), AccelError> {
         self.validate()?;
+        let fabric = self.fabric();
+        let fctx = ctx.fabrics.get(fabric as usize).ok_or(
+            AccelError::UnknownFabric { fabric },
+        )?;
         for h in &self.hops {
-            if (h.id() as usize) >= ctx.n_accels {
+            if (h.id() as usize) >= fctx.n_accels {
                 return Err(AccelError::UnknownAccelerator { hwa_id: h.id() });
             }
         }
@@ -113,7 +133,7 @@ impl Chain {
         for (lane, pair) in self.hops.windows(2).enumerate() {
             let prod = pair[0];
             let next = pair[1];
-            let mut groups = ctx
+            let mut groups = fctx
                 .chain_groups
                 .iter()
                 .filter(|g| g.contains(&(prod.id() as usize)));
@@ -146,16 +166,14 @@ impl Chain {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::accel::FabricCtx;
 
     fn h(id: u8) -> AccelHandle {
         AccelHandle::new(id, 8, 8)
     }
 
     fn ctx(n: usize, groups: &[Vec<usize>]) -> CompileCtx<'_> {
-        CompileCtx {
-            n_accels: n,
-            chain_groups: groups,
-        }
+        CompileCtx::single(n, groups)
     }
 
     #[test]
@@ -225,6 +243,57 @@ mod tests {
         assert_eq!(
             c.resolve(&ctx(4, &groups)),
             Err(AccelError::AmbiguousChainGroup { hwa_id: 0 })
+        );
+    }
+
+    #[test]
+    fn rejects_cross_fabric_chains_at_construction() {
+        // Chaining is the fabric-internal CB hand-off; a hop on another
+        // fabric can never be reached by it.
+        let a = AccelHandle::on_fabric(0, 0, 8, 8);
+        let b = AccelHandle::on_fabric(1, 1, 8, 8);
+        let c = Chain::of(a).then(b);
+        assert_eq!(
+            c.validate(),
+            Err(AccelError::CrossFabricChain { first: 0, hop: 1 })
+        );
+        // The error is sticky like every other construction violation.
+        let c = c.then(AccelHandle::on_fabric(0, 2, 8, 8));
+        assert_eq!(
+            c.validate(),
+            Err(AccelError::CrossFabricChain { first: 0, hop: 1 })
+        );
+    }
+
+    #[test]
+    fn resolves_against_the_owning_fabrics_inventory() {
+        // A one-hop chain on fabric 1 resolves against fabric 1's
+        // (smaller) inventory, and an absent fabric is a typed error.
+        let groups: Vec<Vec<usize>> = Vec::new();
+        let ctx2 = CompileCtx {
+            fabrics: vec![
+                FabricCtx {
+                    n_accels: 4,
+                    chain_groups: &groups,
+                },
+                FabricCtx {
+                    n_accels: 1,
+                    chain_groups: &groups,
+                },
+            ],
+            nodes: &[2, 8],
+        };
+        let on1 = Chain::of(AccelHandle::on_fabric(1, 0, 8, 8));
+        assert_eq!(on1.resolve(&ctx2).unwrap(), (0, 0, [0; 3]));
+        let beyond = Chain::of(AccelHandle::on_fabric(1, 2, 8, 8));
+        assert_eq!(
+            beyond.resolve(&ctx2),
+            Err(AccelError::UnknownAccelerator { hwa_id: 2 })
+        );
+        let ghost_fabric = Chain::of(AccelHandle::on_fabric(5, 0, 8, 8));
+        assert_eq!(
+            ghost_fabric.resolve(&ctx2),
+            Err(AccelError::UnknownFabric { fabric: 5 })
         );
     }
 

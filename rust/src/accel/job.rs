@@ -92,7 +92,9 @@ impl Job {
     }
 
     /// Compile to the wire-level invocation, validating the chain, hop
-    /// identities and priority against the target system.
+    /// identities, owning fabric and priority against the target system.
+    /// The resolved fabric's interface tile becomes the invocation's
+    /// destination node.
     pub(crate) fn compile(
         self,
         ctx: &CompileCtx<'_>,
@@ -103,6 +105,7 @@ impl Job {
             });
         }
         let (hwa_id, chain_depth, chain_index) = self.chain.resolve(ctx)?;
+        let dest_node = Some(ctx.nodes[self.chain.fabric() as usize]);
         let last_out = self
             .chain
             .hops()
@@ -120,6 +123,7 @@ impl Job {
                 start_addr: 0,
                 mem_bytes: 0,
                 expect_words: self.expect_words.unwrap_or(last_out),
+                dest_node,
             },
             Access::Memory { start_addr, bytes } => InvokeSpec {
                 hwa_id,
@@ -131,6 +135,7 @@ impl Job {
                 start_addr,
                 mem_bytes: bytes,
                 expect_words: self.expect_words.unwrap_or(0),
+                dest_node,
             },
         })
     }
@@ -141,10 +146,7 @@ mod tests {
     use super::*;
 
     fn ctx(groups: &[Vec<usize>]) -> CompileCtx<'_> {
-        CompileCtx {
-            n_accels: 4,
-            chain_groups: groups,
-        }
+        CompileCtx::single(4, groups)
     }
 
     #[test]
@@ -162,6 +164,11 @@ mod tests {
         assert_eq!(spec.priority, 1);
         assert_eq!(spec.direction, Direction::ProcToHwa);
         assert_eq!(spec.expect_words, 6, "defaults to the hop's out_words");
+        assert_eq!(
+            spec.dest_node,
+            Some(8),
+            "compiled jobs carry the owning fabric's interface tile"
+        );
     }
 
     #[test]

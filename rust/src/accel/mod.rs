@@ -47,7 +47,7 @@ pub use chain::Chain;
 pub use job::Job;
 pub use program::{Phase, Program};
 pub use receipt::{Completion, Receipt, StageBreakdown};
-pub use runtime::{driver_api_demo, AccelRuntime, Session};
+pub use runtime::{driver_api_demo, multi_fpga_demo, AccelRuntime, Session};
 
 use crate::fpga::hwa::HwaSpec;
 
@@ -60,6 +60,11 @@ pub enum AccelError {
     DuplicateHop { hwa_id: u8 },
     /// A job or chain hop names an accelerator the system does not have.
     UnknownAccelerator { hwa_id: u8 },
+    /// A handle names a fabric the floorplan does not have.
+    UnknownFabric { fabric: u8 },
+    /// Chain hops live on different fabrics: the chaining mechanism is
+    /// the fabric's internal CB hand-off and cannot cross the NoC.
+    CrossFabricChain { first: u8, hop: u8 },
     /// The chained hops are not members of one configured chain group.
     NotChainable { hwa_id: u8 },
     /// A producing hop sits in more than one configured chain group, so
@@ -88,6 +93,16 @@ impl std::fmt::Display for AccelError {
             }
             AccelError::UnknownAccelerator { hwa_id } => {
                 write!(f, "no accelerator with id {hwa_id} in this system")
+            }
+            AccelError::UnknownFabric { fabric } => {
+                write!(f, "no fabric {fabric} in this system's floorplan")
+            }
+            AccelError::CrossFabricChain { first, hop } => {
+                write!(
+                    f,
+                    "chain starts on fabric {first} but a hop lives on \
+                     fabric {hop}; chaining cannot cross fabrics"
+                )
             }
             AccelError::NotChainable { hwa_id } => {
                 write!(
@@ -130,35 +145,49 @@ impl std::fmt::Display for AccelError {
 
 impl std::error::Error for AccelError {}
 
-/// A discovered accelerator: the identity plus the I/O shape a [`Job`]
-/// needs to derive payload and result sizes. Obtained from
-/// [`AccelRuntime::accels`]/[`AccelRuntime::accel`]; constructing one by
-/// hand is allowed (application tables do) — the ids are validated when
-/// the job is submitted.
+/// A discovered accelerator: the owning fabric, the channel identity and
+/// the I/O shape a [`Job`] needs to derive payload and result sizes.
+/// Obtained from [`AccelRuntime::accels`] / [`AccelRuntime::accel`] /
+/// [`AccelRuntime::accel_on`]; constructing one by hand is allowed
+/// (application tables do) — the ids are validated when the job is
+/// submitted.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AccelHandle {
+    fabric: u8,
     id: u8,
     in_words: usize,
     out_words: usize,
 }
 
 impl AccelHandle {
-    /// Handle with an explicit I/O shape (validated against the system at
-    /// submit time).
+    /// Fabric-0 handle with an explicit I/O shape (validated against the
+    /// system at submit time) — the single-fabric surface.
     pub fn new(id: u8, in_words: usize, out_words: usize) -> Self {
+        Self::on_fabric(0, id, in_words, out_words)
+    }
+
+    /// Handle on an explicit fabric of a floorplanned system.
+    pub fn on_fabric(fabric: u8, id: u8, in_words: usize, out_words: usize) -> Self {
         Self {
+            fabric,
             id,
             in_words,
             out_words,
         }
     }
 
-    /// Handle for a configured `HwaSpec` at channel `id`.
-    pub fn from_spec(id: u8, spec: &HwaSpec) -> Self {
-        Self::new(id, spec.in_words, spec.out_words)
+    /// Handle for a configured `HwaSpec` at channel `id` of `fabric`.
+    pub fn from_spec(fabric: u8, id: u8, spec: &HwaSpec) -> Self {
+        Self::on_fabric(fabric, id, spec.in_words, spec.out_words)
     }
 
-    /// The accelerator's `hwa_id` (channel index) on the wire.
+    /// The fabric this accelerator lives on (floorplan `F<k>` tile id).
+    pub fn fabric(&self) -> u8 {
+        self.fabric
+    }
+
+    /// The accelerator's `hwa_id` (channel index on its fabric) on the
+    /// wire.
     pub fn id(&self) -> u8 {
         self.id
     }
@@ -174,9 +203,34 @@ impl AccelHandle {
     }
 }
 
-/// Everything job compilation needs to know about the target system:
-/// how many accelerators exist and which channel indices may chain.
-pub(crate) struct CompileCtx<'a> {
+/// Per-fabric compilation context: inventory size and chain groups.
+pub(crate) struct FabricCtx<'a> {
     pub n_accels: usize,
     pub chain_groups: &'a [Vec<usize>],
+}
+
+/// Everything job compilation needs to know about the target system:
+/// one [`FabricCtx`] per fabric plus the NoC node of each fabric's
+/// interface tile (compiled into `InvokeSpec::dest_node`).
+pub(crate) struct CompileCtx<'a> {
+    pub fabrics: Vec<FabricCtx<'a>>,
+    pub nodes: &'a [u8],
+}
+
+impl<'a> CompileCtx<'a> {
+    /// Single-fabric context (unit tests and the legacy surface); the
+    /// node is arbitrary — single-fabric cores already default-route.
+    #[cfg(test)]
+    pub(crate) fn single(
+        n_accels: usize,
+        chain_groups: &'a [Vec<usize>],
+    ) -> Self {
+        Self {
+            fabrics: vec![FabricCtx {
+                n_accels,
+                chain_groups,
+            }],
+            nodes: &[8],
+        }
+    }
 }

@@ -139,10 +139,7 @@ mod tests {
             .compute(10)
             .invoke(Job::on(h).direct(vec![1]))
             .compute(20);
-        let ctx = CompileCtx {
-            n_accels: 1,
-            chain_groups: &[],
-        };
+        let ctx = CompileCtx::single(1, &[]);
         let segs = prog.compile(&ctx).unwrap();
         assert_eq!(segs.len(), 3);
         assert!(matches!(segs[0], Segment::Compute(10)));
@@ -157,10 +154,7 @@ mod tests {
         let prog = Program::new()
             .invoke(Job::on(ok).direct(vec![1]))
             .invoke(Job::on(ghost).direct(vec![2]));
-        let ctx = CompileCtx {
-            n_accels: 1,
-            chain_groups: &[],
-        };
+        let ctx = CompileCtx::single(1, &[]);
         assert_eq!(
             prog.compile(&ctx).unwrap_err(),
             AccelError::UnknownAccelerator { hwa_id: 9 }

@@ -4,11 +4,12 @@
 use crate::clock::{Ps, PS_PER_US};
 use crate::cmp::core::Segment;
 use crate::fpga::hwa::HwaCompute;
+use crate::sim::floorplan::TopologyError;
 use crate::sim::system::{System, SystemConfig};
 
 use super::{
-    AccelError, AccelHandle, Chain, CompileCtx, Completion, Job, Program,
-    Receipt,
+    AccelError, AccelHandle, Chain, CompileCtx, Completion, FabricCtx, Job,
+    Program, Receipt,
 };
 
 /// The accelerator driver: owns a [`System`] and is the one place work is
@@ -25,7 +26,7 @@ use super::{
 ///     spec_by_name("izigzag").unwrap(),
 ///     spec_by_name("iquantize").unwrap(),
 /// ]);
-/// cfg.chain_groups = vec![vec![0, 1]];
+/// cfg.fabrics[0].chain_groups = vec![vec![0, 1]];
 /// let mut rt = AccelRuntime::new(cfg);
 ///
 /// // Discovery: one handle per configured accelerator.
@@ -45,12 +46,23 @@ pub struct AccelRuntime {
     sys: System,
     /// Invocations submitted so far, per core (receipt sequence numbers).
     submitted: Vec<usize>,
+    /// NoC node of each fabric's interface tile, by fabric id — the
+    /// floorplan is immutable after construction, so this is computed
+    /// once instead of per job compilation.
+    fabric_nodes: Vec<u8>,
 }
 
 impl AccelRuntime {
-    /// Build a runtime over a freshly-constructed system.
+    /// Build a runtime over a freshly-constructed system (panics on an
+    /// invalid topology, like [`System::new`]).
     pub fn new(config: SystemConfig) -> Self {
         Self::over(System::new(config))
+    }
+
+    /// Fallible construction: every floorplan/topology defect surfaces
+    /// as a typed [`TopologyError`] instead of a panic.
+    pub fn try_new(config: SystemConfig) -> Result<Self, TopologyError> {
+        Ok(Self::over(System::try_new(config)?))
     }
 
     /// Wrap an existing system. The runtime assumes it is the only work
@@ -63,7 +75,18 @@ impl AccelRuntime {
             .iter()
             .map(|p| p.invocations_done() + p.pending_invocations())
             .collect();
-        Self { sys, submitted }
+        let fabric_nodes = sys
+            .config
+            .floorplan
+            .fabric_nodes()
+            .into_iter()
+            .map(|n| n as u8)
+            .collect();
+        Self {
+            sys,
+            submitted,
+            fabric_nodes,
+        }
     }
 
     /// The underlying system (statistics, fabric, clock).
@@ -81,43 +104,68 @@ impl AccelRuntime {
         self.sys
     }
 
-    /// Install the functional compute hook (native/PJRT/echo).
+    /// Install the functional compute hook (native/PJRT/echo) on the
+    /// primary fabric. Floorplanned systems install per fabric with
+    /// [`AccelRuntime::set_compute_on`].
     pub fn set_compute(&mut self, compute: Box<dyn HwaCompute>) {
-        self.sys.fabric.set_compute(compute);
+        self.sys.fabric_mut().set_compute(compute);
+    }
+
+    /// Install a compute hook on one fabric of a floorplanned system.
+    pub fn set_compute_on(&mut self, fabric: usize, compute: Box<dyn HwaCompute>) {
+        self.sys.fabric_at_mut(fabric).set_compute(compute);
     }
 
     // ------------------------------------------------------------------
     // Discovery
     // ------------------------------------------------------------------
 
-    /// Handles for every configured accelerator, in channel order.
+    /// Handles for every configured accelerator, fabric-major then
+    /// channel order (a single-fabric system yields plain channel order).
     pub fn accels(&self) -> Vec<AccelHandle> {
         self.sys
             .config
-            .specs
+            .fabrics
             .iter()
             .enumerate()
-            .map(|(i, s)| AccelHandle::from_spec(i as u8, s))
+            .flat_map(|(f, fs)| {
+                fs.specs.iter().enumerate().map(move |(i, s)| {
+                    AccelHandle::from_spec(f as u8, i as u8, s)
+                })
+            })
             .collect()
     }
 
-    /// Handle for the accelerator at channel `id`, if configured.
-    pub fn accel(&self, id: u8) -> Option<AccelHandle> {
-        self.sys
-            .config
-            .specs
-            .get(id as usize)
-            .map(|s| AccelHandle::from_spec(id, s))
+    /// Number of fabrics (FPGA interface tiles) in the floorplan.
+    pub fn n_fabrics(&self) -> usize {
+        self.sys.n_fabrics()
     }
 
-    /// Handle for the first accelerator with this benchmark name.
-    pub fn accel_named(&self, name: &str) -> Option<AccelHandle> {
+    /// Handle for the accelerator at channel `id` of the primary fabric
+    /// (fabric 0) — the single-fabric surface.
+    pub fn accel(&self, id: u8) -> Option<AccelHandle> {
+        self.accel_on(0, id)
+    }
+
+    /// Handle for the accelerator at channel `id` of fabric `fabric`.
+    pub fn accel_on(&self, fabric: u8, id: u8) -> Option<AccelHandle> {
         self.sys
             .config
-            .specs
-            .iter()
-            .position(|s| s.name == name)
-            .and_then(|i| self.accel(i as u8))
+            .fabrics
+            .get(fabric as usize)
+            .and_then(|fs| fs.specs.get(id as usize))
+            .map(|s| AccelHandle::from_spec(fabric, id, s))
+    }
+
+    /// Handle for the first accelerator with this benchmark name
+    /// (searching fabrics in fabric-id order).
+    pub fn accel_named(&self, name: &str) -> Option<AccelHandle> {
+        self.accels().into_iter().find(|h| {
+            self.sys.config.fabrics[h.fabric() as usize].specs
+                [h.id() as usize]
+                .name
+                == name
+        })
     }
 
     /// Number of processor cores available for sessions.
@@ -161,8 +209,17 @@ impl AccelRuntime {
         let n_jobs = program.invocations();
         let segments = {
             let ctx = CompileCtx {
-                n_accels: self.sys.config.specs.len(),
-                chain_groups: &self.sys.config.chain_groups,
+                fabrics: self
+                    .sys
+                    .config
+                    .fabrics
+                    .iter()
+                    .map(|f| FabricCtx {
+                        n_accels: f.specs.len(),
+                        chain_groups: &f.chain_groups,
+                    })
+                    .collect(),
+                nodes: &self.fabric_nodes,
             };
             program.compile(&ctx)?
         };
@@ -305,7 +362,6 @@ pub fn driver_api_demo() -> Result<String, AccelError> {
     use std::fmt::Write as _;
 
     use crate::fpga::hwa::spec_by_name;
-    use crate::noc::mesh::MeshConfig;
     use crate::runtime::NativeCompute;
 
     // 2x2 mesh: FPGA + MMU + two processor cores.
@@ -314,12 +370,8 @@ pub fn driver_api_demo() -> Result<String, AccelError> {
         spec_by_name("iquantize").unwrap(),
         spec_by_name("idct").unwrap(),
     ]);
-    cfg.mesh = MeshConfig {
-        width: 2,
-        height: 2,
-        ..MeshConfig::default()
-    };
-    cfg.chain_groups = vec![vec![0, 1, 2]];
+    cfg.set_mesh(2, 2);
+    cfg.fabrics[0].chain_groups = vec![vec![0, 1, 2]];
     let mut rt = AccelRuntime::new(cfg);
     rt.set_compute(Box::new(NativeCompute::default()));
     assert_eq!(rt.n_cores(), 2, "2x2 mesh leaves two processor nodes");
@@ -362,7 +414,101 @@ pub fn driver_api_demo() -> Result<String, AccelError> {
     let _ = writeln!(
         out,
         "  tasks executed on the fabric: {}",
-        rt.system().fabric.tasks_executed()
+        rt.system().fabric().tasks_executed()
+    );
+    Ok(out)
+}
+
+/// Build a floorplanned two-fabric system (`F0 P P / P M P / P P F1`),
+/// run a chained JPEG job on fabric 0 and direct jobs on fabric 1, and
+/// render the per-fabric receipt breakdowns and counters. Shared by
+/// `examples/multi_fpga.rs` and the `accnoc selftest` verb.
+pub fn multi_fpga_demo() -> Result<String, AccelError> {
+    use std::fmt::Write as _;
+
+    use crate::fpga::hwa::spec_by_name;
+    use crate::runtime::NativeCompute;
+    use crate::sim::floorplan::Floorplan;
+    use crate::sim::system::FabricSpec;
+
+    let plan = Floorplan::parse("F0 P P / P M P / P P F1")
+        .expect("demo plan is valid");
+    let mut jpeg = FabricSpec::paper(vec![
+        spec_by_name("izigzag").unwrap(),
+        spec_by_name("iquantize").unwrap(),
+        spec_by_name("idct").unwrap(),
+        spec_by_name("shiftbound").unwrap(),
+    ]);
+    jpeg.chain_groups = vec![vec![0, 1, 2, 3]];
+    let float = FabricSpec::paper(vec![
+        spec_by_name("dfadd").unwrap(),
+        spec_by_name("dfmul").unwrap(),
+    ]);
+    let cfg = SystemConfig::floorplanned(plan, vec![jpeg, float]);
+    let mut rt = AccelRuntime::new(cfg);
+    rt.set_compute_on(0, Box::new(NativeCompute::default()));
+    rt.set_compute_on(1, Box::new(NativeCompute::default()));
+
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "multi_fpga: {} cores, {} fabrics, {} accelerators discovered",
+        rt.n_cores(),
+        rt.n_fabrics(),
+        rt.accels().len()
+    );
+    let _ = write!(out, "{}", rt.system().config.floorplan.render());
+
+    // Fabric 0: one full-depth chained JPEG block from core 0.
+    let chain = Chain::of(rt.accel_on(0, 0).unwrap())
+        .then(rt.accel_on(0, 1).unwrap())
+        .then(rt.accel_on(0, 2).unwrap())
+        .then(rt.accel_on(0, 3).unwrap());
+    let chained = rt.submit(0, Job::chained(chain).direct((0..64).collect()))?;
+    // Fabric 1: direct floating-point jobs from cores 1 and 2.
+    let dfadd = rt.accel_on(1, 0).unwrap();
+    let dfmul = rt.accel_on(1, 1).unwrap();
+    let direct_a = rt.submit(1, Job::on(dfadd).direct(vec![1, 2, 3, 4]))?;
+    let direct_b = rt.submit(2, Job::on(dfmul).direct(vec![5, 6, 7, 8]))?;
+
+    let deadline = 10_000 * PS_PER_US;
+    for (label, receipt) in [
+        ("fabric 0: chained izigzag->iquantize->idct->shiftbound", chained),
+        ("fabric 1: direct dfadd (core 1)", direct_a),
+        ("fabric 1: direct dfmul (core 2)", direct_b),
+    ] {
+        let done = rt.wait(receipt, deadline)?;
+        let b = done.breakdown();
+        let _ = writeln!(out, "  {label}");
+        let _ = writeln!(
+            out,
+            "    grant {:>7} ps | payload {:>7} ps | execute+result \
+             {:>7} ps | total {:.3} us",
+            b.grant_ps,
+            b.payload_ps,
+            b.execute_ps,
+            b.total_ps as f64 / PS_PER_US as f64
+        );
+    }
+    for row in rt.system().per_fabric_stats() {
+        let _ = writeln!(
+            out,
+            "  fabric {} @ node {}: {} tasks, {} flits in / {} out, \
+             {} rejected",
+            row.fabric,
+            row.node,
+            row.tasks_executed,
+            row.flits_from_noc,
+            row.flits_to_noc,
+            row.rejected_flits
+        );
+    }
+    // A cross-fabric chain is impossible by construction — show it.
+    let cross = Chain::of(rt.accel_on(0, 0).unwrap()).then(dfadd);
+    let _ = writeln!(
+        out,
+        "  cross-fabric chain rejected: {}",
+        cross.validate().unwrap_err()
     );
     Ok(out)
 }
@@ -459,5 +605,42 @@ mod tests {
         let report = driver_api_demo().expect("demo completes");
         assert!(report.contains("chained izigzag->iquantize->idct"));
         assert!(report.contains("total"));
+    }
+
+    #[test]
+    fn multi_fabric_discovery_is_fabric_major() {
+        use crate::sim::floorplan::Floorplan;
+        use crate::sim::system::FabricSpec;
+
+        let plan = Floorplan::parse("F0 P P / P M P / P P F1").unwrap();
+        let spec = spec_by_name("izigzag").unwrap();
+        let rt = AccelRuntime::new(SystemConfig::floorplanned(
+            plan,
+            vec![
+                FabricSpec::paper(vec![spec.clone(); 2]),
+                FabricSpec::paper(vec![spec]),
+            ],
+        ));
+        let accels = rt.accels();
+        assert_eq!(accels.len(), 3);
+        assert_eq!((accels[0].fabric(), accels[0].id()), (0, 0));
+        assert_eq!((accels[1].fabric(), accels[1].id()), (0, 1));
+        assert_eq!((accels[2].fabric(), accels[2].id()), (1, 0));
+        assert_eq!(rt.accel(1), rt.accel_on(0, 1), "accel() is fabric 0");
+        assert!(rt.accel_on(1, 1).is_none(), "fabric 1 has one channel");
+        assert!(rt.accel_on(2, 0).is_none(), "no fabric 2");
+        assert_eq!(rt.accel_named("izigzag").unwrap().fabric(), 0);
+    }
+
+    #[test]
+    fn multi_fpga_demo_runs_clean() {
+        let report = multi_fpga_demo().expect("demo completes");
+        assert!(report.contains("2 fabrics"), "{report}");
+        assert!(report.contains("fabric 0: chained"), "{report}");
+        assert!(report.contains("fabric 1: direct dfmul"), "{report}");
+        assert!(
+            report.contains("cross-fabric chain rejected"),
+            "{report}"
+        );
     }
 }

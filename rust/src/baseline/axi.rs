@@ -136,6 +136,35 @@ impl BusChannel {
     }
 }
 
+/// Why an AXI bus could not be built from a floorplan: the model is one
+/// FPGA slave/master pair (§6.7), so exactly one fabric endpoint is
+/// supported. Returned as a typed error — never a panic — so the sweep
+/// harness can reject `net = axi` multi-FPGA specs with a message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AxiTopologyError {
+    /// How many fabric endpoints the floorplan asked for.
+    pub endpoints: usize,
+}
+
+impl AxiTopologyError {
+    pub fn endpoints(&self) -> usize {
+        self.endpoints
+    }
+}
+
+impl std::fmt::Display for AxiTopologyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "the AXI4 bus prototype models exactly one FPGA endpoint, \
+             got {} (use the NoC for multi-FPGA floorplans)",
+            self.endpoints
+        )
+    }
+}
+
+impl std::error::Error for AxiTopologyError {}
+
 /// The AXI interconnect: request channel (masters -> FPGA) and response
 /// channel (FPGA -> masters), each one beat per cycle.
 pub struct AxiBus {
@@ -150,17 +179,28 @@ pub struct AxiBus {
 }
 
 impl AxiBus {
-    pub fn new(n_nodes: usize, fpga_node: usize) -> Self {
-        Self {
+    /// Build the bus for a floorplan's fabric endpoint list. The model
+    /// supports exactly one endpoint (the lone FPGA slave/master pair);
+    /// anything else is a typed [`AxiTopologyError`].
+    pub fn new(
+        n_nodes: usize,
+        endpoints: &[usize],
+    ) -> Result<Self, AxiTopologyError> {
+        let [fpga_node] = endpoints else {
+            return Err(AxiTopologyError {
+                endpoints: endpoints.len(),
+            });
+        };
+        Ok(Self {
             n_nodes,
-            fpga_node,
+            fpga_node: *fpga_node,
             request: BusChannel::new(n_nodes),
             response: BusChannel::new(1),
             eject: (0..n_nodes).map(|_| VecDeque::new()).collect(),
             cycles: 0,
             flits_injected: 0,
             flits_ejected: 0,
-        }
+        })
     }
 
     pub fn can_inject(&self, node: usize) -> bool {
@@ -262,7 +302,7 @@ mod tests {
 
     #[test]
     fn single_burst_delivered_with_overhead() {
-        let mut bus = AxiBus::new(4, 3);
+        let mut bus = AxiBus::new(4, &[3]).unwrap();
         let flits = packet(3, 8, 1); // head + 2 data
         for f in &flits {
             assert!(bus.try_inject(0, *f));
@@ -282,7 +322,7 @@ mod tests {
     fn bursts_serialize_across_masters() {
         // Two masters inject simultaneously: total time ~= sum of bursts,
         // unlike a mesh where disjoint paths run concurrently.
-        let mut bus = AxiBus::new(4, 3);
+        let mut bus = AxiBus::new(4, &[3]).unwrap();
         for src in 0..2 {
             for f in packet(3, 8, src as u32) {
                 bus.try_inject(src, f);
@@ -307,7 +347,7 @@ mod tests {
 
     #[test]
     fn burst_contiguity_preserved() {
-        let mut bus = AxiBus::new(3, 2);
+        let mut bus = AxiBus::new(3, &[2]).unwrap();
         for src in 0..2 {
             for f in packet(2, 12, src as u32) {
                 bus.try_inject(src, f);
@@ -328,7 +368,7 @@ mod tests {
 
     #[test]
     fn response_channel_routes_by_dest() {
-        let mut bus = AxiBus::new(4, 3);
+        let mut bus = AxiBus::new(4, &[3]).unwrap();
         for f in packet(1, 4, 7) {
             bus.try_inject(3, f);
         }
@@ -343,8 +383,20 @@ mod tests {
     }
 
     #[test]
+    fn multi_endpoint_floorplans_are_a_typed_error_not_a_panic() {
+        let err = AxiBus::new(9, &[2, 8]).unwrap_err();
+        assert_eq!(err, AxiTopologyError { endpoints: 2 });
+        assert!(err.to_string().contains("exactly one FPGA endpoint"));
+        assert_eq!(
+            AxiBus::new(9, &[]).unwrap_err().endpoints(),
+            0,
+            "an empty endpoint list is rejected too"
+        );
+    }
+
+    #[test]
     fn backpressure_on_full_queue() {
-        let mut bus = AxiBus::new(2, 1);
+        let mut bus = AxiBus::new(2, &[1]).unwrap();
         let mut accepted = 0;
         for f in std::iter::repeat(packet(1, 0, 1)).flatten().take(64) {
             if bus.try_inject(0, f) {

@@ -231,7 +231,9 @@ pub struct CacheFpgaStats {
 /// The shared-cache FPGA node: same NoC-facing interface as `fpga::Fpga`.
 pub struct CacheFpga {
     pub node: u8,
-    mmu_node: u8,
+    /// Map src_id -> assigned MMU node (the floorplan's per-processor
+    /// nearest/hashed assignment; single-MMU systems repeat one node).
+    mmu_route: Vec<u8>,
     reply_route: Vec<u8>,
     pub iface_clock: ClockDomain,
     router_out: AsyncFifo<Flit>,
@@ -252,16 +254,17 @@ pub struct CacheFpga {
 impl CacheFpga {
     pub fn new(
         node: u8,
-        mmu_node: u8,
+        mmu_route: Vec<u8>,
         reply_route: Vec<u8>,
         specs: Vec<HwaSpec>,
         cache_bytes: u32,
         noc_clock: &ClockDomain,
     ) -> Self {
+        assert!(!mmu_route.is_empty(), "at least one MMU node");
         let iface_clock = ClockDomain::from_mhz("iface", 300.0);
         Self {
             node,
-            mmu_node,
+            mmu_route,
             reply_route,
             router_out: AsyncFifo::new(ROUTER_FIFO_CAP, &iface_clock),
             router_in: AsyncFifo::new(ROUTER_FIFO_CAP, noc_clock),
@@ -439,8 +442,14 @@ impl CacheFpga {
             if ch.outstanding < OUTSTANDING_LIMIT {
                 if let Some(req) = ch.rb.pop_front() {
                     ch.outstanding += 1;
+                    // Field accesses keep the borrow disjoint from the
+                    // &mut channel iteration (a &self helper would not).
                     let dest = match req.direction {
-                        Direction::MemToHwa => self.mmu_node,
+                        Direction::MemToHwa => self
+                            .mmu_route
+                            .get(req.src_id as usize)
+                            .copied()
+                            .unwrap_or(self.mmu_route[0]),
                         _ => self.reply_route[req.src_id as usize],
                     };
                     ch.cmd_out.push_back(HeadFields {
@@ -577,7 +586,11 @@ impl CacheFpga {
                 // Form the packet; TX reads happen as it streams.
                 let head = ch.head.expect("task head");
                 let dest = match head.direction {
-                    Direction::MemToHwa | Direction::HwaToMem => self.mmu_node,
+                    Direction::MemToHwa | Direction::HwaToMem => self
+                        .mmu_route
+                        .get(head.src_id as usize)
+                        .copied()
+                        .unwrap_or(self.mmu_route[0]),
                     _ => self.reply_route[head.src_id as usize],
                 };
                 let pkt: Packet = self.builder.payload(
@@ -697,7 +710,7 @@ mod tests {
         let noc = ClockDomain::from_mhz("noc", 1000.0);
         let mut f = CacheFpga::new(
             5,
-            7,
+            vec![7; 8],
             vec![0; 8],
             vec![spec_by_name("dfadd").unwrap()],
             32 * 1024,

@@ -47,6 +47,11 @@ pub struct InvokeSpec {
     pub mem_bytes: u16,
     /// Result words expected back (for completion detection).
     pub expect_words: usize,
+    /// NoC node of the owning fabric's interface tile (floorplanned
+    /// systems address jobs per fabric). `None` — every raw constructor
+    /// — falls back to the core's default fabric node; the driver's
+    /// compiled jobs always carry the resolved tile.
+    pub dest_node: Option<u8>,
 }
 
 impl InvokeSpec {
@@ -61,6 +66,7 @@ impl InvokeSpec {
             start_addr: 0,
             mem_bytes: 0,
             expect_words,
+            dest_node: None,
         }
     }
 
@@ -77,6 +83,7 @@ impl InvokeSpec {
             start_addr,
             mem_bytes: bytes,
             expect_words: 0,
+            dest_node: None,
         }
     }
 
@@ -264,8 +271,9 @@ impl Processor {
             }
             Some(Segment::Invoke(spec)) => {
                 self.record = InvokeRecord::default();
+                let dest = spec.dest_node.unwrap_or(self.fpga_node);
                 let req = self.builder.command(HeadFields {
-                    routing: self.fpga_node,
+                    routing: dest,
                     hwa_id: spec.hwa_id,
                     src_id: self.id,
                     direction: spec.direction,
@@ -402,9 +410,11 @@ impl Processor {
                             self.state = CoreState::AwaitResult { words_left: 0 };
                             return;
                         }
+                        let dest =
+                            spec.dest_node.unwrap_or(self.fpga_node);
                         let payload = self.builder.payload(
                             HeadFields {
-                                routing: self.fpga_node,
+                                routing: dest,
                                 hwa_id: h.hwa_id,
                                 src_id: self.id,
                                 tb_id: h.tb_id,

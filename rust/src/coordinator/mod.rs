@@ -20,6 +20,9 @@ SUBCOMMANDS:
                       scenario grid on all host cores, and write the
                       machine-readable BENCH_*.json report
                       (see configs/ and docs/EXPERIMENTS.md)
+    topology <spec>   resolve a sweep spec's floorplans without
+                      simulating: print each distinct tile map with its
+                      per-fabric inventories and MMU assignment
     run               run one scenario from a config file
                       (--config path; same [system]/[workload] keys as a
                       sweep spec, without list values)
@@ -62,6 +65,7 @@ pub fn main_with(args: Args) -> Result<(), String> {
         }
         Some("run") => run_custom(&args, csv),
         Some("sweep") => run_sweep(&args, csv),
+        Some("topology") => run_topology(&args),
         Some("synth") => {
             emit(fig7::run().table(), csv);
             emit(fig7::run().component_table(), csv);
@@ -206,6 +210,96 @@ fn run_sweep(args: &Args, csv: bool) -> Result<(), String> {
     Ok(())
 }
 
+/// The `topology` verb: resolve every scenario's floorplan and fabric
+/// inventories without running a single simulated cycle (`--dry-run` for
+/// the machine shape instead of the grid). Distinct topologies are
+/// printed once; CI runs this over every `configs/*.toml`.
+fn run_topology(args: &Args) -> Result<(), String> {
+    let path = args
+        .positional
+        .first()
+        .ok_or("topology: missing spec path (see configs/)")?;
+    let sweep = SweepSpec::load(std::path::Path::new(path))?;
+    let scenarios = sweep.expand()?;
+    let mut seen: Vec<String> = Vec::new();
+    for s in &scenarios {
+        let cfg = s.system_config()?;
+        let key = render_topology(&cfg);
+        if seen.contains(&key) {
+            continue;
+        }
+        println!(
+            "topology {} of sweep {} ({}x{} mesh, {} fabric{}, {} MMU{}, \
+             {} processor core{})",
+            seen.len(),
+            sweep.name,
+            cfg.floorplan.mesh.width,
+            cfg.floorplan.mesh.height,
+            cfg.fabrics.len(),
+            if cfg.fabrics.len() == 1 { "" } else { "s" },
+            cfg.floorplan.mmu_nodes().len(),
+            if cfg.floorplan.mmu_nodes().len() == 1 { "" } else { "s" },
+            cfg.floorplan.proc_nodes().len().min(8),
+            if cfg.floorplan.proc_nodes().len().min(8) == 1 { "" } else { "s" },
+        );
+        print!("{key}");
+        seen.push(key);
+    }
+    println!(
+        "topology {}: {} scenarios resolve to {} distinct topolog{}",
+        sweep.name,
+        scenarios.len(),
+        seen.len(),
+        if seen.len() == 1 { "y" } else { "ies" }
+    );
+    Ok(())
+}
+
+/// Tile map + per-fabric inventory + MMU assignment, as one string (also
+/// the dedup key for `run_topology`).
+fn render_topology(cfg: &crate::sim::SystemConfig) -> String {
+    use std::fmt::Write as _;
+
+    let mut out = String::new();
+    out.push_str(&cfg.floorplan.render());
+    for (f, spec) in cfg.fabrics.iter().enumerate() {
+        let kind = match spec.kind {
+            crate::sim::FabricKind::Buffered => "buffered".to_string(),
+            crate::sim::FabricKind::SharedCache { cache_bytes } => {
+                format!("shared_cache {} KiB", cache_bytes / 1024)
+            }
+        };
+        let names: Vec<&str> =
+            spec.specs.iter().map(|s| s.name).collect();
+        let _ = writeln!(
+            out,
+            "  F{f} @ node {}: {kind}, {:.0} MHz, {} TBs, PR{}-PS{}, \
+             {} HWA{}: {}",
+            cfg.floorplan.fabric_nodes()[f],
+            spec.iface_mhz,
+            spec.n_tbs,
+            spec.pr_group,
+            spec.ps_group,
+            names.len(),
+            if names.len() == 1 { "" } else { "s" },
+            names.join(" "),
+        );
+        for group in &spec.chain_groups {
+            let _ = writeln!(out, "    chain group: {group:?}");
+        }
+    }
+    let mmus = cfg.floorplan.mmu_nodes();
+    let _ = writeln!(
+        out,
+        "  MMU tile{} at node{} {:?}, {} assignment",
+        if mmus.len() == 1 { "" } else { "s" },
+        if mmus.len() == 1 { "" } else { "s" },
+        mmus,
+        cfg.mmu_assign.name(),
+    );
+    out
+}
+
 fn selftest() -> Result<(), String> {
     use crate::accel::{AccelRuntime, Job};
     use crate::fpga::hwa::table3;
@@ -224,7 +318,7 @@ fn selftest() -> Result<(), String> {
     ] {
         let mut cfg = SystemConfig::paper(table3().into_iter().take(8).collect());
         cfg.net = net;
-        cfg.fabric = fabric;
+        cfg.fabrics[0].kind = fabric;
         let mut rt = AccelRuntime::new(cfg);
         let mut receipts = Vec::new();
         for core in 0..rt.n_cores() {
@@ -247,7 +341,7 @@ fn selftest() -> Result<(), String> {
         }
         println!(
             "selftest {name}: OK ({} tasks executed)",
-            rt.system().fabric.tasks_executed()
+            rt.system().fabric().tasks_executed()
         );
     }
     // The driver-API demo (same scenario as examples/driver_api.rs):
@@ -255,6 +349,11 @@ fn selftest() -> Result<(), String> {
     let report = crate::accel::driver_api_demo().map_err(|e| e.to_string())?;
     print!("{report}");
     println!("selftest driver-api: OK");
+    // The floorplan demo (same scenario as examples/multi_fpga.rs): two
+    // fabrics, chained + direct jobs, per-fabric receipt breakdowns.
+    let report = crate::accel::multi_fpga_demo().map_err(|e| e.to_string())?;
+    print!("{report}");
+    println!("selftest multi-fpga: OK");
     Ok(())
 }
 
@@ -272,9 +371,43 @@ mod tests {
 
     #[test]
     fn usage_lists_every_subcommand() {
-        for verb in ["experiment", "sweep", "run", "synth", "list", "selftest"]
-        {
+        for verb in [
+            "experiment",
+            "sweep",
+            "topology",
+            "run",
+            "synth",
+            "list",
+            "selftest",
+        ] {
             assert!(USAGE.contains(verb), "usage missing {verb}");
         }
+    }
+
+    /// The `topology` verb must resolve every shipped config without
+    /// simulating (CI runs the binary over `configs/*.toml`; this pins
+    /// the same property in-process).
+    #[test]
+    fn topology_verb_resolves_every_shipped_config() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/../configs");
+        let mut checked = 0;
+        for entry in std::fs::read_dir(dir).expect("configs/ readable") {
+            let path = entry.unwrap().path();
+            if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+                continue;
+            }
+            let sweep = SweepSpec::load(&path)
+                .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+            for s in sweep.expand().unwrap() {
+                let cfg = s
+                    .system_config()
+                    .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+                let rendered = render_topology(&cfg);
+                assert!(rendered.contains("F0"), "{rendered}");
+                assert!(rendered.contains("MMU tile"), "{rendered}");
+            }
+            checked += 1;
+        }
+        assert!(checked >= 7, "expected the shipped configs, saw {checked}");
     }
 }

@@ -283,6 +283,37 @@ impl HeadFields {
     }
 }
 
+/// Origin-tile addressing inside command payloads.
+///
+/// Command packets (request/grant/notify) use only the low bits of the
+/// 61-bit head payload for their [`crate::fpga::channel::task::CommandKind`]
+/// subtype. With floorplanned systems carrying several FPGA interface
+/// tiles, grants and notifies additionally carry the **tile of origin**
+/// in payload bits [`CMD_ORIGIN_LO`]..`CMD_ORIGIN_LO + 8` (a presence
+/// bit plus the 7-bit node id), so MMUs and traffic sources can route
+/// their answers back to the granting fabric without any global
+/// "the FPGA node" assumption. A payload without the presence bit (all
+/// pre-floorplan traffic, and processor-built requests) simply has no
+/// origin — consumers fall back to their configured default fabric.
+pub const CMD_ORIGIN_LO: u32 = 8;
+
+/// Set the origin tile in a command payload (7-bit node + presence bit).
+pub fn command_payload_with_origin(payload: u64, node: u8) -> u64 {
+    debug_assert!(node < 128, "node ids are 7 bits");
+    let mask = 0xFFu64 << CMD_ORIGIN_LO;
+    (payload & !mask) | ((0x80 | node as u64) << CMD_ORIGIN_LO)
+}
+
+/// The origin tile of a command payload, if one was stamped.
+pub fn command_payload_origin(payload: u64) -> Option<u8> {
+    let bits = (payload >> CMD_ORIGIN_LO) & 0xFF;
+    if bits & 0x80 != 0 {
+        Some((bits & 0x7F) as u8)
+    } else {
+        None
+    }
+}
+
 /// Encode a body or tail flit: routing + kind + 128-bit payload.
 pub fn encode_body(routing: u8, kind: FlitKind, payload: [u64; 2]) -> RawFlit {
     debug_assert!(matches!(kind, FlitKind::Body | FlitKind::Tail));
@@ -353,6 +384,31 @@ mod tests {
         assert_eq!(FlitKind::Single.encode(), 0b11);
         assert!(FlitKind::Single.is_head() && FlitKind::Single.is_tail());
         assert!(FlitKind::Head.is_head() && !FlitKind::Head.is_tail());
+    }
+
+    #[test]
+    fn command_origin_roundtrips_and_is_absent_by_default() {
+        // CommandKind subtypes live in the low payload bits; the origin
+        // field must coexist with them without corruption.
+        for kind in [0u64, 1, 2] {
+            assert_eq!(command_payload_origin(kind), None);
+            for node in [0u8, 1, 8, 127] {
+                let stamped = command_payload_with_origin(kind, node);
+                assert_eq!(command_payload_origin(stamped), Some(node));
+                assert_eq!(stamped & 0b11, kind, "subtype bits preserved");
+                // Stamping is idempotent / overwritable.
+                let restamped = command_payload_with_origin(stamped, 5);
+                assert_eq!(command_payload_origin(restamped), Some(5));
+            }
+        }
+    }
+
+    #[test]
+    fn stamped_origin_survives_head_encode_decode() {
+        let mut h = sample();
+        h.payload = command_payload_with_origin(1, 8);
+        let back = HeadFields::decode(&h.encode());
+        assert_eq!(command_payload_origin(back.payload), Some(8));
     }
 
     #[test]

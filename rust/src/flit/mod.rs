@@ -4,7 +4,8 @@ pub mod fields;
 pub mod packet;
 
 pub use fields::{
-    Direction, FlitKind, HeadFields, PacketType, RawFlit, BODY_PAYLOAD_BITS,
+    command_payload_origin, command_payload_with_origin, Direction, FlitKind,
+    HeadFields, PacketType, RawFlit, BODY_PAYLOAD_BITS, CMD_ORIGIN_LO,
     FLIT_BITS, HEAD_PAYLOAD_BITS,
 };
 pub use packet::{

@@ -54,6 +54,25 @@ impl Flit {
         HeadFields::decode(&self.raw)
     }
 
+    /// Stamp the interface tile of origin into this head flit's spare
+    /// payload bits (see [`super::fields::CMD_ORIGIN_LO`]). The system
+    /// does this to every head leaving a fabric for the interconnect —
+    /// command heads (grants/notifies) and result-payload heads alike;
+    /// both keep those payload bits unused (payload packets carry their
+    /// data in body flits). Body/tail flits carry data in those bits and
+    /// must never be stamped.
+    pub fn stamp_origin(&mut self, node: u8) {
+        debug_assert!(self.is_head(), "origin stamp on a data flit");
+        debug_assert!(node < 128, "node ids are 7 bits");
+        self.raw
+            .set(super::fields::CMD_ORIGIN_LO, 8, 0x80 | node as u64);
+    }
+
+    /// The origin tile stamped into this head flit, if any.
+    pub fn command_origin(&self) -> Option<u8> {
+        super::fields::command_payload_origin(self.raw.get(0, 61))
+    }
+
     pub fn body_payload(&self) -> [u64; 2] {
         decode_body_payload(&self.raw)
     }

@@ -86,8 +86,9 @@ pub struct Channel {
     pob_cap_flits: usize,
     /// Map src_id -> NoC node for reply routing.
     reply_route: Vec<u8>,
-    /// Node id of the MMU (for HwaToMem results).
-    mmu_node: u8,
+    /// Map src_id -> assigned MMU node (for grants and HwaToMem results;
+    /// the floorplan's per-processor nearest/hashed assignment).
+    mmu_route: Vec<u8>,
     builder: PacketBuilder,
     pub stats: ChannelStats,
     /// Completed tasks log (drained by the fabric for metrics/compute
@@ -101,8 +102,9 @@ impl Channel {
         spec: HwaSpec,
         n_tbs: usize,
         reply_route: Vec<u8>,
-        mmu_node: u8,
+        mmu_route: Vec<u8>,
     ) -> Self {
+        assert!(!mmu_route.is_empty(), "at least one MMU node");
         let hwa_clock = ClockDomain::from_mhz(spec.name, spec.fmax_mhz);
         Self {
             hwa_id,
@@ -121,7 +123,7 @@ impl Channel {
             pob_flits: 0,
             pob_cap_flits: DEFAULT_POB_CAP_FLITS,
             reply_route,
-            mmu_node,
+            mmu_route,
             builder: PacketBuilder::new(0x8000_0000 | hwa_id as u32),
             stats: ChannelStats::default(),
             completed: Vec::new(),
@@ -130,6 +132,15 @@ impl Channel {
 
     pub fn n_tbs(&self) -> usize {
         self.tbs.len()
+    }
+
+    /// The MMU node serving `src_id` (out-of-range ids fall back to the
+    /// first route entry — such traffic is rejected upstream anyway).
+    fn mmu_for(&self, src_id: u8) -> u8 {
+        self.mmu_route
+            .get(src_id as usize)
+            .copied()
+            .unwrap_or(self.mmu_route[0])
     }
 
     // ------------------------------------------------------------------
@@ -176,7 +187,7 @@ impl Channel {
         // Grant routed to the requester (direct access) or the MMU
         // (memory access), §5 / Fig. 5.
         let grant_dest = match req.direction {
-            Direction::MemToHwa => self.mmu_node,
+            Direction::MemToHwa => self.mmu_for(req.src_id),
             _ => *reply_node,
         };
         self.tbs[free_tb].grant(t_req);
@@ -386,7 +397,7 @@ impl Channel {
             Some(node) => *node,
             None => {
                 self.stats.rejected_flits += 1;
-                self.mmu_node
+                self.mmu_for(src_id)
             }
         }
     }
@@ -439,7 +450,9 @@ impl Channel {
 
     fn make_result_packet(&mut self, task: &Task) -> Packet {
         let dest = match task.head.direction {
-            Direction::MemToHwa | Direction::HwaToMem => self.mmu_node,
+            Direction::MemToHwa | Direction::HwaToMem => {
+                self.mmu_for(task.head.src_id)
+            }
             _ => self.reply_dest(task.head.src_id),
         };
         let head = HeadFields {
@@ -510,7 +523,7 @@ mod tests {
     use crate::fpga::hwa::{spec_by_name, EchoCompute};
 
     fn channel(name: &str, tbs: usize) -> Channel {
-        Channel::new(0, spec_by_name(name).unwrap(), tbs, vec![0; 8], 7)
+        Channel::new(0, spec_by_name(name).unwrap(), tbs, vec![0; 8], vec![7; 8])
     }
 
     fn request(src: u8) -> HeadFields {
@@ -749,7 +762,7 @@ mod tests {
             spec_by_name("dfadd").unwrap(),
             2,
             vec![0; 2],
-            7,
+            vec![7; 8],
         );
         assert!(ch.push_request(request(5), 0));
         ch.step_lgc(100);

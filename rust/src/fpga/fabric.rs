@@ -39,16 +39,18 @@ pub struct FpgaConfig {
     pub pr: PrStrategy,
     pub ps: PsStrategy,
     pub iface_mhz: f64,
-    /// NoC node the FPGA occupies.
+    /// NoC node this FPGA interface tile occupies.
     pub node: u8,
-    /// NoC node of the MMU.
-    pub mmu_node: u8,
+    /// Map src_id (processor id) -> assigned MMU node (floorplans may
+    /// carry several MMU tiles; single-MMU systems repeat one node).
+    pub mmu_route: Vec<u8>,
     /// Map src_id (processor id) -> NoC node, for reply routing.
     pub reply_route: Vec<u8>,
 }
 
 impl FpgaConfig {
-    /// Paper defaults: 2 TBs (§6.2), PR4-PS4 (§6.3), 300 MHz (§6.1).
+    /// Paper defaults: 2 TBs (§6.2), PR4-PS4 (§6.3), 300 MHz (§6.1),
+    /// every processor served by the one `mmu_node`.
     pub fn paper_defaults(node: u8, mmu_node: u8, reply_route: Vec<u8>) -> Self {
         Self {
             n_tbs: 2,
@@ -56,7 +58,7 @@ impl FpgaConfig {
             ps: PsStrategy::hierarchical(4),
             iface_mhz: 300.0,
             node,
-            mmu_node,
+            mmu_route: vec![mmu_node; 8],
             reply_route,
         }
     }
@@ -108,7 +110,7 @@ impl Fpga {
                     spec,
                     config.n_tbs,
                     config.reply_route.clone(),
-                    config.mmu_node,
+                    config.mmu_route.clone(),
                 )
             })
             .collect();

@@ -189,7 +189,7 @@ mod tests {
             spec_by_name("dfadd").unwrap(),
             2,
             vec![0; 8],
-            7,
+            vec![7; 8],
         )]
     }
 

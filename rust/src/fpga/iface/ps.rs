@@ -209,7 +209,7 @@ mod tests {
     use crate::fpga::hwa::spec_by_name;
 
     fn mk_channel(hwa_id: u8) -> Channel {
-        Channel::new(hwa_id, spec_by_name("dfadd").unwrap(), 2, vec![0; 8], 7)
+        Channel::new(hwa_id, spec_by_name("dfadd").unwrap(), 2, vec![0; 8], vec![7; 8])
     }
 
     fn result_packet(ch: &mut Channel, priority: u8, words: usize) {

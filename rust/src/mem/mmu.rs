@@ -23,6 +23,10 @@ pub struct MmuStats {
 #[derive(Debug)]
 struct DmaJob {
     grant: HeadFields,
+    /// Interface tile the payload streams back to: the granting fabric
+    /// (stamped into the grant's command payload by the system), falling
+    /// back to the configured default for pre-floorplan traffic.
+    reply_to: u8,
     ready_at: Ps,
 }
 
@@ -68,12 +72,20 @@ impl Mmu {
                         CommandKind::Grant
                     );
                     self.stats.grants_decoded += 1;
+                    let reply_to = crate::flit::command_payload_origin(
+                        h.payload,
+                    )
+                    .unwrap_or(self.fpga_node);
                     let n_words = (h.data_size as usize) / 4;
                     let ready_at =
                         self.dram
                             .access_done_at(now, n_words, self.noc_period_ps);
                     self.stats.dma_reads += 1;
-                    self.jobs.push_back(DmaJob { grant: h, ready_at });
+                    self.jobs.push_back(DmaJob {
+                        grant: h,
+                        reply_to,
+                        ready_at,
+                    });
                 }
                 PacketType::Payload => {
                     // Result packet (HwaToMem): start accumulating.
@@ -112,7 +124,7 @@ impl Mmu {
             let words = self.dram.read_words(job.grant.start_addr, n_words);
             let pkt = self.builder.payload(
                 HeadFields {
-                    routing: self.fpga_node,
+                    routing: job.reply_to,
                     hwa_id: job.grant.hwa_id,
                     src_id: job.grant.src_id,
                     tb_id: job.grant.tb_id,
@@ -193,6 +205,21 @@ mod tests {
         assert_eq!(a as u32, 5);
         assert_eq!((b >> 32) as u32, 8);
         assert!(mmu.idle());
+    }
+
+    #[test]
+    fn grant_with_stamped_origin_routes_payload_to_that_fabric() {
+        // Floorplanned systems stamp the granting interface tile into
+        // the grant; the DMA payload must stream back to it, not to the
+        // configured default fabric.
+        let mut mmu = Mmu::new(7, 5, 1000);
+        mmu.dram.write_words(0x40, &[9, 9, 9, 9]);
+        let mut flit = grant(0x40, 16);
+        flit.stamp_origin(11);
+        mmu.deliver(flit, 0);
+        let done = mmu.dram.access_done_at(0, 4, 1000);
+        let head = mmu.step(done, true).expect("head flit");
+        assert_eq!(head.head_fields().routing, 11, "origin wins");
     }
 
     #[test]

@@ -21,7 +21,7 @@ use super::router::{Move, Port, Router, DEFAULT_IN_BUF, PORTS};
 /// Default ejection (local output) buffer capacity in flits.
 pub const DEFAULT_EJECT_CAP: u32 = 16;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MeshConfig {
     pub width: u8,
     pub height: u8,

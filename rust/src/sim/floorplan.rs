@@ -1,0 +1,599 @@
+//! Declarative floorplans: an explicit node → tile assignment over an
+//! arbitrary mesh, replacing the old hardcoded "FPGA at the last node,
+//! MMU beside it" layout.
+//!
+//! The paper's central claim is *scalability* of the FPGA–CMP
+//! integration over the NoC; a [`Floorplan`] makes the scenarios that
+//! claim is about representable: multiple FPGA interface tiles (each its
+//! own fabric with its own inventory and clock domains), multiple
+//! MMU/memory-controller tiles, and arbitrary placement on any mesh.
+//!
+//! The textual grammar is ESP-style rows of tile tokens, rows separated
+//! by `/`:
+//!
+//! ```
+//! use accnoc::sim::Floorplan;
+//!
+//! let plan = Floorplan::parse("P P F0 / P M P / P P F1").unwrap();
+//! assert_eq!((plan.mesh.width, plan.mesh.height), (3, 3));
+//! assert_eq!(plan.n_fabrics(), 2);
+//! assert_eq!(plan.fabric_nodes(), vec![2, 8]);
+//! assert_eq!(plan.mmu_nodes(), vec![4]);
+//! assert_eq!(plan.proc_nodes().len(), 6);
+//! ```
+//!
+//! Tokens: `P` = processor, `M` = MMU/memory controller, `F<k>` = FPGA
+//! interface block of fabric `k`, `.` (or `E`) = empty tile. Node ids
+//! are row-major (`id = y * width + x`), matching the mesh's router
+//! numbering.
+
+use crate::noc::mesh::MeshConfig;
+
+/// What occupies one mesh node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tile {
+    /// A CMP processor core (only the first 8 get cores — `src_id` is a
+    /// 3-bit wire field; further processor tiles are inert).
+    Proc,
+    /// An FPGA interface block: the NoC endpoint of fabric `fabric_id`.
+    FpgaIface { fabric_id: u8 },
+    /// An MMU / memory-controller tile (§5 Fig. 5b DMA endpoint).
+    Mmu,
+    /// Nothing — the router exists, no endpoint is attached.
+    Empty,
+}
+
+/// How processors are assigned to an MMU tile when the plan has more
+/// than one (single-MMU plans are unaffected — every choice degenerates
+/// to the one tile).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MmuAssign {
+    /// Each processor uses the MMU tile with the smallest Manhattan
+    /// distance from its own node (ties break toward the lower node id).
+    #[default]
+    Nearest,
+    /// Processor `src_id` uses MMU tile `src_id % n_mmus` — a hashed
+    /// spread that balances DMA load regardless of placement.
+    Hashed,
+}
+
+impl MmuAssign {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MmuAssign::Nearest => "nearest",
+            MmuAssign::Hashed => "hashed",
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Self, String> {
+        match text.trim() {
+            "nearest" => Ok(MmuAssign::Nearest),
+            "hashed" => Ok(MmuAssign::Hashed),
+            other => Err(format!("mmu_assign: {other:?} (nearest|hashed)")),
+        }
+    }
+}
+
+/// Why a floorplan (or the system configuration built on it) is
+/// unbuildable. Every variant is a construction-time rejection: nothing
+/// here can panic a running simulation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TopologyError {
+    /// The plan text had no rows/tokens.
+    EmptyPlan,
+    /// Row `row` is empty (a doubled or trailing `/` — rejected rather
+    /// than silently changing the mesh height).
+    EmptyRow { row: usize },
+    /// Row `row` has `got` tiles where the first row had `want`.
+    RaggedRows { row: usize, want: usize, got: usize },
+    /// A token that is not `P`, `M`, `F<k>`, `.` or `E`.
+    BadToken { token: String },
+    /// A programmatically-built plan whose tile vector does not cover
+    /// the mesh (the only way tiles can "overlap" or fall out of range).
+    TileCountMismatch { tiles: usize, nodes: usize },
+    /// More nodes than the 7-bit flit routing field can address.
+    TooManyNodes { nodes: usize },
+    /// Two tiles claim the same fabric id.
+    DuplicateFabricId { fabric_id: u8 },
+    /// Fabric ids must be contiguous from 0 (`F0..F<n-1>`).
+    NonContiguousFabricIds { n_fabrics: usize, missing: u8 },
+    /// No processor tile: nothing could ever submit work.
+    NoProcessors,
+    /// No MMU tile: memory-access invocations would be unroutable.
+    NoMmu,
+    /// No FPGA interface tile: nothing could ever execute work.
+    NoFabric,
+    /// `SystemConfig.fabrics` must provide exactly one `FabricSpec` per
+    /// `F<k>` tile in the plan.
+    FabricCountMismatch { plan: usize, specs: usize },
+    /// The AXI bus prototype models a single FPGA slave/master pair
+    /// (§6.7); plans with more than one fabric need the NoC.
+    AxiMultiFabric { fabrics: usize },
+    /// A chain group in a `FabricSpec` names a channel index beyond the
+    /// fabric's HWA inventory.
+    ChainGroupOutOfRange { fabric: usize, member: usize },
+}
+
+impl std::fmt::Display for TopologyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TopologyError::EmptyPlan => write!(f, "empty floorplan"),
+            TopologyError::EmptyRow { row } => write!(
+                f,
+                "floorplan row {row} is empty (doubled or trailing '/')"
+            ),
+            TopologyError::RaggedRows { row, want, got } => write!(
+                f,
+                "floorplan row {row} has {got} tiles, expected {want}"
+            ),
+            TopologyError::BadToken { token } => write!(
+                f,
+                "bad floorplan token {token:?} (want P, M, F<k>, or .)"
+            ),
+            TopologyError::TileCountMismatch { tiles, nodes } => write!(
+                f,
+                "{tiles} tiles for a {nodes}-node mesh"
+            ),
+            TopologyError::TooManyNodes { nodes } => write!(
+                f,
+                "{nodes} nodes exceed the 7-bit flit routing field (128)"
+            ),
+            TopologyError::DuplicateFabricId { fabric_id } => {
+                write!(f, "fabric id F{fabric_id} appears on two tiles")
+            }
+            TopologyError::NonContiguousFabricIds { n_fabrics, missing } => {
+                write!(
+                    f,
+                    "{n_fabrics} fabric tiles but F{missing} is missing \
+                     (ids must be F0..F{})",
+                    n_fabrics.saturating_sub(1)
+                )
+            }
+            TopologyError::NoProcessors => {
+                write!(f, "floorplan has no processor tiles")
+            }
+            TopologyError::NoMmu => write!(f, "floorplan has no MMU tile"),
+            TopologyError::NoFabric => {
+                write!(f, "floorplan has no FPGA interface tile")
+            }
+            TopologyError::FabricCountMismatch { plan, specs } => write!(
+                f,
+                "floorplan has {plan} fabric tiles but {specs} FabricSpecs \
+                 were provided"
+            ),
+            TopologyError::AxiMultiFabric { fabrics } => write!(
+                f,
+                "the AXI prototype supports exactly one fabric endpoint, \
+                 got {fabrics} (use net = noc for multi-FPGA plans)"
+            ),
+            TopologyError::ChainGroupOutOfRange { fabric, member } => write!(
+                f,
+                "fabric {fabric}: chain group member {member} names no \
+                 configured channel"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TopologyError {}
+
+/// An explicit node → tile assignment over a mesh.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Floorplan {
+    pub mesh: MeshConfig,
+    /// One tile per node, row-major (`tiles[y * width + x]`).
+    pub tiles: Vec<Tile>,
+}
+
+impl Floorplan {
+    /// The legacy single-FPGA lowering the entire pre-floorplan test and
+    /// experiment corpus assumed: FPGA interface at the last node, MMU
+    /// beside it, processors everywhere else. `SystemConfig::paper`
+    /// builds exactly this plan.
+    pub fn single_fpga(mesh: MeshConfig) -> Self {
+        let n = mesh.width as usize * mesh.height as usize;
+        let mut tiles = vec![Tile::Proc; n];
+        if n >= 1 {
+            tiles[n - 1] = Tile::FpgaIface { fabric_id: 0 };
+        }
+        if n >= 2 {
+            tiles[n - 2] = Tile::Mmu;
+        }
+        Self { mesh, tiles }
+    }
+
+    /// Parse the row grammar (`"P P F0 / P M P / P P F1"`). Mesh
+    /// dimensions come from the text (buffer depths stay at the mesh
+    /// defaults); the result is validated.
+    pub fn parse(text: &str) -> Result<Self, TopologyError> {
+        if text.trim().is_empty() {
+            return Err(TopologyError::EmptyPlan);
+        }
+        let rows: Vec<&str> = text.split('/').map(str::trim).collect();
+        let mut tiles = Vec::new();
+        let mut width = 0usize;
+        for (y, row) in rows.iter().enumerate() {
+            // An empty row is a typo (doubled/trailing '/'), not a
+            // request for a shorter mesh.
+            if row.is_empty() {
+                return Err(TopologyError::EmptyRow { row: y });
+            }
+            let toks: Vec<&str> = row.split_whitespace().collect();
+            if y == 0 {
+                width = toks.len();
+                if width == 0 {
+                    return Err(TopologyError::EmptyPlan);
+                }
+            } else if toks.len() != width {
+                return Err(TopologyError::RaggedRows {
+                    row: y,
+                    want: width,
+                    got: toks.len(),
+                });
+            }
+            for tok in toks {
+                tiles.push(Self::parse_token(tok)?);
+            }
+        }
+        if width > u8::MAX as usize || rows.len() > u8::MAX as usize {
+            return Err(TopologyError::TooManyNodes { nodes: tiles.len() });
+        }
+        let plan = Self {
+            mesh: MeshConfig {
+                width: width as u8,
+                height: rows.len() as u8,
+                ..MeshConfig::default()
+            },
+            tiles,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    fn parse_token(tok: &str) -> Result<Tile, TopologyError> {
+        match tok {
+            "P" | "p" => Ok(Tile::Proc),
+            "M" | "m" => Ok(Tile::Mmu),
+            "." | "E" | "e" => Ok(Tile::Empty),
+            _ => {
+                let bad = || TopologyError::BadToken {
+                    token: tok.to_string(),
+                };
+                let id = tok
+                    .strip_prefix('F')
+                    .or_else(|| tok.strip_prefix('f'))
+                    .ok_or_else(bad)?;
+                let id: u8 = id.parse().map_err(|_| bad())?;
+                Ok(Tile::FpgaIface { fabric_id: id })
+            }
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.mesh.width as usize * self.mesh.height as usize
+    }
+
+    /// Reject every unbuildable plan with a specific [`TopologyError`]:
+    /// tile/node mismatches (the dense form of "overlapping or
+    /// out-of-range tiles"), duplicate or gappy fabric ids, and plans
+    /// with no processors, no MMU, or no fabric.
+    pub fn validate(&self) -> Result<(), TopologyError> {
+        let nodes = self.n_nodes();
+        if self.tiles.len() != nodes {
+            return Err(TopologyError::TileCountMismatch {
+                tiles: self.tiles.len(),
+                nodes,
+            });
+        }
+        if nodes > 128 {
+            return Err(TopologyError::TooManyNodes { nodes });
+        }
+        let mut fabric_ids: Vec<u8> = Vec::new();
+        let mut procs = 0usize;
+        let mut mmus = 0usize;
+        for tile in &self.tiles {
+            match tile {
+                Tile::Proc => procs += 1,
+                Tile::Mmu => mmus += 1,
+                Tile::Empty => {}
+                Tile::FpgaIface { fabric_id } => {
+                    if fabric_ids.contains(fabric_id) {
+                        return Err(TopologyError::DuplicateFabricId {
+                            fabric_id: *fabric_id,
+                        });
+                    }
+                    fabric_ids.push(*fabric_id);
+                }
+            }
+        }
+        if fabric_ids.is_empty() {
+            return Err(TopologyError::NoFabric);
+        }
+        for want in 0..fabric_ids.len() as u8 {
+            if !fabric_ids.contains(&want) {
+                return Err(TopologyError::NonContiguousFabricIds {
+                    n_fabrics: fabric_ids.len(),
+                    missing: want,
+                });
+            }
+        }
+        if mmus == 0 {
+            return Err(TopologyError::NoMmu);
+        }
+        if procs == 0 {
+            return Err(TopologyError::NoProcessors);
+        }
+        Ok(())
+    }
+
+    /// Number of FPGA interface tiles (== number of fabrics after
+    /// validation).
+    pub fn n_fabrics(&self) -> usize {
+        self.tiles
+            .iter()
+            .filter(|t| matches!(t, Tile::FpgaIface { .. }))
+            .count()
+    }
+
+    /// Node of each fabric's interface tile, indexed by fabric id
+    /// (`fabric_nodes()[k]` is where `F<k>` sits).
+    pub fn fabric_nodes(&self) -> Vec<usize> {
+        let mut nodes = vec![usize::MAX; self.n_fabrics()];
+        for (node, tile) in self.tiles.iter().enumerate() {
+            if let Tile::FpgaIface { fabric_id } = tile {
+                if let Some(slot) = nodes.get_mut(*fabric_id as usize) {
+                    *slot = node;
+                }
+            }
+        }
+        nodes
+    }
+
+    /// Nodes of every MMU tile, ascending.
+    pub fn mmu_nodes(&self) -> Vec<usize> {
+        self.tiles
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| matches!(t, Tile::Mmu))
+            .map(|(n, _)| n)
+            .collect()
+    }
+
+    /// Nodes of every processor tile, ascending. Only the first 8 host
+    /// cores (3-bit `src_id`); the rest are inert.
+    pub fn proc_nodes(&self) -> Vec<usize> {
+        self.tiles
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| matches!(t, Tile::Proc))
+            .map(|(n, _)| n)
+            .collect()
+    }
+
+    /// Manhattan distance between two nodes on this mesh.
+    pub fn distance(&self, a: usize, b: usize) -> usize {
+        let w = self.mesh.width as usize;
+        let (ax, ay) = (a % w, a / w);
+        let (bx, by) = (b % w, b / w);
+        ax.abs_diff(bx) + ay.abs_diff(by)
+    }
+
+    /// The MMU node assigned to a processor at `node` under `assign`
+    /// (where `src_id` is the processor's 3-bit wire id).
+    pub fn mmu_for(&self, node: usize, src_id: usize, assign: MmuAssign) -> usize {
+        let mmus = self.mmu_nodes();
+        debug_assert!(!mmus.is_empty(), "validated plans have an MMU");
+        match assign {
+            MmuAssign::Hashed => mmus[src_id % mmus.len()],
+            MmuAssign::Nearest => *mmus
+                .iter()
+                .min_by_key(|m| (self.distance(node, **m), **m))
+                .expect("non-empty"),
+        }
+    }
+
+    /// Canonical single-line form (`"P P F0 / P M P / P P F1"`), the
+    /// inverse of [`Floorplan::parse`].
+    pub fn to_spec_string(&self) -> String {
+        let w = self.mesh.width as usize;
+        let mut rows = Vec::new();
+        for chunk in self.tiles.chunks(w) {
+            let row: Vec<String> = chunk
+                .iter()
+                .map(|t| match t {
+                    Tile::Proc => "P".to_string(),
+                    Tile::Mmu => "M".to_string(),
+                    Tile::Empty => ".".to_string(),
+                    Tile::FpgaIface { fabric_id } => format!("F{fabric_id}"),
+                })
+                .collect();
+            rows.push(row.join(" "));
+        }
+        rows.join(" / ")
+    }
+
+    /// Multi-line tile map for human output (`accnoc topology`): one row
+    /// per mesh row, processor tiles numbered by core id.
+    pub fn render(&self) -> String {
+        let w = self.mesh.width as usize;
+        let mut out = String::new();
+        let mut core = 0usize;
+        let cells: Vec<String> = self
+            .tiles
+            .iter()
+            .map(|t| match t {
+                Tile::Proc => {
+                    let label = if core < 8 {
+                        format!("P{core}")
+                    } else {
+                        "P-".to_string()
+                    };
+                    core += 1;
+                    label
+                }
+                Tile::Mmu => "M".to_string(),
+                Tile::Empty => ".".to_string(),
+                Tile::FpgaIface { fabric_id } => format!("F{fabric_id}"),
+            })
+            .collect();
+        for row in cells.chunks(w) {
+            out.push_str("  ");
+            for cell in row {
+                out.push_str(&format!("{cell:>4}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for Floorplan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_spec_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legacy_lowering_matches_the_old_hardcoded_layout() {
+        let plan = Floorplan::single_fpga(MeshConfig::default());
+        assert_eq!(plan.n_nodes(), 9);
+        assert_eq!(plan.fabric_nodes(), vec![8], "FPGA at the last node");
+        assert_eq!(plan.mmu_nodes(), vec![7], "MMU beside it");
+        assert_eq!(plan.proc_nodes(), vec![0, 1, 2, 3, 4, 5, 6]);
+        assert!(plan.validate().is_ok());
+    }
+
+    #[test]
+    fn parse_round_trips_through_display() {
+        for text in [
+            "P P F0 / P M P / P P F1",
+            "F0 P F1 / P M P / F2 P F3",
+            "P M / F0 .",
+        ] {
+            let plan = Floorplan::parse(text).unwrap();
+            assert_eq!(plan.to_spec_string(), text);
+            let again = Floorplan::parse(&plan.to_spec_string()).unwrap();
+            assert_eq!(again.tiles, plan.tiles);
+        }
+    }
+
+    #[test]
+    fn parse_derives_mesh_dimensions() {
+        let plan = Floorplan::parse("P P P P / M F0 P P").unwrap();
+        assert_eq!((plan.mesh.width, plan.mesh.height), (4, 2));
+        assert_eq!(plan.fabric_nodes(), vec![5]);
+    }
+
+    #[test]
+    fn rejects_ragged_rows_and_bad_tokens() {
+        assert_eq!(
+            Floorplan::parse("P P F0 / P M"),
+            Err(TopologyError::RaggedRows {
+                row: 1,
+                want: 3,
+                got: 2
+            })
+        );
+        assert_eq!(
+            Floorplan::parse("P Q / M F0"),
+            Err(TopologyError::BadToken {
+                token: "Q".to_string()
+            })
+        );
+        assert_eq!(Floorplan::parse("  "), Err(TopologyError::EmptyPlan));
+        // A doubled '/' must not silently shrink the mesh.
+        assert_eq!(
+            Floorplan::parse("P P F0 / / P M P"),
+            Err(TopologyError::EmptyRow { row: 1 })
+        );
+        assert_eq!(
+            Floorplan::parse("P M F0 /"),
+            Err(TopologyError::EmptyRow { row: 1 })
+        );
+    }
+
+    #[test]
+    fn rejects_plans_missing_a_role() {
+        assert_eq!(
+            Floorplan::parse("M F0 / F1 ."),
+            Err(TopologyError::NoProcessors)
+        );
+        assert_eq!(
+            Floorplan::parse("P F0 / P P"),
+            Err(TopologyError::NoMmu)
+        );
+        assert_eq!(
+            Floorplan::parse("P M / P P"),
+            Err(TopologyError::NoFabric)
+        );
+    }
+
+    #[test]
+    fn rejects_duplicate_and_gappy_fabric_ids() {
+        assert_eq!(
+            Floorplan::parse("P F0 / M F0"),
+            Err(TopologyError::DuplicateFabricId { fabric_id: 0 })
+        );
+        assert_eq!(
+            Floorplan::parse("P F0 / M F2"),
+            Err(TopologyError::NonContiguousFabricIds {
+                n_fabrics: 2,
+                missing: 1
+            })
+        );
+    }
+
+    #[test]
+    fn rejects_tile_count_mismatch() {
+        // A programmatically-built plan whose tiles do not cover the
+        // mesh — the dense-representation analog of an out-of-range or
+        // overlapping tile assignment.
+        let mut plan = Floorplan::single_fpga(MeshConfig::default());
+        plan.tiles.pop();
+        assert_eq!(
+            plan.validate(),
+            Err(TopologyError::TileCountMismatch { tiles: 8, nodes: 9 })
+        );
+    }
+
+    #[test]
+    fn too_small_legacy_mesh_is_rejected_not_silently_empty() {
+        // The old SystemConfig accepted a 1x2 mesh and built a system
+        // with zero processors; the plan now rejects it.
+        let plan = Floorplan::single_fpga(MeshConfig {
+            width: 1,
+            height: 2,
+            ..MeshConfig::default()
+        });
+        assert_eq!(plan.validate(), Err(TopologyError::NoProcessors));
+    }
+
+    #[test]
+    fn nearest_mmu_assignment_uses_manhattan_distance() {
+        // M at nodes 1 and 7 on a 3x3: node 0 is nearer 1; node 6 nearer 7.
+        let plan = Floorplan::parse("P M P / P F0 P / P M P").unwrap();
+        assert_eq!(plan.mmu_nodes(), vec![1, 7]);
+        assert_eq!(plan.mmu_for(0, 0, MmuAssign::Nearest), 1);
+        assert_eq!(plan.mmu_for(6, 4, MmuAssign::Nearest), 7);
+        // Equidistant (node 3): ties break toward the lower node id.
+        assert_eq!(plan.mmu_for(3, 1, MmuAssign::Nearest), 1);
+        // Hashed spreads by src_id.
+        assert_eq!(plan.mmu_for(0, 0, MmuAssign::Hashed), 1);
+        assert_eq!(plan.mmu_for(0, 1, MmuAssign::Hashed), 7);
+        assert_eq!(plan.mmu_for(0, 2, MmuAssign::Hashed), 1);
+    }
+
+    #[test]
+    fn render_labels_cores_in_node_order() {
+        let plan = Floorplan::parse("P P F0 / P M P").unwrap();
+        let grid = plan.render();
+        assert!(grid.contains("P0"));
+        assert!(grid.contains("P3"), "{grid}");
+        assert!(grid.contains("F0"));
+        assert_eq!(grid.lines().count(), 2);
+    }
+}

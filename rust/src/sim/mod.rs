@@ -18,11 +18,16 @@
 //! let dfadd = rt.accel(0).unwrap();
 //! let receipt = rt.submit(0, Job::on(dfadd).direct(vec![1, 2, 3, 4])).unwrap();
 //! assert!(rt.run_until_done(50_000_000)); // 50 simulated µs
-//! assert_eq!(rt.system().fabric.tasks_executed(), 1);
+//! assert_eq!(rt.system().fabric().tasks_executed(), 1);
 //! assert!(rt.poll(receipt).is_some());
 //! ```
 
 pub mod experiments;
+pub mod floorplan;
 pub mod system;
 
-pub use system::{Fabric, FabricKind, Net, NetKind, System, SystemConfig};
+pub use floorplan::{Floorplan, MmuAssign, Tile, TopologyError};
+pub use system::{
+    Fabric, FabricKind, FabricSpec, FabricTileStats, Net, NetKind, System,
+    SystemConfig,
+};

@@ -1,7 +1,12 @@
 //! Full-system assembly (paper Fig. 1): CMP cores + interconnect + FPGA
-//! fabric + MMU, driven by a multi-domain clock. Three prototypes are
-//! expressible (§6.7/§6.8): NoC + distributed buffers (the proposal),
-//! AXI4 bus + distributed buffers, and NoC + shared FPGA cache.
+//! fabrics + MMU tiles, driven by a multi-domain clock and wired from a
+//! declarative [`Floorplan`]. Three prototypes are expressible
+//! (§6.7/§6.8): NoC + distributed buffers (the proposal), AXI4 bus +
+//! distributed buffers, and NoC + shared FPGA cache — and the NoC
+//! prototypes scale to **multiple FPGA interface tiles** (each its own
+//! fabric, inventory and clock domains) and **multiple MMU tiles**
+//! (nearest or hashed per-processor assignment), the scenarios the
+//! paper's scalability argument is about.
 
 use crate::baseline::axi::AxiBus;
 use crate::baseline::shared_cache::CacheFpga;
@@ -12,6 +17,9 @@ use crate::fpga::fabric::{Fpga, FpgaConfig};
 use crate::fpga::hwa::{HwaCompute, HwaSpec};
 use crate::mem::mmu::Mmu;
 use crate::noc::mesh::{Mesh, MeshConfig};
+use crate::workload::openloop::{OpenLoopSource, OpenLoopTarget};
+
+use super::floorplan::{Floorplan, MmuAssign, TopologyError};
 
 /// Interconnect selection (Fig. 13/14's three prototypes use Noc or Axi).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -20,7 +28,7 @@ pub enum NetKind {
     Axi,
 }
 
-/// FPGA-side architecture.
+/// FPGA-side architecture of one fabric.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FabricKind {
     /// The paper's proposal: distributed TB/POB/CB buffers.
@@ -29,26 +37,27 @@ pub enum FabricKind {
     SharedCache { cache_bytes: u32 },
 }
 
+/// Everything that configures ONE FPGA interface tile: its architecture,
+/// buffer/arbitration shape, clocking, HWA inventory and chain groups.
+/// A [`SystemConfig`] carries one `FabricSpec` per `F<k>` floorplan tile.
 #[derive(Debug, Clone)]
-pub struct SystemConfig {
-    pub mesh: MeshConfig,
-    pub net: NetKind,
-    pub fabric: FabricKind,
+pub struct FabricSpec {
+    pub kind: FabricKind,
     pub n_tbs: usize,
     pub pr_group: usize,
     pub ps_group: usize,
     pub iface_mhz: f64,
     pub specs: Vec<HwaSpec>,
+    /// Chain groups over this fabric's channel indices (chains never
+    /// cross fabrics — the driver rejects that with a typed error).
     pub chain_groups: Vec<Vec<usize>>,
 }
 
-impl SystemConfig {
-    /// Paper defaults: 3x3 mesh, NoC, buffered fabric, 2 TBs, PR4-PS4.
+impl FabricSpec {
+    /// Paper defaults: buffered fabric, 2 TBs, PR4-PS4, 300 MHz.
     pub fn paper(specs: Vec<HwaSpec>) -> Self {
         Self {
-            mesh: MeshConfig::default(),
-            net: NetKind::Noc,
-            fabric: FabricKind::Buffered,
+            kind: FabricKind::Buffered,
             n_tbs: 2,
             pr_group: 4,
             ps_group: 4,
@@ -57,24 +66,107 @@ impl SystemConfig {
             chain_groups: Vec::new(),
         }
     }
+}
+
+/// The system description: a floorplan plus one [`FabricSpec`] per
+/// fabric tile. `SystemConfig::paper` is the compatibility constructor —
+/// it lowers to the exact single-FPGA floorplan (FPGA last node, MMU
+/// beside it) every pre-floorplan experiment assumed, so existing
+/// configs produce bit-identical results.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub floorplan: Floorplan,
+    pub net: NetKind,
+    /// One spec per `F<k>` tile, indexed by fabric id.
+    pub fabrics: Vec<FabricSpec>,
+    /// Processor → MMU tile assignment policy (multi-MMU plans).
+    pub mmu_assign: MmuAssign,
+}
+
+impl SystemConfig {
+    /// Paper defaults: 3x3 mesh, NoC, one buffered fabric with the given
+    /// inventory at the legacy placement.
+    pub fn paper(specs: Vec<HwaSpec>) -> Self {
+        Self::single(MeshConfig::default(), FabricSpec::paper(specs))
+    }
+
+    /// One fabric on the legacy single-FPGA floorplan over `mesh`.
+    pub fn single(mesh: MeshConfig, fabric: FabricSpec) -> Self {
+        Self {
+            floorplan: Floorplan::single_fpga(mesh),
+            net: NetKind::Noc,
+            fabrics: vec![fabric],
+            mmu_assign: MmuAssign::Nearest,
+        }
+    }
+
+    /// A floorplanned system: `fabrics[k]` configures tile `F<k>`.
+    pub fn floorplanned(plan: Floorplan, fabrics: Vec<FabricSpec>) -> Self {
+        Self {
+            floorplan: plan,
+            net: NetKind::Noc,
+            fabrics,
+            mmu_assign: MmuAssign::Nearest,
+        }
+    }
+
+    /// Re-lower onto the legacy single-FPGA layout over a `w`x`h` mesh
+    /// (convenience for tests/benches that only vary mesh size).
+    pub fn set_mesh(&mut self, width: u8, height: u8) {
+        self.floorplan = Floorplan::single_fpga(MeshConfig {
+            width,
+            height,
+            ..self.floorplan.mesh.clone()
+        });
+    }
+
+    pub fn mesh(&self) -> &MeshConfig {
+        &self.floorplan.mesh
+    }
 
     pub fn n_nodes(&self) -> usize {
-        self.mesh.width as usize * self.mesh.height as usize
+        self.floorplan.n_nodes()
     }
 
-    /// FPGA sits at the last node, MMU beside it; processors elsewhere.
-    pub fn fpga_node(&self) -> usize {
-        self.n_nodes() - 1
+    /// The primary (fabric 0) spec — what single-fabric callers mutate.
+    pub fn primary(&self) -> &FabricSpec {
+        &self.fabrics[0]
     }
 
-    pub fn mmu_node(&self) -> usize {
-        self.n_nodes() - 2
+    pub fn primary_mut(&mut self) -> &mut FabricSpec {
+        &mut self.fabrics[0]
     }
 
-    pub fn proc_nodes(&self) -> Vec<usize> {
-        (0..self.n_nodes())
-            .filter(|n| *n != self.fpga_node() && *n != self.mmu_node())
-            .collect()
+    /// Full construction-time validation: the floorplan itself, the
+    /// fabric-spec count, chain-group ranges, and the AXI prototype's
+    /// single-endpoint constraint.
+    pub fn validate(&self) -> Result<(), TopologyError> {
+        self.floorplan.validate()?;
+        let plan_fabrics = self.floorplan.n_fabrics();
+        if self.fabrics.len() != plan_fabrics {
+            return Err(TopologyError::FabricCountMismatch {
+                plan: plan_fabrics,
+                specs: self.fabrics.len(),
+            });
+        }
+        if self.net == NetKind::Axi && plan_fabrics != 1 {
+            return Err(TopologyError::AxiMultiFabric {
+                fabrics: plan_fabrics,
+            });
+        }
+        for (f, spec) in self.fabrics.iter().enumerate() {
+            for group in &spec.chain_groups {
+                for member in group {
+                    if *member >= spec.specs.len() {
+                        return Err(TopologyError::ChainGroupOutOfRange {
+                            fabric: f,
+                            member: *member,
+                        });
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -288,19 +380,43 @@ impl Fabric {
     }
 }
 
+/// One fabric tile as wired into the running system: its NoC node, its
+/// clock domains and the fabric model itself.
+struct FabricSlot {
+    node: usize,
+    iface_dom: DomainId,
+    hwa_doms: Vec<(DomainId, Vec<usize>)>,
+    fabric: Fabric,
+}
+
+/// Per-fabric counter snapshot (surfaced as the `fabrics` array in
+/// multi-fabric `BENCH_*.json` stats).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FabricTileStats {
+    pub fabric: usize,
+    pub node: usize,
+    pub tasks_executed: u64,
+    pub flits_from_noc: u64,
+    pub flits_to_noc: u64,
+    pub rejected_flits: u64,
+    pub busy_iface_cycles: u64,
+    pub iface_cycles: u64,
+}
+
 pub struct System {
     pub config: SystemConfig,
     pub clk: MultiClock,
     noc_dom: DomainId,
-    iface_dom: DomainId,
-    hwa_doms: Vec<(DomainId, Vec<usize>)>,
+    slots: Vec<FabricSlot>,
     pub net: Net,
-    pub fabric: Fabric,
     pub procs: Vec<Processor>,
     /// Open-loop traffic sources replacing processors (per slot) for the
     /// §6.4 injection-rate experiments.
-    pub open_sources: Vec<Option<crate::workload::openloop::OpenLoopSource>>,
-    pub mmu: Mmu,
+    pub open_sources: Vec<Option<OpenLoopSource>>,
+    mmus: Vec<Mmu>,
+    /// src_id → assigned MMU node (the floorplan's per-processor
+    /// nearest/hashed assignment, shared by every fabric's channels).
+    mmu_route: Vec<u8>,
     ticking: Vec<DomainId>,
     /// Idle-skipping event-driven scheduling (on by default). Each clock
     /// domain reports an [`Activity`] horizon every step; the scheduler
@@ -322,104 +438,258 @@ pub struct System {
 }
 
 impl System {
+    /// Build a system, panicking on an invalid topology — the behavior
+    /// every pre-floorplan caller relied on. Fallible construction (the
+    /// sweep harness, anything user-facing) goes through
+    /// [`System::try_new`].
     pub fn new(config: SystemConfig) -> Self {
+        Self::try_new(config)
+            .unwrap_or_else(|e| panic!("invalid system topology: {e}"))
+    }
+
+    /// Build a system from a validated configuration; every topology
+    /// defect is a typed [`TopologyError`], not a panic.
+    pub fn try_new(config: SystemConfig) -> Result<Self, TopologyError> {
+        config.validate()?;
+        let plan = &config.floorplan;
         let mut clk = MultiClock::new();
         let noc_clock = ClockDomain::from_mhz("noc+cmp", 1000.0);
         let noc_dom = clk.add(noc_clock.clone());
-        let fpga_node = config.fpga_node() as u8;
-        let mmu_node = config.mmu_node() as u8;
+        let fabric_nodes = plan.fabric_nodes();
+        let mmu_nodes = plan.mmu_nodes();
+        let proc_nodes = plan.proc_nodes();
         // src_id (3 bits) -> node map for replies.
-        let proc_nodes = config.proc_nodes();
         let mut reply_route = vec![0u8; 8];
         for (i, n) in proc_nodes.iter().enumerate().take(8) {
             reply_route[i] = *n as u8;
         }
-        let fabric = match config.fabric {
-            FabricKind::Buffered => {
-                let fcfg = FpgaConfig {
-                    n_tbs: config.n_tbs,
-                    pr: crate::fpga::PrStrategy::distributed(config.pr_group),
-                    ps: crate::fpga::PsStrategy::hierarchical(
-                        config.ps_group.min(config.specs.len().max(1)),
-                    ),
-                    iface_mhz: config.iface_mhz,
-                    node: fpga_node,
-                    mmu_node,
-                    reply_route: reply_route.clone(),
-                };
-                let mut f = Fpga::new(fcfg, config.specs.clone(), &noc_clock);
-                for g in &config.chain_groups {
-                    f.add_chain_group(g.clone());
+        // src_id -> assigned MMU node (per-processor nearest/hashed).
+        let mut mmu_route = vec![mmu_nodes[0] as u8; 8];
+        for (i, n) in proc_nodes.iter().enumerate().take(8) {
+            mmu_route[i] = plan.mmu_for(*n, i, config.mmu_assign) as u8;
+        }
+        let mut slots = Vec::with_capacity(config.fabrics.len());
+        for (fid, fspec) in config.fabrics.iter().enumerate() {
+            let node = fabric_nodes[fid];
+            let fabric = match fspec.kind {
+                FabricKind::Buffered => {
+                    let fcfg = FpgaConfig {
+                        n_tbs: fspec.n_tbs,
+                        pr: crate::fpga::PrStrategy::distributed(fspec.pr_group),
+                        ps: crate::fpga::PsStrategy::hierarchical(
+                            fspec.ps_group.min(fspec.specs.len().max(1)),
+                        ),
+                        iface_mhz: fspec.iface_mhz,
+                        node: node as u8,
+                        mmu_route: mmu_route.clone(),
+                        reply_route: reply_route.clone(),
+                    };
+                    let mut f = Fpga::new(fcfg, fspec.specs.clone(), &noc_clock);
+                    for g in &fspec.chain_groups {
+                        f.add_chain_group(g.clone());
+                    }
+                    Fabric::Buffered(f)
                 }
-                Fabric::Buffered(f)
-            }
-            FabricKind::SharedCache { cache_bytes } => Fabric::Cached(
-                CacheFpga::new(
-                    fpga_node,
-                    mmu_node,
-                    reply_route.clone(),
-                    config.specs.clone(),
-                    cache_bytes,
-                    &noc_clock,
-                ),
+                FabricKind::SharedCache { cache_bytes } => {
+                    Fabric::Cached(CacheFpga::new(
+                        node as u8,
+                        mmu_route.clone(),
+                        reply_route.clone(),
+                        fspec.specs.clone(),
+                        cache_bytes,
+                        &noc_clock,
+                    ))
+                }
+            };
+            let iface_dom = clk.add(match &fabric {
+                Fabric::Buffered(f) => f.iface_clock.clone(),
+                Fabric::Cached(f) => f.iface_clock.clone(),
+            });
+            let hwa_doms = match &fabric {
+                Fabric::Buffered(f) => f
+                    .hwa_domains()
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, (p, chans))| {
+                        let d = clk.add(ClockDomain {
+                            name: format!("f{fid}hwa{i}"),
+                            period_ps: p,
+                            phase_ps: 0,
+                        });
+                        (d, chans)
+                    })
+                    .collect(),
+                Fabric::Cached(_) => Vec::new(),
+            };
+            slots.push(FabricSlot {
+                node,
+                iface_dom,
+                hwa_doms,
+                fabric,
+            });
+        }
+        let net = match config.net {
+            NetKind::Noc => Net::Noc(Mesh::new(plan.mesh.clone())),
+            NetKind::Axi => Net::Axi(
+                AxiBus::new(plan.n_nodes(), &fabric_nodes).map_err(|e| {
+                    TopologyError::AxiMultiFabric {
+                        fabrics: e.endpoints(),
+                    }
+                })?,
             ),
         };
-        let iface_dom = clk.add(match &fabric {
-            Fabric::Buffered(f) => f.iface_clock.clone(),
-            Fabric::Cached(f) => f.iface_clock.clone(),
-        });
-        let hwa_doms = match &fabric {
-            Fabric::Buffered(f) => f
-                .hwa_domains()
-                .into_iter()
-                .enumerate()
-                .map(|(i, (p, chans))| {
-                    let d = clk.add(ClockDomain {
-                        name: format!("hwa{i}"),
-                        period_ps: p,
-                        phase_ps: 0,
-                    });
-                    (d, chans)
-                })
-                .collect(),
-            Fabric::Cached(_) => Vec::new(),
-        };
-        let net = match config.net {
-            NetKind::Noc => Net::Noc(Mesh::new(config.mesh.clone())),
-            NetKind::Axi => {
-                Net::Axi(AxiBus::new(config.n_nodes(), config.fpga_node()))
-            }
-        };
-        let procs = proc_nodes
+        // Processors default-route to fabric 0; per-job destinations come
+        // from the driver's compiled `InvokeSpec::dest_node`.
+        let primary_node = fabric_nodes[0] as u8;
+        let procs: Vec<Processor> = proc_nodes
             .iter()
             .enumerate()
             .take(8)
             .map(|(i, n)| {
-                Processor::new(i as u8, *n as u8, fpga_node, Vec::new())
+                Processor::new(i as u8, *n as u8, primary_node, Vec::new())
             })
             .collect();
-        let mmu = Mmu::new(mmu_node, fpga_node, noc_clock.period_ps);
+        let mmus = mmu_nodes
+            .iter()
+            .map(|n| Mmu::new(*n as u8, primary_node, noc_clock.period_ps))
+            .collect();
         let n_procs = proc_nodes.len().min(8);
         let n_domains = clk.n_domains();
-        Self {
+        Ok(Self {
             config,
             clk,
             noc_dom,
-            iface_dom,
-            hwa_doms,
+            slots,
             net,
-            fabric,
             procs,
             open_sources: (0..n_procs).map(|_| None).collect(),
-            mmu,
+            mmus,
+            mmu_route,
             ticking: Vec::new(),
             idle_skip: true,
             skip_scratch: Vec::new(),
             edges_stepped: 0,
             edges_skipped: 0,
             edges_skipped_by: vec![0; n_domains],
-        }
+        })
     }
+
+    // ------------------------------------------------------------------
+    // Fabric / MMU access
+    // ------------------------------------------------------------------
+
+    pub fn n_fabrics(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The primary fabric (fabric 0) — the single-fabric surface every
+    /// legacy caller uses.
+    pub fn fabric(&self) -> &Fabric {
+        &self.slots[0].fabric
+    }
+
+    pub fn fabric_mut(&mut self) -> &mut Fabric {
+        &mut self.slots[0].fabric
+    }
+
+    pub fn fabric_at(&self, fabric: usize) -> &Fabric {
+        &self.slots[fabric].fabric
+    }
+
+    pub fn fabric_at_mut(&mut self, fabric: usize) -> &mut Fabric {
+        &mut self.slots[fabric].fabric
+    }
+
+    /// NoC node of fabric `fabric`'s interface tile.
+    pub fn fabric_node(&self, fabric: usize) -> usize {
+        self.slots[fabric].node
+    }
+
+    pub fn n_mmus(&self) -> usize {
+        self.mmus.len()
+    }
+
+    /// The primary MMU (lowest node id).
+    pub fn mmu(&self) -> &Mmu {
+        &self.mmus[0]
+    }
+
+    pub fn mmu_mut(&mut self) -> &mut Mmu {
+        &mut self.mmus[0]
+    }
+
+    pub fn mmus(&self) -> &[Mmu] {
+        &self.mmus
+    }
+
+    pub fn mmu_at_mut(&mut self, i: usize) -> &mut Mmu {
+        &mut self.mmus[i]
+    }
+
+    /// The MMU node assigned to processor `src` by the floorplan's
+    /// nearest/hashed policy.
+    pub fn mmu_node_for_src(&self, src: usize) -> usize {
+        self.mmu_route
+            .get(src)
+            .copied()
+            .unwrap_or(self.mmu_route[0]) as usize
+    }
+
+    // ------------------------------------------------------------------
+    // Cross-fabric totals (the single-fabric values, summed)
+    // ------------------------------------------------------------------
+
+    /// Total tasks executed across every fabric.
+    pub fn tasks_executed(&self) -> u64 {
+        self.slots.iter().map(|s| s.fabric.tasks_executed()).sum()
+    }
+
+    /// (flits into, flits out of) all fabrics combined.
+    pub fn flits_in_out(&self) -> (u64, u64) {
+        self.slots.iter().fold((0, 0), |(i, o), s| {
+            let (fi, fo) = s.fabric.flits_in_out();
+            (i + fi, o + fo)
+        })
+    }
+
+    /// Busy/total interface cycles summed across fabrics.
+    pub fn iface_busy(&self) -> (u64, u64) {
+        self.slots.iter().fold((0, 0), |(b, c), s| {
+            let (fb, fc) = s.fabric.iface_busy();
+            (b + fb, c + fc)
+        })
+    }
+
+    /// Rejected flits summed across fabrics.
+    pub fn rejected_flits(&self) -> u64 {
+        self.slots.iter().map(|s| s.fabric.rejected_flits()).sum()
+    }
+
+    /// Per-fabric counter snapshot, indexed by fabric id.
+    pub fn per_fabric_stats(&self) -> Vec<FabricTileStats> {
+        self.slots
+            .iter()
+            .enumerate()
+            .map(|(f, s)| {
+                let (fin, fout) = s.fabric.flits_in_out();
+                let (busy, cyc) = s.fabric.iface_busy();
+                FabricTileStats {
+                    fabric: f,
+                    node: s.node,
+                    tasks_executed: s.fabric.tasks_executed(),
+                    flits_from_noc: fin,
+                    flits_to_noc: fout,
+                    rejected_flits: s.fabric.rejected_flits(),
+                    busy_iface_cycles: busy,
+                    iface_cycles: cyc,
+                }
+            })
+            .collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Scheduling
+    // ------------------------------------------------------------------
 
     /// Enable/disable the idle-skipping scheduler (enabled by default).
     /// Disabling forces naive per-edge stepping; per-task latency records
@@ -429,20 +699,30 @@ impl System {
     }
 
     /// Replace every processor with an open-loop source at the given
-    /// aggregate request rate (requests/µs across all sources).
+    /// aggregate request rate (requests/µs across all sources). Sources
+    /// spread their requests uniformly over every accelerator of every
+    /// fabric (fabric-major target order).
     pub fn set_open_loop(&mut self, total_rate_per_us: f64, seed: u64) {
         let n = self.procs.len();
-        let fpga_node = self.config.fpga_node() as u8;
+        let mut targets = Vec::new();
+        for (fid, fspec) in self.config.fabrics.iter().enumerate() {
+            let node = self.slots[fid].node as u8;
+            for (i, s) in fspec.specs.iter().enumerate() {
+                targets.push(OpenLoopTarget {
+                    node,
+                    hwa_id: i as u8,
+                    spec: s.clone(),
+                });
+            }
+        }
         for i in 0..n {
-            self.open_sources[i] =
-                Some(crate::workload::openloop::OpenLoopSource::new(
-                    i as u8,
-                    self.procs[i].node,
-                    fpga_node,
-                    self.config.specs.clone(),
-                    total_rate_per_us / n as f64,
-                    seed,
-                ));
+            self.open_sources[i] = Some(OpenLoopSource::new(
+                i as u8,
+                self.procs[i].node,
+                targets.clone(),
+                total_rate_per_us / n as f64,
+                seed,
+            ));
         }
     }
 
@@ -466,18 +746,23 @@ impl System {
         self.clk.now()
     }
 
-    /// Activity probe for the NoC+CMP clock domain: the interconnect, the
-    /// fabric's NoC-facing FIFO, the MMU and every processor / open-loop
-    /// source all act on NoC edges. `Busy` while any of them holds
-    /// in-flight work; otherwise the earliest self-scheduled event (DMA
-    /// completion, Poisson arrival) bounds the domain's horizon.
+    /// Activity probe for the NoC+CMP clock domain: the interconnect,
+    /// every fabric's NoC-facing FIFO, every MMU and every processor /
+    /// open-loop source all act on NoC edges. `Busy` while any of them
+    /// holds in-flight work; otherwise the earliest self-scheduled event
+    /// (DMA completion, Poisson arrival) bounds the domain's horizon.
     fn noc_domain_activity(&self) -> Activity {
-        if !self.net.idle() || self.fabric.noc_tx_pending() {
+        if !self.net.idle()
+            || self.slots.iter().any(|s| s.fabric.noc_tx_pending())
+        {
             return Activity::Busy;
         }
-        let mut act = self.mmu.activity();
-        if act == Activity::Busy {
-            return act;
+        let mut act = Activity::Idle;
+        for m in &self.mmus {
+            act = act.join(m.activity());
+            if act == Activity::Busy {
+                return act;
+            }
         }
         for (i, p) in self.procs.iter().enumerate() {
             let a = match self.open_sources[i].as_ref() {
@@ -519,16 +804,22 @@ impl System {
             Activity::Idle => {}
             Activity::NextEventAt(t) => fold(&mut target, t),
         }
-        match self.fabric.iface_activity() {
-            Activity::Busy => fold(&mut target, self.clk.next_edge_of(self.iface_dom)),
-            Activity::Idle => {}
-            Activity::NextEventAt(t) => fold(&mut target, t),
-        }
-        for (d, chans) in &self.hwa_doms {
-            match self.fabric.hwa_activity(chans) {
-                Activity::Busy => fold(&mut target, self.clk.next_edge_of(*d)),
+        for slot in &self.slots {
+            match slot.fabric.iface_activity() {
+                Activity::Busy => {
+                    fold(&mut target, self.clk.next_edge_of(slot.iface_dom))
+                }
                 Activity::Idle => {}
                 Activity::NextEventAt(t) => fold(&mut target, t),
+            }
+            for (d, chans) in &slot.hwa_doms {
+                match slot.fabric.hwa_activity(chans) {
+                    Activity::Busy => {
+                        fold(&mut target, self.clk.next_edge_of(*d))
+                    }
+                    Activity::Idle => {}
+                    Activity::NextEventAt(t) => fold(&mut target, t),
+                }
             }
         }
         let target = match (target, deadline) {
@@ -556,14 +847,16 @@ impl System {
                 }
             }
         }
-        let n = skipped[self.iface_dom.0];
-        if n > 0 {
-            self.fabric.account_idle_iface_cycles(n);
-        }
-        for (d, chans) in &self.hwa_doms {
-            let n = skipped[d.0];
+        for slot in &mut self.slots {
+            let n = skipped[slot.iface_dom.0];
             if n > 0 {
-                self.fabric.account_idle_hwa_cycles(chans, n);
+                slot.fabric.account_idle_iface_cycles(n);
+            }
+            for (d, chans) in &slot.hwa_doms {
+                let n = skipped[d.0];
+                if n > 0 {
+                    slot.fabric.account_idle_hwa_cycles(chans, n);
+                }
             }
         }
         for (i, n) in skipped.iter().enumerate() {
@@ -573,16 +866,20 @@ impl System {
         self.skip_scratch = skipped;
     }
 
-    /// Skipped-edge counts as (NoC+CMP, fabric interface, all HWA
+    /// Skipped-edge counts as (NoC+CMP, all fabric interfaces, all HWA
     /// domains) — the per-domain breakdown `sweep::RunStats` reports.
     pub fn edges_skipped_breakdown(&self) -> (u64, u64, u64) {
         let noc = self.edges_skipped_by[self.noc_dom.0];
-        let iface = self.edges_skipped_by[self.iface_dom.0];
-        let hwa = self
-            .hwa_doms
-            .iter()
-            .map(|(d, _)| self.edges_skipped_by[d.0])
-            .sum();
+        let mut iface = 0;
+        let mut hwa = 0;
+        for slot in &self.slots {
+            iface += self.edges_skipped_by[slot.iface_dom.0];
+            hwa += slot
+                .hwa_doms
+                .iter()
+                .map(|(d, _)| self.edges_skipped_by[d.0])
+                .sum::<u64>();
+        }
         (noc, iface, hwa)
     }
 
@@ -601,15 +898,22 @@ impl System {
         for d in &ticking {
             if *d == self.noc_dom {
                 self.step_noc_domain(t);
-            } else if *d == self.iface_dom {
-                self.fabric.step_iface(t);
-            } else if let Some((_, chans)) =
-                self.hwa_doms.iter().find(|(dd, _)| dd == d)
-            {
-                if let Fabric::Buffered(f) = &mut self.fabric {
-                    for i in chans {
-                        f.step_channel(*i, t);
+                continue;
+            }
+            for slot in self.slots.iter_mut() {
+                if *d == slot.iface_dom {
+                    slot.fabric.step_iface(t);
+                    break;
+                }
+                if let Some((_, chans)) =
+                    slot.hwa_doms.iter().find(|(dd, _)| dd == d)
+                {
+                    if let Fabric::Buffered(f) = &mut slot.fabric {
+                        for i in chans {
+                            f.step_channel(*i, t);
+                        }
                     }
+                    break;
                 }
             }
         }
@@ -618,29 +922,42 @@ impl System {
     }
 
     fn step_noc_domain(&mut self, t: Ps) {
-        let fpga_node = self.config.fpga_node();
-        let mmu_node = self.config.mmu_node();
-        // FPGA <-> net exchange.
-        while self.fabric.can_accept_from_noc()
-            && self.net.eject_peek_some(fpga_node)
-        {
-            let f = self.net.eject_pop(fpga_node).expect("peeked");
-            self.fabric.push_from_noc(t, f);
-        }
-        if self.net.can_inject(fpga_node) {
-            if let Some(f) = self.fabric.pop_to_noc(t) {
-                let ok = self.net.try_inject(fpga_node, f);
-                debug_assert!(ok);
+        // Fabric <-> net exchange, per interface tile in fabric-id order.
+        for k in 0..self.slots.len() {
+            let node = self.slots[k].node;
+            while self.slots[k].fabric.can_accept_from_noc()
+                && self.net.eject_peek_some(node)
+            {
+                let f = self.net.eject_pop(node).expect("peeked");
+                self.slots[k].fabric.push_from_noc(t, f);
+            }
+            if self.net.can_inject(node) {
+                if let Some(mut f) = self.slots[k].fabric.pop_to_noc(t) {
+                    // Stamp the interface tile of origin into every
+                    // outbound head (grants, notifies AND result heads —
+                    // all keep those payload bits spare): MMUs and
+                    // open-loop sources attribute answers/completions to
+                    // the right fabric without any global "the FPGA
+                    // node" assumption.
+                    if f.is_head() {
+                        f.stamp_origin(node as u8);
+                    }
+                    let ok = self.net.try_inject(node, f);
+                    debug_assert!(ok);
+                }
             }
         }
-        // MMU.
-        while let Some(f) = self.net.eject_pop(mmu_node) {
-            self.mmu.deliver(f, t);
-        }
-        let can = self.net.can_inject(mmu_node);
-        if let Some(f) = self.mmu.step(t, can) {
-            let ok = self.net.try_inject(mmu_node, f);
-            debug_assert!(ok);
+        // MMU tiles.
+        for i in 0..self.mmus.len() {
+            let node = self.mmus[i].node as usize;
+            while let Some(f) = self.net.eject_pop(node) {
+                self.mmus[i].deliver(f, t);
+            }
+            let can = self.net.can_inject(node);
+            if let Some(f) = self.mmus[i].step(t, can) {
+                let ok = self.net.try_inject(node, f);
+                debug_assert!(ok);
+            }
         }
         // Processors (or their open-loop replacements).
         for (i, p) in self.procs.iter_mut().enumerate() {
@@ -679,8 +996,11 @@ impl System {
             self.step_edge();
             if self.procs.iter().all(|p| p.done())
                 && self.net.idle()
-                && self.mmu.idle()
-                && self.fabric.quiescent(self.clk.now())
+                && self.mmus.iter().all(|m| m.idle())
+                && {
+                    let now = self.clk.now();
+                    self.slots.iter().all(|s| s.fabric.quiescent(now))
+                }
             {
                 return true;
             }
@@ -714,7 +1034,7 @@ mod tests {
             spec_by_name("izigzag").unwrap(),
         ]);
         cfg.net = net;
-        cfg.fabric = fabric;
+        cfg.fabrics[0].kind = fabric;
         AccelRuntime::new(cfg)
     }
 
@@ -730,7 +1050,7 @@ mod tests {
         let r = done.record();
         assert!(r.t_grant > r.t_request);
         assert!(r.t_result_last > r.t_grant);
-        assert_eq!(rt.system().fabric.tasks_executed(), 1);
+        assert_eq!(rt.system().fabric().tasks_executed(), 1);
         // dfadd of (1,2)+(3,4) via native/echo compute: result delivered.
         assert_eq!(rt.last_result(0).len(), 2);
     }
@@ -741,7 +1061,7 @@ mod tests {
         let dfadd = rt.accel(0).unwrap();
         rt.submit(0, Job::on(dfadd).direct(vec![1, 2, 3, 4])).unwrap();
         assert!(rt.run_until_done(50_000_000));
-        assert_eq!(rt.system().fabric.tasks_executed(), 1);
+        assert_eq!(rt.system().fabric().tasks_executed(), 1);
     }
 
     #[test]
@@ -755,7 +1075,7 @@ mod tests {
         let dfadd = rt.accel(0).unwrap();
         rt.submit(0, Job::on(dfadd).direct(vec![1, 2, 3, 4])).unwrap();
         assert!(rt.run_until_done(50_000_000));
-        assert_eq!(rt.system().fabric.tasks_executed(), 1);
+        assert_eq!(rt.system().fabric().tasks_executed(), 1);
     }
 
     #[test]
@@ -768,7 +1088,7 @@ mod tests {
                 .unwrap();
         }
         assert!(rt.run_until_done(100_000_000));
-        assert_eq!(rt.system().fabric.tasks_executed(), n as u64);
+        assert_eq!(rt.system().fabric().tasks_executed(), n as u64);
         assert_eq!(rt.completions().len(), n);
     }
 
@@ -826,8 +1146,8 @@ mod tests {
                     (s.requests_issued, s.results_done, s.latencies_ps.clone())
                 })
                 .collect();
-            let (fin, fout) = sys.fabric.flits_in_out();
-            (lat, fin, fout, sys.fabric.tasks_executed())
+            let (fin, fout) = sys.fabric().flits_in_out();
+            (lat, fin, fout, sys.fabric().tasks_executed())
         };
         for net in [NetKind::Noc, NetKind::Axi] {
             assert_eq!(observe(true, net), observe(false, net), "{net:?}");
@@ -875,7 +1195,7 @@ mod tests {
                 Net::Axi(b) => b.cycles,
             };
             let iface_cycles = sys
-                .fabric
+                .fabric()
                 .buffered()
                 .map(|f| f.stats.iface_cycles)
                 .unwrap_or(0);
@@ -931,5 +1251,138 @@ mod tests {
         );
         let (noc, _, _) = sys.edges_skipped_breakdown();
         assert!(noc > 0, "the NoC domain should skip during HWA stages");
+    }
+
+    // ------------------------------------------------------------------
+    // Floorplanned (multi-fabric / multi-MMU) systems
+    // ------------------------------------------------------------------
+
+    fn two_fabric_config() -> SystemConfig {
+        let plan = Floorplan::parse("F0 P P / P M P / P P F1").unwrap();
+        SystemConfig::floorplanned(
+            plan,
+            vec![
+                FabricSpec::paper(vec![spec_by_name("izigzag").unwrap(); 2]),
+                FabricSpec::paper(vec![spec_by_name("dfadd").unwrap()]),
+            ],
+        )
+    }
+
+    #[test]
+    fn two_fabrics_execute_independently() {
+        let mut rt = AccelRuntime::new(two_fabric_config());
+        let iz = rt.accel_on(0, 0).unwrap();
+        let df = rt.accel_on(1, 0).unwrap();
+        rt.submit(0, Job::on(iz).direct((0..64).collect())).unwrap();
+        rt.submit(1, Job::on(df).direct(vec![1, 2, 3, 4])).unwrap();
+        assert!(rt.run_until_done(100_000_000));
+        let sys = rt.system();
+        assert_eq!(sys.n_fabrics(), 2);
+        assert_eq!(sys.fabric_at(0).tasks_executed(), 1);
+        assert_eq!(sys.fabric_at(1).tasks_executed(), 1);
+        assert_eq!(sys.tasks_executed(), 2, "totals sum across fabrics");
+        let rows = sys.per_fabric_stats();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].node, 0);
+        assert_eq!(rows[1].node, 8);
+        assert!(rows.iter().all(|r| r.rejected_flits == 0));
+        assert!(rows.iter().all(|r| r.flits_to_noc > 0));
+    }
+
+    #[test]
+    fn axi_with_two_fabrics_is_a_typed_error() {
+        let mut cfg = two_fabric_config();
+        cfg.net = NetKind::Axi;
+        assert_eq!(
+            System::try_new(cfg).err(),
+            Some(TopologyError::AxiMultiFabric { fabrics: 2 })
+        );
+    }
+
+    #[test]
+    fn fabric_spec_count_must_match_the_plan() {
+        let mut cfg = two_fabric_config();
+        cfg.fabrics.pop();
+        assert_eq!(
+            System::try_new(cfg).err(),
+            Some(TopologyError::FabricCountMismatch { plan: 2, specs: 1 })
+        );
+    }
+
+    #[test]
+    fn chain_group_members_are_range_checked() {
+        let mut cfg = SystemConfig::paper(vec![
+            spec_by_name("izigzag").unwrap();
+            2
+        ]);
+        cfg.fabrics[0].chain_groups = vec![vec![0, 5]];
+        assert_eq!(
+            System::try_new(cfg).err(),
+            Some(TopologyError::ChainGroupOutOfRange {
+                fabric: 0,
+                member: 5
+            })
+        );
+    }
+
+    #[test]
+    fn too_small_mesh_is_rejected_with_a_clear_error() {
+        let cfg = SystemConfig::single(
+            MeshConfig {
+                width: 1,
+                height: 2,
+                ..MeshConfig::default()
+            },
+            FabricSpec::paper(vec![spec_by_name("dfadd").unwrap()]),
+        );
+        let err = System::try_new(cfg).unwrap_err();
+        assert_eq!(err, TopologyError::NoProcessors);
+        assert!(err.to_string().contains("no processor"));
+    }
+
+    #[test]
+    fn multi_fabric_open_loop_drives_both_fabrics() {
+        let mut sys = System::new(two_fabric_config());
+        sys.set_open_loop(2.0, 13);
+        sys.run_for(40 * crate::clock::PS_PER_US);
+        let rows = sys.per_fabric_stats();
+        assert!(
+            rows[0].flits_from_noc > 0 && rows[1].flits_from_noc > 0,
+            "both fabrics should see traffic: {rows:?}"
+        );
+        assert!(sys.open_loop_completions() > 0);
+    }
+
+    #[test]
+    fn hashed_and_nearest_mmu_assignment_both_complete_memory_jobs() {
+        for assign in [MmuAssign::Nearest, MmuAssign::Hashed] {
+            let plan = Floorplan::parse("P M P / P F0 P / P M P").unwrap();
+            let mut cfg = SystemConfig::floorplanned(
+                plan,
+                vec![FabricSpec::paper(vec![
+                    spec_by_name("izigzag").unwrap(),
+                ])],
+            );
+            cfg.mmu_assign = assign;
+            let mut rt = AccelRuntime::new(cfg);
+            // Stage the input in the MMU assigned to core 0 (src 0).
+            let sys = rt.system();
+            assert_eq!(sys.n_mmus(), 2);
+            let assigned = sys.mmu_node_for_src(0);
+            let idx = sys
+                .mmus()
+                .iter()
+                .position(|m| m.node as usize == assigned)
+                .unwrap();
+            let words: Vec<u32> = (0..64).collect();
+            rt.system_mut().mmu_at_mut(idx).dram.write_words(0x100, &words);
+            let h = rt.accel(0).unwrap();
+            rt.submit(0, Job::on(h).via_memory(0x100, 256)).unwrap();
+            assert!(rt.run_until_done(100_000_000), "{assign:?}");
+            let sys = rt.system();
+            assert_eq!(sys.mmus()[idx].stats.grants_decoded, 1, "{assign:?}");
+            assert_eq!(sys.mmus()[idx].stats.results_written, 1, "{assign:?}");
+            assert_eq!(sys.tasks_executed(), 1);
+        }
     }
 }

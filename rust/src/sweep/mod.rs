@@ -24,7 +24,7 @@ pub mod runner;
 pub mod spec;
 
 pub use runner::{
-    run_scenario, run_scenario_with_idle_skip, LatencySummary, RunStats,
-    ScenarioResult, SweepReport, SweepRunner,
+    run_scenario, run_scenario_with_idle_skip, FabricStatsRow,
+    LatencySummary, RunStats, ScenarioResult, SweepReport, SweepRunner,
 };
 pub use spec::{AppKind, HwaMix, ScenarioSpec, SweepSpec, WorkloadSpec};

@@ -17,7 +17,7 @@ use super::runner::{RunStats, SweepReport};
 
 impl RunStats {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("total_us", Json::Num(self.total_us)),
             ("tasks_executed", Json::from(self.tasks_executed)),
             (
@@ -51,7 +51,35 @@ impl RunStats {
             ("processor_us", Json::Num(self.processor_us)),
             ("fpga_us", Json::Num(self.fpga_us)),
             ("transmission_us", Json::Num(self.transmission_us)),
-        ])
+        ];
+        // Per-fabric rows are additive and only emitted for multi-fabric
+        // scenarios: single-fabric artifacts stay byte-identical to the
+        // pre-floorplan schema-2 layout.
+        if self.per_fabric.len() > 1 {
+            let rows: Vec<Json> = self
+                .per_fabric
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("fabric", Json::from(r.fabric as u64)),
+                        ("node", Json::from(r.node as u64)),
+                        ("tasks_executed", Json::from(r.tasks_executed)),
+                        (
+                            "injection_flits_per_us",
+                            Json::Num(r.injection_flits_per_us),
+                        ),
+                        (
+                            "throughput_flits_per_us",
+                            Json::Num(r.throughput_flits_per_us),
+                        ),
+                        ("busy_fraction", Json::Num(r.busy_fraction)),
+                        ("rejected_flits", Json::from(r.rejected_flits)),
+                    ])
+                })
+                .collect();
+            fields.push(("fabrics", Json::Arr(rows)));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -231,7 +259,9 @@ fn csv_cell(s: &str) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sweep::runner::{LatencySummary, ScenarioResult};
+    use crate::sweep::runner::{
+        FabricStatsRow, LatencySummary, ScenarioResult,
+    };
     use crate::sweep::spec::{ScenarioSpec, WorkloadSpec};
 
     fn dummy_report() -> SweepReport {
@@ -255,6 +285,15 @@ mod tests {
             processor_us: 0.0,
             fpga_us: 0.0,
             transmission_us: 0.0,
+            per_fabric: vec![FabricStatsRow {
+                fabric: 0,
+                node: 8,
+                tasks_executed: 3,
+                injection_flits_per_us: 1.5,
+                throughput_flits_per_us: 1.25,
+                busy_fraction: 0.5,
+                rejected_flits: 0,
+            }],
         };
         SweepReport {
             name: "d".to_string(),
@@ -286,6 +325,31 @@ mod tests {
                 .and_then(|s| s.get("edges_skipped_noc"))
                 .and_then(Json::as_f64),
             Some(30.0)
+        );
+    }
+
+    #[test]
+    fn per_fabric_rows_are_emitted_only_for_multi_fabric_scenarios() {
+        // Single-fabric (the dummy report): no "fabrics" key — legacy
+        // BENCH_*.json artifacts stay byte-identical.
+        let single = dummy_report();
+        assert!(!single.render_json().contains("\"fabrics\""));
+        // Two rows: the additive array appears.
+        let mut multi = dummy_report();
+        let mut extra = multi.scenarios[0].stats.per_fabric[0];
+        extra.fabric = 1;
+        extra.node = 0;
+        multi.scenarios[0].stats.per_fabric.push(extra);
+        let parsed = Json::parse(&multi.render_json()).unwrap();
+        let rows = parsed.get("scenarios").and_then(Json::as_arr).unwrap()[0]
+            .get("stats")
+            .and_then(|s| s.get("fabrics"))
+            .and_then(Json::as_arr)
+            .expect("fabrics array present");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(
+            rows[1].get("node").and_then(Json::as_f64),
+            Some(0.0)
         );
     }
 

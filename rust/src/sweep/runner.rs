@@ -53,6 +53,20 @@ impl LatencySummary {
     }
 }
 
+/// Per-fabric slice of a run's counters (one row per FPGA interface
+/// tile; serialized as the `fabrics` array for multi-fabric scenarios).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FabricStatsRow {
+    pub fabric: usize,
+    /// NoC node of the fabric's interface tile.
+    pub node: usize,
+    pub tasks_executed: u64,
+    pub injection_flits_per_us: f64,
+    pub throughput_flits_per_us: f64,
+    pub busy_fraction: f64,
+    pub rejected_flits: u64,
+}
+
 /// Everything measured from one scenario run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunStats {
@@ -86,6 +100,10 @@ pub struct RunStats {
     pub processor_us: f64,
     pub fpga_us: f64,
     pub transmission_us: f64,
+    /// One row per FPGA interface tile. Singleton for single-fabric
+    /// scenarios (and omitted from their JSON to keep legacy artifacts
+    /// byte-identical).
+    pub per_fabric: Vec<FabricStatsRow>,
 }
 
 /// One grid point: the resolved spec plus its measured stats.
@@ -244,6 +262,36 @@ pub fn run_scenario_with_idle_skip(
     }
 }
 
+/// Per-fabric window deltas between two `per_fabric_stats` snapshots.
+fn fabric_rows_delta(
+    after: &[crate::sim::system::FabricTileStats],
+    before: &[crate::sim::system::FabricTileStats],
+    window_us: f64,
+) -> Vec<FabricStatsRow> {
+    after
+        .iter()
+        .zip(before)
+        .map(|(a, b)| FabricStatsRow {
+            fabric: a.fabric,
+            node: a.node,
+            tasks_executed: a.tasks_executed - b.tasks_executed,
+            injection_flits_per_us: (a.flits_from_noc - b.flits_from_noc)
+                as f64
+                / window_us,
+            throughput_flits_per_us: (a.flits_to_noc - b.flits_to_noc)
+                as f64
+                / window_us,
+            busy_fraction: if a.iface_cycles > b.iface_cycles {
+                (a.busy_iface_cycles - b.busy_iface_cycles) as f64
+                    / (a.iface_cycles - b.iface_cycles) as f64
+            } else {
+                0.0
+            },
+            rejected_flits: a.rejected_flits - b.rejected_flits,
+        })
+        .collect()
+}
+
 fn run_open_loop(
     spec: &ScenarioSpec,
     rt: &mut AccelRuntime,
@@ -255,9 +303,10 @@ fn run_open_loop(
     // off (the ci_smoke neutrality test in rust/tests/sweep.rs pins
     // this); a bare step() loop would overshoot to the next arrival.
     rt.run_for(spec.warmup_us * PS_PER_US);
-    let (in0, out0) = rt.system().fabric.flits_in_out();
+    let (in0, out0) = rt.system().flits_in_out();
     let done0 = rt.open_loop_completions();
-    let (busy0, cyc0) = rt.system().fabric.iface_busy();
+    let (busy0, cyc0) = rt.system().iface_busy();
+    let pf0 = rt.system().per_fabric_stats();
     // Latencies recorded before the window belong to warmup.
     let lat_skip: Vec<usize> = rt
         .system()
@@ -268,9 +317,9 @@ fn run_open_loop(
         .collect();
     rt.run_for(spec.window_us * PS_PER_US);
     let sys = rt.system();
-    let (in1, out1) = sys.fabric.flits_in_out();
+    let (in1, out1) = sys.flits_in_out();
     let done1 = rt.open_loop_completions();
-    let (busy1, cyc1) = sys.fabric.iface_busy();
+    let (busy1, cyc1) = sys.iface_busy();
     let window = spec.window_us as f64;
     let latencies: Vec<f64> = sys
         .open_sources
@@ -286,7 +335,7 @@ fn run_open_loop(
     let (esk_noc, esk_iface, esk_hwa) = sys.edges_skipped_breakdown();
     Ok(RunStats {
         total_us: window,
-        tasks_executed: sys.fabric.tasks_executed(),
+        tasks_executed: sys.tasks_executed(),
         injection_flits_per_us: (in1 - in0) as f64 / window,
         throughput_flits_per_us: (out1 - out0) as f64 / window,
         completions_per_us: (done1 - done0) as f64 / window,
@@ -295,7 +344,7 @@ fn run_open_loop(
         } else {
             0.0
         },
-        rejected_flits: sys.fabric.rejected_flits(),
+        rejected_flits: sys.rejected_flits(),
         edges_stepped: sys.edges_stepped,
         edges_skipped: sys.edges_skipped,
         edges_skipped_noc: esk_noc,
@@ -305,6 +354,11 @@ fn run_open_loop(
         processor_us: 0.0,
         fpga_us: 0.0,
         transmission_us: 0.0,
+        per_fabric: fabric_rows_delta(
+            &sys.per_fabric_stats(),
+            &pf0,
+            window,
+        ),
     })
 }
 
@@ -312,18 +366,35 @@ fn run_open_loop(
 /// latency sample is the driver's completion receipts.
 fn closed_loop_stats(rt: &AccelRuntime, total_us: f64) -> RunStats {
     let sys = rt.system();
-    let (fin, fout) = sys.fabric.flits_in_out();
+    let (fin, fout) = sys.flits_in_out();
     let completions = rt.completions();
-    let (busy, cyc) = sys.fabric.iface_busy();
+    let (busy, cyc) = sys.iface_busy();
     let latencies: Vec<f64> = completions
         .iter()
         .map(|c| c.total_ps() as f64 / PS_PER_US as f64)
         .collect();
     let denom = total_us.max(f64::MIN_POSITIVE);
     let (esk_noc, esk_iface, esk_hwa) = sys.edges_skipped_breakdown();
+    let per_fabric = sys
+        .per_fabric_stats()
+        .iter()
+        .map(|r| FabricStatsRow {
+            fabric: r.fabric,
+            node: r.node,
+            tasks_executed: r.tasks_executed,
+            injection_flits_per_us: r.flits_from_noc as f64 / denom,
+            throughput_flits_per_us: r.flits_to_noc as f64 / denom,
+            busy_fraction: if r.iface_cycles > 0 {
+                r.busy_iface_cycles as f64 / r.iface_cycles as f64
+            } else {
+                0.0
+            },
+            rejected_flits: r.rejected_flits,
+        })
+        .collect();
     RunStats {
         total_us,
-        tasks_executed: sys.fabric.tasks_executed(),
+        tasks_executed: sys.tasks_executed(),
         injection_flits_per_us: fin as f64 / denom,
         throughput_flits_per_us: fout as f64 / denom,
         completions_per_us: completions.len() as f64 / denom,
@@ -332,7 +403,7 @@ fn closed_loop_stats(rt: &AccelRuntime, total_us: f64) -> RunStats {
         } else {
             0.0
         },
-        rejected_flits: sys.fabric.rejected_flits(),
+        rejected_flits: sys.rejected_flits(),
         edges_stepped: sys.edges_stepped,
         edges_skipped: sys.edges_skipped,
         edges_skipped_noc: esk_noc,
@@ -342,6 +413,7 @@ fn closed_loop_stats(rt: &AccelRuntime, total_us: f64) -> RunStats {
         processor_us: 0.0,
         fpga_us: 0.0,
         transmission_us: 0.0,
+        per_fabric,
     }
 }
 
@@ -367,8 +439,14 @@ fn run_burst(
     rt: &mut AccelRuntime,
     requests_per_proc: usize,
 ) -> Result<RunStats, String> {
-    let hwa = rt.accel(0).expect("scenario configures at least one HWA");
+    // Cores spread round-robin over the fabrics, each bursting that
+    // fabric's channel 0; a single-fabric system degenerates to the
+    // legacy "every core on HWA 0" (bit-identical BENCH output).
+    let n_fabrics = rt.n_fabrics();
     for core in 0..rt.n_cores() {
+        let hwa = rt
+            .accel_on((core % n_fabrics) as u8, 0)
+            .expect("scenario configures at least one HWA per fabric");
         let mut prog = Program::new();
         for _ in 0..requests_per_proc {
             prog = prog.invoke(
@@ -416,7 +494,7 @@ fn run_app_partition(
     let end_ps = total_us * PS_PER_US as f64;
     let processor_ps = sys.procs[0].sw_cycles as f64 * 1000.0; // 1 GHz core
     let fpga_ps: u64 = sys
-        .fabric
+        .fabric()
         .buffered()
         .map(|f| {
             f.channels
@@ -491,6 +569,78 @@ mod tests {
             assert_eq!(a.stats, b.stats);
         }
         assert_eq!(one.scenarios[2].spec.n_tbs, 3);
+    }
+
+    #[test]
+    fn single_fabric_runs_carry_one_per_fabric_row_matching_totals() {
+        let stats = run_scenario(&tiny_burst("pf")).unwrap();
+        assert_eq!(stats.per_fabric.len(), 1);
+        let row = stats.per_fabric[0];
+        assert_eq!(row.fabric, 0);
+        assert_eq!(row.node, 8, "legacy plan: fabric at the last node");
+        assert_eq!(row.tasks_executed, stats.tasks_executed);
+        assert_eq!(row.rejected_flits, stats.rejected_flits);
+    }
+
+    #[test]
+    fn multi_fabric_open_loop_reports_per_fabric_rows() {
+        let spec = ScenarioSpec::new("mf")
+            .floorplan("F0 P P / P M P / P P F1")
+            .hwas("izigzag*2")
+            .workload(WorkloadSpec::OpenLoop { rate_per_us: 2.0 })
+            .warmup_us(2)
+            .window_us(20)
+            .seed(5);
+        let stats = run_scenario(&spec).unwrap();
+        assert_eq!(stats.per_fabric.len(), 2);
+        // Open-loop rows are window deltas while the scalar counts from
+        // t=0 (warmup included), so the rows bound the total from below.
+        let row_sum: u64 =
+            stats.per_fabric.iter().map(|r| r.tasks_executed).sum();
+        assert!(
+            row_sum > 0 && row_sum <= stats.tasks_executed,
+            "row sum {row_sum} vs total {}",
+            stats.tasks_executed
+        );
+        assert!(
+            stats.per_fabric.iter().all(|r| r.throughput_flits_per_us > 0.0),
+            "both fabrics serve traffic: {:?}",
+            stats.per_fabric
+        );
+        assert!(stats.per_fabric.iter().all(|r| r.rejected_flits == 0));
+    }
+
+    #[test]
+    fn multi_fabric_burst_spreads_cores_round_robin() {
+        let spec = ScenarioSpec::new("mb")
+            .floorplan("F0 P P / P M P / P P F1")
+            .hwas("izigzag*1")
+            .workload(WorkloadSpec::Burst {
+                requests_per_proc: 2,
+            })
+            .deadline_us(5_000);
+        let stats = run_scenario(&spec).unwrap();
+        // 6 cores round-robin over 2 fabrics: 3 cores x 2 requests each.
+        assert_eq!(stats.per_fabric.len(), 2);
+        assert_eq!(stats.per_fabric[0].tasks_executed, 6, "{stats:?}");
+        assert_eq!(stats.per_fabric[1].tasks_executed, 6, "{stats:?}");
+        assert_eq!(stats.tasks_executed, 12);
+        assert_eq!(stats.latency.count, 12);
+    }
+
+    #[test]
+    fn invalid_topology_is_an_error_not_a_panic() {
+        // run_scenario goes through system_config(), so an AXI +
+        // two-fabric spec fails with the typed message, not a panic.
+        let mut spec = ScenarioSpec::new("bad")
+            .floorplan("F0 P P / P M P / P P F1")
+            .hwas("izigzag*1")
+            .workload(WorkloadSpec::Burst {
+                requests_per_proc: 1,
+            });
+        spec.net = crate::sim::system::NetKind::Axi;
+        let err = run_scenario(&spec).unwrap_err();
+        assert!(err.contains("AXI"), "{err}");
     }
 
     #[test]

@@ -18,7 +18,13 @@
 //!     .hwas("izigzag*8")
 //!     .workload(WorkloadSpec::OpenLoop { rate_per_us: 2.0 })
 //!     .seed(42);
-//! assert_eq!(spec.system_config().unwrap().specs.len(), 8);
+//! assert_eq!(spec.system_config().unwrap().fabrics[0].specs.len(), 8);
+//!
+//! // Topology axes: an explicit floorplan with two fabric tiles.
+//! let multi = ScenarioSpec::new("multi")
+//!     .floorplan("P P F0 / P M P / P P F1")
+//!     .hwas("izigzag*4");
+//! assert_eq!(multi.system_config().unwrap().fabrics.len(), 2);
 //! ```
 
 use std::collections::BTreeMap;
@@ -27,9 +33,14 @@ use std::path::Path;
 use crate::cmp::apps::{app_specs, gsm_app, jpeg_app, App};
 use crate::fpga::hwa::{spec_by_name, table3, HwaSpec};
 use crate::noc::mesh::MeshConfig;
-use crate::sim::system::{FabricKind, NetKind, SystemConfig};
+use crate::sim::floorplan::{Floorplan, MmuAssign};
+use crate::sim::system::{FabricKind, FabricSpec, NetKind, SystemConfig};
 use crate::util::config_text::ConfigText;
 use crate::util::json::Json;
+
+/// Per-fabric `hwas_f<k>` override keys accepted in specs (plans may
+/// have more fabrics — those use the shared `system.hwas` default).
+pub const MAX_FABRIC_HWA_KEYS: u8 = 4;
 
 /// Accelerator mix: which Table 3 HWA specs populate the fabric.
 #[derive(Debug, Clone, PartialEq)]
@@ -180,9 +191,18 @@ impl WorkloadSpec {
 pub struct ScenarioSpec {
     pub name: String,
     pub net: NetKind,
-    /// `buffered` or `shared_cache` (see `cache_kib`).
+    /// `buffered` or `shared_cache` (see `cache_kib`); applies to every
+    /// fabric tile.
     pub fabric: FabricKind,
     pub mesh: (u8, u8),
+    /// Explicit tile map (`"P P F0 / P M P / P P F1"`). `None` lowers
+    /// `mesh` to the legacy single-FPGA floorplan.
+    pub floorplan: Option<String>,
+    /// Processor → MMU assignment for multi-MMU floorplans.
+    pub mmu_assign: MmuAssign,
+    /// Per-fabric accelerator-mix overrides (`hwas_f<k>` keys); fabrics
+    /// without an entry use `hwas`.
+    pub fabric_hwas: BTreeMap<u8, HwaMix>,
     /// Task buffers per channel (the Fig. 6 independent variable).
     pub n_tbs: usize,
     pub pr_group: usize,
@@ -208,6 +228,9 @@ impl ScenarioSpec {
             net: NetKind::Noc,
             fabric: FabricKind::Buffered,
             mesh: (3, 3),
+            floorplan: None,
+            mmu_assign: MmuAssign::Nearest,
+            fabric_hwas: BTreeMap::new(),
             n_tbs: 2,
             pr_group: 4,
             ps_group: 4,
@@ -234,6 +257,30 @@ impl ScenarioSpec {
 
     pub fn mesh(mut self, width: u8, height: u8) -> Self {
         self.mesh = (width, height);
+        self
+    }
+
+    /// Explicit floorplan in [`Floorplan::parse`] grammar; the plan is
+    /// authoritative for the mesh dimensions (`mesh` is updated to
+    /// match). Panics on a syntax error (use the field +
+    /// `system_config()` for fallible input).
+    pub fn floorplan(mut self, plan: &str) -> Self {
+        let parsed = Floorplan::parse(plan).expect("valid floorplan");
+        self.mesh = (parsed.mesh.width, parsed.mesh.height);
+        self.floorplan = Some(plan.to_string());
+        self
+    }
+
+    pub fn mmu_assign(mut self, assign: MmuAssign) -> Self {
+        self.mmu_assign = assign;
+        self
+    }
+
+    /// Accelerator mix for one fabric (others keep the `hwas` default);
+    /// panics on a syntax error.
+    pub fn hwas_on(mut self, fabric: u8, mix: &str) -> Self {
+        self.fabric_hwas
+            .insert(fabric, HwaMix::parse(mix).expect("valid hwa mix"));
         self
     }
 
@@ -279,43 +326,71 @@ impl ScenarioSpec {
         self
     }
 
-    /// Resolve into the `sim::System` configuration this scenario runs.
+    /// Resolve into the `sim::System` configuration this scenario runs:
+    /// the floorplan (explicit, or the legacy single-FPGA lowering of
+    /// `mesh`) plus one `FabricSpec` per fabric tile. Every topology
+    /// defect surfaces here as an error, never as a mid-sweep panic.
     pub fn system_config(&self) -> Result<SystemConfig, String> {
-        let specs = match &self.workload {
-            // Fig. 9 scenarios derive their specs from the app's
-            // function list (hwa_id = function index).
-            WorkloadSpec::AppPartition { app, .. } => app_specs(&app.app()),
-            _ => self.hwas.to_specs()?,
-        };
-        if self.mesh.0 < 2 || self.mesh.1 < 2 {
-            return Err(format!(
-                "mesh {}x{} too small (need >=2x2 for FPGA+MMU nodes)",
-                self.mesh.0, self.mesh.1
-            ));
-        }
         if self.n_tbs == 0 {
             return Err("task_buffers must be >= 1".to_string());
         }
-        let chain_groups = if self.chain {
-            vec![(0..specs.len()).collect()]
-        } else {
-            Vec::new()
-        };
-        Ok(SystemConfig {
-            mesh: MeshConfig {
+        // The floorplan, when present, is authoritative for the mesh
+        // dimensions (`from_map` rejects a conflicting explicit
+        // `system.mesh` at load time, where set-ness is knowable).
+        let plan = match &self.floorplan {
+            Some(text) => Floorplan::parse(text).map_err(|e| e.to_string())?,
+            None => Floorplan::single_fpga(MeshConfig {
                 width: self.mesh.0,
                 height: self.mesh.1,
                 ..MeshConfig::default()
-            },
+            }),
+        };
+        // (cfg.validate() below runs the full floorplan validation.)
+        for f in self.fabric_hwas.keys() {
+            if (*f as usize) >= plan.n_fabrics() {
+                return Err(format!(
+                    "hwas_f{f}: the floorplan has {} fabric(s)",
+                    plan.n_fabrics()
+                ));
+            }
+        }
+        let mut fabrics = Vec::with_capacity(plan.n_fabrics());
+        for f in 0..plan.n_fabrics() {
+            let specs = match &self.workload {
+                // Fig. 9 scenarios derive their specs from the app's
+                // function list (hwa_id = function index).
+                WorkloadSpec::AppPartition { app, .. } => {
+                    app_specs(&app.app())
+                }
+                _ => self
+                    .fabric_hwas
+                    .get(&(f as u8))
+                    .unwrap_or(&self.hwas)
+                    .to_specs()?,
+            };
+            let chain_groups = if self.chain {
+                vec![(0..specs.len()).collect()]
+            } else {
+                Vec::new()
+            };
+            fabrics.push(FabricSpec {
+                kind: self.fabric,
+                n_tbs: self.n_tbs,
+                pr_group: self.pr_group,
+                ps_group: self.ps_group,
+                iface_mhz: self.iface_mhz,
+                specs,
+                chain_groups,
+            });
+        }
+        let cfg = SystemConfig {
+            floorplan: plan,
             net: self.net,
-            fabric: self.fabric,
-            n_tbs: self.n_tbs,
-            pr_group: self.pr_group,
-            ps_group: self.ps_group,
-            iface_mhz: self.iface_mhz,
-            specs,
-            chain_groups,
-        })
+            fabrics,
+            mmu_assign: self.mmu_assign,
+        };
+        cfg.validate().map_err(|e| e.to_string())?;
+        Ok(cfg)
     }
 
     /// Flatten to the canonical `section.key -> value` map (the TOML/JSON
@@ -333,7 +408,23 @@ impl ScenarioSpec {
                 put("system.cache_kib", (cache_bytes / 1024).to_string());
             }
         }
-        put("system.mesh", format!("{}x{}", self.mesh.0, self.mesh.1));
+        // Topology keys are emitted only when non-default, so legacy
+        // single-FPGA specs keep their exact pre-floorplan map (and
+        // BENCH_*.json stays byte-identical through the compat path).
+        // Floorplanned specs emit the plan INSTEAD of `system.mesh` —
+        // the plan's rows fix the dimensions.
+        match &self.floorplan {
+            Some(plan) => put("system.floorplan", plan.clone()),
+            None => {
+                put("system.mesh", format!("{}x{}", self.mesh.0, self.mesh.1))
+            }
+        }
+        if self.mmu_assign != MmuAssign::Nearest {
+            put("system.mmu_assign", self.mmu_assign.name().to_string());
+        }
+        for (f, mix) in &self.fabric_hwas {
+            put(&format!("system.hwas_f{f}"), mix.to_string());
+        }
         put("system.task_buffers", self.n_tbs.to_string());
         put("system.pr_group", self.pr_group.to_string());
         put("system.ps_group", self.ps_group.to_string());
@@ -414,6 +505,32 @@ impl ScenarioSpec {
                     .parse()
                     .map_err(|_| format!("bad mesh height {h:?}"))?,
             );
+        }
+        if let Some(v) = map.get("system.floorplan") {
+            let plan = Floorplan::parse(v).map_err(|e| e.to_string())?;
+            let dims = (plan.mesh.width, plan.mesh.height);
+            // The plan's rows ARE the mesh; an explicitly-written
+            // `system.mesh` must agree exactly (any mismatch — even one
+            // that happens to equal the 3x3 default — is a typo).
+            if map.contains_key("system.mesh") && spec.mesh != dims {
+                return Err(format!(
+                    "system.mesh {}x{} conflicts with the floorplan's \
+                     {}x{} (drop system.mesh)",
+                    spec.mesh.0, spec.mesh.1, dims.0, dims.1
+                ));
+            }
+            spec.mesh = dims;
+            spec.floorplan = Some(v.clone());
+        }
+        if let Some(v) = map.get("system.mmu_assign") {
+            spec.mmu_assign = MmuAssign::parse(v)?;
+        }
+        for f in 0..MAX_FABRIC_HWA_KEYS {
+            if let Some(v) = map.get(&format!("system.hwas_f{f}")) {
+                let mix = HwaMix::parse(v)?;
+                mix.to_specs()?; // validate names eagerly
+                spec.fabric_hwas.insert(f, mix);
+            }
         }
         spec.n_tbs = get_parse(map, "system.task_buffers")?.unwrap_or(spec.n_tbs);
         spec.pr_group = get_parse(map, "system.pr_group")?.unwrap_or(spec.pr_group);
@@ -529,6 +646,12 @@ const KNOWN_KEYS: &[&str] = &[
     "system.fabric",
     "system.cache_kib",
     "system.mesh",
+    "system.floorplan",
+    "system.mmu_assign",
+    "system.hwas_f0",
+    "system.hwas_f1",
+    "system.hwas_f2",
+    "system.hwas_f3",
     "system.task_buffers",
     "system.pr_group",
     "system.ps_group",
@@ -869,6 +992,112 @@ mod tests {
             SweepSpec::parse_toml("[workload]\nkind = jpeg_chain\ndepth = 7\n")
                 .is_err()
         );
+    }
+
+    #[test]
+    fn floorplanned_spec_round_trips_through_map() {
+        let spec = ScenarioSpec::new("fp")
+            .floorplan("F0 P P / P M P / P P F1")
+            .mmu_assign(MmuAssign::Hashed)
+            .hwas("izigzag*2")
+            .hwas_on(1, "dfadd*1")
+            .workload(WorkloadSpec::OpenLoop { rate_per_us: 1.5 });
+        let map: BTreeMap<String, String> =
+            spec.to_map().into_iter().collect();
+        assert_eq!(
+            map.get("system.floorplan").map(String::as_str),
+            Some("F0 P P / P M P / P P F1")
+        );
+        assert_eq!(
+            map.get("system.mmu_assign").map(String::as_str),
+            Some("hashed")
+        );
+        assert!(
+            !map.contains_key("system.mesh"),
+            "the plan's rows fix the mesh; no separate key is emitted"
+        );
+        let back = ScenarioSpec::from_map("fp", &map).unwrap();
+        assert_eq!(spec, back);
+        let cfg = back.system_config().unwrap();
+        assert_eq!(cfg.fabrics.len(), 2);
+        assert_eq!(cfg.fabrics[0].specs.len(), 2, "hwas default");
+        assert_eq!(cfg.fabrics[1].specs.len(), 1, "hwas_f1 override");
+        assert_eq!(cfg.mmu_assign, MmuAssign::Hashed);
+    }
+
+    #[test]
+    fn legacy_specs_emit_no_topology_keys() {
+        // Byte-compat: a pre-floorplan spec's map must not change.
+        let spec = ScenarioSpec::new("legacy").hwas("izigzag*4");
+        let map = spec.to_map();
+        assert!(map.iter().all(|(k, _)| !k.contains("floorplan")
+            && !k.contains("mmu_assign")
+            && !k.contains("hwas_f")));
+    }
+
+    #[test]
+    fn bad_topology_specs_are_rejected_at_load_time() {
+        // Bad grammar.
+        assert!(SweepSpec::parse_toml(
+            "[system]\nfloorplan = P Q / M F0\n"
+        )
+        .is_err());
+        // Structurally invalid plan (no processors).
+        assert!(SweepSpec::parse_toml(
+            "[system]\nfloorplan = M F0 / F1 .\n"
+        )
+        .is_err());
+        // AXI with two fabrics.
+        assert!(SweepSpec::parse_toml(
+            "[system]\nnet = axi\nfloorplan = F0 P P / P M P / P P F1\n"
+        )
+        .is_err());
+        // Mesh conflicting with the plan's dimensions.
+        assert!(SweepSpec::parse_toml(
+            "[system]\nmesh = 4x4\nfloorplan = P P F0 / P M P / P P P\n"
+        )
+        .is_err());
+        // ... including an explicit 3x3 against a smaller plan (the
+        // default value gets no special treatment when written out).
+        assert!(SweepSpec::parse_toml(
+            "[system]\nmesh = 3x3\nfloorplan = P M / F0 P\n"
+        )
+        .is_err());
+        // A matching explicit mesh is fine.
+        assert!(SweepSpec::parse_toml(
+            "[system]\nmesh = 2x2\nfloorplan = P M / F0 P\n"
+        )
+        .is_ok());
+        // Per-fabric override for a fabric the plan does not have.
+        assert!(SweepSpec::parse_toml(
+            "[system]\nhwas_f2 = izigzag*2\n"
+        )
+        .is_err());
+        // Unknown assignment policy.
+        assert!(SweepSpec::parse_toml(
+            "[system]\nmmu_assign = roundrobin\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn floorplan_values_survive_toml_axes() {
+        // Floorplan strings contain spaces and slashes but no commas, so
+        // they compose with comma-separated sweep axes.
+        let sweep = SweepSpec::parse_toml(
+            "name = topo\n\
+             [system]\n\
+             floorplan = P P F0 / P M P / P P P , P P F0 / P M P / P P F1\n\
+             hwas = izigzag*2\n\
+             [workload]\n\
+             kind = openloop\n\
+             rate_per_us = 1\n",
+        )
+        .unwrap();
+        let grid = sweep.expand().unwrap();
+        assert_eq!(grid.len(), 2);
+        assert_eq!(grid[0].system_config().unwrap().fabrics.len(), 1);
+        assert_eq!(grid[1].system_config().unwrap().fabrics.len(), 2);
     }
 
     #[test]

@@ -8,5 +8,5 @@ pub mod openloop;
 pub mod random;
 
 pub use jpeg::BlockImage;
-pub use openloop::OpenLoopSource;
+pub use openloop::{OpenLoopSource, OpenLoopTarget};
 pub use random::{measure_rate_point, RandomWorkload, RandomWorkloadConfig, RatePoint};

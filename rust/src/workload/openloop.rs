@@ -5,7 +5,12 @@
 //! invocations in flight).
 //!
 //! The source speaks the full protocol (request -> grant -> payload) but
-//! keeps issuing while earlier invocations are still executing.
+//! keeps issuing while earlier invocations are still executing. On
+//! floorplanned systems a source spreads its requests uniformly over
+//! every accelerator of every fabric: its target list is fabric-major
+//! `(interface node, hwa_id, spec)` entries, and grant/notify answers
+//! are matched back by the origin tile stamped into the command payload
+//! (see `flit::fields::CMD_ORIGIN_LO`).
 
 use std::collections::VecDeque;
 
@@ -21,17 +26,28 @@ use crate::util::rng::Pcg32;
 /// over-saturation; drops are counted, mirroring a finite source FIFO).
 const OUTBOX_CAP: usize = 4096;
 
-/// Outstanding invocations a source keeps in flight per HWA. Matches the
-/// 2-deep task-buffer pipelining of the fabric: issuing more would only
-/// pile requests into RBs without adding throughput. Arrivals beyond the
-/// cap are deferred, making the source semi-open (open up to the cap).
+/// Outstanding invocations a source keeps in flight per target. Matches
+/// the 2-deep task-buffer pipelining of the fabric: issuing more would
+/// only pile requests into RBs without adding throughput. Arrivals
+/// beyond the cap are deferred, making the source semi-open (open up to
+/// the cap).
 const MAX_OUTSTANDING_PER_HWA: u64 = 2;
+
+/// One invokable accelerator as the source sees it: which interface
+/// tile to address and which channel on it.
+#[derive(Debug, Clone)]
+pub struct OpenLoopTarget {
+    /// NoC node of the owning fabric's interface tile.
+    pub node: u8,
+    /// Channel index on that fabric.
+    pub hwa_id: u8,
+    pub spec: HwaSpec,
+}
 
 pub struct OpenLoopSource {
     pub id: u8,
     pub node: u8,
-    fpga_node: u8,
-    specs: Vec<HwaSpec>,
+    targets: Vec<OpenLoopTarget>,
     rate_per_us: f64,
     rng: Pcg32,
     next_arrival: Ps,
@@ -44,10 +60,11 @@ pub struct OpenLoopSource {
     /// (request issue time, completion time) for latency stats.
     issue_times: VecDeque<Ps>,
     pub latencies_ps: Vec<u64>,
-    /// Outstanding invocations per HWA (issued - completed).
+    /// Outstanding invocations per target (issued - completed).
     outstanding: Vec<u64>,
-    /// Head fields of the result packet currently being received.
-    rx_head: Option<u8>,
+    /// (hwa_id, stamped origin tile) of the result packet currently
+    /// being received.
+    rx_head: Option<(u8, Option<u8>)>,
     /// Arrivals deferred because the target HWA was at its cap.
     pub deferred: u64,
 }
@@ -56,8 +73,7 @@ impl OpenLoopSource {
     pub fn new(
         id: u8,
         node: u8,
-        fpga_node: u8,
-        specs: Vec<HwaSpec>,
+        targets: Vec<OpenLoopTarget>,
         rate_per_us: f64,
         seed: u64,
     ) -> Self {
@@ -67,8 +83,7 @@ impl OpenLoopSource {
         Self {
             id,
             node,
-            fpga_node,
-            specs,
+            targets,
             rate_per_us,
             rng,
             next_arrival: first,
@@ -84,6 +99,28 @@ impl OpenLoopSource {
             rx_head: None,
             deferred: 0,
         }
+    }
+
+    /// Single-fabric convenience: every spec lives on `fpga_node` with
+    /// `hwa_id` = its index (the pre-floorplan constructor shape).
+    pub fn single_fabric(
+        id: u8,
+        node: u8,
+        fpga_node: u8,
+        specs: Vec<HwaSpec>,
+        rate_per_us: f64,
+        seed: u64,
+    ) -> Self {
+        let targets = specs
+            .into_iter()
+            .enumerate()
+            .map(|(i, spec)| OpenLoopTarget {
+                node: fpga_node,
+                hwa_id: i as u8,
+                spec,
+            })
+            .collect();
+        Self::new(id, node, targets, rate_per_us, seed)
     }
 
     /// True when no flits are queued for injection (scheduler probe).
@@ -109,26 +146,40 @@ impl OpenLoopSource {
         }
     }
 
+    /// Target index for an incoming command: by (origin tile, hwa_id)
+    /// when the origin was stamped, by hwa_id alone otherwise (single-
+    /// fabric traffic and pre-floorplan rigs).
+    fn target_index(&self, origin: Option<u8>, hwa_id: u8) -> Option<usize> {
+        match origin {
+            Some(node) => self
+                .targets
+                .iter()
+                .position(|t| t.node == node && t.hwa_id == hwa_id),
+            None => self.targets.iter().position(|t| t.hwa_id == hwa_id),
+        }
+    }
+
     /// One NoC/CMP cycle: emit at most one flit.
     pub fn step(&mut self, now: Ps, can_inject: bool) -> Option<Flit> {
-        if self.outstanding.len() != self.specs.len() {
-            self.outstanding = vec![0; self.specs.len()];
+        if self.outstanding.len() != self.targets.len() {
+            self.outstanding = vec![0; self.targets.len()];
         }
         while now >= self.next_arrival {
             let mean_gap = PS_PER_US as f64 / self.rate_per_us.max(1e-9);
             self.next_arrival += self.rng.exp(mean_gap).max(1.0) as Ps;
-            let hwa = self.rng.range(0, self.specs.len());
-            if self.outstanding[hwa] >= MAX_OUTSTANDING_PER_HWA {
+            let idx = self.rng.range(0, self.targets.len());
+            if self.outstanding[idx] >= MAX_OUTSTANDING_PER_HWA {
                 self.deferred += 1;
                 continue;
             }
-            self.outstanding[hwa] += 1;
+            self.outstanding[idx] += 1;
+            let target = &self.targets[idx];
             let req = self.builder.command(HeadFields {
-                routing: self.fpga_node,
-                hwa_id: hwa as u8,
+                routing: target.node,
+                hwa_id: target.hwa_id,
                 src_id: self.id,
                 direction: Direction::ProcToHwa,
-                data_size: ((self.specs[hwa].in_words * 4).min(1023)) as u16,
+                data_size: ((target.spec.in_words * 4).min(1023)) as u16,
                 payload: CommandKind::Request.encode(),
                 ..HeadFields::default()
             });
@@ -152,19 +203,31 @@ impl OpenLoopSource {
         if flit.is_head() {
             let h = flit.head_fields();
             if h.pkt_type == PacketType::Payload {
-                self.rx_head = Some(h.hwa_id);
+                // Result heads carry the emitting fabric's tile (stamped
+                // by the system), disambiguating completions when several
+                // fabrics expose the same hwa_ids.
+                self.rx_head = Some((h.hwa_id, flit.command_origin()));
             }
             if h.pkt_type == PacketType::Command {
+                let origin = flit.command_origin();
                 match CommandKind::decode(h.payload) {
                     CommandKind::Grant => {
                         self.grants_seen += 1;
-                        let spec = &self.specs[h.hwa_id as usize];
-                        let words: Vec<u32> = (0..spec.in_words)
+                        let Some(idx) = self.target_index(origin, h.hwa_id)
+                        else {
+                            // A grant naming no known target (forged or
+                            // misrouted): nothing sane to answer.
+                            return;
+                        };
+                        let target = &self.targets[idx];
+                        let in_words = target.spec.in_words;
+                        let dest = target.node;
+                        let words: Vec<u32> = (0..in_words)
                             .map(|_| self.rng.next_u32())
                             .collect();
                         let p = self.builder.payload(
                             HeadFields {
-                                routing: self.fpga_node,
+                                routing: dest,
                                 hwa_id: h.hwa_id,
                                 src_id: self.id,
                                 tb_id: h.tb_id,
@@ -182,7 +245,7 @@ impl OpenLoopSource {
                         }
                     }
                     CommandKind::Notify => {
-                        self.complete(now, h.hwa_id);
+                        self.complete(now, origin, h.hwa_id);
                     }
                     CommandKind::Request => {}
                 }
@@ -190,14 +253,31 @@ impl OpenLoopSource {
             return;
         }
         if flit.kind() == FlitKind::Tail {
-            let hwa = self.rx_head.take().unwrap_or(0);
-            self.complete(now, hwa);
+            let (hwa, origin) = self.rx_head.take().unwrap_or((0, None));
+            self.complete(now, origin, hwa);
         }
     }
 
-    fn complete(&mut self, now: Ps, hwa: u8) {
+    fn complete(&mut self, now: Ps, origin: Option<u8>, hwa_id: u8) {
         self.results_done += 1;
-        if let Some(o) = self.outstanding.get_mut(hwa as usize) {
+        // Prefer a matching target that actually has work outstanding
+        // (several fabrics may share an hwa_id); fall back to the first
+        // match so single-fabric accounting is saturating, as before.
+        let origin_ok = |t: &OpenLoopTarget| match origin {
+            Some(o) => t.node == o,
+            None => true,
+        };
+        let idx = self
+            .targets
+            .iter()
+            .enumerate()
+            .position(|(i, t)| {
+                t.hwa_id == hwa_id
+                    && origin_ok(t)
+                    && self.outstanding.get(i).copied().unwrap_or(0) > 0
+            })
+            .or_else(|| self.target_index(origin, hwa_id));
+        if let Some(o) = idx.and_then(|i| self.outstanding.get_mut(i)) {
             *o = o.saturating_sub(1);
         }
         if let Some(t0) = self.issue_times.pop_front() {
@@ -214,7 +294,7 @@ mod tests {
     #[test]
     fn issues_requests_up_to_outstanding_cap() {
         let specs = vec![spec_by_name("izigzag").unwrap()];
-        let mut src = OpenLoopSource::new(0, 0, 8, specs, 4.0, 7);
+        let mut src = OpenLoopSource::single_fabric(0, 0, 8, specs, 4.0, 7);
         let mut flits = 0;
         for c in 0..10_000u64 {
             if src.step(c * 1000, true).is_some() {
@@ -231,7 +311,7 @@ mod tests {
     #[test]
     fn completion_reopens_the_cap() {
         let specs = vec![spec_by_name("izigzag").unwrap()];
-        let mut src = OpenLoopSource::new(0, 0, 8, specs, 4.0, 7);
+        let mut src = OpenLoopSource::single_fabric(0, 0, 8, specs, 4.0, 7);
         let mut issued = 0;
         for c in 0..10_000u64 {
             let now = c * 1000;
@@ -256,7 +336,7 @@ mod tests {
     #[test]
     fn grant_triggers_payload_without_waiting_result() {
         let specs = vec![spec_by_name("dfadd").unwrap()];
-        let mut src = OpenLoopSource::new(1, 0, 8, specs, 1.0, 9);
+        let mut src = OpenLoopSource::single_fabric(1, 0, 8, specs, 1.0, 9);
         let mut b = PacketBuilder::new(50);
         let grant = b.command(HeadFields {
             hwa_id: 0,
@@ -275,5 +355,49 @@ mod tests {
         }
         assert!(got.iter().any(|f| f.is_head()
             && f.head_fields().pkt_type == PacketType::Payload));
+    }
+
+    #[test]
+    fn stamped_grant_routes_payload_to_the_granting_fabric() {
+        // Two fabrics both expose hwa_id 0 (nodes 2 and 8): the payload
+        // must answer the tile the grant came from, disambiguated by the
+        // origin stamp.
+        let spec = spec_by_name("dfadd").unwrap();
+        let targets = vec![
+            OpenLoopTarget {
+                node: 2,
+                hwa_id: 0,
+                spec: spec.clone(),
+            },
+            OpenLoopTarget {
+                node: 8,
+                hwa_id: 0,
+                spec,
+            },
+        ];
+        let mut src = OpenLoopSource::new(1, 0, targets, 1.0, 9);
+        let mut b = PacketBuilder::new(50);
+        let grant = b.command(HeadFields {
+            hwa_id: 0,
+            src_id: 1,
+            payload: CommandKind::Grant.encode(),
+            ..HeadFields::default()
+        });
+        let mut flit = grant.flits[0];
+        flit.stamp_origin(8);
+        src.deliver(flit, 100);
+        let mut heads = Vec::new();
+        for c in 1..100u64 {
+            if let Some(f) = src.step(c, true) {
+                if f.is_head() {
+                    heads.push(f.head_fields());
+                }
+            }
+        }
+        let payload = heads
+            .iter()
+            .find(|h| h.pkt_type == PacketType::Payload)
+            .expect("payload sent");
+        assert_eq!(payload.routing, 8, "answers the granting fabric");
     }
 }

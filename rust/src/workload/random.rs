@@ -22,6 +22,9 @@ pub struct RandomWorkload {
     cfg: RandomWorkloadConfig,
     next_arrival: Vec<Ps>,
     rng: Pcg32,
+    /// Fabric-major handle list, cached on first `drive` (the system's
+    /// inventory cannot change mid-run).
+    accels: Vec<crate::accel::AccelHandle>,
     pub issued: u64,
 }
 
@@ -37,6 +40,7 @@ impl RandomWorkload {
             cfg,
             next_arrival,
             rng,
+            accels: Vec::new(),
             issued: 0,
         }
     }
@@ -46,11 +50,16 @@ impl RandomWorkload {
     pub fn drive(&mut self, rt: &mut AccelRuntime, now: Ps) {
         let per_proc = self.cfg.total_rate_per_us / rt.n_cores() as f64;
         let mean_gap_ps = PS_PER_US as f64 / per_proc.max(1e-9);
+        if self.accels.is_empty() {
+            self.accels = rt.accels();
+        }
         for core in 0..rt.n_cores() {
             if now >= self.next_arrival[core] && rt.core_done(core) {
-                let n_hwas = rt.system().config.specs.len();
-                let hwa = self.rng.range(0, n_hwas);
-                let handle = rt.accel(hwa as u8).expect("in range");
+                // Uniform over every accelerator of every fabric
+                // (fabric-major); single-fabric systems draw the exact
+                // legacy channel sequence.
+                let handle =
+                    self.accels[self.rng.range(0, self.accels.len())];
                 let words: Vec<u32> = (0..handle.in_words())
                     .map(|_| self.rng.next_u32())
                     .collect();
@@ -83,9 +92,9 @@ pub fn measure_rate_point(
             next_drive = t + drive_every;
         }
     }
-    let (in0, out0) = rt.system().fabric.flits_in_out();
+    let (in0, out0) = rt.system().flits_in_out();
     let done0 = rt.invocations_done();
-    let (busy0, cyc0) = rt.system().fabric.iface_busy();
+    let (busy0, cyc0) = rt.system().iface_busy();
     let end = rt.now() + window_us * PS_PER_US;
     while rt.now() < end {
         let t = rt.step();
@@ -94,9 +103,9 @@ pub fn measure_rate_point(
             next_drive = t + drive_every;
         }
     }
-    let (in1, out1) = rt.system().fabric.flits_in_out();
+    let (in1, out1) = rt.system().flits_in_out();
     let done1 = rt.invocations_done();
-    let (busy1, cyc1) = rt.system().fabric.iface_busy();
+    let (busy1, cyc1) = rt.system().iface_busy();
     RatePoint {
         injection_flits_per_us: (in1 - in0) as f64 / window_us as f64,
         throughput_flits_per_us: (out1 - out0) as f64 / window_us as f64,

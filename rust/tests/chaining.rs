@@ -21,7 +21,7 @@ fn jpeg_runtime() -> AccelRuntime {
         spec_by_name("idct").unwrap(),
         spec_by_name("shiftbound").unwrap(),
     ]);
-    cfg.chain_groups = vec![vec![0, 1, 2, 3]];
+    cfg.fabrics[0].chain_groups = vec![vec![0, 1, 2, 3]];
     let mut rt = AccelRuntime::new(cfg);
     rt.set_compute(Box::new(NativeCompute::default()));
     rt
@@ -47,7 +47,7 @@ fn depth0_round_trip_one_receipt_per_stage() {
         );
     }
     assert!(rt.run_until_done(200_000 * PS_PER_US));
-    assert_eq!(rt.system().fabric.tasks_executed(), 4);
+    assert_eq!(rt.system().fabric().tasks_executed(), 4);
     assert_eq!(rt.completions().len(), 4, "four separate round trips");
     let mut last_end = 0;
     for r in receipts {
@@ -70,7 +70,7 @@ fn depth1_round_trip_single_result_for_two_stages() {
     let r3 = rt.submit(0, Job::on(accels[3]).direct(vec![0; 64])).unwrap();
     assert!(rt.run_until_done(200_000 * PS_PER_US));
     assert_eq!(
-        rt.system().fabric.tasks_executed(),
+        rt.system().fabric().tasks_executed(),
         4,
         "chain hop + three visible invocations"
     );
@@ -99,7 +99,7 @@ fn depth3_round_trip_matches_golden_decoder() {
     assert!(rt.run_until_done(200_000 * PS_PER_US));
     let done = rt.poll(r).expect("chain completed");
     assert!(done.total_ps() > 0);
-    assert_eq!(rt.system().fabric.tasks_executed(), 4, "all four stages");
+    assert_eq!(rt.system().fabric().tasks_executed(), 4, "all four stages");
     assert_eq!(rt.completions().len(), 1, "one result packet");
     let want = native::jpeg_chain(&scan, &DEFAULT_QTABLE);
     let got: Vec<i32> =
@@ -182,5 +182,5 @@ fn invalid_phase_aborts_the_whole_program_load() {
     assert_eq!(err, AccelError::UnknownAccelerator { hwa_id: 17 });
     // Nothing ran: the valid leading job was not enqueued either.
     assert!(rt.run_until_done(1_000 * PS_PER_US));
-    assert_eq!(rt.system().fabric.tasks_executed(), 0);
+    assert_eq!(rt.system().fabric().tasks_executed(), 0);
 }

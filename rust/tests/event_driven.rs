@@ -77,8 +77,8 @@ fn observe(s: &Scenario, idle_skip: bool) -> Observation {
             Vec::new(),
             Vec::new(),
             lats,
-            sys.fabric.tasks_executed(),
-            sys.fabric.flits_in_out(),
+            sys.fabric().tasks_executed(),
+            sys.fabric().flits_in_out(),
         )
     } else {
         let mut rng = Pcg32::seeded(s.seed);
@@ -89,7 +89,7 @@ fn observe(s: &Scenario, idle_skip: bool) -> Observation {
                     prog.push(Segment::Compute(rng.range(100, 3000) as u64));
                 }
                 let hwa = rng.range(0, s.n_hwas);
-                let spec = sys.config.specs[hwa].clone();
+                let spec = sys.config.fabrics[0].specs[hwa].clone();
                 prog.push(Segment::Invoke(InvokeSpec::direct(
                     hwa as u8,
                     (0..spec.in_words as u32).collect(),
@@ -114,8 +114,8 @@ fn observe(s: &Scenario, idle_skip: bool) -> Observation {
             recs,
             cycles,
             Vec::new(),
-            sys.fabric.tasks_executed(),
-            sys.fabric.flits_in_out(),
+            sys.fabric().tasks_executed(),
+            sys.fabric().flits_in_out(),
         )
     }
 }

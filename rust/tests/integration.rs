@@ -21,7 +21,7 @@ fn jpeg_runtime() -> AccelRuntime {
         spec_by_name("idct").unwrap(),
         spec_by_name("shiftbound").unwrap(),
     ]);
-    cfg.chain_groups = vec![vec![0, 1, 2, 3]];
+    cfg.fabrics[0].chain_groups = vec![vec![0, 1, 2, 3]];
     AccelRuntime::new(cfg)
 }
 
@@ -81,7 +81,7 @@ fn chained_jpeg_decode_with_pjrt_compute() {
         );
     }
     assert_eq!(
-        rt.system().fabric.tasks_executed(),
+        rt.system().fabric().tasks_executed(),
         8,
         "4 stages x 2 blocks"
     );
@@ -98,7 +98,7 @@ fn memory_access_scenario_roundtrips_through_mmu() {
     // Stage input data in DRAM.
     let scan: Vec<u32> = (0..64u32).map(|i| (i * 3) % 101).collect();
     let addr = 0x4000;
-    rt.system_mut().mmu.dram.write_words(addr, &scan);
+    rt.system_mut().mmu_mut().dram.write_words(addr, &scan);
     let izigzag = rt.accel(0).unwrap();
     let receipt = rt
         .submit(0, Job::on(izigzag).via_memory(addr, 256))
@@ -110,16 +110,16 @@ fn memory_access_scenario_roundtrips_through_mmu() {
     let done = rt.poll(receipt).expect("notify received");
     assert!(done.total_ps() > 0);
     let sys = rt.system();
-    assert_eq!(sys.mmu.stats.grants_decoded, 1);
-    assert_eq!(sys.mmu.stats.dma_reads, 1);
-    assert_eq!(sys.mmu.stats.results_written, 1);
+    assert_eq!(sys.mmu().stats.grants_decoded, 1);
+    assert_eq!(sys.mmu().stats.dma_reads, 1);
+    assert_eq!(sys.mmu().stats.results_written, 1);
     // Result in DRAM equals the native izigzag of the staged input.
     let mut block = [0i32; 64];
     for (i, w) in scan.iter().enumerate() {
         block[i] = *w as i32;
     }
     let want = native::izigzag(&block);
-    let got = sys.mmu.dram.read_words(addr, 64);
+    let got = sys.mmu().dram.read_words(addr, 64);
     let got: Vec<i32> = got.iter().map(|w| *w as i32).collect();
     assert_eq!(got, want.to_vec());
 }
@@ -129,7 +129,7 @@ fn priority_bits_reorder_result_packets() {
     // Two processors invoke the same HWA; the higher-priority task's
     // result leaves the PS first when both are queued (§4.1 A.2).
     let mut cfg = SystemConfig::paper(vec![spec_by_name("idct").unwrap()]);
-    cfg.n_tbs = 2;
+    cfg.fabrics[0].n_tbs = 2;
     let mut rt = AccelRuntime::new(cfg);
     let idct = rt.accel(0).unwrap();
     let words: Vec<u32> = (0..64).collect();
@@ -149,8 +149,7 @@ fn priority_bits_reorder_result_packets() {
 #[test]
 fn all_twelve_hwas_execute_in_one_system() {
     let mut cfg = SystemConfig::paper(accnoc::fpga::hwa::table3());
-    cfg.mesh.width = 4; // more processors for 12 channels
-    cfg.mesh.height = 4;
+    cfg.set_mesh(4, 4); // more processors for 12 channels
     let mut rt = AccelRuntime::new(cfg);
     let n = rt.n_cores().min(8);
     for core in 0..n {
@@ -161,7 +160,7 @@ fn all_twelve_hwas_execute_in_one_system() {
         }
     }
     assert!(rt.run_until_done(500_000 * PS_PER_US));
-    assert_eq!(rt.system().fabric.tasks_executed(), 12);
+    assert_eq!(rt.system().fabric().tasks_executed(), 12);
 }
 
 #[test]

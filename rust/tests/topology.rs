@@ -1,0 +1,265 @@
+//! Floorplan/topology integration tests (ISSUE 5 acceptance criteria):
+//!
+//! * the `SystemConfig::paper()` compatibility path and an explicit
+//!   floorplan spelling of the same layout produce **byte-identical**
+//!   `configs/ci_smoke.toml` BENCH stats (and the legacy JSON carries no
+//!   new keys — the pre-redesign schema-2 artifact layout is preserved);
+//! * multi-fabric systems execute with correct per-fabric
+//!   `rejected_flits` / completion counts;
+//! * every unbuildable topology is a typed error, end to end.
+
+use accnoc::accel::{AccelError, AccelRuntime, Chain, Job};
+use accnoc::clock::PS_PER_US;
+use accnoc::fpga::hwa::spec_by_name;
+use accnoc::sim::{
+    Floorplan, MmuAssign, SystemConfig, System, FabricSpec, TopologyError,
+};
+use accnoc::sweep::{run_scenario, SweepRunner, SweepSpec};
+
+fn ci_smoke_sweep() -> SweepSpec {
+    let toml = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../configs/ci_smoke.toml"
+    ))
+    .expect("configs/ci_smoke.toml readable");
+    SweepSpec::parse_toml(&toml).unwrap()
+}
+
+/// The compatibility guarantee: lowering `mesh = WxH` through
+/// `SystemConfig::paper()`'s implicit plan and spelling the same plan
+/// explicitly (`"P .. / .. M F0"`) drive byte-for-byte identical
+/// simulations — every stat of every ci_smoke scenario matches.
+#[test]
+fn ci_smoke_stats_identical_through_explicit_floorplan() {
+    let grid = ci_smoke_sweep().expand().unwrap();
+    assert_eq!(grid.len(), 4, "ci_smoke pins a 2 net x 2 rate grid");
+    for spec in &grid {
+        let legacy = run_scenario(spec).unwrap();
+        let mut explicit = spec.clone();
+        // The exact legacy lowering, written out as a tile map.
+        explicit.floorplan =
+            Some("P P P / P P P / P M F0".to_string());
+        let cfg = explicit.system_config().unwrap();
+        assert_eq!(cfg.floorplan.fabric_nodes(), vec![8]);
+        assert_eq!(cfg.floorplan.mmu_nodes(), vec![7]);
+        let through_plan = run_scenario(&explicit).unwrap();
+        assert_eq!(
+            legacy, through_plan,
+            "explicit floorplan diverged on {}",
+            spec.name
+        );
+    }
+}
+
+/// The legacy artifact stays byte-stable: a single-fabric sweep's JSON
+/// carries none of the new topology keys (spec map or stats), and is
+/// thread-count invariant as before.
+#[test]
+fn ci_smoke_json_carries_no_topology_keys() {
+    let sweep = ci_smoke_sweep();
+    let grid = sweep.expand().unwrap();
+    let report = SweepRunner::with_threads(2)
+        .run(&sweep.name, grid)
+        .unwrap();
+    let json = report.render_json();
+    assert!(!json.contains("\"fabrics\""), "per-fabric rows leaked");
+    assert!(!json.contains("floorplan"), "topology spec key leaked");
+    assert!(!json.contains("mmu_assign"), "topology spec key leaked");
+    assert!(json.contains("\"schema\": 2") || json.contains("\"schema\":2"));
+}
+
+fn two_fabric_runtime() -> AccelRuntime {
+    let plan = Floorplan::parse("F0 P P / P M P / P P F1").unwrap();
+    let mut jpeg = FabricSpec::paper(vec![
+        spec_by_name("izigzag").unwrap(),
+        spec_by_name("iquantize").unwrap(),
+    ]);
+    jpeg.chain_groups = vec![vec![0, 1]];
+    let float = FabricSpec::paper(vec![spec_by_name("dfadd").unwrap()]);
+    AccelRuntime::new(SystemConfig::floorplanned(plan, vec![jpeg, float]))
+}
+
+/// Multi-fabric smoke: chained work on fabric 0 and direct work on
+/// fabric 1 complete concurrently, with per-fabric completion counts and
+/// zero rejected flits on both interface tiles.
+#[test]
+fn multi_fabric_smoke_per_fabric_counts() {
+    let mut rt = two_fabric_runtime();
+    let chain = Chain::of(rt.accel_on(0, 0).unwrap())
+        .then(rt.accel_on(0, 1).unwrap());
+    let chained = rt
+        .submit(0, Job::chained(chain).direct((0..64).collect()))
+        .unwrap();
+    let dfadd = rt.accel_on(1, 0).unwrap();
+    let mut directs = Vec::new();
+    for core in 1..3 {
+        directs.push(
+            rt.submit(core, Job::on(dfadd).direct(vec![1, 2, 3, 4]))
+                .unwrap(),
+        );
+    }
+    assert!(rt.run_until_done(200_000 * PS_PER_US));
+    assert!(rt.poll(chained).is_some());
+    for r in directs {
+        assert!(rt.poll(r).is_some(), "{r:?}");
+    }
+    let rows = rt.system().per_fabric_stats();
+    assert_eq!(rows.len(), 2);
+    assert_eq!(rows[0].tasks_executed, 2, "both chain hops on fabric 0");
+    assert_eq!(rows[1].tasks_executed, 2, "two direct jobs on fabric 1");
+    assert_eq!(rows[0].rejected_flits, 0);
+    assert_eq!(rows[1].rejected_flits, 0);
+    assert_eq!(rt.completions().len(), 3);
+}
+
+/// Cross-fabric chains are rejected by the driver before any flit is
+/// packed — at construction and again at submit.
+#[test]
+fn cross_fabric_chain_is_rejected_at_submit() {
+    let mut rt = two_fabric_runtime();
+    let on0 = rt.accel_on(0, 0).unwrap();
+    let on1 = rt.accel_on(1, 0).unwrap();
+    let chain = Chain::of(on0).then(on1);
+    assert_eq!(
+        chain.validate(),
+        Err(AccelError::CrossFabricChain { first: 0, hop: 1 })
+    );
+    assert_eq!(
+        rt.submit(0, Job::chained(chain).direct(vec![0; 64]))
+            .unwrap_err(),
+        AccelError::CrossFabricChain { first: 0, hop: 1 }
+    );
+    assert_eq!(rt.invocations_done(), 0, "nothing was enqueued");
+}
+
+/// Memory-access jobs on a second fabric round-trip through the MMU:
+/// the grant carries the granting tile, so the DMA payload reaches the
+/// right fabric — there is no global "the FPGA node" anymore.
+#[test]
+fn memory_access_reaches_the_granting_fabric() {
+    let mut rt = two_fabric_runtime();
+    let words: Vec<u32> = (0..64).collect();
+    rt.system_mut().mmu_mut().dram.write_words(0x200, &words);
+    let izigzag_f0 = rt.accel_on(0, 0).unwrap();
+    let r = rt
+        .submit(0, Job::on(izigzag_f0).via_memory(0x200, 256))
+        .unwrap();
+    assert!(rt.run_until_done(200_000 * PS_PER_US));
+    assert!(rt.poll(r).is_some());
+    let sys = rt.system();
+    assert_eq!(sys.mmu().stats.grants_decoded, 1);
+    assert_eq!(sys.mmu().stats.results_written, 1);
+    assert_eq!(sys.fabric_at(0).tasks_executed(), 1, "fabric 0 ran it");
+    assert_eq!(sys.fabric_at(1).tasks_executed(), 0);
+}
+
+/// Every rejection class in `Floorplan::validate`, through the public
+/// `System::try_new` surface.
+#[test]
+fn invalid_topologies_are_typed_errors_end_to_end() {
+    let build = |plan: &str| {
+        Floorplan::parse(plan).and_then(|p| {
+            System::try_new(SystemConfig::floorplanned(
+                p,
+                vec![FabricSpec::paper(vec![
+                    spec_by_name("dfadd").unwrap(),
+                ])],
+            ))
+            .map(|_| ())
+        })
+    };
+    assert_eq!(
+        build("M F0 / F1 ."),
+        Err(TopologyError::NoProcessors)
+    );
+    assert_eq!(build("P F0 / P P"), Err(TopologyError::NoMmu));
+    assert_eq!(build("P M / P P"), Err(TopologyError::NoFabric));
+    assert_eq!(
+        build("P F0 / M F0"),
+        Err(TopologyError::DuplicateFabricId { fabric_id: 0 })
+    );
+    assert_eq!(
+        build("P F1 / M P"),
+        Err(TopologyError::NonContiguousFabricIds {
+            n_fabrics: 1,
+            missing: 0
+        })
+    );
+    assert_eq!(
+        build("P Q / M F0"),
+        Err(TopologyError::BadToken {
+            token: "Q".to_string()
+        })
+    );
+}
+
+/// Multi-MMU assignment policies both yield working systems and route
+/// each processor to its policy's MMU tile.
+#[test]
+fn mmu_assignment_policies_differ_and_both_work() {
+    let plan = || Floorplan::parse("P M P / P F0 P / P M P").unwrap();
+    let fabrics =
+        || vec![FabricSpec::paper(vec![spec_by_name("izigzag").unwrap()])];
+    let mut nearest = SystemConfig::floorplanned(plan(), fabrics());
+    nearest.mmu_assign = MmuAssign::Nearest;
+    let mut hashed = SystemConfig::floorplanned(plan(), fabrics());
+    hashed.mmu_assign = MmuAssign::Hashed;
+    let near_sys = System::new(nearest);
+    let hash_sys = System::new(hashed);
+    // Procs sit at nodes [0, 2, 3, 5, 6, 8]; MMUs at nodes 1 and 7.
+    // src 2 (node 3) is equidistant from both MMU tiles: the nearest
+    // policy breaks the tie toward the lower node id.
+    assert_eq!(near_sys.mmu_node_for_src(2), 1);
+    assert_eq!(hash_sys.mmu_node_for_src(1), 7, "src 1 hashes to MMU 1");
+    // src 4 (node 6): nearest is node 7; hashed is node 1.
+    assert_eq!(near_sys.mmu_node_for_src(4), 7);
+    assert_eq!(hash_sys.mmu_node_for_src(4), 1);
+}
+
+/// The shipped multi-FPGA sweep satisfies the acceptance bar without
+/// running it: >= 6 scenarios, and at least one topology with >= 2
+/// FPGA interface tiles.
+#[test]
+fn fig_multi_fpga_grid_shape() {
+    let toml = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../configs/fig_multi_fpga.toml"
+    ))
+    .expect("configs/fig_multi_fpga.toml readable");
+    let sweep = SweepSpec::parse_toml(&toml).unwrap();
+    assert_eq!(sweep.output_path(), "BENCH_fig_multi_fpga.json");
+    let grid = sweep.expand().unwrap();
+    assert!(grid.len() >= 6, "{} scenarios", grid.len());
+    let max_fabrics = grid
+        .iter()
+        .map(|s| s.system_config().unwrap().fabrics.len())
+        .max()
+        .unwrap();
+    assert!(max_fabrics >= 2, "needs a multi-FPGA topology");
+}
+
+/// A short multi-FPGA scenario actually runs and reports per-fabric
+/// stats in its BENCH JSON (the full grid runs in CI).
+#[test]
+fn multi_fpga_scenario_emits_per_fabric_bench_rows() {
+    let sweep = SweepSpec::parse_toml(
+        "name = mini_multi\n\
+         [system]\n\
+         floorplan = F0 P P / P M P / P P F1\n\
+         hwas = izigzag*2\n\
+         [workload]\n\
+         kind = openloop\n\
+         rate_per_us = 2\n\
+         warmup_us = 1\n\
+         window_us = 6\n\
+         seed = 3\n",
+    )
+    .unwrap();
+    let report = SweepRunner::with_threads(2).run_sweep(&sweep).unwrap();
+    let json = report.render_json();
+    assert!(json.contains("\"fabrics\""), "{json}");
+    assert!(json.contains("\"system.floorplan\""), "{json}");
+    let stats = &report.scenarios[0].stats;
+    assert_eq!(stats.per_fabric.len(), 2);
+    assert!(stats.per_fabric.iter().all(|r| r.throughput_flits_per_us > 0.0));
+}
