@@ -106,6 +106,40 @@ fn main() {
         mesh.cycles
     });
 
+    // Batched whole-packet injection on a saturating mesh: every node
+    // offers a multi-flit payload every cycle, the zero-copy hot path's
+    // worst case. `try_inject_packet` is all-or-nothing on credits, so
+    // no wormhole is ever left half-injected under this load.
+    b.run("mesh 3x3: 1000 cycles saturating, batched inject", || {
+        let mut mesh = Mesh::new(MeshConfig::default());
+        let mut rng = Pcg32::seeded(9);
+        let mut bld = PacketBuilder::new(4);
+        let words: Vec<u32> = (0..8).collect();
+        let mut injected = 0u64;
+        for _ in 0..1000 {
+            for src in 0..9 {
+                let dst = rng.range(0, 9);
+                if src != dst {
+                    let p = bld.payload(
+                        HeadFields {
+                            routing: dst as u8,
+                            ..HeadFields::default()
+                        },
+                        &words,
+                    );
+                    if mesh.try_inject_packet(src, &p.flits) {
+                        injected += 1;
+                    }
+                }
+            }
+            mesh.step();
+            for n in 0..9 {
+                while mesh.eject_pop(n).is_some() {}
+            }
+        }
+        injected
+    });
+
     // Full system: simulated µs per wall second (the sim-rate headline).
     b.run("system: simulate 20 µs izigzag saturation", || {
         let cfg = SystemConfig::paper(vec![spec_by_name("izigzag").unwrap(); 8]);
@@ -149,6 +183,44 @@ fn main() {
             low_injection_run(true)
         })
         .mean;
+
+    // Arena allocation-rate metrics: deterministic counters from a
+    // fixed-seed saturation run, emitted into the schema-3 "counters"
+    // object so CI tracks pooling behaviour as a trajectory.
+    let arena_metrics = || {
+        let cfg =
+            SystemConfig::paper(vec![spec_by_name("izigzag").unwrap(); 8]);
+        let mut sys = System::new(cfg);
+        sys.set_open_loop(16.0, 3);
+        sys.run_for(20 * PS_PER_US);
+        (sys.arena_stats(), sys.fabric().tasks_executed())
+    };
+    let (ar, tasks_a) = arena_metrics();
+    let (ar2, tasks_b) = arena_metrics();
+    assert_eq!(ar, ar2, "arena counters must be run-to-run deterministic");
+    assert_eq!(tasks_a, tasks_b, "task count must be deterministic");
+    // Pool invariants: slab growth only happens at a new live high-water
+    // mark, and a saturating run recycles far more than it grows.
+    assert_eq!(
+        ar.packet_allocs, ar.packet_high_water,
+        "fresh packet slots only at high-water marks"
+    );
+    assert_eq!(
+        ar.words_allocs, ar.words_high_water,
+        "fresh word buffers only at high-water marks"
+    );
+    assert!(
+        ar.words_reuses > 0,
+        "saturation run must recycle word buffers (got {ar:?})"
+    );
+    b.counter("arena_packet_allocs", ar.packet_allocs as f64);
+    b.counter("arena_packet_reuses", ar.packet_reuses as f64);
+    b.counter("arena_packet_frees", ar.packet_frees as f64);
+    b.counter("arena_packet_high_water", ar.packet_high_water as f64);
+    b.counter("arena_words_allocs", ar.words_allocs as f64);
+    b.counter("arena_words_reuses", ar.words_reuses as f64);
+    b.counter("arena_words_frees", ar.words_frees as f64);
+    b.counter("arena_words_high_water", ar.words_high_water as f64);
 
     b.report("hotpath_micro");
 

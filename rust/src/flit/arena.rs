@@ -1,0 +1,458 @@
+//! Pooled packet and word-buffer storage for the simulation hot path.
+//!
+//! Every `Packet` used to be a heap-allocated `Vec<Flit>` cloned across
+//! the flit → NoC → channel → MMU module boundaries; task inputs and
+//! results were fresh `Vec<u32>`s per invocation. The paper's whole
+//! argument (§4-§5) is that light-weight interfacing wins by avoiding
+//! data-movement overhead — so the simulator's own data movement should
+//! be free too. A [`PacketArena`] owns flit storage and task word
+//! buffers in recyclable slabs: allocation hands out a copyable,
+//! generation-checked handle ([`PacketHandle`] / [`WordsHandle`]); free
+//! pushes the slot onto a free-list with its backing `Vec` *cleared but
+//! not dropped*, so capacity is retained and steady-state simulation
+//! performs zero heap allocation (proven by the counting-allocator test
+//! in `util::alloc_count`).
+//!
+//! Contract:
+//! * Handles are plain indices — `Copy`, no lifetimes — validated
+//!   against a per-slot generation counter. Using a handle after its
+//!   slot was freed (and any use of a stale handle after the slot was
+//!   reissued) panics instead of silently aliasing.
+//! * The arena never shrinks: high-water mark = live slots at the worst
+//!   moment of the run. [`ArenaStats`] exposes allocs/reuses/frees and
+//!   high-water per pool for the bench harness to pin.
+//! * `packets` and `words` are separate pools (separate struct fields),
+//!   so a packet can be encoded *from* an arena word buffer *into* an
+//!   arena flit buffer with disjoint borrows ([`PacketArena::build_payload`]).
+
+use super::packet::{Flit, Packet, PacketBuilder, WORDS_PER_BODY_FLIT};
+use super::HeadFields;
+
+/// Handle to a pooled flit buffer (one packet).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PacketHandle {
+    idx: u32,
+    gen: u32,
+}
+
+/// Handle to a pooled `u32` word buffer (task input/output data).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WordsHandle {
+    idx: u32,
+    gen: u32,
+}
+
+#[derive(Debug, Default)]
+struct PacketSlot {
+    flits: Vec<Flit>,
+    gen: u32,
+    live: bool,
+}
+
+#[derive(Debug, Default)]
+struct WordsSlot {
+    words: Vec<u32>,
+    gen: u32,
+    live: bool,
+}
+
+/// Per-pool allocation counters (cheap enough to keep always-on; the
+/// bench harness emits them into `BENCH_hotpath.json`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Slab-growing allocations (fresh slots) in the packet pool.
+    pub packet_allocs: u64,
+    /// Free-list reuses in the packet pool.
+    pub packet_reuses: u64,
+    pub packet_frees: u64,
+    /// Maximum simultaneously-live packet slots.
+    pub packet_high_water: u64,
+    pub words_allocs: u64,
+    pub words_reuses: u64,
+    pub words_frees: u64,
+    pub words_high_water: u64,
+}
+
+/// Recyclable slab pool for packets (flit runs) and task word buffers.
+#[derive(Debug, Default)]
+pub struct PacketArena {
+    packets: Vec<PacketSlot>,
+    free_packets: Vec<u32>,
+    packets_live: u64,
+    words: Vec<WordsSlot>,
+    free_words: Vec<u32>,
+    words_live: u64,
+    stats: ArenaStats,
+}
+
+impl PacketArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-size both pools (warm construction; optional — pools also
+    /// grow on demand).
+    pub fn with_capacity(packets: usize, words: usize) -> Self {
+        let mut a = Self::default();
+        a.packets.reserve(packets);
+        a.free_packets.reserve(packets);
+        a.words.reserve(words);
+        a.free_words.reserve(words);
+        a
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        self.stats
+    }
+
+    /// Live (allocated, not yet freed) buffers: (packets, word buffers).
+    pub fn live(&self) -> (u64, u64) {
+        (self.packets_live, self.words_live)
+    }
+
+    // ------------------------------------------------------------------
+    // Packet pool
+    // ------------------------------------------------------------------
+
+    /// Hand out an empty pooled flit buffer (cleared, capacity retained).
+    pub fn alloc_packet(&mut self) -> PacketHandle {
+        self.packets_live += 1;
+        self.stats.packet_high_water =
+            self.stats.packet_high_water.max(self.packets_live);
+        if let Some(idx) = self.free_packets.pop() {
+            let slot = &mut self.packets[idx as usize];
+            debug_assert!(!slot.live && slot.flits.is_empty());
+            slot.live = true;
+            self.stats.packet_reuses += 1;
+            PacketHandle { idx, gen: slot.gen }
+        } else {
+            let idx = self.packets.len() as u32;
+            self.packets.push(PacketSlot {
+                flits: Vec::new(),
+                gen: 0,
+                live: true,
+            });
+            self.stats.packet_allocs += 1;
+            PacketHandle { idx, gen: 0 }
+        }
+    }
+
+    /// Return a packet buffer to the pool. Its handle (and any copy of
+    /// it) becomes stale; the backing storage keeps its capacity.
+    pub fn free_packet(&mut self, h: PacketHandle) {
+        let slot = &mut self.packets[h.idx as usize];
+        assert!(
+            slot.live && slot.gen == h.gen,
+            "free of a stale/dead packet handle {h:?}"
+        );
+        slot.flits.clear();
+        slot.gen = slot.gen.wrapping_add(1);
+        slot.live = false;
+        self.free_packets.push(h.idx);
+        self.packets_live -= 1;
+        self.stats.packet_frees += 1;
+    }
+
+    fn packet_slot(&self, h: PacketHandle) -> &PacketSlot {
+        let slot = &self.packets[h.idx as usize];
+        assert!(
+            slot.live && slot.gen == h.gen,
+            "use of a stale/dead packet handle {h:?}"
+        );
+        slot
+    }
+
+    pub fn flits(&self, h: PacketHandle) -> &[Flit] {
+        &self.packet_slot(h).flits
+    }
+
+    pub fn flits_mut(&mut self, h: PacketHandle) -> &mut Vec<Flit> {
+        let slot = &mut self.packets[h.idx as usize];
+        assert!(
+            slot.live && slot.gen == h.gen,
+            "use of a stale/dead packet handle {h:?}"
+        );
+        &mut slot.flits
+    }
+
+    /// Owned copy of a pooled packet (test/debug convenience — the hot
+    /// path never needs it).
+    pub fn to_packet(&self, h: PacketHandle) -> Packet {
+        Packet {
+            flits: self.packet_slot(h).flits.clone(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Word pool
+    // ------------------------------------------------------------------
+
+    /// Hand out an empty pooled word buffer (cleared, capacity retained).
+    pub fn alloc_words(&mut self) -> WordsHandle {
+        self.words_live += 1;
+        self.stats.words_high_water =
+            self.stats.words_high_water.max(self.words_live);
+        if let Some(idx) = self.free_words.pop() {
+            let slot = &mut self.words[idx as usize];
+            debug_assert!(!slot.live && slot.words.is_empty());
+            slot.live = true;
+            self.stats.words_reuses += 1;
+            WordsHandle { idx, gen: slot.gen }
+        } else {
+            let idx = self.words.len() as u32;
+            self.words.push(WordsSlot {
+                words: Vec::new(),
+                gen: 0,
+                live: true,
+            });
+            self.stats.words_allocs += 1;
+            WordsHandle { idx, gen: 0 }
+        }
+    }
+
+    /// Allocate a word buffer pre-filled with a copy of `src`.
+    pub fn alloc_words_from(&mut self, src: &[u32]) -> WordsHandle {
+        let h = self.alloc_words();
+        self.words[h.idx as usize].words.extend_from_slice(src);
+        h
+    }
+
+    /// Return a word buffer to the pool (handle becomes stale, capacity
+    /// retained).
+    pub fn free_words(&mut self, h: WordsHandle) {
+        let slot = &mut self.words[h.idx as usize];
+        assert!(
+            slot.live && slot.gen == h.gen,
+            "free of a stale/dead words handle {h:?}"
+        );
+        slot.words.clear();
+        slot.gen = slot.gen.wrapping_add(1);
+        slot.live = false;
+        self.free_words.push(h.idx);
+        self.words_live -= 1;
+        self.stats.words_frees += 1;
+    }
+
+    pub fn words(&self, h: WordsHandle) -> &[u32] {
+        let slot = &self.words[h.idx as usize];
+        assert!(
+            slot.live && slot.gen == h.gen,
+            "use of a stale/dead words handle {h:?}"
+        );
+        &slot.words
+    }
+
+    pub fn words_mut(&mut self, h: WordsHandle) -> &mut Vec<u32> {
+        let slot = &mut self.words[h.idx as usize];
+        assert!(
+            slot.live && slot.gen == h.gen,
+            "use of a stale/dead words handle {h:?}"
+        );
+        &mut slot.words
+    }
+
+    // ------------------------------------------------------------------
+    // Cross-pool builders
+    // ------------------------------------------------------------------
+
+    /// Encode a payload packet whose data words already live in this
+    /// arena, into a pooled flit buffer — no intermediate `Vec`s. The
+    /// flits (including flow/seq metadata) are bit-identical to
+    /// `builder.payload(fields, arena.words(src))`.
+    pub fn build_payload(
+        &mut self,
+        builder: &mut PacketBuilder,
+        fields: HeadFields,
+        src: WordsHandle,
+    ) -> PacketHandle {
+        let h = self.alloc_packet();
+        {
+            // Disjoint pools: encode *from* the word slab *into* the
+            // flit slab without cloning either.
+            let src_slot = &self.words[src.idx as usize];
+            assert!(
+                src_slot.live && src_slot.gen == src.gen,
+                "use of a stale/dead words handle {src:?}"
+            );
+            let dst = &mut self.packets[h.idx as usize].flits;
+            dst.reserve(
+                1 + src_slot.words.len().div_ceil(WORDS_PER_BODY_FLIT).max(1),
+            );
+            builder.payload_with(fields, &src_slot.words, |f| dst.push(f));
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen, IntGen, VecGen};
+
+    #[test]
+    fn packet_roundtrip_and_reuse() {
+        let mut a = PacketArena::new();
+        let mut b = PacketBuilder::new(1);
+        let w = a.alloc_words_from(&[1, 2, 3, 4, 5]);
+        let p = a.build_payload(&mut b, HeadFields::default(), w);
+        assert_eq!(a.flits(p).len(), 1 + 2);
+        let reference = PacketBuilder::new(1).payload(HeadFields::default(), &[1, 2, 3, 4, 5]);
+        assert_eq!(a.flits(p), &reference.flits[..], "bit-identical to Vec path");
+        a.free_packet(p);
+        a.free_words(w);
+        // Second round reuses both slots: no fresh slab growth.
+        let w2 = a.alloc_words_from(&[9]);
+        let p2 = a.build_payload(&mut b, HeadFields::default(), w2);
+        let s = a.stats();
+        assert_eq!(s.packet_allocs, 1);
+        assert_eq!(s.packet_reuses, 1);
+        assert_eq!(s.words_allocs, 1);
+        assert_eq!(s.words_reuses, 1);
+        assert_eq!(a.flits(p2).len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "stale/dead")]
+    fn stale_packet_handle_panics() {
+        let mut a = PacketArena::new();
+        let p = a.alloc_packet();
+        a.free_packet(p);
+        let _ = a.flits(p);
+    }
+
+    #[test]
+    #[should_panic(expected = "stale/dead")]
+    fn stale_words_handle_panics_after_reissue() {
+        let mut a = PacketArena::new();
+        let w = a.alloc_words_from(&[7]);
+        a.free_words(w);
+        let w2 = a.alloc_words();
+        assert_ne!(w, w2, "reissued handle carries a new generation");
+        let _ = a.words(w);
+    }
+
+    #[test]
+    #[should_panic(expected = "stale/dead")]
+    fn double_free_panics() {
+        let mut a = PacketArena::new();
+        let w = a.alloc_words();
+        a.free_words(w);
+        a.free_words(w);
+    }
+
+    /// Drive random alloc/free sequences; at every point the set of live
+    /// handles must be readable, disjoint, and the pool's live count
+    /// consistent — i.e. a freed slot is never aliased by a live handle.
+    #[test]
+    fn prop_no_aliasing_after_free() {
+        // op % 3: 0/1 = alloc (with distinct fill), 2 = free oldest.
+        check(
+            "arena: no handle aliasing after free",
+            VecGen::new(IntGen::below(3), 0, 64),
+            |ops| {
+                let mut a = PacketArena::new();
+                let mut live: Vec<(WordsHandle, u32)> = Vec::new();
+                let mut tag = 0u32;
+                for op in ops {
+                    if *op == 2 && !live.is_empty() {
+                        let (h, _) = live.remove(0);
+                        a.free_words(h);
+                    } else {
+                        tag += 1;
+                        let h = a.alloc_words_from(&[tag]);
+                        live.push((h, tag));
+                    }
+                    // Every live buffer still holds its own fill word.
+                    if !live.iter().all(|(h, t)| a.words(*h) == [*t]) {
+                        return false;
+                    }
+                }
+                a.live().1 == live.len() as u64
+            },
+        );
+    }
+
+    /// Exhausting the free list grows the slab (never corrupts): allocs
+    /// beyond the freed count mint fresh slots and all fills stay intact.
+    #[test]
+    fn prop_freelist_exhaustion_grows_never_corrupts() {
+        check(
+            "arena: free-list exhaustion grows",
+            IntGen::range(1, 48),
+            |n| {
+                let n = *n as usize;
+                let mut a = PacketArena::new();
+                let first: Vec<WordsHandle> =
+                    (0..n).map(|i| a.alloc_words_from(&[i as u32])).collect();
+                for h in first {
+                    a.free_words(h);
+                }
+                // 2n allocs: n reuses then n fresh slots.
+                let second: Vec<WordsHandle> = (0..2 * n)
+                    .map(|i| a.alloc_words_from(&[1000 + i as u32]))
+                    .collect();
+                let s = a.stats();
+                s.words_reuses == n as u64
+                    && s.words_allocs == 2 * n as u64
+                    && second
+                        .iter()
+                        .enumerate()
+                        .all(|(i, h)| a.words(*h) == [1000 + i as u32])
+            },
+        );
+    }
+
+    /// Over a long random run with bounded concurrency the high-water
+    /// mark stabilizes: it never exceeds the live-set bound, and after
+    /// warmup further traffic stops moving it.
+    #[test]
+    fn prop_high_water_stabilizes() {
+        check(
+            "arena: high-water stabilizes",
+            IntGen::range(1, 8),
+            |bound| {
+                let bound = *bound as usize;
+                let mut a = PacketArena::new();
+                let mut live: Vec<WordsHandle> = Vec::new();
+                let mut warm_high = 0;
+                for round in 0..400 {
+                    // Deterministic churn: fill to `bound`, drain one.
+                    while live.len() < bound {
+                        live.push(a.alloc_words_from(&[round]));
+                    }
+                    a.free_words(live.remove(0));
+                    if round == 100 {
+                        warm_high = a.stats().words_high_water;
+                    }
+                }
+                let s = a.stats();
+                s.words_high_water <= bound as u64
+                    && s.words_high_water == warm_high
+                    && s.words_allocs == s.words_high_water
+            },
+        );
+    }
+
+    #[test]
+    fn build_payload_matches_builder_over_random_corpus() {
+        check(
+            "arena: build_payload flit-identical to Vec path",
+            VecGen::new(IntGen::below(u32::MAX as u64), 0, 70),
+            |words| {
+                let words: Vec<u32> = words.iter().map(|w| *w as u32).collect();
+                let mut a = PacketArena::new();
+                let mut b1 = PacketBuilder::new(42);
+                let mut b2 = PacketBuilder::new(42);
+                let fields = HeadFields {
+                    routing: 9,
+                    hwa_id: 3,
+                    ..HeadFields::default()
+                };
+                let w = a.alloc_words_from(&words);
+                let p = a.build_payload(&mut b1, fields, w);
+                let reference = b2.payload(fields, &words);
+                a.flits(p) == &reference.flits[..]
+            },
+        );
+    }
+}

@@ -1,8 +1,11 @@
-//! 137-bit flit format (paper Table 1), packets and task framing.
+//! 137-bit flit format (paper Table 1), packets, task framing and the
+//! pooled packet/word-buffer arena backing the zero-copy hot path.
 
+pub mod arena;
 pub mod fields;
 pub mod packet;
 
+pub use arena::{ArenaStats, PacketArena, PacketHandle, WordsHandle};
 pub use fields::{
     command_payload_origin, command_payload_with_origin, Direction, FlitKind,
     HeadFields, PacketType, RawFlit, BODY_PAYLOAD_BITS, CMD_ORIGIN_LO,

@@ -156,27 +156,40 @@ impl PacketBuilder {
         Flit { raw, meta }
     }
 
-    /// Single-flit command packet from decoded fields (kind forced Single,
-    /// type forced Command).
-    pub fn command(&mut self, mut fields: HeadFields) -> Packet {
+    /// Single command flit from decoded fields (kind forced Single, type
+    /// forced Command). The allocation-free core of [`Self::command`]:
+    /// callers that queue flits (not packets) use this directly.
+    pub fn command_flit(&mut self, mut fields: HeadFields) -> Flit {
         fields.kind = FlitKind::Single;
         fields.pkt_type = PacketType::Command;
+        self.stamp(fields.encode())
+    }
+
+    /// Single-flit command packet from decoded fields (kind forced Single,
+    /// type forced Command).
+    pub fn command(&mut self, fields: HeadFields) -> Packet {
         Packet {
-            flits: vec![self.stamp(fields.encode())],
+            flits: vec![self.command_flit(fields)],
         }
     }
 
-    /// Multi-flit payload packet: head (task/routing info) followed by the
-    /// data words packed four u32 lanes per body flit; last flit is Tail.
-    /// `fields.data_size` is set to the byte count (10-bit field, saturated).
-    pub fn payload(&mut self, mut fields: HeadFields, words: &[u32]) -> Packet {
+    /// Allocation-free core of [`Self::payload`]: stamp and encode the
+    /// head + body + tail flits of a payload packet, handing each to
+    /// `emit` in order. Every flit is stamped (seq consumed) regardless
+    /// of what `emit` does with it, so drop-on-full callers stay
+    /// sequence-identical with callers that keep the whole packet.
+    pub fn payload_with(
+        &mut self,
+        mut fields: HeadFields,
+        words: &[u32],
+        mut emit: impl FnMut(Flit),
+    ) {
         fields.pkt_type = PacketType::Payload;
         fields.data_size = ((words.len() * 4).min(1023)) as u16;
         let n_body = words.len().div_ceil(WORDS_PER_BODY_FLIT).max(1);
         fields.kind = FlitKind::Head;
         let routing = fields.routing;
-        let mut flits = Vec::with_capacity(1 + n_body);
-        flits.push(self.stamp(fields.encode()));
+        emit(self.stamp(fields.encode()));
         // A payload packet always has at least one data flit; chunk the
         // words without intermediate allocation (hot path, §Perf).
         for i in 0..n_body {
@@ -197,8 +210,17 @@ impl PacketBuilder {
             } else {
                 FlitKind::Body
             };
-            flits.push(self.stamp(encode_body(routing, kind, payload)));
+            emit(self.stamp(encode_body(routing, kind, payload)));
         }
+    }
+
+    /// Multi-flit payload packet: head (task/routing info) followed by the
+    /// data words packed four u32 lanes per body flit; last flit is Tail.
+    /// `fields.data_size` is set to the byte count (10-bit field, saturated).
+    pub fn payload(&mut self, fields: HeadFields, words: &[u32]) -> Packet {
+        let n_body = words.len().div_ceil(WORDS_PER_BODY_FLIT).max(1);
+        let mut flits = Vec::with_capacity(1 + n_body);
+        self.payload_with(fields, words, |f| flits.push(f));
         Packet { flits }
     }
 }
@@ -281,6 +303,38 @@ mod tests {
         assert!(!bad.is_well_formed());
         let empty = Packet::default();
         assert!(!empty.is_well_formed());
+    }
+
+    #[test]
+    fn streaming_builders_match_packet_builders_bit_for_bit() {
+        // The wrapper/core split (command vs command_flit, payload vs
+        // payload_with) must be flit-identical including metadata, so
+        // pooled call sites provably emit the pre-refactor wire stream.
+        let mut a = PacketBuilder::new(9);
+        let mut b = PacketBuilder::new(9);
+        for n in [0usize, 1, 4, 13, 64] {
+            let words: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(2654435761)).collect();
+            let p = a.payload(fields(3, 2), &words);
+            let mut streamed = Vec::new();
+            b.payload_with(fields(3, 2), &words, |f| streamed.push(f));
+            assert_eq!(p.flits, streamed, "payload n={n}");
+            let c = a.command(fields(6, 1));
+            let cf = b.command_flit(fields(6, 1));
+            assert_eq!(c.flits, vec![cf], "command");
+        }
+    }
+
+    #[test]
+    fn payload_with_consumes_seq_even_when_emit_drops() {
+        // Drop-on-full call sites must stay sequence-identical with the
+        // packet-keeping path: stamping happens before emit.
+        let mut a = PacketBuilder::new(10);
+        let mut b = PacketBuilder::new(10);
+        a.payload_with(fields(1, 1), &[1, 2, 3, 4, 5], |_| {});
+        b.payload(fields(1, 1), &[1, 2, 3, 4, 5]);
+        let fa = a.command_flit(fields(1, 1));
+        let fb = b.command_flit(fields(1, 1));
+        assert_eq!(fa.meta.seq, fb.meta.seq);
     }
 
     #[test]

@@ -16,7 +16,7 @@ use std::collections::VecDeque;
 use crate::clock::{Activity, ClockDomain, Ps};
 use crate::flit::{
     payload_packet_flits, Direction, FlitKind, HeadFields, Packet,
-    PacketBuilder, PacketType,
+    PacketArena, PacketBuilder, PacketHandle, PacketType,
 };
 
 use super::hwa::{HwaCompute, HwaSpec};
@@ -47,6 +47,16 @@ pub struct ChannelStats {
     /// (out-of-range `tb_id`/`src_id`, payload without a grant). A
     /// hardware channel drops such flits; the simulator must not panic.
     pub rejected_flits: u64,
+}
+
+/// One result packet queued in the POB: arena handle plus the two fields
+/// the PS consults without touching flit storage (length for credit math,
+/// head priority for arbitration).
+#[derive(Debug, Clone, Copy)]
+pub struct PobEntry {
+    pub handle: PacketHandle,
+    pub len: usize,
+    pub priority: u8,
 }
 
 /// HWA controller FSM (§4.2 B.1).
@@ -80,8 +90,9 @@ pub struct Channel {
     cb_cap: usize,
     /// Task handed over by a chaining-controller match, pending fetch.
     pub chain_in: Option<Task>,
-    /// Result packets awaiting the PS.
-    pub pob: VecDeque<Packet>,
+    /// Result packets awaiting the PS (arena handles; flit storage lives
+    /// in the simulation's [`PacketArena`]).
+    pub pob: VecDeque<PobEntry>,
     pob_flits: usize,
     pob_cap_flits: usize,
     /// Map src_id -> NoC node for reply routing.
@@ -90,10 +101,16 @@ pub struct Channel {
     /// the floorplan's per-processor nearest/hashed assignment).
     mmu_route: Vec<u8>,
     builder: PacketBuilder,
+    /// Scratch input copy handed to the compute hook so its output can be
+    /// written straight back into the task's pooled word buffer.
+    exec_in: Vec<u32>,
     pub stats: ChannelStats,
     /// Completed tasks log (drained by the fabric for metrics/compute
     /// checks).
     pub completed: Vec<Task>,
+    /// `completed[..recycled]` have had their pooled word buffers freed
+    /// (see [`Channel::recycle_completed_words`]).
+    recycled: usize,
 }
 
 impl Channel {
@@ -125,8 +142,12 @@ impl Channel {
             reply_route,
             mmu_route,
             builder: PacketBuilder::new(0x8000_0000 | hwa_id as u32),
+            exec_in: Vec::new(),
             stats: ChannelStats::default(),
-            completed: Vec::new(),
+            // Reserved up front so steady-state task retirement never
+            // reallocates the log mid-simulation.
+            completed: Vec::with_capacity(1024),
+            recycled: 0,
         }
     }
 
@@ -192,22 +213,45 @@ impl Channel {
         };
         self.tbs[free_tb].grant(t_req);
         self.stats.grants += 1;
-        self.cmd_out.push_back(HeadFields {
-            routing: grant_dest,
+        self.push_command(grant_dest, CommandKind::Grant, &req, free_tb as u8);
+    }
+
+    /// The single audited constructor for LGB command heads: every command
+    /// packet this channel emits (grant or notify) is funnelled through
+    /// here so the wire-visible field set stays reviewable in one place.
+    ///
+    /// * `Grant` echoes the requester's full reservation context back —
+    ///   chain fields, priority, direction, address, size — plus the
+    ///   reserved `tb_id` the payload packet must target (§4.2 B.2).
+    /// * `Notify` carries only the memory address (§5, Fig. 5b): the
+    ///   requesting processor learns where the MMU landed the result;
+    ///   every other field stays at its wire default.
+    fn push_command(
+        &mut self,
+        routing: u8,
+        kind: CommandKind,
+        template: &HeadFields,
+        tb_id: u8,
+    ) {
+        let mut head = HeadFields {
+            routing,
             kind: FlitKind::Single,
-            src_id: req.src_id,
+            src_id: template.src_id,
             hwa_id: self.hwa_id,
             pkt_type: PacketType::Command,
-            tb_id: free_tb as u8,
-            chain_depth: req.chain_depth,
-            chain_index: req.chain_index,
-            priority: req.priority,
-            direction: req.direction,
-            start_addr: req.start_addr,
-            data_size: req.data_size,
-            payload: CommandKind::Grant.encode(),
+            start_addr: template.start_addr,
+            payload: kind.encode(),
             ..HeadFields::default()
-        });
+        };
+        if matches!(kind, CommandKind::Grant) {
+            head.tb_id = tb_id;
+            head.chain_depth = template.chain_depth;
+            head.chain_index = template.chain_index;
+            head.priority = template.priority;
+            head.direction = template.direction;
+            head.data_size = template.data_size;
+        }
+        self.cmd_out.push_back(head);
     }
 
     /// Payload packet head from the PR (targets the granted TB). The
@@ -308,8 +352,15 @@ impl Channel {
         }
     }
 
-    /// One HWA-clock cycle.
-    pub fn step_hwa(&mut self, now: Ps, compute: &mut dyn HwaCompute) {
+    /// One HWA-clock cycle. Task word buffers live in `arena`; the
+    /// compute hook writes its output back into the task's pooled buffer
+    /// via a scratch input copy, so steady state allocates nothing.
+    pub fn step_hwa(
+        &mut self,
+        now: Ps,
+        compute: &mut dyn HwaCompute,
+        arena: &mut PacketArena,
+    ) {
         if self.busy() {
             self.stats.busy_cycles += 1;
         }
@@ -317,10 +368,13 @@ impl Channel {
         match std::mem::replace(&mut self.hwac, Hwac::Idle) {
             Hwac::Idle => {
                 // Chaining requests take priority over TB tasks (§4.2 B.3).
-                if let Some(mut task) = self.chain_in.take() {
+                if let Some(task) = self.chain_in.take() {
                     self.stats.chain_receives += 1;
-                    let n_flits = payload_packet_flits(task.words.len()) - 1;
-                    task.words.resize(self.spec.in_words, 0);
+                    // Fetch latency reflects the words as forwarded; the
+                    // buffer is padded to this HWA's width afterwards.
+                    let n_flits =
+                        payload_packet_flits(arena.words(task.words).len()) - 1;
+                    arena.words_mut(task.words).resize(self.spec.in_words, 0);
                     self.hwac = Hwac::Fetching {
                         task,
                         tb: None,
@@ -335,7 +389,8 @@ impl Channel {
                     let idx = (self.ta_rr + k) % n;
                     if self.tbs[idx].is_ready(now) {
                         self.ta_rr = (idx + 1) % n;
-                        let task = self.tbs[idx].take(self.spec.in_words, now);
+                        let task =
+                            self.tbs[idx].take(self.spec.in_words, now, arena);
                         let n_flits = self.spec.in_packet_flits() - 1;
                         self.hwac = Hwac::Fetching {
                             task,
@@ -364,7 +419,13 @@ impl Channel {
             Hwac::Executing { mut task, done_at } => {
                 if now >= done_at {
                     task.t_exec_end = now;
-                    task.words = compute.compute(&self.spec, &task.words);
+                    self.exec_in.clear();
+                    self.exec_in.extend_from_slice(arena.words(task.words));
+                    compute.compute_into(
+                        &self.spec,
+                        &self.exec_in,
+                        arena.words_mut(task.words),
+                    );
                     self.stats.tasks_executed += 1;
                     let n_out = self.spec.out_packet_flits() - 1;
                     self.hwac = Hwac::Draining {
@@ -377,14 +438,14 @@ impl Channel {
             }
             Hwac::Draining { task, done_at } => {
                 if now >= done_at {
-                    self.finish_or_block(task);
+                    self.finish_or_block(task, arena);
                 } else {
                     self.hwac = Hwac::Draining { task, done_at };
                 }
             }
             Hwac::Blocked { task } => {
                 self.stats.pg_stall_cycles += 1;
-                self.finish_or_block(task);
+                self.finish_or_block(task, arena);
             }
         }
     }
@@ -403,7 +464,7 @@ impl Channel {
     }
 
     /// PG output routing: chain onward or emit a result packet.
-    fn finish_or_block(&mut self, task: Task) {
+    fn finish_or_block(&mut self, task: Task, arena: &mut PacketArena) {
         if task.chain_remaining() > 0 {
             if self.chain_out.len() < self.cb_cap {
                 self.stats.chain_forwards += 1;
@@ -415,10 +476,15 @@ impl Channel {
         }
         let flits = self.spec.out_packet_flits();
         if self.pob_flits + flits <= self.pob_cap_flits {
-            let packet = self.make_result_packet(&task);
-            self.pob_flits += packet.len();
+            let handle = self.make_result_packet(arena, &task);
+            let len = arena.flits(handle).len();
+            self.pob_flits += len;
             self.stats.result_packets += 1;
-            self.pob.push_back(packet);
+            self.pob.push_back(PobEntry {
+                handle,
+                len,
+                priority: task.head.priority,
+            });
             // Memory-access scenario (§5, Fig. 5b): results go to the MMU;
             // the invoking processor gets a notifying command packet with
             // the memory address in the header.
@@ -429,16 +495,9 @@ impl Channel {
                 // anywhere else would hand the MMU a command packet it
                 // must treat as a grant.
                 match self.reply_route.get(task.head.src_id as usize) {
-                    Some(&routing) => self.cmd_out.push_back(HeadFields {
-                        routing,
-                        kind: FlitKind::Single,
-                        src_id: task.head.src_id,
-                        hwa_id: self.hwa_id,
-                        pkt_type: PacketType::Command,
-                        start_addr: task.head.start_addr,
-                        payload: CommandKind::Notify.encode(),
-                        ..HeadFields::default()
-                    }),
+                    Some(&routing) => {
+                        self.push_command(routing, CommandKind::Notify, &task.head, 0)
+                    }
                     None => self.stats.rejected_flits += 1,
                 }
             }
@@ -448,7 +507,11 @@ impl Channel {
         }
     }
 
-    fn make_result_packet(&mut self, task: &Task) -> Packet {
+    fn make_result_packet(
+        &mut self,
+        arena: &mut PacketArena,
+        task: &Task,
+    ) -> PacketHandle {
         let dest = match task.head.direction {
             Direction::MemToHwa | Direction::HwaToMem => {
                 self.mmu_for(task.head.src_id)
@@ -472,7 +535,7 @@ impl Channel {
             start_addr: task.head.start_addr,
             ..HeadFields::default()
         };
-        self.builder.payload(head, &task.words)
+        arena.build_payload(&mut self.builder, head, task.words)
     }
 
     /// Flits the PS still has to drain from this channel's POB.
@@ -480,29 +543,50 @@ impl Channel {
         self.pob_flits
     }
 
-    /// Enqueue a pre-built result packet (baseline rigs and tests).
-    pub fn push_result_packet(&mut self, p: Packet) -> bool {
+    /// Enqueue a pre-built result packet (baseline rigs and tests): the
+    /// flits are copied into the arena so the POB only ever holds handles.
+    pub fn push_result_packet(&mut self, arena: &mut PacketArena, p: &Packet) -> bool {
         if self.pob_flits + p.len() > self.pob_cap_flits {
             return false;
         }
+        let handle = arena.alloc_packet();
+        arena.flits_mut(handle).extend_from_slice(&p.flits);
         self.pob_flits += p.len();
         self.stats.result_packets += 1;
-        self.pob.push_back(p);
+        self.pob.push_back(PobEntry {
+            handle,
+            len: p.len(),
+            priority: p.head().priority,
+        });
         true
     }
 
     /// PS takes the frontmost result packet (after winning arbitration).
-    pub fn pop_result(&mut self) -> Option<Packet> {
-        let p = self.pob.pop_front();
-        if let Some(ref p) = p {
-            self.pob_flits -= p.len();
+    /// Ownership of the arena handle transfers to the caller, who frees
+    /// it once the last flit has left.
+    pub fn pop_result(&mut self) -> Option<PobEntry> {
+        let e = self.pob.pop_front();
+        if let Some(ref e) = e {
+            self.pob_flits -= e.len;
         }
-        p
+        e
     }
 
     /// Highest priority among queued result packets (for priority RR).
     pub fn pob_priority(&self) -> Option<u8> {
-        self.pob.front().map(|p| p.head().priority)
+        self.pob.front().map(|e| e.priority)
+    }
+
+    /// Free the pooled word buffers of tasks retired since the last call.
+    /// The `completed` log keeps every [`Task`]'s header and timestamps
+    /// for end-of-run metrics; only the word payloads are recycled, so
+    /// callers driving a long simulation return buffers to the pool each
+    /// step instead of holding one per retired task.
+    pub fn recycle_completed_words(&mut self, arena: &mut PacketArena) {
+        for task in &self.completed[self.recycled..] {
+            arena.free_words(task.words);
+        }
+        self.recycled = self.completed.len();
     }
 
     /// All task buffers are free and nothing is mid-flight.
@@ -536,13 +620,18 @@ mod tests {
     }
 
     /// Drive the channel's HWA clock until predicate or timeout.
-    fn run_hwa(ch: &mut Channel, cycles: u64, mut until: impl FnMut(&Channel) -> bool) -> u64 {
+    fn run_hwa(
+        ch: &mut Channel,
+        arena: &mut PacketArena,
+        cycles: u64,
+        mut until: impl FnMut(&Channel) -> bool,
+    ) -> u64 {
         let mut compute = EchoCompute;
         let period = ch.hwa_clock.period_ps;
         let mut now = 0;
         for c in 0..cycles {
             now += period;
-            ch.step_hwa(now, &mut compute);
+            ch.step_hwa(now, &mut compute, arena);
             if until(ch) {
                 return c + 1;
             }
@@ -597,16 +686,20 @@ mod tests {
 
     #[test]
     fn task_executes_and_produces_result_packet() {
+        let mut arena = PacketArena::new();
         let mut ch = channel("dfadd", 2);
         ch.push_request(request(1), 0);
         ch.step_lgc(0);
         fill_tb(&mut ch, 0, 4);
-        let cycles = run_hwa(&mut ch, 1000, |c| !c.pob.is_empty());
+        let cycles = run_hwa(&mut ch, &mut arena, 1000, |c| !c.pob.is_empty());
         assert!(cycles < 1000, "task completed");
-        let p = ch.pop_result().unwrap();
+        let e = ch.pop_result().unwrap();
+        let p = arena.to_packet(e.handle);
+        assert_eq!(p.len(), e.len);
         assert!(p.is_well_formed());
         assert_eq!(p.head().hwa_id, 0);
         assert_eq!(p.head().direction, Direction::HwaToProc);
+        assert_eq!(e.priority, p.head().priority);
         assert_eq!(ch.stats.tasks_executed, 1);
         // dfadd: fetch(4+1) + exec(6) + drain(4+1) = 16 cycles minimum.
         assert!(cycles >= 16, "cycles={cycles}");
@@ -615,11 +708,12 @@ mod tests {
     #[test]
     fn table2_hwac_pg_latency_structure() {
         // HWAC fetch = 4 + N_in cycles; PG = 4 + N_out cycles; exec between.
+        let mut arena = PacketArena::new();
         let mut ch = channel("izigzag", 2);
         ch.push_request(request(0), 0);
         ch.step_lgc(0);
         fill_tb(&mut ch, 0, 64); // 16 data flits
-        let cycles = run_hwa(&mut ch, 1000, |c| !c.pob.is_empty());
+        let cycles = run_hwa(&mut ch, &mut arena, 1000, |c| !c.pob.is_empty());
         // fetch 4+16, exec 1, drain 4+16 = 41; TA/pipeline edges may add 1.
         assert!((41..=43).contains(&cycles), "cycles={cycles}");
     }
@@ -646,7 +740,8 @@ mod tests {
         for (i, chunk) in lanes.chunks(4).enumerate() {
             ch.payload_data(0, chunk, i == 15, 0);
         }
-        run_hwa(&mut ch, 1000, |c| !c.chain_out.is_empty());
+        let mut arena = PacketArena::new();
+        run_hwa(&mut ch, &mut arena, 1000, |c| !c.chain_out.is_empty());
         assert_eq!(ch.chain_out.len(), 1);
         assert!(ch.pob.is_empty());
         assert_eq!(ch.stats.chain_forwards, 1);
@@ -654,43 +749,49 @@ mod tests {
 
     #[test]
     fn chain_in_has_priority_over_tb() {
+        let mut arena = PacketArena::new();
         let mut ch = channel("dfadd", 2);
         // Ready TB task:
         ch.push_request(request(1), 0);
         ch.step_lgc(0);
         fill_tb(&mut ch, 0, 4);
         // And a chained task:
-        let chained = Task::new(HeadFields::default(), vec![7, 7], 9);
+        let chained =
+            Task::new(HeadFields::default(), arena.alloc_words_from(&[7, 7]), 9);
         ch.chain_in = Some(chained);
         let mut compute = EchoCompute;
-        ch.step_hwa(ch.hwa_clock.period_ps, &mut compute);
+        ch.step_hwa(ch.hwa_clock.period_ps, &mut compute, &mut arena);
         assert_eq!(ch.stats.chain_receives, 1, "chained task picked first");
         assert!(matches!(ch.hwac, Hwac::Fetching { tb: None, .. }));
     }
 
     #[test]
     fn pg_blocks_on_full_cb_until_space() {
+        let mut arena = PacketArena::new();
         let mut ch = channel("izigzag", 2);
         // Fill the CB to capacity manually.
         for _ in 0..DEFAULT_CB_CAP {
-            ch.chain_out
-                .push_back(Task::new(HeadFields::default(), vec![], 0));
+            ch.chain_out.push_back(Task::new(
+                HeadFields::default(),
+                arena.alloc_words(),
+                0,
+            ));
         }
         let mut t = Task::new(
             HeadFields {
                 chain_depth: 1,
                 ..HeadFields::default()
             },
-            vec![1],
+            arena.alloc_words_from(&[1]),
             0,
         );
         t.t_exec_end = 1;
         ch.hwac = Hwac::Blocked { task: t };
         let mut compute = EchoCompute;
-        ch.step_hwa(100, &mut compute);
+        ch.step_hwa(100, &mut compute, &mut arena);
         assert!(matches!(ch.hwac, Hwac::Blocked { .. }), "still blocked");
         ch.chain_out.pop_front();
-        ch.step_hwa(200, &mut compute);
+        ch.step_hwa(200, &mut compute, &mut arena);
         assert!(matches!(ch.hwac, Hwac::Idle));
         assert_eq!(ch.chain_out.len(), DEFAULT_CB_CAP);
     }

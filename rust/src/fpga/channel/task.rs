@@ -1,7 +1,7 @@
 //! A task: one HWA invocation's header + data words + timestamps.
 
 use crate::clock::Ps;
-use crate::flit::HeadFields;
+use crate::flit::{HeadFields, WordsHandle};
 
 /// Command subtypes carried in the low payload bits of command packets.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,8 +34,10 @@ impl CommandKind {
 pub struct Task {
     /// Current header; chaining fields mutate as the task hops HWAs.
     pub head: HeadFields,
-    /// Data words (input before execution, output after).
-    pub words: Vec<u32>,
+    /// Pooled data-word buffer (input before execution, output after).
+    /// The buffer lives in the simulation's [`crate::flit::PacketArena`];
+    /// whoever retires the task frees the handle.
+    pub words: WordsHandle,
     /// Flow id for metrics (from the payload packet's flits).
     pub flow: u32,
     /// Chain hops completed so far (simulation metadata).
@@ -48,7 +50,7 @@ pub struct Task {
 }
 
 impl Task {
-    pub fn new(head: HeadFields, words: Vec<u32>, flow: u32) -> Self {
+    pub fn new(head: HeadFields, words: WordsHandle, flow: u32) -> Self {
         Self {
             head,
             words,
@@ -83,7 +85,7 @@ impl Task {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::flit::HeadFields;
+    use crate::flit::{HeadFields, PacketArena};
 
     #[test]
     fn command_kind_roundtrip() {
@@ -94,13 +96,14 @@ mod tests {
 
     #[test]
     fn chain_advance_shifts_indexes() {
+        let mut arena = PacketArena::new();
         let mut t = Task::new(
             HeadFields {
                 chain_depth: 3,
                 chain_index: [2, 1, 3],
                 ..HeadFields::default()
             },
-            vec![],
+            arena.alloc_words(),
             0,
         );
         assert_eq!(t.advance_chain(), 2);
@@ -115,13 +118,14 @@ mod tests {
     /// that a later (buggy or forged) depth bump could act on.
     #[test]
     fn chain_exhaustion_zero_fills_index_lanes() {
+        let mut arena = PacketArena::new();
         let mut t = Task::new(
             HeadFields {
                 chain_depth: 2,
                 chain_index: [1, 3, 0],
                 ..HeadFields::default()
             },
-            vec![],
+            arena.alloc_words(),
             0,
         );
         assert_eq!(t.advance_chain(), 1);

@@ -3,7 +3,7 @@
 //! transitions implement the request/grant protocol's buffer reservation.
 
 use crate::clock::Ps;
-use crate::flit::HeadFields;
+use crate::flit::{HeadFields, PacketArena};
 
 use super::task::Task;
 
@@ -88,16 +88,18 @@ impl TaskBuffer {
         }
     }
 
-    /// The task arbiter hands the buffer to the HWA controller.
-    pub fn take(&mut self, expected_words: usize, now: Ps) -> Task {
+    /// The task arbiter hands the buffer to the HWA controller. The staged
+    /// words are copied into a pooled arena buffer; the TB keeps (and
+    /// reuses) its own BRAM-model `Vec` capacity across fills.
+    pub fn take(&mut self, expected_words: usize, now: Ps, arena: &mut PacketArena) -> Task {
         debug_assert!(self.is_ready(now));
         self.state = TbState::InUse;
         let head = self.head.take().expect("filled buffer has a head");
-        let mut words = std::mem::take(&mut self.words);
+        let handle = arena.alloc_words_from(&self.words);
         // Pad/truncate to the HWA's expected input width (the paper's HWAs
         // have fixed input sizes; data_size in the header is advisory).
-        words.resize(expected_words, 0);
-        let mut task = Task::new(head, words, self.flow);
+        arena.words_mut(handle).resize(expected_words, 0);
+        let mut task = Task::new(head, handle, self.flow);
         task.t_request = self.t_request;
         task.t_ready = self.ready_at;
         task
@@ -124,6 +126,7 @@ mod tests {
 
     #[test]
     fn full_lifecycle() {
+        let mut arena = PacketArena::new();
         let mut tb = TaskBuffer::new();
         assert_eq!(tb.state, TbState::Free);
         tb.grant(100);
@@ -133,8 +136,8 @@ mod tests {
         tb.finish_fill(500);
         assert!(!tb.is_ready(400), "not visible before CDC sync");
         assert!(tb.is_ready(500));
-        let task = tb.take(8, 500);
-        assert_eq!(task.words, vec![1, 2, 3, 4, 5, 6, 0, 0]);
+        let task = tb.take(8, 500, &mut arena);
+        assert_eq!(arena.words(task.words), &[1, 2, 3, 4, 5, 6, 0, 0]);
         assert_eq!(task.flow, 7);
         assert_eq!(task.t_request, 100);
         tb.release();
@@ -143,13 +146,14 @@ mod tests {
 
     #[test]
     fn truncates_excess_words() {
+        let mut arena = PacketArena::new();
         let mut tb = TaskBuffer::new();
         tb.grant(0);
         tb.begin_fill(HeadFields::default(), 0);
         tb.push_words(&[9; 16]);
         tb.finish_fill(0);
-        let task = tb.take(4, 0);
-        assert_eq!(task.words.len(), 4);
+        let task = tb.take(4, 0, &mut arena);
+        assert_eq!(arena.words(task.words).len(), 4);
     }
 
     #[test]

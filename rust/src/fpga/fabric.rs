@@ -8,7 +8,7 @@
 //! these from a [`crate::clock::MultiClock`].
 
 use crate::clock::{Activity, AsyncFifo, ClockDomain, Ps};
-use crate::flit::Flit;
+use crate::flit::{Flit, PacketArena};
 
 use super::channel::Channel;
 use super::hwa::{EchoCompute, HwaCompute, HwaSpec};
@@ -243,13 +243,13 @@ impl Fpga {
         }
     }
 
-    pub fn step_iface(&mut self, now: Ps) {
+    pub fn step_iface(&mut self, now: Ps, arena: &mut PacketArena) {
         self.stats.iface_cycles += 1;
         if self.channels.iter().any(|c| c.busy()) {
             self.stats.busy_iface_cycles += 1;
         }
         // Chaining controllers (combinational, §4.2 B.3).
-        self.step_chain_controllers();
+        self.step_chain_controllers(arena);
         // Packet receiver(s): the input stream is serial; the PR owning
         // the in-flight packet (or the one selected by the head flit's
         // hwa_id) advances.
@@ -261,7 +261,7 @@ impl Fpga {
         // Packet sender into the router input buffer.
         let router_in = &mut self.router_in;
         let mut pushed = |f: Flit| router_in.push(now, f);
-        self.ps.step(&mut self.channels, &mut pushed);
+        self.ps.step(&mut self.channels, arena, &mut pushed);
     }
 
     fn step_pr(&mut self, now: Ps) {
@@ -288,7 +288,7 @@ impl Fpga {
         self.prs[pr_idx].step(now, &mut self.router_out, &mut self.channels, &lookup);
     }
 
-    fn step_chain_controllers(&mut self) {
+    fn step_chain_controllers(&mut self, arena: &mut PacketArena) {
         for group in self.chain_groups.iter_mut() {
             let m = group.members.len();
             if m == 0 {
@@ -306,9 +306,12 @@ impl Fpga {
                     // driver rejects these at construction, so only forged
                     // wire traffic reaches here): drop the task and count
                     // it like every other untrusted-header rejection.
-                    // Keeps the fabric live.
+                    // Keeps the fabric live. The dropped task's pooled
+                    // word buffer goes back to the arena.
                     self.channels[prod].stats.rejected_flits += 1;
-                    self.channels[prod].chain_out.pop_front();
+                    if let Some(task) = self.channels[prod].chain_out.pop_front() {
+                        arena.free_words(task.words);
+                    }
                     continue;
                 }
                 let target = group.members[next_idx];
@@ -329,8 +332,17 @@ impl Fpga {
     // ------------------------------------------------------------------
 
     /// Step one channel on its own clock edge.
-    pub fn step_channel(&mut self, idx: usize, now: Ps) {
-        self.channels[idx].step_hwa(now, self.compute.as_mut());
+    pub fn step_channel(&mut self, idx: usize, now: Ps, arena: &mut PacketArena) {
+        self.channels[idx].step_hwa(now, self.compute.as_mut(), arena);
+    }
+
+    /// Return every newly-retired task's pooled word buffer to the arena
+    /// (called once per system step; see
+    /// [`Channel::recycle_completed_words`]).
+    pub fn recycle_completed_words(&mut self, arena: &mut PacketArena) {
+        for ch in self.channels.iter_mut() {
+            ch.recycle_completed_words(arena);
+        }
     }
 
     /// Distinct HWA clock periods (for MultiClock registration):
@@ -379,6 +391,7 @@ mod tests {
     /// (no NoC): feeds flits into router_out, drains router_in.
     struct Rig {
         fpga: Fpga,
+        arena: PacketArena,
         mc: MultiClock,
         iface_dom: crate::clock::DomainId,
         noc_dom: crate::clock::DomainId,
@@ -410,6 +423,7 @@ mod tests {
                 .collect();
             Self {
                 fpga,
+                arena: PacketArena::new(),
                 mc,
                 iface_dom,
                 noc_dom,
@@ -432,7 +446,7 @@ mod tests {
                 let t = self.mc.advance(&mut ticking);
                 for d in ticking.clone() {
                     if d == self.iface_dom {
-                        self.fpga.step_iface(t);
+                        self.fpga.step_iface(t, &mut self.arena);
                     } else if d == self.noc_dom {
                         if let Some(f) = self.fpga.pop_to_noc(t) {
                             self.out.push(f);
@@ -441,7 +455,7 @@ mod tests {
                         self.hwa_doms.iter().find(|(dd, _)| *dd == d)
                     {
                         for i in chans.clone() {
-                            self.fpga.step_channel(i, t);
+                            self.fpga.step_channel(i, t, &mut self.arena);
                         }
                     }
                 }

@@ -198,8 +198,21 @@ pub fn spec_by_name(name: &str) -> Option<HwaSpec> {
 /// words when the (simulated) execution completes. Implementations:
 /// [`EchoCompute`] (timing-only), `runtime::NativeCompute` (Rust golden),
 /// `runtime::PjrtCompute` (AOT artifacts through PJRT).
+///
+/// `compute_into` is the required (hot-path) form: it writes the result
+/// into a caller-owned buffer so pooled word storage is reused with zero
+/// heap allocation. The allocating `compute` stays as a convenience
+/// wrapper for tests and one-shot callers.
 pub trait HwaCompute {
-    fn compute(&mut self, spec: &HwaSpec, input: &[u32]) -> Vec<u32>;
+    /// Clear `out` and fill it with the task's output words.
+    fn compute_into(&mut self, spec: &HwaSpec, input: &[u32], out: &mut Vec<u32>);
+
+    /// Allocating convenience wrapper over [`Self::compute_into`].
+    fn compute(&mut self, spec: &HwaSpec, input: &[u32]) -> Vec<u32> {
+        let mut out = Vec::with_capacity(spec.out_words);
+        self.compute_into(spec, input, &mut out);
+        out
+    }
 }
 
 /// Timing-only compute: emits `out_words` words echoing/rotating input.
@@ -207,10 +220,11 @@ pub trait HwaCompute {
 pub struct EchoCompute;
 
 impl HwaCompute for EchoCompute {
-    fn compute(&mut self, spec: &HwaSpec, input: &[u32]) -> Vec<u32> {
-        (0..spec.out_words)
-            .map(|i| input.get(i % input.len().max(1)).copied().unwrap_or(0))
-            .collect()
+    fn compute_into(&mut self, spec: &HwaSpec, input: &[u32], out: &mut Vec<u32>) {
+        out.clear();
+        for i in 0..spec.out_words {
+            out.push(input.get(i % input.len().max(1)).copied().unwrap_or(0));
+        }
     }
 }
 
@@ -268,5 +282,10 @@ mod tests {
         let spec = spec_by_name("dfadd").unwrap();
         let out = EchoCompute.compute(&spec, &[1, 2, 3, 4]);
         assert_eq!(out.len(), spec.out_words);
+        // The in-place form reuses the caller's buffer and agrees with
+        // the allocating wrapper.
+        let mut buf = vec![99; 16];
+        EchoCompute.compute_into(&spec, &[1, 2, 3, 4], &mut buf);
+        assert_eq!(buf, out);
     }
 }

@@ -277,18 +277,21 @@ mod tests {
             &[10, 20, 30, 40],
         );
         drive(&mut pr, &mut chans, p.flits.clone());
+        use crate::flit::PacketArena;
         use crate::fpga::hwa::EchoCompute;
+        let mut arena = PacketArena::new();
         let mut compute = EchoCompute;
         let mut now = 1_000_000;
         for _ in 0..200 {
             now += chans[0].hwa_clock.period_ps;
-            chans[0].step_hwa(now, &mut compute);
+            chans[0].step_hwa(now, &mut compute, &mut arena);
             if !chans[0].pob.is_empty() {
                 break;
             }
         }
         assert_eq!(chans[0].completed.len(), 1);
-        assert_eq!(chans[0].completed[0].words.len(), 2); // dfadd out_words
+        // dfadd out_words
+        assert_eq!(arena.words(chans[0].completed[0].words).len(), 2);
     }
 
     #[test]

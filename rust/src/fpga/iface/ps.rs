@@ -11,7 +11,7 @@
 //!   and the N data flits at one per cycle). The strategy's fmax impact is
 //!   modelled by `synth::delay` (Fig. 7).
 
-use crate::flit::{Flit, Packet, PacketBuilder};
+use crate::flit::{Flit, PacketArena, PacketBuilder, PacketHandle};
 
 use super::super::channel::Channel;
 
@@ -55,7 +55,9 @@ pub struct PsStats {
 enum PsState {
     Idle,
     Arbitrating { channel: usize, cycles_left: u32 },
-    Streaming { packet: Packet, next: usize },
+    /// Streaming an arena-backed result packet: the PS owns the handle
+    /// from `pop_result` until the tail flit is accepted, then frees it.
+    Streaming { handle: PacketHandle, len: usize, next: usize },
 }
 
 #[derive(Debug)]
@@ -83,10 +85,13 @@ impl PacketSender {
     }
 
     /// One interface cycle. `out_push` pushes a flit toward the router
-    /// input buffer, returning false when it is full.
+    /// input buffer, returning false when it is full. Result-packet flit
+    /// storage lives in `arena`; the PS frees each packet's handle once
+    /// its tail flit has been accepted.
     pub fn step(
         &mut self,
         channels: &mut [Channel],
+        arena: &mut PacketArena,
         out_push: &mut dyn FnMut(Flit) -> bool,
     ) {
         match std::mem::replace(&mut self.state, PsState::Idle) {
@@ -96,8 +101,8 @@ impl PacketSender {
                 for k in 0..n {
                     let idx = (self.cmd_rr + k) % n;
                     if let Some(head) = channels[idx].cmd_out.front() {
-                        let pkt = self.builder.command(*head);
-                        if out_push(pkt.flits[0]) {
+                        let flit = self.builder.command_flit(*head);
+                        if out_push(flit) {
                             channels[idx].cmd_out.pop_front();
                             self.cmd_rr = (idx + 1) % n;
                             self.stats.command_flits += 1;
@@ -129,42 +134,56 @@ impl PacketSender {
                     };
                 } else {
                     match channels[channel].pop_result() {
-                        Some(packet) => {
+                        Some(entry) => {
                             self.stats.result_packets += 1;
-                            self.state = PsState::Streaming { packet, next: 0 };
+                            self.state = PsState::Streaming {
+                                handle: entry.handle,
+                                len: entry.len,
+                                next: 0,
+                            };
                             // Handshake's final cycle coincides with head
                             // issue.
-                            self.emit(out_push);
+                            self.emit(arena, out_push);
                         }
                         None => { /* drained by reset: drop */ }
                     }
                 }
             }
-            PsState::Streaming { packet, next } => {
+            PsState::Streaming { handle, len, next } => {
                 self.stats.busy_cycles += 1;
-                self.state = PsState::Streaming { packet, next };
-                self.emit(out_push);
+                self.state = PsState::Streaming { handle, len, next };
+                self.emit(arena, out_push);
             }
         }
     }
 
-    fn emit(&mut self, out_push: &mut dyn FnMut(Flit) -> bool) {
-        if let PsState::Streaming { packet, next } =
+    fn emit(
+        &mut self,
+        arena: &mut PacketArena,
+        out_push: &mut dyn FnMut(Flit) -> bool,
+    ) {
+        if let PsState::Streaming { handle, len, next } =
             std::mem::replace(&mut self.state, PsState::Idle)
         {
-            if next < packet.flits.len() {
-                if out_push(packet.flits[next]) {
+            if next < len {
+                if out_push(arena.flits(handle)[next]) {
                     self.stats.result_flits += 1;
-                    if next + 1 < packet.flits.len() {
+                    if next + 1 < len {
                         self.state = PsState::Streaming {
-                            packet,
+                            handle,
+                            len,
                             next: next + 1,
                         };
+                    } else {
+                        // Tail accepted: storage returns to the pool.
+                        arena.free_packet(handle);
                     }
                 } else {
                     self.stats.stall_cycles += 1;
-                    self.state = PsState::Streaming { packet, next };
+                    self.state = PsState::Streaming { handle, len, next };
                 }
+            } else {
+                arena.free_packet(handle);
             }
         }
     }
@@ -212,7 +231,7 @@ mod tests {
         Channel::new(hwa_id, spec_by_name("dfadd").unwrap(), 2, vec![0; 8], vec![7; 8])
     }
 
-    fn result_packet(ch: &mut Channel, priority: u8, words: usize) {
+    fn result_packet(ch: &mut Channel, arena: &mut PacketArena, priority: u8, words: usize) {
         let mut b = crate::flit::PacketBuilder::new(100 + ch.hwa_id as u32);
         let p = b.payload(
             HeadFields {
@@ -223,39 +242,46 @@ mod tests {
             },
             &vec![1u32; words],
         );
-        assert!(ch.push_result_packet(p));
+        assert!(ch.push_result_packet(arena, &p));
     }
 
-    fn run(ps: &mut PacketSender, channels: &mut [Channel], cycles: usize) -> Vec<Flit> {
+    fn run(
+        ps: &mut PacketSender,
+        channels: &mut [Channel],
+        arena: &mut PacketArena,
+        cycles: usize,
+    ) -> Vec<Flit> {
         let mut out = Vec::new();
         for _ in 0..cycles {
             let mut push = |f: Flit| {
                 out.push(f);
                 true
             };
-            ps.step(channels, &mut push);
+            ps.step(channels, arena, &mut push);
         }
         out
     }
 
     #[test]
     fn command_beats_result() {
+        let mut arena = PacketArena::new();
         let mut chans = vec![mk_channel(0), mk_channel(1)];
-        result_packet(&mut chans[0], 0, 4);
+        result_packet(&mut chans[0], &mut arena, 0, 4);
         chans[1].cmd_out.push_back(HeadFields {
             pkt_type: PacketType::Command,
             ..HeadFields::default()
         });
         let mut ps = PacketSender::new(PsStrategy::hierarchical(2), 2);
-        let out = run(&mut ps, &mut chans, 1);
+        let out = run(&mut ps, &mut chans, &mut arena, 1);
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].kind(), FlitKind::Single, "command went first");
     }
 
     #[test]
     fn result_packet_takes_4_plus_n_cycles() {
+        let mut arena = PacketArena::new();
         let mut chans = vec![mk_channel(0)];
-        result_packet(&mut chans[0], 0, 4); // head + 1 data flit => N=1
+        result_packet(&mut chans[0], &mut arena, 0, 4); // head + 1 data flit => N=1
         let mut ps = PacketSender::new(PsStrategy::global(1), 1);
         let mut emitted_at = Vec::new();
         for cycle in 1..=20 {
@@ -263,32 +289,36 @@ mod tests {
                 emitted_at.push(cycle);
                 true
             };
-            ps.step(&mut chans, &mut push);
+            ps.step(&mut chans, &mut arena, &mut push);
         }
         // Head on cycle 4 (3 arb + issue), tail on cycle 5 => 4+N total.
         assert_eq!(emitted_at, vec![4, 5]);
+        // The streamed packet's storage went back to the pool.
+        assert_eq!(arena.live(), (0, 0));
     }
 
     #[test]
     fn priority_wins_within_group() {
+        let mut arena = PacketArena::new();
         let mut chans = vec![mk_channel(0), mk_channel(1)];
-        result_packet(&mut chans[0], 0, 4);
-        result_packet(&mut chans[1], 3, 4);
+        result_packet(&mut chans[0], &mut arena, 0, 4);
+        result_packet(&mut chans[1], &mut arena, 3, 4);
         let mut ps = PacketSender::new(PsStrategy::global(2), 2);
-        let out = run(&mut ps, &mut chans, 6);
+        let out = run(&mut ps, &mut chans, &mut arena, 6);
         assert!(!out.is_empty());
         assert_eq!(out[0].head_fields().priority, 3, "high priority first");
     }
 
     #[test]
     fn round_robin_when_priorities_equal() {
+        let mut arena = PacketArena::new();
         let mut chans = vec![mk_channel(0), mk_channel(1)];
         for _ in 0..2 {
-            result_packet(&mut chans[0], 1, 4);
-            result_packet(&mut chans[1], 1, 4);
+            result_packet(&mut chans[0], &mut arena, 1, 4);
+            result_packet(&mut chans[1], &mut arena, 1, 4);
         }
         let mut ps = PacketSender::new(PsStrategy::global(2), 2);
-        let out = run(&mut ps, &mut chans, 40);
+        let out = run(&mut ps, &mut chans, &mut arena, 40);
         let heads: Vec<u32> = out
             .iter()
             .filter(|f| f.is_head())
@@ -300,15 +330,16 @@ mod tests {
 
     #[test]
     fn streaming_not_preempted_by_command() {
+        let mut arena = PacketArena::new();
         let mut chans = vec![mk_channel(0), mk_channel(1)];
-        result_packet(&mut chans[0], 0, 16); // head + 4 data flits
+        result_packet(&mut chans[0], &mut arena, 0, 16); // head + 4 data flits
         let mut ps = PacketSender::new(PsStrategy::global(2), 2);
-        run(&mut ps, &mut chans, 4); // arb + head out
+        run(&mut ps, &mut chans, &mut arena, 4); // arb + head out
         chans[1].cmd_out.push_back(HeadFields {
             pkt_type: PacketType::Command,
             ..HeadFields::default()
         });
-        let out = run(&mut ps, &mut chans, 10);
+        let out = run(&mut ps, &mut chans, &mut arena, 10);
         let kinds: Vec<FlitKind> = out.iter().map(|f| f.kind()).collect();
         let cmd_pos = kinds.iter().position(|k| *k == FlitKind::Single).unwrap();
         let last_data = kinds
@@ -320,8 +351,9 @@ mod tests {
 
     #[test]
     fn backpressure_stalls_without_loss() {
+        let mut arena = PacketArena::new();
         let mut chans = vec![mk_channel(0)];
-        result_packet(&mut chans[0], 0, 8);
+        result_packet(&mut chans[0], &mut arena, 0, 8);
         let mut ps = PacketSender::new(PsStrategy::global(1), 1);
         let mut accepted = Vec::new();
         for cycle in 1..=30 {
@@ -333,7 +365,7 @@ mod tests {
                     true
                 }
             };
-            ps.step(&mut chans, &mut push);
+            ps.step(&mut chans, &mut arena, &mut push);
         }
         // head + 2 data flits all delivered despite early rejects.
         assert_eq!(accepted.len(), 3);
@@ -342,12 +374,13 @@ mod tests {
 
     #[test]
     fn hierarchical_groups_served_round_robin() {
+        let mut arena = PacketArena::new();
         let mut chans: Vec<Channel> = (0..4).map(mk_channel).collect();
         for ch in chans.iter_mut() {
-            result_packet(ch, 0, 4);
+            result_packet(ch, &mut arena, 0, 4);
         }
         let mut ps = PacketSender::new(PsStrategy::hierarchical(2), 4);
-        let out = run(&mut ps, &mut chans, 40);
+        let out = run(&mut ps, &mut chans, &mut arena, 40);
         let heads: Vec<u32> = out
             .iter()
             .filter(|f| f.is_head())

@@ -42,6 +42,19 @@ impl Dram {
             .collect()
     }
 
+    /// Like [`read_words`](Self::read_words) but fills a caller-owned
+    /// buffer, so steady-state DMA paths can reuse one scratch allocation.
+    pub fn read_words_into(&mut self, addr: u32, n: usize, out: &mut Vec<u32>) {
+        self.reads += 1;
+        out.clear();
+        out.extend((0..n).map(|i| {
+            self.store
+                .get(&(addr + (i as u32) * 4))
+                .copied()
+                .unwrap_or(0)
+        }));
+    }
+
     /// Completion time of an `n_words` access starting at `now`,
     /// given the NoC clock period.
     pub fn access_done_at(&self, now: Ps, n_words: usize, period_ps: u64) -> Ps {
@@ -61,6 +74,16 @@ mod tests {
         d.write_words(0x1000, &[1, 2, 3]);
         assert_eq!(d.read_words(0x1000, 3), vec![1, 2, 3]);
         assert_eq!(d.read_words(0x1000, 5), vec![1, 2, 3, 0, 0]);
+    }
+
+    #[test]
+    fn read_into_matches_read_and_counts_one_access() {
+        let mut d = Dram::new();
+        d.write_words(0x20, &[7, 8]);
+        let mut buf = vec![99; 16];
+        d.read_words_into(0x20, 3, &mut buf);
+        assert_eq!(buf, vec![7, 8, 0]);
+        assert_eq!(d.reads, 1);
     }
 
     #[test]

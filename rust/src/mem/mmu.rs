@@ -41,6 +41,9 @@ pub struct Mmu {
     /// Result packet in reception.
     rx_head: Option<HeadFields>,
     rx_words: Vec<u32>,
+    /// Reusable DMA read buffer: cleared and refilled per job so the
+    /// steady-state fetch path performs no heap allocation.
+    dma_scratch: Vec<u32>,
     builder: PacketBuilder,
     pub stats: MmuStats,
 }
@@ -56,6 +59,7 @@ impl Mmu {
             outbox: VecDeque::new(),
             rx_head: None,
             rx_words: Vec::new(),
+            dma_scratch: Vec::new(),
             builder: PacketBuilder::new(0x2000_0000),
             stats: MmuStats::default(),
         }
@@ -105,7 +109,7 @@ impl Mmu {
         ]);
         if flit.kind() == FlitKind::Tail {
             if let Some(h) = self.rx_head.take() {
-                self.dram.write_words(h.start_addr, &self.rx_words.clone());
+                self.dram.write_words(h.start_addr, &self.rx_words);
                 self.stats.results_written += 1;
             }
             self.rx_words.clear();
@@ -121,8 +125,13 @@ impl Mmu {
             }
             let job = self.jobs.pop_front().unwrap();
             let n_words = (job.grant.data_size as usize) / 4;
-            let words = self.dram.read_words(job.grant.start_addr, n_words);
-            let pkt = self.builder.payload(
+            self.dram.read_words_into(
+                job.grant.start_addr,
+                n_words,
+                &mut self.dma_scratch,
+            );
+            let outbox = &mut self.outbox;
+            self.builder.payload_with(
                 HeadFields {
                     routing: job.reply_to,
                     hwa_id: job.grant.hwa_id,
@@ -137,9 +146,9 @@ impl Mmu {
                     start_addr: job.grant.start_addr,
                     ..HeadFields::default()
                 },
-                &words,
+                &self.dma_scratch,
+                |f| outbox.push_back(f),
             );
-            self.outbox.extend(pkt.flits);
         }
         if can_inject {
             self.outbox.pop_front()

@@ -12,14 +12,63 @@
 //! pre-worklist full-scan stepper survives behind `#[cfg(test)]` as the
 //! reference for the equivalence property test.
 
-use std::collections::VecDeque;
-
 use crate::flit::Flit;
 
 use super::router::{Move, Port, Router, DEFAULT_IN_BUF, PORTS};
 
 /// Default ejection (local output) buffer capacity in flits.
 pub const DEFAULT_EJECT_CAP: u32 = 16;
+
+/// Fixed-capacity ejection ring (the NI-side Local output buffer). Like
+/// the router's `VoqRing`s, capacity is a hard invariant — the Local
+/// output's credits stall allocation on a full ring, so `push` asserts
+/// instead of growing. Sized from `MeshConfig::eject_cap` at
+/// construction; never allocates afterwards.
+#[derive(Debug)]
+struct EjectRing {
+    slots: Box<[Flit]>,
+    head: usize,
+    len: usize,
+}
+
+impl EjectRing {
+    fn new(cap: u32) -> Self {
+        Self {
+            slots: vec![Flit::default(); cap.max(1) as usize].into_boxed_slice(),
+            head: 0,
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    fn front(&self) -> Option<&Flit> {
+        (self.len > 0).then(|| &self.slots[self.head])
+    }
+
+    #[inline]
+    fn push(&mut self, f: Flit) {
+        debug_assert!(self.len < self.slots.len(), "eject ring overflow");
+        let tail = (self.head + self.len) % self.slots.len();
+        self.slots[tail] = f;
+        self.len += 1;
+    }
+
+    #[inline]
+    fn pop(&mut self) -> Option<Flit> {
+        if self.len == 0 {
+            return None;
+        }
+        let f = self.slots[self.head];
+        self.head = (self.head + 1) % self.slots.len();
+        self.len -= 1;
+        Some(f)
+    }
+}
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MeshConfig {
@@ -45,7 +94,7 @@ impl Default for MeshConfig {
 pub struct Mesh {
     pub config: MeshConfig,
     routers: Vec<Router>,
-    eject: Vec<VecDeque<Flit>>,
+    eject: Vec<EjectRing>,
     /// Credits the local injector holds toward each router's local input.
     inject_credits: Vec<u32>,
     /// (router index, output port) credits to apply at the next step.
@@ -95,7 +144,7 @@ impl Mesh {
         }
         Self {
             routers,
-            eject: (0..n).map(|_| VecDeque::new()).collect(),
+            eject: (0..n).map(|_| EjectRing::new(config.eject_cap)).collect(),
             inject_credits: vec![config.in_buf_cap; n],
             pending_credits: Vec::new(),
             moves_scratch: Vec::new(),
@@ -151,9 +200,25 @@ impl Mesh {
         self.inject_credits[node] > 0
     }
 
+    /// Inject a whole packet (head + body* + tail) at `node`'s NI in one
+    /// turn, all-or-nothing: succeeds only when the local input holds
+    /// credits for every flit, so a wormhole packet is never left
+    /// half-offered. Batch hook for rigs and benches; the timed NI in
+    /// `sim::system` still moves one flit per NoC cycle.
+    pub fn try_inject_packet(&mut self, node: usize, flits: &[Flit]) -> bool {
+        if flits.is_empty() || self.inject_credits[node] < flits.len() as u32 {
+            return false;
+        }
+        for f in flits {
+            let ok = self.try_inject(node, *f);
+            debug_assert!(ok, "credit-checked injection cannot fail");
+        }
+        true
+    }
+
     /// Pop an ejected flit at `node` (frees a local-output credit).
     pub fn eject_pop(&mut self, node: usize) -> Option<Flit> {
-        let f = self.eject[node].pop_front();
+        let f = self.eject[node].pop();
         if f.is_some() {
             self.pending_credits.push((node, Port::Local as usize));
             self.eject_total -= 1;
@@ -243,7 +308,7 @@ impl Mesh {
                     "eject overflow at node {i}: Local-port move escaped \
                      eject-credit backpressure"
                 );
-                self.eject[i].push_back(m.flit);
+                self.eject[i].push(m.flit);
                 self.eject_total += 1;
             } else {
                 let j = self.neighbor(i, m.out_port);
@@ -309,6 +374,7 @@ mod tests {
     use super::*;
     use crate::flit::{HeadFields, PacketBuilder};
     use crate::util::rng::Pcg32;
+    use std::collections::VecDeque;
 
     fn single(dest: u8, flow: u32) -> Flit {
         let mut b = PacketBuilder::new(flow);
@@ -368,6 +434,44 @@ mod tests {
         assert_eq!(got.len(), p.flits.len());
         for (i, f) in got.iter().enumerate() {
             assert_eq!(f.meta.seq, i as u32, "in-order delivery");
+        }
+    }
+
+    #[test]
+    fn try_inject_packet_is_all_or_nothing() {
+        let cfg = MeshConfig {
+            in_buf_cap: 4,
+            ..MeshConfig::default()
+        };
+        let mut mesh = Mesh::new(cfg);
+        let mut b = PacketBuilder::new(3);
+        let p = b.payload(
+            HeadFields {
+                routing: 8,
+                ..HeadFields::default()
+            },
+            &[1, 2, 3, 4, 5, 6, 7, 8], // head + 2 data flits
+        );
+        // 4 credits: one whole packet fits, a second (3 more flits when
+        // only 1 credit remains) must be refused outright.
+        assert!(mesh.try_inject_packet(0, &p.flits));
+        assert_eq!(mesh.flits_injected, 3);
+        assert!(!mesh.try_inject_packet(0, &p.flits), "partial batch refused");
+        assert_eq!(mesh.flits_injected, 3, "nothing half-offered");
+        // The whole batch arrives contiguously and in order.
+        let mut got = Vec::new();
+        for _ in 0..50 {
+            mesh.step();
+            while let Some(f) = mesh.eject_pop(8) {
+                got.push(f);
+            }
+            if got.len() == 3 {
+                break;
+            }
+        }
+        assert_eq!(got.len(), 3);
+        for (i, f) in got.iter().enumerate() {
+            assert_eq!(f.meta.seq, i as u32);
         }
     }
 

@@ -339,10 +339,14 @@ impl PjrtCompute {
 
 #[cfg(feature = "pjrt")]
 impl HwaCompute for PjrtCompute {
-    fn compute(&mut self, spec: &HwaSpec, input: &[u32]) -> Vec<u32> {
+    fn compute_into(&mut self, spec: &HwaSpec, input: &[u32], out: &mut Vec<u32>) {
         if spec.artifact.is_some() {
             match self.run(spec, input) {
-                Ok(words) => return words,
+                Ok(words) => {
+                    out.clear();
+                    out.extend_from_slice(&words);
+                    return;
+                }
                 Err(e) => {
                     // Surface once, then fall back (keeps sims running if
                     // an artifact is stale).
@@ -350,7 +354,7 @@ impl HwaCompute for PjrtCompute {
                 }
             }
         }
-        self.native.compute(spec, input)
+        self.native.compute_into(spec, input, out);
     }
 }
 
@@ -361,9 +365,9 @@ pub struct NativeCompute {
 }
 
 impl HwaCompute for NativeCompute {
-    fn compute(&mut self, spec: &HwaSpec, input: &[u32]) -> Vec<u32> {
+    fn compute_into(&mut self, spec: &HwaSpec, input: &[u32], out: &mut Vec<u32>) {
         self.invocations += 1;
-        let out: Vec<u32> = match spec.name {
+        let result: Vec<u32> = match spec.name {
             "izigzag" => {
                 let mut block = [0i32; 64];
                 for (i, w) in input.iter().take(64).enumerate() {
@@ -428,9 +432,10 @@ impl HwaCompute for NativeCompute {
             // No functional model (aes/sha/prime/entropy): echo.
             _ => input.to_vec(),
         };
-        let mut words = out;
+        let mut words = result;
         words.resize(spec.out_words, 0);
-        words
+        out.clear();
+        out.extend_from_slice(&words);
     }
 }
 

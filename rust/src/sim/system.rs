@@ -12,7 +12,7 @@ use crate::baseline::axi::AxiBus;
 use crate::baseline::shared_cache::CacheFpga;
 use crate::clock::{Activity, ClockDomain, DomainId, MultiClock, Ps};
 use crate::cmp::core::{Processor, Segment};
-use crate::flit::Flit;
+use crate::flit::{ArenaStats, Flit, PacketArena};
 use crate::fpga::fabric::{Fpga, FpgaConfig};
 use crate::fpga::hwa::{HwaCompute, HwaSpec};
 use crate::mem::mmu::Mmu;
@@ -255,9 +255,11 @@ impl Fabric {
         }
     }
 
-    pub fn step_iface(&mut self, now: Ps) {
+    pub fn step_iface(&mut self, now: Ps, arena: &mut PacketArena) {
         match self {
-            Fabric::Buffered(f) => f.step_iface(now),
+            Fabric::Buffered(f) => f.step_iface(now, arena),
+            // The shared-cache baseline owns its task storage outright and
+            // is not on the pooled hot path.
             Fabric::Cached(f) => f.step_iface(now),
         }
     }
@@ -408,6 +410,10 @@ pub struct System {
     pub clk: MultiClock,
     noc_dom: DomainId,
     slots: Vec<FabricSlot>,
+    /// Pooled packet/word-buffer storage shared by every buffered fabric:
+    /// flit vectors and task word buffers recycle through free-lists, so
+    /// the steady-state hot path performs no heap allocation.
+    arena: PacketArena,
     pub net: Net,
     pub procs: Vec<Processor>,
     /// Open-loop traffic sources replacing processors (per slot) for the
@@ -560,6 +566,7 @@ impl System {
             clk,
             noc_dom,
             slots,
+            arena: PacketArena::with_capacity(64, 256),
             net,
             procs,
             open_sources: (0..n_procs).map(|_| None).collect(),
@@ -607,6 +614,19 @@ impl System {
 
     pub fn n_mmus(&self) -> usize {
         self.mmus.len()
+    }
+
+    /// Allocation counters of the shared packet/word-buffer arena (the
+    /// zero-copy hot path's observability surface: allocs say how often
+    /// the pool grew, reuses how often a free-listed buffer was recycled,
+    /// high-water the peak live population).
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arena.stats()
+    }
+
+    /// Live (packet, words) handle counts in the shared arena.
+    pub fn arena_live(&self) -> (u64, u64) {
+        self.arena.live()
     }
 
     /// The primary MMU (lowest node id).
@@ -900,9 +920,10 @@ impl System {
                 self.step_noc_domain(t);
                 continue;
             }
+            let arena = &mut self.arena;
             for slot in self.slots.iter_mut() {
                 if *d == slot.iface_dom {
-                    slot.fabric.step_iface(t);
+                    slot.fabric.step_iface(t, arena);
                     break;
                 }
                 if let Some((_, chans)) =
@@ -910,8 +931,11 @@ impl System {
                 {
                     if let Fabric::Buffered(f) = &mut slot.fabric {
                         for i in chans {
-                            f.step_channel(*i, t);
+                            f.step_channel(*i, t, arena);
                         }
+                        // Tasks retired on this edge hand their word
+                        // buffers straight back to the pool.
+                        f.recycle_completed_words(arena);
                     }
                     break;
                 }

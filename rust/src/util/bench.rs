@@ -50,6 +50,9 @@ pub struct Measurement {
 pub struct Bench {
     config: BenchConfig,
     results: Vec<Measurement>,
+    /// Named scalar metrics reported alongside the timings (allocation
+    /// rates, high-water marks, ...) — deterministic, unlike wall time.
+    counters: Vec<(String, f64)>,
 }
 
 impl Bench {
@@ -57,7 +60,15 @@ impl Bench {
         Self {
             config,
             results: Vec::new(),
+            counters: Vec::new(),
         }
+    }
+
+    /// Record a named scalar metric (e.g. arena allocs per simulated µs).
+    /// Counters land in the JSON artifact under `"counters"` so CI can
+    /// track them as a trajectory next to the timings.
+    pub fn counter(&mut self, name: &str, value: f64) {
+        self.counters.push((name.to_string(), value));
     }
 
     /// Measure `f`, using its return value to defeat dead-code elimination.
@@ -132,9 +143,13 @@ impl Bench {
     }
 
     /// Machine-readable results — the `BENCH_hotpath.json` perf-trajectory
-    /// artifact CI uploads per run: `{"schema": 1, "name": ...,
+    /// artifact CI uploads per run: `{"schema": 3, "name": ...,
     /// "results": [{"name": ..., "mean_ns": ..., "min_ns": ...,
-    /// "p50_ns": ..., "iters": ...}, ...]}`.
+    /// "p50_ns": ..., "iters": ...}, ...], "counters": {...}}`.
+    ///
+    /// Schema history: 1 = timings only; 3 = adds the additive
+    /// `"counters"` object of named scalar metrics (existing fields
+    /// unchanged, so schema-1 consumers still parse the timings).
     pub fn to_json(&self, name: &str) -> Json {
         let results: Vec<Json> = self
             .results
@@ -149,10 +164,17 @@ impl Bench {
                 ])
             })
             .collect();
+        let counters = Json::obj(
+            self.counters
+                .iter()
+                .map(|(k, v)| (k.as_str(), Json::Num(*v)))
+                .collect(),
+        );
         Json::obj(vec![
-            ("schema", Json::from(1u64)),
+            ("schema", Json::from(3u64)),
             ("name", Json::from(name)),
             ("results", Json::Arr(results)),
+            ("counters", counters),
         ])
     }
 
@@ -201,9 +223,16 @@ mod tests {
         });
         b.run("alpha", || 1u64 + 1);
         b.run("beta", || (0..10u64).product::<u64>());
+        b.counter("arena_packet_allocs", 12.0);
         let v = Json::parse(&b.to_json("micro").render()).unwrap();
-        assert_eq!(v.get("schema").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(v.get("schema").and_then(Json::as_f64), Some(3.0));
         assert_eq!(v.get("name").and_then(Json::as_str), Some("micro"));
+        assert_eq!(
+            v.get("counters")
+                .and_then(|c| c.get("arena_packet_allocs"))
+                .and_then(Json::as_f64),
+            Some(12.0)
+        );
         let results = v.get("results").and_then(Json::as_arr).unwrap();
         assert_eq!(results.len(), 2);
         assert_eq!(

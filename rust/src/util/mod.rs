@@ -2,6 +2,8 @@
 //! config, tables. See DESIGN.md §Substrates — these replace crates that
 //! are not available in the offline registry snapshot.
 
+#[cfg(test)]
+pub mod alloc_count;
 pub mod bench;
 pub mod cli;
 pub mod config_text;

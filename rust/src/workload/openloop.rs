@@ -16,7 +16,8 @@ use std::collections::VecDeque;
 
 use crate::clock::{Activity, Ps, PS_PER_US};
 use crate::flit::{
-    Direction, Flit, FlitKind, HeadFields, PacketBuilder, PacketType,
+    payload_packet_flits, Direction, Flit, FlitKind, HeadFields,
+    PacketBuilder, PacketType,
 };
 use crate::fpga::channel::task::CommandKind;
 use crate::fpga::hwa::HwaSpec;
@@ -67,6 +68,9 @@ pub struct OpenLoopSource {
     rx_head: Option<(u8, Option<u8>)>,
     /// Arrivals deferred because the target HWA was at its cap.
     pub deferred: u64,
+    /// Reusable payload-word buffer: refilled per grant so steady-state
+    /// payload assembly performs no heap allocation.
+    words_scratch: Vec<u32>,
 }
 
 impl OpenLoopSource {
@@ -80,6 +84,12 @@ impl OpenLoopSource {
         let mut rng = Pcg32::new(seed, id as u64 + 1);
         let mean_gap = PS_PER_US as f64 / rate_per_us.max(1e-9);
         let first = rng.exp(mean_gap) as Ps;
+        let n_targets = targets.len();
+        let max_words = targets
+            .iter()
+            .map(|t| t.spec.in_words)
+            .max()
+            .unwrap_or(0);
         Self {
             id,
             node,
@@ -87,17 +97,22 @@ impl OpenLoopSource {
             rate_per_us,
             rng,
             next_arrival: first,
-            outbox: VecDeque::new(),
+            outbox: VecDeque::with_capacity(OUTBOX_CAP),
             builder: PacketBuilder::new(((id as u32) << 20) | 0x10_0000),
             requests_issued: 0,
             grants_seen: 0,
             results_done: 0,
             drops: 0,
-            issue_times: VecDeque::new(),
-            latencies_ps: Vec::new(),
-            outstanding: Vec::new(),
+            issue_times: VecDeque::with_capacity(
+                n_targets * MAX_OUTSTANDING_PER_HWA as usize + 1,
+            ),
+            // Grows past this in very long runs; sized so steady-state
+            // measurement windows stay allocation-free.
+            latencies_ps: Vec::with_capacity(4096),
+            outstanding: vec![0; n_targets],
             rx_head: None,
             deferred: 0,
+            words_scratch: Vec::with_capacity(max_words),
         }
     }
 
@@ -161,9 +176,7 @@ impl OpenLoopSource {
 
     /// One NoC/CMP cycle: emit at most one flit.
     pub fn step(&mut self, now: Ps, can_inject: bool) -> Option<Flit> {
-        if self.outstanding.len() != self.targets.len() {
-            self.outstanding = vec![0; self.targets.len()];
-        }
+        debug_assert_eq!(self.outstanding.len(), self.targets.len());
         while now >= self.next_arrival {
             let mean_gap = PS_PER_US as f64 / self.rate_per_us.max(1e-9);
             self.next_arrival += self.rng.exp(mean_gap).max(1.0) as Ps;
@@ -174,7 +187,7 @@ impl OpenLoopSource {
             }
             self.outstanding[idx] += 1;
             let target = &self.targets[idx];
-            let req = self.builder.command(HeadFields {
+            let req = self.builder.command_flit(HeadFields {
                 routing: target.node,
                 hwa_id: target.hwa_id,
                 src_id: self.id,
@@ -183,8 +196,8 @@ impl OpenLoopSource {
                 payload: CommandKind::Request.encode(),
                 ..HeadFields::default()
             });
-            if self.outbox.len() + req.flits.len() <= OUTBOX_CAP {
-                self.outbox.extend(req.flits);
+            if self.outbox.len() + 1 <= OUTBOX_CAP {
+                self.outbox.push_back(req);
                 self.requests_issued += 1;
                 self.issue_times.push_back(now);
             } else {
@@ -222,10 +235,19 @@ impl OpenLoopSource {
                         let target = &self.targets[idx];
                         let in_words = target.spec.in_words;
                         let dest = target.node;
-                        let words: Vec<u32> = (0..in_words)
-                            .map(|_| self.rng.next_u32())
-                            .collect();
-                        let p = self.builder.payload(
+                        self.words_scratch.clear();
+                        for _ in 0..in_words {
+                            let w = self.rng.next_u32();
+                            self.words_scratch.push(w);
+                        }
+                        // Seq numbers are consumed whether or not the
+                        // packet fits (matching the build-then-drop
+                        // behaviour this path used to have).
+                        let fits = self.outbox.len()
+                            + payload_packet_flits(in_words)
+                            <= OUTBOX_CAP;
+                        let outbox = &mut self.outbox;
+                        self.builder.payload_with(
                             HeadFields {
                                 routing: dest,
                                 hwa_id: h.hwa_id,
@@ -236,11 +258,14 @@ impl OpenLoopSource {
                                 direction: Direction::ProcToHwa,
                                 ..HeadFields::default()
                             },
-                            &words,
+                            &self.words_scratch,
+                            |f| {
+                                if fits {
+                                    outbox.push_back(f);
+                                }
+                            },
                         );
-                        if self.outbox.len() + p.flits.len() <= OUTBOX_CAP {
-                            self.outbox.extend(p.flits);
-                        } else {
+                        if !fits {
                             self.drops += 1;
                         }
                     }

@@ -257,19 +257,21 @@ fn prop_chain_index_walk_never_escapes_group() {
     // group member indexes and terminates.
     let gen = PairGen(IntGen::below(4), IntGen::below(64));
     check("chain walk bounded", gen, |(depth, packed)| {
+        use accnoc::flit::PacketArena;
         use accnoc::fpga::channel::task::Task;
         let idx = [
             (packed & 3) as u8,
             ((packed >> 2) & 3) as u8,
             ((packed >> 4) & 3) as u8,
         ];
+        let mut arena = PacketArena::new();
         let mut t = Task::new(
             HeadFields {
                 chain_depth: *depth as u8,
                 chain_index: idx,
                 ..HeadFields::default()
             },
-            vec![],
+            arena.alloc_words(),
             0,
         );
         let mut hops = 0;

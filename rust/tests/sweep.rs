@@ -165,6 +165,32 @@ fn ci_smoke_physical_stats_match_per_edge_stepping() {
     }
 }
 
+/// The arena-pooled hot path must be invisible to physics: running the
+/// pinned `configs/ci_smoke.toml` grid twice (fresh pools each time, so
+/// every recycled-buffer pattern differs in address but never in
+/// content) produces bit-identical stats — latency percentiles, flit
+/// and task counts, scheduler metrics, everything.
+#[test]
+fn ci_smoke_grid_is_bit_identical_across_runs() {
+    let toml = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../configs/ci_smoke.toml"
+    ))
+    .expect("configs/ci_smoke.toml readable");
+    let sweep = SweepSpec::parse_toml(&toml).unwrap();
+    let grid = sweep.expand().unwrap();
+    for spec in &grid {
+        let first = run_scenario(spec).unwrap();
+        let second = run_scenario(spec).unwrap();
+        assert_eq!(
+            first, second,
+            "run-to-run divergence on {} (pooled storage leaked into \
+             physical state?)",
+            spec.name
+        );
+    }
+}
+
 #[test]
 fn invalid_specs_are_rejected_at_load_time() {
     // Unknown key (typo'd section member).

@@ -2,7 +2,9 @@
 //! component, measured end to end on micro-rigs. N = payload data flits.
 
 use accnoc::clock::{ClockDomain, MultiClock, Ps};
-use accnoc::flit::{Direction, Flit, HeadFields, PacketBuilder, PacketType};
+use accnoc::flit::{
+    Direction, Flit, HeadFields, PacketArena, PacketBuilder, PacketType,
+};
 use accnoc::fpga::channel::task::CommandKind;
 use accnoc::fpga::fabric::{Fpga, FpgaConfig};
 use accnoc::fpga::hwa::{spec_by_name, HwaSpec};
@@ -12,6 +14,7 @@ use accnoc::fpga::hwa::{spec_by_name, HwaSpec};
 /// first/last result flit.
 struct Rig {
     fpga: Fpga,
+    arena: PacketArena,
     mc: MultiClock,
     iface_dom: accnoc::clock::DomainId,
     noc_dom: accnoc::clock::DomainId,
@@ -43,6 +46,7 @@ impl Rig {
             .collect();
         Self {
             fpga,
+            arena: PacketArena::new(),
             mc,
             iface_dom,
             noc_dom,
@@ -58,7 +62,7 @@ impl Rig {
             let t = self.mc.advance(&mut ticking);
             for d in ticking.clone() {
                 if d == self.iface_dom {
-                    self.fpga.step_iface(t);
+                    self.fpga.step_iface(t, &mut self.arena);
                 } else if d == self.noc_dom {
                     if let Some(f) = self.fpga.pop_to_noc(t) {
                         self.out.push((t, f));
@@ -67,7 +71,7 @@ impl Rig {
                     self.hwa_doms.iter().find(|(dd, _)| *dd == d)
                 {
                     for i in chans.clone() {
-                        self.fpga.step_channel(i, t);
+                        self.fpga.step_channel(i, t, &mut self.arena);
                     }
                 }
             }
