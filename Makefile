@@ -28,6 +28,7 @@ sweep:
 	cargo run --release -- sweep configs/fig10.toml
 	cargo run --release -- sweep configs/fig13.toml
 	cargo run --release -- sweep configs/fig_multi_fpga.toml
+	cargo run --release -- sweep configs/fig_serving.toml
 
 # Resolve every shipped config's tile map without simulating.
 topology:
@@ -39,9 +40,9 @@ docs:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 	cargo test --doc
 
-# CLI smoke: the three prototypes + the driver-API and multi-FPGA demos
-# (examples/driver_api.rs and examples/multi_fpga.rs run the same
-# scenarios).
+# CLI smoke: the three prototypes + the driver-API, multi-FPGA and
+# multi-tenant serving demos (examples/driver_api.rs and
+# examples/multi_fpga.rs run the same scenarios).
 selftest:
 	cargo run --release -- selftest
 	cargo run --release --example multi_fpga

@@ -322,6 +322,29 @@ impl AccelRuntime {
     pub fn open_loop_completions(&self) -> u64 {
         self.sys.open_loop_completions()
     }
+
+    // ------------------------------------------------------------------
+    // Serving clients (multi-tenant streams + admission control)
+    // ------------------------------------------------------------------
+
+    /// Replace the cores with multi-tenant serving sources (tenants
+    /// spread round-robin over processors). Like open loop, sessions and
+    /// receipts do not cover serving cores; per-tenant latencies are
+    /// read from the sources themselves.
+    pub fn set_serving(
+        &mut self,
+        tenants: &[crate::workload::serving::TenantSpec],
+        admission: bool,
+        watermark: usize,
+        seed: u64,
+    ) {
+        self.sys.set_serving(tenants, admission, watermark, seed);
+    }
+
+    /// Total completed invocations across serving sources.
+    pub fn serving_completions(&self) -> u64 {
+        self.sys.serving_completions()
+    }
 }
 
 /// A per-core driver session borrowed from the runtime: the software

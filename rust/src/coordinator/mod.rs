@@ -354,6 +354,37 @@ fn selftest() -> Result<(), String> {
     let report = crate::accel::multi_fpga_demo().map_err(|e| e.to_string())?;
     print!("{report}");
     println!("selftest multi-fpga: OK");
+    // The serving demo: multi-tenant bursty streams (mixed direct /
+    // via-memory jobs) through admission control, end to end.
+    {
+        use crate::sweep::{serving_tenant_specs, ArrivalKind, ServingMix};
+        use crate::workload::serving::DEFAULT_WATERMARK;
+
+        let cfg = SystemConfig::paper(table3().into_iter().take(8).collect());
+        let mut rt = AccelRuntime::new(cfg);
+        let tenants = serving_tenant_specs(
+            2.0,
+            4,
+            ArrivalKind::Bursty,
+            20.0,
+            ServingMix::Mixed,
+        );
+        rt.set_serving(&tenants, true, DEFAULT_WATERMARK, 17);
+        rt.run_for(40 * crate::clock::PS_PER_US);
+        let done = rt.serving_completions();
+        if done == 0 {
+            return Err("selftest serving: no completions".to_string());
+        }
+        for src in rt.system().serving_sources.iter().flatten() {
+            if src.unmatched != 0 {
+                return Err(format!(
+                    "selftest serving: {} unmatched completions on proc {}",
+                    src.unmatched, src.id
+                ));
+            }
+        }
+        println!("selftest serving: OK ({done} requests served)");
+    }
     Ok(())
 }
 

@@ -183,10 +183,14 @@ impl Channel {
         self.rb.len()
     }
 
-    /// LGC step (one interface cycle): issue at most one grant, FCFS, gated
-    /// on TB availability (§4.2 B.2). A request arriving this same cycle
-    /// is served immediately when the RB was otherwise empty — the RB
-    /// bypass path.
+    /// LGC step (one interface cycle): issue at most one grant, gated on
+    /// TB availability (§4.2 B.2). Selection is highest-priority-first
+    /// over the RB (the 2-bit packet priority class serving tenants
+    /// carry), FCFS within a class — with the all-zero priorities every
+    /// legacy workload stamps, this degenerates to exact FCFS, so
+    /// pre-serving schedules stay bit-identical. A request arriving this
+    /// same cycle is served immediately when the RB was otherwise empty
+    /// — the RB bypass path.
     pub fn step_lgc(&mut self, _now: Ps) {
         let Some(free_tb) = self
             .tbs
@@ -195,7 +199,16 @@ impl Channel {
         else {
             return;
         };
-        let Some((req, t_req)) = self.rb.pop_front() else {
+        let Some(pick) = self
+            .rb
+            .iter()
+            .enumerate()
+            .max_by_key(|(i, (h, _))| (h.priority, std::cmp::Reverse(*i)))
+            .map(|(i, _)| i)
+        else {
+            return;
+        };
+        let Some((req, t_req)) = self.rb.remove(pick) else {
             return;
         };
         // An unroutable src_id is an untrusted-header error for EVERY
@@ -672,6 +685,28 @@ mod tests {
         assert_eq!(g2.src_id, 2);
         assert_eq!(g2.tb_id, 1);
         assert_eq!(ch.rb_len(), 1, "third request waits");
+    }
+
+    #[test]
+    fn lgc_grants_highest_priority_first_fcfs_within_class() {
+        // One TB: the serving tier's priority classes reorder the RB.
+        // Arrival order lo(1), hi(2), hi(3), mid(4); grant order must be
+        // hi(2), hi(3) (FCFS within the class), mid(4), lo(1).
+        let mut ch = channel("dfadd", 1);
+        for (src, prio) in [(1u8, 0u8), (2, 3), (3, 3), (4, 2)] {
+            let mut r = request(src);
+            r.priority = prio;
+            assert!(ch.push_request(r, 0));
+        }
+        let mut order = Vec::new();
+        for _ in 0..4 {
+            ch.step_lgc(100);
+            let g = ch.cmd_out.pop_front().expect("grant issued");
+            order.push(g.src_id);
+            // Free the TB again (bypass the datapath for this test).
+            ch.tbs[0].state = TbState::Free;
+        }
+        assert_eq!(order, vec![2, 3, 4, 1]);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::fpga::hwa::{HwaCompute, HwaSpec};
 use crate::mem::mmu::Mmu;
 use crate::noc::mesh::{Mesh, MeshConfig};
 use crate::workload::openloop::{OpenLoopSource, OpenLoopTarget};
+use crate::workload::serving::{ServingSource, ServingTarget, TenantSpec};
 
 use super::floorplan::{Floorplan, MmuAssign, TopologyError};
 
@@ -419,6 +420,9 @@ pub struct System {
     /// Open-loop traffic sources replacing processors (per slot) for the
     /// §6.4 injection-rate experiments.
     pub open_sources: Vec<Option<OpenLoopSource>>,
+    /// Multi-tenant serving front ends replacing processors (per slot)
+    /// for the datacenter-serving workload tier.
+    pub serving_sources: Vec<Option<ServingSource>>,
     mmus: Vec<Mmu>,
     /// src_id → assigned MMU node (the floorplan's per-processor
     /// nearest/hashed assignment, shared by every fabric's channels).
@@ -570,6 +574,7 @@ impl System {
             net,
             procs,
             open_sources: (0..n_procs).map(|_| None).collect(),
+            serving_sources: (0..n_procs).map(|_| None).collect(),
             mmus,
             mmu_route,
             ticking: Vec::new(),
@@ -755,6 +760,70 @@ impl System {
             .sum()
     }
 
+    /// Replace processors with multi-tenant serving front ends. Tenant
+    /// `t` lands on processor `t % n_procs`; targets are fabric-major
+    /// like [`System::set_open_loop`]. Chained jobs are only planned
+    /// when the configuration declares chain groups; the serving source
+    /// downgrades them to direct otherwise.
+    pub fn set_serving(
+        &mut self,
+        tenants: &[TenantSpec],
+        admission: bool,
+        watermark: usize,
+        seed: u64,
+    ) {
+        let n = self.procs.len();
+        let mut targets = Vec::new();
+        for (fid, fspec) in self.config.fabrics.iter().enumerate() {
+            let node = self.slots[fid].node as u8;
+            let fabric_len = fspec.specs.len();
+            for (i, s) in fspec.specs.iter().enumerate() {
+                targets.push(ServingTarget {
+                    node,
+                    hwa_id: i as u8,
+                    spec: s.clone(),
+                    fabric_len,
+                });
+            }
+        }
+        let chain_ok = self
+            .config
+            .fabrics
+            .iter()
+            .any(|f| !f.chain_groups.is_empty());
+        for i in 0..n {
+            let mine: Vec<TenantSpec> = tenants
+                .iter()
+                .enumerate()
+                .filter(|(t, _)| t % n == i)
+                .map(|(_, s)| *s)
+                .collect();
+            self.serving_sources[i] = if mine.is_empty() {
+                None
+            } else {
+                Some(ServingSource::new(
+                    i as u8,
+                    self.procs[i].node,
+                    targets.clone(),
+                    mine,
+                    admission,
+                    watermark,
+                    chain_ok,
+                    seed,
+                ))
+            };
+        }
+    }
+
+    /// Total completed requests across serving sources.
+    pub fn serving_completions(&self) -> u64 {
+        self.serving_sources
+            .iter()
+            .flatten()
+            .map(|s| s.results_done)
+            .sum()
+    }
+
     /// Load a program onto processor `i`.
     pub fn load_program(&mut self, i: usize, program: Vec<Segment>) {
         for seg in program {
@@ -785,9 +854,13 @@ impl System {
             }
         }
         for (i, p) in self.procs.iter().enumerate() {
-            let a = match self.open_sources[i].as_ref() {
-                Some(src) => src.activity(),
-                None => p.activity(),
+            let a = match (
+                self.open_sources[i].as_ref(),
+                self.serving_sources[i].as_ref(),
+            ) {
+                (Some(src), _) => src.activity(),
+                (None, Some(src)) => src.activity(),
+                (None, None) => p.activity(),
             };
             act = act.join(a);
             if act == Activity::Busy {
@@ -862,7 +935,9 @@ impl System {
             // every NoC edge in `total_cycles` even while awaiting; fold
             // the skipped ones in so the counter matches naive stepping.
             for (i, p) in self.procs.iter_mut().enumerate() {
-                if self.open_sources[i].is_none() {
+                if self.open_sources[i].is_none()
+                    && self.serving_sources[i].is_none()
+                {
                     p.account_idle_cycles(n);
                 }
             }
@@ -987,6 +1062,17 @@ impl System {
         for (i, p) in self.procs.iter_mut().enumerate() {
             let node = p.node as usize;
             if let Some(src) = self.open_sources[i].as_mut() {
+                while let Some(f) = self.net.eject_pop(node) {
+                    src.deliver(f, t);
+                }
+                let can = self.net.can_inject(node);
+                if let Some(f) = src.step(t, can) {
+                    let ok = self.net.try_inject(node, f);
+                    debug_assert!(ok);
+                }
+                continue;
+            }
+            if let Some(src) = self.serving_sources[i].as_mut() {
                 while let Some(f) = self.net.eject_pop(node) {
                     src.deliver(f, t);
                 }
@@ -1375,6 +1461,89 @@ mod tests {
             "both fabrics should see traffic: {rows:?}"
         );
         assert!(sys.open_loop_completions() > 0);
+    }
+
+    fn serving_tenants(n: u16, rate_each: f64) -> Vec<TenantSpec> {
+        use crate::workload::serving::{ArrivalProcess, JobMix};
+        (0..n)
+            .map(|t| TenantSpec {
+                id: t,
+                rate_per_us: rate_each,
+                arrival: if t % 2 == 0 {
+                    ArrivalProcess::Poisson
+                } else {
+                    ArrivalProcess::Bursty {
+                        burst_factor: 4.0,
+                        mean_on_us: 2.0,
+                    }
+                },
+                priority: 3 - (t % 4) as u8,
+                mix: JobMix {
+                    direct: 2,
+                    via_memory: 1,
+                    chained: 0,
+                },
+                slo_ps: 20 * crate::clock::PS_PER_US,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serving_sources_complete_mixed_jobs_end_to_end() {
+        let cfg = SystemConfig::paper(vec![
+            spec_by_name("izigzag").unwrap();
+            2
+        ]);
+        let mut sys = System::new(cfg);
+        sys.set_serving(&serving_tenants(4, 0.5), true, 32, 21);
+        sys.run_for(60 * crate::clock::PS_PER_US);
+        let done = sys.serving_completions();
+        assert!(done > 20, "completions {done}");
+        for src in sys.serving_sources.iter().flatten() {
+            assert_eq!(src.unmatched, 0, "every completion tag matched");
+            for t in &src.tenants {
+                assert!(t.completed > 0, "tenant {} starved", t.spec.id);
+            }
+        }
+    }
+
+    /// Idle skipping must be invisible to every serving observable:
+    /// arrivals, admission decisions, completions and latency samples.
+    #[test]
+    fn idle_skip_matches_per_edge_stepping_serving() {
+        let observe = |skip: bool| {
+            let cfg = SystemConfig::paper(vec![
+                spec_by_name("izigzag").unwrap();
+                2
+            ]);
+            let mut sys = System::new(cfg);
+            sys.set_idle_skip(skip);
+            sys.set_serving(&serving_tenants(3, 0.4), true, 32, 5);
+            sys.run_for(40 * crate::clock::PS_PER_US);
+            sys.serving_sources
+                .iter()
+                .flatten()
+                .map(|s| {
+                    let tenants: Vec<_> = s
+                        .tenants
+                        .iter()
+                        .map(|t| {
+                            (
+                                t.arrivals,
+                                t.admitted,
+                                t.shed_bucket,
+                                t.shed_watermark,
+                                t.completed,
+                                t.slo_violations,
+                                t.latencies_ps.clone(),
+                            )
+                        })
+                        .collect();
+                    (s.requests_issued, s.results_done, tenants)
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(observe(true), observe(false));
     }
 
     #[test]

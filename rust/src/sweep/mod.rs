@@ -24,7 +24,11 @@ pub mod runner;
 pub mod spec;
 
 pub use runner::{
-    run_scenario, run_scenario_with_idle_skip, FabricStatsRow,
-    LatencySummary, RunStats, ScenarioResult, SweepReport, SweepRunner,
+    run_scenario, run_scenario_with_idle_skip, serving_tenant_specs,
+    FabricStatsRow, LatencySummary, RunStats, ScenarioResult, SweepReport,
+    SweepRunner, TenantCounters, TenantStatsRow,
 };
-pub use spec::{AppKind, HwaMix, ScenarioSpec, SweepSpec, WorkloadSpec};
+pub use spec::{
+    AppKind, ArrivalKind, HwaMix, ScenarioSpec, ServingMix, SweepSpec,
+    WorkloadSpec,
+};

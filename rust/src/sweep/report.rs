@@ -1,12 +1,15 @@
 //! Machine-readable sweep results: the `BENCH_*.json` trajectory format
 //! plus a CSV flattening and a human summary table.
 //!
-//! The JSON layout is `{"schema": 2, "name": ..., "scenarios": [{"spec":
+//! The JSON layout is `{"schema": 3, "name": ..., "scenarios": [{"spec":
 //! {flat key map}, "stats": {...}}, ...]}` — each scenario embeds its
 //! fully-resolved spec, so an artifact is self-describing and can be
 //! re-run (`ScenarioSpec::from_map`) without the original TOML.
 //! Schema 2 added the per-domain `edges_skipped_{noc,iface,hwa}`
-//! breakdown (ISSUE 4); every schema-1 field is unchanged.
+//! breakdown (ISSUE 4); every schema-1 field is unchanged. Schema 3
+//! adds the per-tenant `stats.tenants` array for serving workloads;
+//! the array is omitted for every other workload, so schema-2 stats
+//! objects are unchanged byte-for-byte (a pinned test below proves it).
 
 use std::path::Path;
 
@@ -79,6 +82,35 @@ impl RunStats {
                 .collect();
             fields.push(("fabrics", Json::Arr(rows)));
         }
+        // Tenant rows are additive and only present for serving
+        // workloads: every other workload's stats object keeps its exact
+        // schema-2 bytes.
+        if !self.tenants.is_empty() {
+            let rows: Vec<Json> = self
+                .tenants
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("tenant", Json::from(r.tenant as u64)),
+                        ("priority", Json::from(r.priority as u64)),
+                        ("arrivals", Json::from(r.arrivals)),
+                        ("admitted", Json::from(r.admitted)),
+                        ("completed", Json::from(r.completed)),
+                        ("shed_bucket", Json::from(r.shed_bucket)),
+                        ("shed_watermark", Json::from(r.shed_watermark)),
+                        ("dropped", Json::from(r.dropped)),
+                        ("slo_violations", Json::from(r.slo_violations)),
+                        ("count", Json::from(r.count)),
+                        ("mean_us", Json::Num(r.mean_us)),
+                        ("p50_us", Json::Num(r.p50_us)),
+                        ("p99_us", Json::Num(r.p99_us)),
+                        ("p999_us", Json::Num(r.p999_us)),
+                        ("max_us", Json::Num(r.max_us)),
+                    ])
+                })
+                .collect();
+            fields.push(("tenants", Json::Arr(rows)));
+        }
         Json::obj(fields)
     }
 }
@@ -103,7 +135,7 @@ impl SweepReport {
             })
             .collect();
         Json::obj(vec![
-            ("schema", Json::from(2u64)),
+            ("schema", Json::from(3u64)),
             ("name", Json::from(self.name.as_str())),
             ("scenarios", Json::Arr(scenarios)),
         ])
@@ -294,6 +326,7 @@ mod tests {
                 busy_fraction: 0.5,
                 rejected_flits: 0,
             }],
+            tenants: Vec::new(),
         };
         SweepReport {
             name: "d".to_string(),
@@ -305,7 +338,7 @@ mod tests {
     fn json_is_parseable_and_self_describing() {
         let r = dummy_report();
         let v = Json::parse(&r.render_json()).unwrap();
-        assert_eq!(v.get("schema").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(v.get("schema").and_then(Json::as_f64), Some(3.0));
         let sc = &v.get("scenarios").and_then(Json::as_arr).unwrap()[0];
         assert_eq!(
             sc.get("spec")
@@ -351,6 +384,92 @@ mod tests {
             rows[1].get("node").and_then(Json::as_f64),
             Some(0.0)
         );
+    }
+
+    #[test]
+    fn legacy_stats_json_bytes_are_pinned() {
+        // Byte-exact pin of a non-serving stats object: the serving /
+        // tenants work must never perturb existing BENCH_*.json
+        // artifacts (no "tenants" key, same field order, same number
+        // formatting). Any diff here is a schema regression.
+        let rendered = dummy_report().scenarios[0].stats.to_json().render();
+        let expected = "{\n\
+                        \x20 \"total_us\": 10,\n\
+                        \x20 \"tasks_executed\": 3,\n\
+                        \x20 \"injection_flits_per_us\": 1.5,\n\
+                        \x20 \"throughput_flits_per_us\": 1.25,\n\
+                        \x20 \"completions_per_us\": 0.3,\n\
+                        \x20 \"busy_fraction\": 0.5,\n\
+                        \x20 \"rejected_flits\": 0,\n\
+                        \x20 \"edges_stepped\": 100,\n\
+                        \x20 \"edges_skipped\": 50,\n\
+                        \x20 \"edges_skipped_noc\": 30,\n\
+                        \x20 \"edges_skipped_iface\": 12,\n\
+                        \x20 \"edges_skipped_hwa\": 8,\n\
+                        \x20 \"latency_us\": {\n\
+                        \x20   \"count\": 3,\n\
+                        \x20   \"mean\": 2,\n\
+                        \x20   \"p50\": 2,\n\
+                        \x20   \"p90\": 3,\n\
+                        \x20   \"p99\": 3,\n\
+                        \x20   \"min\": 1,\n\
+                        \x20   \"max\": 3\n\
+                        \x20 },\n\
+                        \x20 \"processor_us\": 0,\n\
+                        \x20 \"fpga_us\": 0,\n\
+                        \x20 \"transmission_us\": 0\n\
+                        }\n";
+        assert_eq!(rendered, expected);
+    }
+
+    #[test]
+    fn tenant_rows_are_emitted_only_when_present() {
+        use crate::sweep::runner::{TenantCounters, TenantStatsRow};
+        // Empty tenants (every non-serving workload): no "tenants" key.
+        let legacy = dummy_report();
+        assert!(!legacy.render_json().contains("\"tenants\""));
+        // Serving stats: the additive array appears with one row per
+        // tenant and the SLO/shed counters intact.
+        let mut serving = dummy_report();
+        serving.scenarios[0].stats.tenants = vec![
+            TenantStatsRow::from_window(
+                0,
+                3,
+                TenantCounters {
+                    arrivals: 40,
+                    admitted: 38,
+                    completed: 38,
+                    shed_bucket: 2,
+                    shed_watermark: 0,
+                    dropped: 0,
+                    slo_violations: 5,
+                },
+                &[1.0, 2.0, 4.0],
+            ),
+            TenantStatsRow::from_window(
+                1,
+                0,
+                TenantCounters::default(),
+                &[],
+            ),
+        ];
+        let parsed = Json::parse(&serving.render_json()).unwrap();
+        let rows = parsed.get("scenarios").and_then(Json::as_arr).unwrap()[0]
+            .get("stats")
+            .and_then(|s| s.get("tenants"))
+            .and_then(Json::as_arr)
+            .expect("tenants array present");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("priority").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(
+            rows[0].get("slo_violations").and_then(Json::as_f64),
+            Some(5.0)
+        );
+        assert_eq!(rows[0].get("shed_bucket").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(rows[0].get("p999_us").and_then(Json::as_f64), Some(4.0));
+        // The empty row stays NaN-free.
+        assert_eq!(rows[1].get("count").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(rows[1].get("p99_us").and_then(Json::as_f64), Some(0.0));
     }
 
     #[test]

@@ -20,8 +20,13 @@ use crate::clock::PS_PER_US;
 use crate::cmp::apps::jpeg_chain_block_program;
 use crate::util::stats::{mean, percentile};
 use crate::workload::jpeg::BlockImage;
+use crate::workload::serving::{
+    ArrivalProcess, JobMix, TenantSpec, DEFAULT_WATERMARK,
+};
 
-use super::spec::{AppKind, ScenarioSpec, SweepSpec, WorkloadSpec};
+use super::spec::{
+    AppKind, ArrivalKind, ScenarioSpec, ServingMix, SweepSpec, WorkloadSpec,
+};
 
 /// Percentile summary of a latency sample, in microseconds. All fields
 /// are 0 when `count == 0` (keeps the JSON NaN-free).
@@ -67,6 +72,89 @@ pub struct FabricStatsRow {
     pub rejected_flits: u64,
 }
 
+/// Window deltas of one tenant's admission/completion counters (the
+/// non-latency half of a [`TenantStatsRow`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TenantCounters {
+    pub arrivals: u64,
+    pub admitted: u64,
+    pub completed: u64,
+    pub shed_bucket: u64,
+    pub shed_watermark: u64,
+    pub dropped: u64,
+    pub slo_violations: u64,
+}
+
+/// Per-tenant slice of a serving run (one row per tenant stream;
+/// serialized as the additive `tenants` array in `BENCH_*.json`).
+/// Latency fields are 0 when `count == 0`, like [`LatencySummary`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantStatsRow {
+    pub tenant: u16,
+    pub priority: u8,
+    pub arrivals: u64,
+    pub admitted: u64,
+    pub completed: u64,
+    /// Arrivals shed by the tenant's token bucket.
+    pub shed_bucket: u64,
+    /// Arrivals shed by the global queue-depth watermark.
+    pub shed_watermark: u64,
+    /// Admitted jobs dropped at the hard pending-queue cap.
+    pub dropped: u64,
+    pub slo_violations: u64,
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub max_us: f64,
+}
+
+impl TenantStatsRow {
+    /// Build a row from window counter deltas plus the tenant's window
+    /// latency sample. Percentiles use the same nearest-rank estimator
+    /// as [`LatencySummary`] (`util::stats::percentile`), so with fewer
+    /// than ~500 samples the tail quantiles collapse onto the max — the
+    /// golden-value tests below pin this behavior.
+    pub fn from_window(
+        tenant: u16,
+        priority: u8,
+        c: TenantCounters,
+        latencies_us: &[f64],
+    ) -> Self {
+        let (count, mean_us, p50_us, p99_us, p999_us, max_us) =
+            if latencies_us.is_empty() {
+                (0, 0.0, 0.0, 0.0, 0.0, 0.0)
+            } else {
+                (
+                    latencies_us.len() as u64,
+                    mean(latencies_us),
+                    percentile(latencies_us, 50.0),
+                    percentile(latencies_us, 99.0),
+                    percentile(latencies_us, 99.9),
+                    latencies_us.iter().cloned().fold(0.0, f64::max),
+                )
+            };
+        Self {
+            tenant,
+            priority,
+            arrivals: c.arrivals,
+            admitted: c.admitted,
+            completed: c.completed,
+            shed_bucket: c.shed_bucket,
+            shed_watermark: c.shed_watermark,
+            dropped: c.dropped,
+            slo_violations: c.slo_violations,
+            count,
+            mean_us,
+            p50_us,
+            p99_us,
+            p999_us,
+            max_us,
+        }
+    }
+}
+
 /// Everything measured from one scenario run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunStats {
@@ -104,6 +192,10 @@ pub struct RunStats {
     /// scenarios (and omitted from their JSON to keep legacy artifacts
     /// byte-identical).
     pub per_fabric: Vec<FabricStatsRow>,
+    /// One row per tenant stream (serving workloads only; empty — and
+    /// omitted from the JSON — for every other workload, so legacy
+    /// artifacts stay byte-identical).
+    pub tenants: Vec<TenantStatsRow>,
 }
 
 /// One grid point: the resolved spec plus its measured stats.
@@ -259,7 +351,173 @@ pub fn run_scenario_with_idle_skip(
         WorkloadSpec::AppPartition { app, partition } => {
             run_app_partition(spec, &mut rt, *app, *partition)
         }
+        WorkloadSpec::Serving {
+            rate_per_us,
+            tenants,
+            arrival,
+            admission,
+            slo_us,
+            mix,
+        } => {
+            let specs = serving_tenant_specs(
+                *rate_per_us,
+                *tenants,
+                *arrival,
+                *slo_us,
+                *mix,
+            );
+            run_serving(spec, &mut rt, &specs, *admission)
+        }
     }
+}
+
+/// Lower the declarative serving workload to concrete tenant streams.
+/// Everything here is a pure function of the spec, so grids stay
+/// deterministic: per-tenant rate is an even split of the aggregate,
+/// priorities cycle 3,2,1,0 by tenant index, and the `mixed` job mix
+/// cycles three profiles (all-direct / memory-heavy / chain-capable).
+pub fn serving_tenant_specs(
+    rate_per_us: f64,
+    tenants: u16,
+    arrival: ArrivalKind,
+    slo_us: f64,
+    mix: ServingMix,
+) -> Vec<TenantSpec> {
+    let per_tenant = rate_per_us / tenants.max(1) as f64;
+    (0..tenants)
+        .map(|t| TenantSpec {
+            id: t,
+            rate_per_us: per_tenant,
+            arrival: match arrival {
+                ArrivalKind::Poisson => ArrivalProcess::Poisson,
+                ArrivalKind::Bursty => ArrivalProcess::Bursty {
+                    burst_factor: 4.0,
+                    mean_on_us: 2.0,
+                },
+                ArrivalKind::Diurnal => ArrivalProcess::Diurnal {
+                    period_us: 20.0,
+                    depth: 0.8,
+                },
+            },
+            priority: 3 - (t % 4) as u8,
+            mix: match mix {
+                ServingMix::Direct => JobMix::DIRECT_ONLY,
+                ServingMix::Mixed => match t % 3 {
+                    0 => JobMix::DIRECT_ONLY,
+                    1 => JobMix {
+                        direct: 3,
+                        via_memory: 2,
+                        chained: 0,
+                    },
+                    _ => JobMix {
+                        direct: 2,
+                        via_memory: 1,
+                        chained: 1,
+                    },
+                },
+            },
+            slo_ps: (slo_us * PS_PER_US as f64) as u64,
+        })
+        .collect()
+}
+
+fn run_serving(
+    spec: &ScenarioSpec,
+    rt: &mut AccelRuntime,
+    tenant_specs: &[TenantSpec],
+    admission: bool,
+) -> Result<RunStats, String> {
+    rt.set_serving(tenant_specs, admission, DEFAULT_WATERMARK, spec.seed);
+    rt.run_for(spec.warmup_us * PS_PER_US);
+    let (in0, out0) = rt.system().flits_in_out();
+    let done0 = rt.serving_completions();
+    let (busy0, cyc0) = rt.system().iface_busy();
+    let pf0 = rt.system().per_fabric_stats();
+    // Per-tenant warmup snapshot, in flattened source/tenant order
+    // (deterministic: tenant -> source assignment is fixed by the spec).
+    let warm: Vec<(TenantCounters, usize)> = rt
+        .system()
+        .serving_sources
+        .iter()
+        .flatten()
+        .flat_map(|s| s.tenants.iter())
+        .map(|t| {
+            (
+                TenantCounters {
+                    arrivals: t.arrivals,
+                    admitted: t.admitted,
+                    completed: t.completed,
+                    shed_bucket: t.shed_bucket,
+                    shed_watermark: t.shed_watermark,
+                    dropped: t.dropped,
+                    slo_violations: t.slo_violations,
+                },
+                t.latencies_ps.len(),
+            )
+        })
+        .collect();
+    rt.run_for(spec.window_us * PS_PER_US);
+    let sys = rt.system();
+    let (in1, out1) = sys.flits_in_out();
+    let done1 = rt.serving_completions();
+    let (busy1, cyc1) = sys.iface_busy();
+    let window = spec.window_us as f64;
+    let mut rows: Vec<TenantStatsRow> = Vec::with_capacity(warm.len());
+    let mut all_latencies: Vec<f64> = Vec::new();
+    for (t, (w, lat_skip)) in sys
+        .serving_sources
+        .iter()
+        .flatten()
+        .flat_map(|s| s.tenants.iter())
+        .zip(&warm)
+    {
+        let window_lat: Vec<f64> = t.latencies_ps[*lat_skip..]
+            .iter()
+            .map(|l| *l as f64 / PS_PER_US as f64)
+            .collect();
+        all_latencies.extend_from_slice(&window_lat);
+        rows.push(TenantStatsRow::from_window(
+            t.spec.id,
+            t.spec.priority,
+            TenantCounters {
+                arrivals: t.arrivals - w.arrivals,
+                admitted: t.admitted - w.admitted,
+                completed: t.completed - w.completed,
+                shed_bucket: t.shed_bucket - w.shed_bucket,
+                shed_watermark: t.shed_watermark - w.shed_watermark,
+                dropped: t.dropped - w.dropped,
+                slo_violations: t.slo_violations - w.slo_violations,
+            },
+            &window_lat,
+        ));
+    }
+    // Report order is tenant-id order, not proc order.
+    rows.sort_by_key(|r| r.tenant);
+    let (esk_noc, esk_iface, esk_hwa) = sys.edges_skipped_breakdown();
+    Ok(RunStats {
+        total_us: window,
+        tasks_executed: sys.tasks_executed(),
+        injection_flits_per_us: (in1 - in0) as f64 / window,
+        throughput_flits_per_us: (out1 - out0) as f64 / window,
+        completions_per_us: (done1 - done0) as f64 / window,
+        busy_fraction: if cyc1 > cyc0 {
+            (busy1 - busy0) as f64 / (cyc1 - cyc0) as f64
+        } else {
+            0.0
+        },
+        rejected_flits: sys.rejected_flits(),
+        edges_stepped: sys.edges_stepped,
+        edges_skipped: sys.edges_skipped,
+        edges_skipped_noc: esk_noc,
+        edges_skipped_iface: esk_iface,
+        edges_skipped_hwa: esk_hwa,
+        latency: LatencySummary::from_us_samples(&all_latencies),
+        processor_us: 0.0,
+        fpga_us: 0.0,
+        transmission_us: 0.0,
+        per_fabric: fabric_rows_delta(&sys.per_fabric_stats(), &pf0, window),
+        tenants: rows,
+    })
 }
 
 /// Per-fabric window deltas between two `per_fabric_stats` snapshots.
@@ -359,6 +617,7 @@ fn run_open_loop(
             &pf0,
             window,
         ),
+        tenants: Vec::new(),
     })
 }
 
@@ -414,6 +673,7 @@ fn closed_loop_stats(rt: &AccelRuntime, total_us: f64) -> RunStats {
         fpga_us: 0.0,
         transmission_us: 0.0,
         per_fabric,
+        tenants: Vec::new(),
     }
 }
 
@@ -641,6 +901,114 @@ mod tests {
         spec.net = crate::sim::system::NetKind::Axi;
         let err = run_scenario(&spec).unwrap_err();
         assert!(err.contains("AXI"), "{err}");
+    }
+
+    #[test]
+    fn tenant_row_percentiles_match_golden_values() {
+        let c = TenantCounters {
+            arrivals: 12,
+            admitted: 10,
+            completed: 10,
+            shed_bucket: 1,
+            shed_watermark: 1,
+            dropped: 0,
+            slo_violations: 3,
+        };
+        let samples: Vec<f64> = (1..=10).map(|v| v as f64).collect();
+        let row = TenantStatsRow::from_window(2, 3, c, &samples);
+        assert_eq!(row.tenant, 2);
+        assert_eq!(row.priority, 3);
+        assert_eq!(row.arrivals, 12);
+        assert_eq!(row.shed_bucket, 1);
+        assert_eq!(row.slo_violations, 3);
+        assert_eq!(row.count, 10);
+        assert_eq!(row.mean_us, 5.5);
+        // Nearest-rank over 10 samples: rank round(0.5 * 9) = 5 -> 6.0;
+        // both tail quantiles land on the last rank.
+        assert_eq!(row.p50_us, 6.0);
+        assert_eq!(row.p99_us, 10.0);
+        assert_eq!(row.p999_us, 10.0);
+        assert_eq!(row.max_us, 10.0);
+    }
+
+    #[test]
+    fn tenant_row_tail_quantiles_collapse_to_max_on_small_samples() {
+        let zero = TenantCounters::default();
+        let one = TenantStatsRow::from_window(0, 0, zero, &[7.5]);
+        assert_eq!(one.count, 1);
+        assert_eq!(
+            (one.p50_us, one.p99_us, one.p999_us, one.max_us),
+            (7.5, 7.5, 7.5, 7.5)
+        );
+        // Unsorted input; nearest-rank rounds up at the midpoint.
+        let two = TenantStatsRow::from_window(0, 0, zero, &[4.0, 2.0]);
+        assert_eq!(two.p50_us, 4.0);
+        assert_eq!(two.p999_us, 4.0);
+        assert_eq!(two.mean_us, 3.0);
+        assert_eq!(two.max_us, 4.0);
+    }
+
+    #[test]
+    fn empty_tenant_row_is_all_zeros_not_nan() {
+        let row =
+            TenantStatsRow::from_window(5, 1, TenantCounters::default(), &[]);
+        assert_eq!(row.count, 0);
+        assert_eq!(row.mean_us, 0.0);
+        assert_eq!(row.p50_us, 0.0);
+        assert_eq!(row.p999_us, 0.0);
+        assert_eq!(row.max_us, 0.0);
+    }
+
+    #[test]
+    fn serving_tenant_specs_cycle_priorities_and_mixes() {
+        let specs = serving_tenant_specs(
+            4.0,
+            6,
+            ArrivalKind::Bursty,
+            20.0,
+            ServingMix::Mixed,
+        );
+        assert_eq!(specs.len(), 6);
+        assert!(specs
+            .iter()
+            .all(|t| (t.rate_per_us - 4.0 / 6.0).abs() < 1e-12));
+        let prios: Vec<u8> = specs.iter().map(|t| t.priority).collect();
+        assert_eq!(prios, vec![3, 2, 1, 0, 3, 2]);
+        assert_eq!(specs[0].mix, JobMix::DIRECT_ONLY);
+        assert!(specs[1].mix.via_memory > 0 && specs[1].mix.chained == 0);
+        assert!(specs[2].mix.chained > 0);
+        assert_eq!(specs[3].mix, JobMix::DIRECT_ONLY, "profile cycle repeats");
+        assert_eq!(specs[0].slo_ps, 20 * PS_PER_US);
+    }
+
+    #[test]
+    fn serving_scenario_reports_per_tenant_rows() {
+        let spec = ScenarioSpec::new("serve")
+            .hwas("izigzag*8")
+            .workload(WorkloadSpec::Serving {
+                rate_per_us: 2.0,
+                tenants: 4,
+                arrival: ArrivalKind::Poisson,
+                admission: true,
+                slo_us: 20.0,
+                mix: ServingMix::Direct,
+            })
+            .warmup_us(2)
+            .window_us(30)
+            .seed(11);
+        let stats = run_scenario(&spec).unwrap();
+        assert_eq!(stats.tenants.len(), 4);
+        let ids: Vec<u16> = stats.tenants.iter().map(|r| r.tenant).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3], "rows sorted by tenant id");
+        assert!(
+            stats.tenants.iter().all(|r| r.completed > 0),
+            "every tenant completes work at this light load: {:?}",
+            stats.tenants
+        );
+        assert!(stats.completions_per_us > 0.0);
+        // The overall latency sample is the union of tenant samples.
+        let tenant_count: u64 = stats.tenants.iter().map(|r| r.count).sum();
+        assert_eq!(stats.latency.count, tenant_count);
     }
 
     #[test]

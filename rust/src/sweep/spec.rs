@@ -155,6 +155,67 @@ impl AppKind {
     }
 }
 
+/// Arrival-process family for the `serving` workload (every tenant in
+/// the scenario uses the same family; the runner derives per-tenant
+/// parameters deterministically from the tenant index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    Poisson,
+    /// MMPP on/off bursts (4x rate inside bursts, 2 µs mean on-phase).
+    Bursty,
+    /// Sinusoidal rate envelope (20 µs period, 0.8 depth).
+    Diurnal,
+}
+
+impl ArrivalKind {
+    pub fn parse(text: &str) -> Result<ArrivalKind, String> {
+        match text {
+            "poisson" => Ok(ArrivalKind::Poisson),
+            "bursty" => Ok(ArrivalKind::Bursty),
+            "diurnal" => Ok(ArrivalKind::Diurnal),
+            other => Err(format!(
+                "workload.arrival: {other:?} (poisson|bursty|diurnal)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Bursty => "bursty",
+            ArrivalKind::Diurnal => "diurnal",
+        }
+    }
+}
+
+/// Job-mix family for the `serving` workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServingMix {
+    /// Every tenant issues direct (processor -> HWA) jobs only.
+    Direct,
+    /// Tenants cycle through direct / via-memory / chained profiles by
+    /// tenant index (chained jobs need `system.chain = true` to stay
+    /// chained; otherwise they downgrade to direct at admission).
+    Mixed,
+}
+
+impl ServingMix {
+    pub fn parse(text: &str) -> Result<ServingMix, String> {
+        match text {
+            "direct" => Ok(ServingMix::Direct),
+            "mixed" => Ok(ServingMix::Mixed),
+            other => Err(format!("workload.mix: {other:?} (direct|mixed)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServingMix::Direct => "direct",
+            ServingMix::Mixed => "mixed",
+        }
+    }
+}
+
 /// How the scenario drives the system.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum WorkloadSpec {
@@ -170,6 +231,18 @@ pub enum WorkloadSpec {
     /// §6.5 (Fig. 9): one processor runs partition `partition` of `app`,
     /// reporting the processor/FPGA/transmission latency breakdown.
     AppPartition { app: AppKind, partition: usize },
+    /// Multi-tenant serving: `tenants` traffic streams at an aggregate
+    /// `rate_per_us` share the accelerators through admission control
+    /// and priority-aware arbitration; the report gains a per-tenant
+    /// `stats.tenants` table (p50/p99/p99.9, SLO violations, sheds).
+    Serving {
+        rate_per_us: f64,
+        tenants: u16,
+        arrival: ArrivalKind,
+        admission: bool,
+        slo_us: f64,
+        mix: ServingMix,
+    },
 }
 
 impl WorkloadSpec {
@@ -179,6 +252,7 @@ impl WorkloadSpec {
             WorkloadSpec::Burst { .. } => "burst",
             WorkloadSpec::JpegChain { .. } => "jpeg_chain",
             WorkloadSpec::AppPartition { .. } => "app_partition",
+            WorkloadSpec::Serving { .. } => "serving",
         }
     }
 }
@@ -450,6 +524,21 @@ impl ScenarioSpec {
                 put("workload.app", app.name().to_string());
                 put("workload.partition", partition.to_string());
             }
+            WorkloadSpec::Serving {
+                rate_per_us,
+                tenants,
+                arrival,
+                admission,
+                slo_us,
+                mix,
+            } => {
+                put("workload.rate_per_us", format!("{rate_per_us}"));
+                put("workload.tenants", tenants.to_string());
+                put("workload.arrival", arrival.name().to_string());
+                put("workload.admission", admission.to_string());
+                put("workload.slo_us", format!("{slo_us}"));
+                put("workload.mix", mix.name().to_string());
+            }
         }
         put("workload.seed", self.seed.to_string());
         put("workload.warmup_us", self.warmup_us.to_string());
@@ -579,17 +668,51 @@ impl ScenarioSpec {
                 },
                 partition: get_parse(map, "workload.partition")?.unwrap_or(0),
             },
+            "serving" => WorkloadSpec::Serving {
+                rate_per_us: get_parse(map, "workload.rate_per_us")?
+                    .unwrap_or(1.0),
+                tenants: get_parse(map, "workload.tenants")?.unwrap_or(4),
+                arrival: match map.get("workload.arrival") {
+                    Some(v) => ArrivalKind::parse(v)?,
+                    None => ArrivalKind::Poisson,
+                },
+                admission: get_parse(map, "workload.admission")?
+                    .unwrap_or(true),
+                slo_us: get_parse(map, "workload.slo_us")?.unwrap_or(20.0),
+                mix: match map.get("workload.mix") {
+                    Some(v) => ServingMix::parse(v)?,
+                    None => ServingMix::Direct,
+                },
+            },
             other => {
                 return Err(format!(
                     "workload.kind: {other:?} \
-                     (openloop|burst|jpeg_chain|app_partition)"
+                     (openloop|burst|jpeg_chain|app_partition|serving)"
                 ))
             }
         };
-        if let WorkloadSpec::OpenLoop { rate_per_us } = spec.workload {
+        let rate = match spec.workload {
+            WorkloadSpec::OpenLoop { rate_per_us } => Some(rate_per_us),
+            WorkloadSpec::Serving { rate_per_us, .. } => Some(rate_per_us),
+            _ => None,
+        };
+        if let Some(rate_per_us) = rate {
             if !rate_per_us.is_finite() || rate_per_us <= 0.0 {
                 return Err(format!(
                     "workload.rate_per_us must be > 0, got {rate_per_us}"
+                ));
+            }
+        }
+        if let WorkloadSpec::Serving {
+            tenants, slo_us, ..
+        } = spec.workload
+        {
+            if tenants == 0 {
+                return Err("workload.tenants must be >= 1".to_string());
+            }
+            if !slo_us.is_finite() || slo_us <= 0.0 {
+                return Err(format!(
+                    "workload.slo_us must be > 0, got {slo_us}"
                 ));
             }
         }
@@ -665,6 +788,11 @@ const KNOWN_KEYS: &[&str] = &[
     "workload.blocks",
     "workload.app",
     "workload.partition",
+    "workload.tenants",
+    "workload.arrival",
+    "workload.admission",
+    "workload.slo_us",
+    "workload.mix",
     "workload.seed",
     "workload.warmup_us",
     "workload.window_us",
@@ -929,6 +1057,14 @@ mod tests {
                 app: AppKind::Gsm,
                 partition: 1,
             },
+            WorkloadSpec::Serving {
+                rate_per_us: 3.5,
+                tenants: 6,
+                arrival: ArrivalKind::Bursty,
+                admission: false,
+                slo_us: 15.0,
+                mix: ServingMix::Mixed,
+            },
         ] {
             let spec = ScenarioSpec::new("w")
                 .hwas("jpeg")
@@ -992,6 +1128,22 @@ mod tests {
             SweepSpec::parse_toml("[workload]\nkind = jpeg_chain\ndepth = 7\n")
                 .is_err()
         );
+        assert!(
+            SweepSpec::parse_toml("[workload]\nkind = serving\ntenants = 0\n")
+                .is_err()
+        );
+        assert!(SweepSpec::parse_toml(
+            "[workload]\nkind = serving\narrival = lognormal\n"
+        )
+        .is_err());
+        assert!(SweepSpec::parse_toml(
+            "[workload]\nkind = serving\nmix = weird\n"
+        )
+        .is_err());
+        assert!(SweepSpec::parse_toml(
+            "[workload]\nkind = serving\nslo_us = 0\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -6,7 +6,12 @@
 pub mod jpeg;
 pub mod openloop;
 pub mod random;
+pub mod serving;
 
 pub use jpeg::BlockImage;
 pub use openloop::{OpenLoopSource, OpenLoopTarget};
+pub use serving::{
+    ArrivalProcess, JobKind, JobMix, ServingSource, ServingTarget,
+    TenantSpec, TenantState,
+};
 pub use random::{measure_rate_point, RandomWorkload, RandomWorkloadConfig, RatePoint};

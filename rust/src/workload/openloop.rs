@@ -58,8 +58,12 @@ pub struct OpenLoopSource {
     pub grants_seen: u64,
     pub results_done: u64,
     pub drops: u64,
-    /// (request issue time, completion time) for latency stats.
-    issue_times: VecDeque<Ps>,
+    /// Request issue times awaiting completion, queued **per target**:
+    /// completions are in order within one target (grants are FCFS and
+    /// a channel executes serially) but not across targets, so a single
+    /// FIFO would cross-attribute latencies between a fast and a slow
+    /// accelerator whenever they complete out of issue order.
+    issue_times: Vec<VecDeque<Ps>>,
     pub latencies_ps: Vec<u64>,
     /// Outstanding invocations per target (issued - completed).
     outstanding: Vec<u64>,
@@ -103,9 +107,12 @@ impl OpenLoopSource {
             grants_seen: 0,
             results_done: 0,
             drops: 0,
-            issue_times: VecDeque::with_capacity(
-                n_targets * MAX_OUTSTANDING_PER_HWA as usize + 1,
-            ),
+            issue_times: vec![
+                VecDeque::with_capacity(
+                    MAX_OUTSTANDING_PER_HWA as usize + 1
+                );
+                n_targets
+            ],
             // Grows past this in very long runs; sized so steady-state
             // measurement windows stay allocation-free.
             latencies_ps: Vec::with_capacity(4096),
@@ -199,7 +206,7 @@ impl OpenLoopSource {
             if self.outbox.len() + 1 <= OUTBOX_CAP {
                 self.outbox.push_back(req);
                 self.requests_issued += 1;
-                self.issue_times.push_back(now);
+                self.issue_times[idx].push_back(now);
             } else {
                 self.drops += 1;
             }
@@ -305,7 +312,22 @@ impl OpenLoopSource {
         if let Some(o) = idx.and_then(|i| self.outstanding.get_mut(i)) {
             *o = o.saturating_sub(1);
         }
-        if let Some(t0) = self.issue_times.pop_front() {
+        // Pop the matched target's queue. A completion that resolves to
+        // no target (or to one with no sample left — forged traffic)
+        // falls back to the oldest sample anywhere, keeping aggregate
+        // accounting saturating as before.
+        let t0 = match idx {
+            Some(i) if !self.issue_times[i].is_empty() => {
+                self.issue_times[i].pop_front()
+            }
+            _ => self
+                .issue_times
+                .iter_mut()
+                .filter(|q| !q.is_empty())
+                .min_by_key(|q| *q.front().unwrap())
+                .and_then(|q| q.pop_front()),
+        };
+        if let Some(t0) = t0 {
             self.latencies_ps.push(now.saturating_sub(t0));
         }
     }
@@ -380,6 +402,41 @@ mod tests {
         }
         assert!(got.iter().any(|f| f.is_head()
             && f.head_fields().pkt_type == PacketType::Payload));
+    }
+
+    #[test]
+    fn multi_target_completions_attribute_latency_per_target() {
+        // A fast and a slow accelerator complete out of issue order;
+        // each latency sample must pair with its own target's issue
+        // time, not with the globally oldest one (the regression the
+        // old single-FIFO bookkeeping had).
+        let specs = vec![
+            spec_by_name("dfadd").unwrap(),
+            spec_by_name("izigzag").unwrap(),
+        ];
+        let mut src = OpenLoopSource::single_fabric(0, 0, 8, specs, 8.0, 7);
+        let mut now = 0;
+        while src.outstanding.iter().any(|&o| o == 0) {
+            now += 1000;
+            src.step(now, true);
+            assert!(now < 1_000_000_000, "targets never both occupied");
+        }
+        let t0_fast = *src.issue_times[0].front().unwrap();
+        let t0_slow = *src.issue_times[1].front().unwrap();
+        let mut b = PacketBuilder::new(77);
+        // Target 1 completes first, then target 0.
+        for (hwa, at) in [(1u8, now + 10_000), (0u8, now + 20_000)] {
+            let n = b.command(HeadFields {
+                hwa_id: hwa,
+                payload: CommandKind::Notify.encode(),
+                ..HeadFields::default()
+            });
+            src.deliver(n.flits[0], at);
+        }
+        assert_eq!(
+            src.latencies_ps,
+            vec![now + 10_000 - t0_slow, now + 20_000 - t0_fast]
+        );
     }
 
     #[test]

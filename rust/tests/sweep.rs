@@ -191,6 +191,91 @@ fn ci_smoke_grid_is_bit_identical_across_runs() {
     }
 }
 
+/// Serving grid determinism (ISSUE 7 acceptance): every arrival process
+/// — Poisson, bursty MMPP, diurnal envelope — produces bit-identical
+/// per-tenant statistics for a fixed seed, across repeated runs AND
+/// across `--threads` values. The grid covers admission on/off so the
+/// shed counters are exercised on both paths.
+#[test]
+fn serving_sweep_is_bit_identical_across_runs_and_thread_counts() {
+    let sweep = SweepSpec::parse_toml(
+        "name = det_serving\n\
+         [system]\n\
+         hwas = izigzag*4\n\
+         [workload]\n\
+         kind = serving\n\
+         rate_per_us = 2\n\
+         tenants = 3\n\
+         arrival = poisson,bursty,diurnal\n\
+         admission = true,false\n\
+         mix = mixed\n\
+         slo_us = 20\n\
+         warmup_us = 1\n\
+         window_us = 8\n\
+         seed = 23\n",
+    )
+    .unwrap();
+    let grid = sweep.expand().unwrap();
+    assert_eq!(grid.len(), 6, "3 arrival processes x admission on/off");
+    let two = SweepRunner::with_threads(2)
+        .run(&sweep.name, grid.clone())
+        .unwrap();
+    let eight = SweepRunner::with_threads(8)
+        .run(&sweep.name, grid.clone())
+        .unwrap();
+    assert_eq!(two.render_json(), eight.render_json());
+    assert_eq!(two.render_csv(), eight.render_csv());
+    // Run-to-run: the full stats (per-tenant rows included) must be
+    // bit-identical, not merely the rendered text.
+    for spec in &grid {
+        let first = run_scenario(spec).unwrap();
+        let second = run_scenario(spec).unwrap();
+        assert_eq!(first, second, "run-to-run divergence on {}", spec.name);
+        assert_eq!(first.tenants.len(), 3, "{}", spec.name);
+    }
+    // The report actually carries the per-tenant rows.
+    let parsed = Json::parse(&two.render_json()).unwrap();
+    let rows = parsed.get("scenarios").and_then(Json::as_arr).unwrap()[0]
+        .get("stats")
+        .and_then(|s| s.get("tenants"))
+        .and_then(Json::as_arr)
+        .expect("serving stats embed a tenants array");
+    assert_eq!(rows.len(), 3);
+}
+
+/// Serving scenarios must also be idle-skip neutral: the activity-
+/// tracked scheduler and naive per-edge stepping agree on every
+/// physical observable (per-tenant rows included — they are part of
+/// `RunStats` and thus of `physical()`).
+#[test]
+fn serving_physical_stats_match_per_edge_stepping() {
+    let sweep = SweepSpec::parse_toml(
+        "name = serving_skip\n\
+         [system]\n\
+         hwas = izigzag*4\n\
+         [workload]\n\
+         kind = serving\n\
+         rate_per_us = 1\n\
+         tenants = 3\n\
+         arrival = bursty\n\
+         mix = mixed\n\
+         warmup_us = 1\n\
+         window_us = 6\n\
+         seed = 31\n",
+    )
+    .unwrap();
+    for spec in &sweep.expand().unwrap() {
+        let tracked = run_scenario(spec).unwrap();
+        let naive = run_scenario_with_idle_skip(spec, false).unwrap();
+        assert_eq!(
+            physical(&tracked),
+            physical(&naive),
+            "physical observables diverged on {}",
+            spec.name
+        );
+    }
+}
+
 #[test]
 fn invalid_specs_are_rejected_at_load_time() {
     // Unknown key (typo'd section member).
