@@ -29,6 +29,7 @@ sweep:
 	cargo run --release -- sweep configs/fig13.toml
 	cargo run --release -- sweep configs/fig_multi_fpga.toml
 	cargo run --release -- sweep configs/fig_serving.toml
+	cargo run --release -- sweep configs/fig_reconfig.toml
 
 # Resolve every shipped config's tile map without simulating.
 topology:
@@ -40,9 +41,11 @@ docs:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 	cargo test --doc
 
-# CLI smoke: the three prototypes + the driver-API, multi-FPGA and
-# multi-tenant serving demos (examples/driver_api.rs and
-# examples/multi_fpga.rs run the same scenarios).
+# CLI smoke: the three prototypes + the driver-API, multi-FPGA,
+# multi-tenant serving and dynamic-reconfiguration demos
+# (examples/driver_api.rs, examples/multi_fpga.rs and
+# examples/reconfig.rs run the same scenarios).
 selftest:
 	cargo run --release -- selftest
 	cargo run --release --example multi_fpga
+	cargo run --release --example reconfig

@@ -1,0 +1,19 @@
+//! Dynamic partial reconfiguration tour: build a system with a
+//! reconfigurable slot, swap its accelerator mid-run, and show the typed
+//! `SlotReconfiguring` rejection while the fence is up plus the handle
+//! re-resolution once the new core lands.
+//!
+//! The same scenario runs inside `accnoc selftest`, so this example and
+//! the CLI smoke stay in lockstep (see `accel::reconfig_demo`).
+//!
+//!     cargo run --release --example reconfig
+
+fn main() {
+    match accnoc::accel::reconfig_demo() {
+        Ok(report) => print!("{report}"),
+        Err(e) => {
+            eprintln!("reconfig: {e}");
+            std::process::exit(1);
+        }
+    }
+}

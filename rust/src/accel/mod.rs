@@ -47,7 +47,9 @@ pub use chain::Chain;
 pub use job::Job;
 pub use program::{Phase, Program};
 pub use receipt::{Completion, Receipt, StageBreakdown};
-pub use runtime::{driver_api_demo, multi_fpga_demo, AccelRuntime, Session};
+pub use runtime::{
+    driver_api_demo, multi_fpga_demo, reconfig_demo, AccelRuntime, Session,
+};
 
 use crate::fpga::hwa::HwaSpec;
 
@@ -80,6 +82,10 @@ pub enum AccelError {
     UnknownCore { core: usize },
     /// The receipt's job did not complete before the deadline.
     Timeout { receipt: Receipt },
+    /// The targeted slot is mid-reconfiguration: its old core is fenced
+    /// (draining or programming) and the new one has not landed yet.
+    /// Re-discover the handle once the swap completes.
+    SlotReconfiguring { fabric: u8, hwa_id: u8 },
 }
 
 impl std::fmt::Display for AccelError {
@@ -137,6 +143,13 @@ impl std::fmt::Display for AccelError {
                     "job {}/{} did not complete before the deadline",
                     receipt.core(),
                     receipt.seq()
+                )
+            }
+            AccelError::SlotReconfiguring { fabric, hwa_id } => {
+                write!(
+                    f,
+                    "accelerator {hwa_id} on fabric {fabric} is being \
+                     reconfigured; re-resolve the handle after the swap"
                 )
             }
         }

@@ -206,6 +206,24 @@ impl AccelRuntime {
         if core >= self.sys.n_procs() {
             return Err(AccelError::UnknownCore { core });
         }
+        // Fence: a slot mid-reconfiguration has no stable identity — the
+        // old core is draining or the new bitstream is still programming.
+        // Reject up front so callers re-resolve handles after the swap.
+        for phase in program.phases() {
+            if let super::Phase::Invoke(job) = phase {
+                for hop in job.target().hops() {
+                    if self
+                        .sys
+                        .slot_reconfiguring(hop.fabric() as usize, hop.id())
+                    {
+                        return Err(AccelError::SlotReconfiguring {
+                            fabric: hop.fabric(),
+                            hwa_id: hop.id(),
+                        });
+                    }
+                }
+            }
+        }
         let n_jobs = program.invocations();
         let segments = {
             let ctx = CompileCtx {
@@ -536,6 +554,91 @@ pub fn multi_fpga_demo() -> Result<String, AccelError> {
     Ok(out)
 }
 
+/// Build a system with a reconfigurable slot, run a job on the initial
+/// inventory, swap the slot's accelerator mid-run — showing the typed
+/// [`AccelError::SlotReconfiguring`] rejection while the fence is up —
+/// then re-resolve the handle and run on the new core. Shared by
+/// `examples/reconfig.rs` and the `accnoc selftest` verb.
+pub fn reconfig_demo() -> Result<String, AccelError> {
+    use std::fmt::Write as _;
+
+    use crate::fpga::hwa::spec_by_name;
+    use crate::reconfig::LatencyModel;
+    use crate::runtime::NativeCompute;
+
+    let mut cfg = SystemConfig::paper(vec![
+        spec_by_name("gsm").unwrap(),
+        spec_by_name("gsm").unwrap(),
+        spec_by_name("dfmul").unwrap(),
+    ]);
+    cfg.set_mesh(2, 2);
+    // Only slot 2 sits in a partial-reconfiguration region.
+    cfg.fabrics[0].reconfigurable = vec![2];
+    let mut rt = AccelRuntime::new(cfg);
+    rt.set_compute(Box::new(NativeCompute::default()));
+
+    let names = |rt: &AccelRuntime| -> Vec<&'static str> {
+        rt.system().config.fabrics[0]
+            .specs
+            .iter()
+            .map(|s| s.name)
+            .collect()
+    };
+    let mut out = String::new();
+    let _ = writeln!(out, "reconfig: inventory {:?}", names(&rt));
+
+    // Warm the victim slot on the initial inventory.
+    let dfmul = rt.accel(2).expect("slot 2 configured");
+    let warm =
+        rt.submit(0, Job::on(dfmul).direct(vec![7; dfmul.in_words()]))?;
+    let done = rt.wait(warm, 10_000 * PS_PER_US)?;
+    let _ = writeln!(
+        out,
+        "  dfmul on slot 2 completed in {:.3} us",
+        done.total_ps() as f64 / PS_PER_US as f64
+    );
+
+    // Swap slot 2 to a third gsm core (fixed 4 us programming latency
+    // keeps the demo short; sweeps default to the resource-scaled model).
+    let gsm = spec_by_name("gsm").unwrap();
+    let latency_ps = LatencyModel::Fixed { us: 4.0 }.latency_ps(&gsm);
+    rt.system_mut()
+        .request_reconfig(0, 2, gsm, latency_ps)
+        .expect("slot 2 is declared reconfigurable");
+
+    // While the slot drains and programs, submissions are fenced with a
+    // typed error instead of silently queueing against a stale identity.
+    let err = rt
+        .submit(1, Job::on(dfmul).direct(vec![0; dfmul.in_words()]))
+        .unwrap_err();
+    assert!(
+        matches!(err, AccelError::SlotReconfiguring { .. }),
+        "{err}"
+    );
+    let _ = writeln!(out, "  submit during swap rejected: {err}");
+
+    rt.run_for(8 * PS_PER_US);
+    let _ = writeln!(out, "  inventory after swap: {:?}", names(&rt));
+
+    // Handles re-resolve against the live inventory: slot 2 is gsm now.
+    let swapped = rt.accel(2).expect("slot repopulated");
+    let r =
+        rt.submit(1, Job::on(swapped).direct(vec![2; swapped.in_words()]))?;
+    let done = rt.wait(r, 10_000 * PS_PER_US)?;
+    let _ = writeln!(
+        out,
+        "  gsm on swapped slot 2 completed in {:.3} us",
+        done.total_ps() as f64 / PS_PER_US as f64
+    );
+    let (swaps, drain, blocked) = rt.system().reconfig_stats();
+    let _ = writeln!(
+        out,
+        "  swaps {swaps} | drain cycles {drain} | programming cycles \
+         {blocked}"
+    );
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -653,6 +756,17 @@ mod tests {
         assert!(rt.accel_on(1, 1).is_none(), "fabric 1 has one channel");
         assert!(rt.accel_on(2, 0).is_none(), "no fabric 2");
         assert_eq!(rt.accel_named("izigzag").unwrap().fabric(), 0);
+    }
+
+    #[test]
+    fn reconfig_demo_runs_clean() {
+        let report = reconfig_demo().expect("demo completes");
+        assert!(report.contains("submit during swap rejected"), "{report}");
+        assert!(
+            report.contains("inventory after swap: [\"gsm\", \"gsm\", \"gsm\"]"),
+            "{report}"
+        );
+        assert!(report.contains("swaps 1"), "{report}");
     }
 
     #[test]

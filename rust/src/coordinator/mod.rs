@@ -284,6 +284,27 @@ fn render_topology(cfg: &crate::sim::SystemConfig) -> String {
             if names.len() == 1 { "" } else { "s" },
             names.join(" "),
         );
+        // Device utilization of the declared inventory (interface +
+        // cores), against the xc7vx690t budget the constructor enforces.
+        let cost = crate::synth::resource::inventory_cost(
+            spec.pr_group,
+            spec.ps_group,
+            &spec.specs,
+            !spec.chain_groups.is_empty(),
+        );
+        let _ = writeln!(
+            out,
+            "    device: {} LUTs ({:.1}%), {} BRAMs ({:.1}%){}",
+            cost.lut,
+            crate::synth::resource::lut_pct(&cost),
+            cost.bram,
+            crate::synth::resource::bram_pct(&cost),
+            if spec.reconfigurable.is_empty() {
+                String::new()
+            } else {
+                format!(", PR slots {:?}", spec.reconfigurable)
+            },
+        );
         for group in &spec.chain_groups {
             let _ = writeln!(out, "    chain group: {group:?}");
         }
@@ -385,6 +406,11 @@ fn selftest() -> Result<(), String> {
         }
         println!("selftest serving: OK ({done} requests served)");
     }
+    // The reconfiguration demo (same scenario as examples/reconfig.rs):
+    // fence, drain, program, land — then the swapped slot serves again.
+    let report = crate::accel::reconfig_demo().map_err(|e| e.to_string())?;
+    print!("{report}");
+    println!("selftest reconfig: OK");
     Ok(())
 }
 
@@ -436,6 +462,10 @@ mod tests {
                 let rendered = render_topology(&cfg);
                 assert!(rendered.contains("F0"), "{rendered}");
                 assert!(rendered.contains("MMU tile"), "{rendered}");
+                assert!(
+                    rendered.contains("device:"),
+                    "missing utilization line: {rendered}"
+                );
             }
             checked += 1;
         }

@@ -111,6 +111,10 @@ pub struct Channel {
     /// `completed[..recycled]` have had their pooled word buffers freed
     /// (see [`Channel::recycle_completed_words`]).
     recycled: usize,
+    /// Reconfiguration fence: when set the LGC issues no new grants
+    /// (requests keep queueing in the RB) while in-flight tasks drain —
+    /// the first phase of a slot swap ([`crate::reconfig`]).
+    fenced: bool,
 }
 
 impl Channel {
@@ -148,6 +152,7 @@ impl Channel {
             // reallocates the log mid-simulation.
             completed: Vec::with_capacity(1024),
             recycled: 0,
+            fenced: false,
         }
     }
 
@@ -192,6 +197,9 @@ impl Channel {
     /// same cycle is served immediately when the RB was otherwise empty
     /// — the RB bypass path.
     pub fn step_lgc(&mut self, _now: Ps) {
+        if self.fenced {
+            return;
+        }
         let Some(free_tb) = self
             .tbs
             .iter()
@@ -611,6 +619,51 @@ impl Channel {
             && self.pob.is_empty()
             && self.cmd_out.is_empty()
             && self.tbs.iter().all(|tb| tb.state == TbState::Free)
+    }
+
+    // ------------------------------------------------------------------
+    // Partial reconfiguration (drain / fence / swap carry-over)
+    // ------------------------------------------------------------------
+
+    /// Raise or drop the reconfiguration fence (see [`Channel::fenced`]).
+    pub fn set_fenced(&mut self, fenced: bool) {
+        self.fenced = fenced;
+    }
+
+    /// Whether the LGC is currently fenced for reconfiguration.
+    pub fn fenced(&self) -> bool {
+        self.fenced
+    }
+
+    /// Drained enough to swap the slot's accelerator: [`Channel::quiescent`]
+    /// *except* for the RB — queued requests survive a swap (they carry
+    /// over to the successor channel), but every granted/fetched/executing
+    /// task, chained hand-off, pending command and result packet must have
+    /// left the channel first. No arena handle may still be owned here.
+    pub fn drained_for_reconfig(&self) -> bool {
+        !self.busy()
+            && self.chain_in.is_none()
+            && self.chain_out.is_empty()
+            && self.pob.is_empty()
+            && self.cmd_out.is_empty()
+            && self.tbs.iter().all(|tb| tb.state == TbState::Free)
+    }
+
+    /// Seed a freshly built replacement channel with the victim's
+    /// accumulated state: counters, the completed-task log (with its
+    /// recycle watermark) and every request still queued in the RB — the
+    /// drain/quiesce contract is that a swap never drops or reorders
+    /// work. The slot's clock tree is part of the static region, so the
+    /// successor inherits the victim's HWA clock period too.
+    pub fn inherit_for_reconfig(&mut self, old: &mut Channel) {
+        debug_assert!(old.drained_for_reconfig());
+        self.stats = old.stats;
+        std::mem::swap(&mut self.completed, &mut old.completed);
+        self.recycled = old.recycled;
+        self.hwa_clock = old.hwa_clock.clone();
+        while let Some(e) = old.rb.pop_front() {
+            self.rb.push_back(e);
+        }
     }
 }
 

@@ -73,6 +73,37 @@ pub struct FabricStats {
     /// Interface cycles with at least one busy HWA.
     pub busy_iface_cycles: u64,
     pub iface_cycles: u64,
+    /// Completed accelerator slot swaps ([`crate::reconfig`]).
+    pub reconfig_swaps: u64,
+    /// Interface cycles some slot spent fenced, waiting for its in-flight
+    /// tasks to drain before reprogramming.
+    pub reconfig_drain_cycles: u64,
+    /// Interface cycles some slot spent busy-reconfiguring (bitstream
+    /// programming; the slot serves nothing, requests queue in its RB).
+    pub reconfig_blocked_cycles: u64,
+}
+
+/// Controller FSM phase of one in-flight slot swap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReconfigPhase {
+    /// Victim channel fenced; waiting for
+    /// [`Channel::drained_for_reconfig`].
+    Draining,
+    /// Bitstream streaming into the slot; swap lands at `done_at`.
+    Programming { done_at: Ps },
+}
+
+/// One in-flight slot swap (see [`crate::reconfig`] for the policy layer
+/// and latency model that feed this).
+#[derive(Debug, Clone)]
+pub struct ActiveReconfig {
+    /// Victim channel index.
+    pub channel: usize,
+    /// The accelerator type being programmed in.
+    pub target: HwaSpec,
+    /// Programming latency applied once the drain completes.
+    pub latency_ps: Ps,
+    pub phase: ReconfigPhase,
 }
 
 pub struct Fpga {
@@ -91,6 +122,12 @@ pub struct Fpga {
     compute: Box<dyn HwaCompute>,
     /// PR currently holding the input stream (payload packets span cycles).
     active_pr: Option<usize>,
+    /// In-flight slot swaps (at most one per channel).
+    reconfigs: Vec<ActiveReconfig>,
+    /// Swaps that landed since the last [`Fpga::take_completed_swaps`]
+    /// (channel index, new spec) — the system layer uses these to update
+    /// its inventory view and retarget serving sources.
+    completed_swaps: Vec<(usize, HwaSpec)>,
     pub stats: FabricStats,
 }
 
@@ -125,6 +162,8 @@ impl Fpga {
             chain_groups: Vec::new(),
             compute: Box::new(EchoCompute),
             active_pr: None,
+            reconfigs: Vec::new(),
+            completed_swaps: Vec::new(),
             iface_clock,
             config,
             stats: FabricStats::default(),
@@ -216,6 +255,7 @@ impl Fpga {
             || self.prs.iter().any(|p| !p.idle())
             || !self.ps.idle()
             || self.channels.iter().any(|c| c.iface_pending())
+            || !self.reconfigs.is_empty()
         {
             Activity::Busy
         } else {
@@ -248,6 +288,8 @@ impl Fpga {
         if self.channels.iter().any(|c| c.busy()) {
             self.stats.busy_iface_cycles += 1;
         }
+        // Reconfiguration controllers (one FSM per in-flight swap).
+        self.step_reconfigs(now);
         // Chaining controllers (combinational, §4.2 B.3).
         self.step_chain_controllers(arena);
         // Packet receiver(s): the input stream is serial; the PR owning
@@ -262,6 +304,102 @@ impl Fpga {
         let router_in = &mut self.router_in;
         let mut pushed = |f: Flit| router_in.push(now, f);
         self.ps.step(&mut self.channels, arena, &mut pushed);
+    }
+
+    // ------------------------------------------------------------------
+    // Dynamic partial reconfiguration ([`crate::reconfig`])
+    // ------------------------------------------------------------------
+
+    /// Start swapping `channel`'s accelerator for `target`: the slot is
+    /// fenced (no new grants; requests keep queueing in its RB), drains
+    /// its in-flight tasks, then spends `latency_ps` busy-reconfiguring
+    /// before the new core goes live. Errors if the channel index is out
+    /// of range or the slot is already mid-swap.
+    pub fn begin_reconfig(
+        &mut self,
+        channel: usize,
+        target: HwaSpec,
+        latency_ps: Ps,
+    ) -> Result<(), String> {
+        if channel >= self.channels.len() {
+            return Err(format!(
+                "reconfig: channel {channel} out of range (fabric has {})",
+                self.channels.len()
+            ));
+        }
+        if self.reconfiguring(channel) {
+            return Err(format!("reconfig: channel {channel} already mid-swap"));
+        }
+        self.channels[channel].set_fenced(true);
+        self.reconfigs.push(ActiveReconfig {
+            channel,
+            target,
+            latency_ps,
+            phase: ReconfigPhase::Draining,
+        });
+        Ok(())
+    }
+
+    /// Is `channel` currently draining or programming?
+    pub fn reconfiguring(&self, channel: usize) -> bool {
+        self.reconfigs.iter().any(|r| r.channel == channel)
+    }
+
+    /// In-flight swaps (read-only view for topology/state reporting).
+    pub fn active_reconfigs(&self) -> &[ActiveReconfig] {
+        &self.reconfigs
+    }
+
+    /// Take the swaps that completed since the last call.
+    pub fn take_completed_swaps(&mut self) -> Vec<(usize, HwaSpec)> {
+        std::mem::take(&mut self.completed_swaps)
+    }
+
+    /// Advance every in-flight swap by one interface cycle: count drain
+    /// or blocked cycles, move Draining slots to Programming once the
+    /// victim channel is quiescent-except-RB, and land finished swaps by
+    /// rebuilding the channel around the new spec (stats, queued
+    /// requests, completions and the slot's fixed clock tree carry over
+    /// via [`Channel::inherit_for_reconfig`]).
+    fn step_reconfigs(&mut self, now: Ps) {
+        if self.reconfigs.is_empty() {
+            return;
+        }
+        let mut landed: Vec<usize> = Vec::new();
+        for (i, r) in self.reconfigs.iter_mut().enumerate() {
+            match r.phase {
+                ReconfigPhase::Draining => {
+                    self.stats.reconfig_drain_cycles += 1;
+                    if self.channels[r.channel].drained_for_reconfig() {
+                        r.phase = ReconfigPhase::Programming {
+                            done_at: now + r.latency_ps,
+                        };
+                    }
+                }
+                ReconfigPhase::Programming { done_at } => {
+                    self.stats.reconfig_blocked_cycles += 1;
+                    if now >= done_at {
+                        landed.push(i);
+                    }
+                }
+            }
+        }
+        // Land in reverse index order so swap_remove-style removal by
+        // index stays valid.
+        for &i in landed.iter().rev() {
+            let r = self.reconfigs.remove(i);
+            let mut ch = Channel::new(
+                r.channel as u8,
+                r.target.clone(),
+                self.config.n_tbs,
+                self.config.reply_route.clone(),
+                self.config.mmu_route.clone(),
+            );
+            ch.inherit_for_reconfig(&mut self.channels[r.channel]);
+            self.channels[r.channel] = ch;
+            self.stats.reconfig_swaps += 1;
+            self.completed_swaps.push((r.channel, r.target));
+        }
     }
 
     fn step_pr(&mut self, now: Ps) {
@@ -315,7 +453,12 @@ impl Fpga {
                     continue;
                 }
                 let target = group.members[next_idx];
-                if self.channels[target].chain_in.is_none() {
+                // A fenced (reconfiguring) consumer accepts no hand-offs;
+                // the task waits in the producer's CB until the fence
+                // lifts, preserving order.
+                if self.channels[target].chain_in.is_none()
+                    && !self.channels[target].fenced()
+                {
                     let mut task =
                         self.channels[prod].chain_out.pop_front().expect("peeked");
                     task.advance_chain();
@@ -359,13 +502,16 @@ impl Fpga {
         domains
     }
 
-    /// Everything drained: no task anywhere in the fabric.
+    /// Everything drained: no task anywhere in the fabric (an in-flight
+    /// slot swap counts as work — the fabric is not quiescent until the
+    /// new core lands).
     pub fn quiescent(&self, now: Ps) -> bool {
         self.router_out.is_empty()
             && self.router_in.is_empty()
             && self.prs.iter().all(|p| p.idle())
             && self.ps.idle()
             && self.channels.iter().all(|c| c.quiescent())
+            && self.reconfigs.is_empty()
             && now > 0
     }
 
@@ -685,6 +831,65 @@ mod tests {
         rig.payload_for_grant(&grants[0], &[1, 2, 3, 4]);
         rig.run(rig.mc.now() + 3_000_000);
         assert_eq!(rig.fpga.tasks_executed(), 1, "fabric still live");
+    }
+
+    #[test]
+    fn reconfig_drains_in_flight_tasks_then_swaps() {
+        let mut rig = Rig::new(vec![spec_by_name("izigzag").unwrap()]);
+        rig.request(0, 1, None);
+        rig.run(1_000_000);
+        let grants = rig.take_grants();
+        assert_eq!(grants.len(), 1);
+        // Begin the swap while the granted task is still in flight: the
+        // slot must drain (task completes, result emitted) before the
+        // bitstream programs.
+        let target = spec_by_name("iquantize").unwrap();
+        rig.fpga.begin_reconfig(0, target, 5_000_000).unwrap();
+        assert!(rig.fpga.reconfiguring(0));
+        assert!(
+            rig.fpga.begin_reconfig(0, spec_by_name("idct").unwrap(), 1).is_err(),
+            "double swap on one slot rejected"
+        );
+        let words: Vec<u32> = (0..64).collect();
+        rig.payload_for_grant(&grants[0], &words);
+        rig.run(rig.mc.now() + 20_000_000);
+        assert_eq!(rig.fpga.tasks_executed(), 1, "in-flight task completed");
+        assert_eq!(rig.fpga.stats.reconfig_swaps, 1);
+        assert!(!rig.fpga.reconfiguring(0));
+        assert_eq!(rig.fpga.channels[0].spec.name, "iquantize");
+        assert!(rig.fpga.stats.reconfig_drain_cycles > 0);
+        assert!(rig.fpga.stats.reconfig_blocked_cycles > 0);
+        let swaps = rig.fpga.take_completed_swaps();
+        assert_eq!(swaps.len(), 1);
+        assert_eq!(swaps[0].0, 0);
+        assert_eq!(swaps[0].1.name, "iquantize");
+        // The reprogrammed slot serves new requests.
+        rig.request(0, 2, None);
+        rig.run(rig.mc.now() + 2_000_000);
+        let grants = rig.take_grants();
+        assert_eq!(grants.len(), 1, "post-swap grant");
+        rig.payload_for_grant(&grants[0], &words);
+        rig.run(rig.mc.now() + 8_000_000);
+        assert_eq!(rig.fpga.tasks_executed(), 2);
+        assert!(rig.fpga.quiescent(rig.mc.now()));
+    }
+
+    #[test]
+    fn requests_queued_during_reconfig_are_granted_after_swap() {
+        let mut rig = Rig::new(vec![spec_by_name("dfadd").unwrap()]);
+        rig.fpga
+            .begin_reconfig(0, spec_by_name("dfmul").unwrap(), 3_000_000)
+            .unwrap();
+        // A request arriving mid-swap queues in the slot's RB; the fence
+        // blocks the grant until the new core lands.
+        rig.request(0, 1, None);
+        rig.run(2_000_000);
+        assert!(rig.take_grants().is_empty(), "fence blocks grants");
+        rig.run(rig.mc.now() + 8_000_000);
+        assert_eq!(rig.fpga.stats.reconfig_swaps, 1);
+        let grants = rig.take_grants();
+        assert_eq!(grants.len(), 1, "queued request granted after the swap");
+        assert_eq!(rig.fpga.channels[0].spec.name, "dfmul");
     }
 
     #[test]

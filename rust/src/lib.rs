@@ -30,6 +30,7 @@ pub mod synth;
 pub mod fpga;
 pub mod flit;
 pub mod noc;
+pub mod reconfig;
 pub mod runtime;
 pub mod sim;
 pub mod sweep;

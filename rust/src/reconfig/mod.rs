@@ -1,0 +1,446 @@
+//! Dynamic partial reconfiguration: demand-driven accelerator
+//! provisioning (ROADMAP item 2).
+//!
+//! The paper's interface (§4) makes accelerators cheap to *attach*; this
+//! module makes the attached inventory cheap to *change*. A fabric slot
+//! declared reconfigurable ([`crate::sim::FabricSpec::reconfigurable`])
+//! can swap its accelerator type mid-run:
+//!
+//! 1. **Drain** — the victim channel's LGC is fenced (no new grants);
+//!    queued requests stay in the RB, in-flight tasks run to completion
+//!    ([`crate::fpga::Fpga`] advances the FSM each interface cycle).
+//! 2. **Program** — the slot is busy-reconfiguring for a latency derived
+//!    from the incoming core's bitstream size ([`LatencyModel`]).
+//! 3. **Swap** — the channel is rebuilt with the new `HwaSpec` (stats,
+//!    completed-task log and queued RB requests carry over; the PR
+//!    region's clock tree is fixed, so the slot keeps its clock period)
+//!    and the system config is updated so driver discovery re-resolves.
+//!
+//! The [`Provisioner`] sits above the mechanism: each epoch it folds the
+//! observed per-accelerator demand into an EWMA and — under the
+//! [`ProvisionPolicy::QueueDepth`] policy — converts the coldest
+//! reconfigurable slot toward the hottest starved type, with a pressure
+//! threshold plus hysteresis so a balanced mix never thrashes.
+
+use std::collections::BTreeMap;
+
+use crate::clock::{Ps, PS_PER_US};
+use crate::fpga::hwa::HwaSpec;
+
+/// Pressure (EWMA demand per effective slot) a type must exceed before
+/// the provisioner converts a slot toward it.
+pub const HOT_THRESHOLD: f64 = 2.0;
+/// The hot type's pressure must exceed the victim type's by this factor
+/// (hysteresis: near-balanced pressures never trigger a swap).
+pub const HYSTERESIS: f64 = 2.0;
+/// Maximum concurrent slot swaps per fabric (a real device has a small,
+/// fixed number of configuration ports).
+pub const MAX_CONCURRENT_PER_FABRIC: usize = 2;
+/// EWMA smoothing factor per epoch (`e = (1-a)*e + a*sample`).
+pub const EWMA_ALPHA: f64 = 0.5;
+
+/// Which inventory-reshaping policy drives the fabric's reconfigurable
+/// slots. `Static` installs nothing at all, so its output is bit-exact
+/// with a run that never heard of reconfiguration (pinned by test).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ProvisionPolicy {
+    /// Never swap; the declared inventory is final.
+    #[default]
+    Static,
+    /// Convert cold reconfigurable slots toward queue-depth-starved
+    /// accelerator types each epoch (threshold + hysteresis).
+    QueueDepth,
+}
+
+impl ProvisionPolicy {
+    /// Parse a `reconfig.policy` sweep value.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "static" => Ok(Self::Static),
+            "queue_depth" => Ok(Self::QueueDepth),
+            other => Err(format!(
+                "unknown reconfig.policy {other:?} (static|queue_depth)"
+            )),
+        }
+    }
+
+    /// The sweep-spec spelling (inverse of [`Self::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Static => "static",
+            Self::QueueDepth => "queue_depth",
+        }
+    }
+}
+
+/// How long programming a slot takes once its channel has drained.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LatencyModel {
+    /// Bitstream size proportional to the incoming core's LUT/BRAM cost
+    /// ([`bitstream_bits`]), streamed through a configuration port of
+    /// `port_mbps` MB/s (an ICAP-class port is ~400 MB/s; faster values
+    /// model wider vendor ports).
+    Resource { port_mbps: f64 },
+    /// Flat per-swap latency in microseconds (calibration baseline).
+    Fixed { us: f64 },
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        Self::Resource { port_mbps: 400.0 }
+    }
+}
+
+impl LatencyModel {
+    /// Parse a `reconfig.latency_model` sweep value: `resource`,
+    /// `resource:<MB/s>` or `fixed:<us>`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let bad = |s: &str| {
+            format!(
+                "unknown reconfig.latency_model {s:?} \
+                 (resource | resource:<MB/s> | fixed:<us>)"
+            )
+        };
+        if s == "resource" {
+            return Ok(Self::default());
+        }
+        if let Some(v) = s.strip_prefix("resource:") {
+            let port_mbps: f64 = v.parse().map_err(|_| bad(s))?;
+            if port_mbps <= 0.0 {
+                return Err(bad(s));
+            }
+            return Ok(Self::Resource { port_mbps });
+        }
+        if let Some(v) = s.strip_prefix("fixed:") {
+            let us: f64 = v.parse().map_err(|_| bad(s))?;
+            if us <= 0.0 {
+                return Err(bad(s));
+            }
+            return Ok(Self::Fixed { us });
+        }
+        Err(bad(s))
+    }
+
+    /// The sweep-spec spelling (inverse of [`Self::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            Self::Resource { port_mbps } => {
+                if *port_mbps == 400.0 {
+                    "resource".to_string()
+                } else {
+                    format!("resource:{port_mbps}")
+                }
+            }
+            Self::Fixed { us } => format!("fixed:{us}"),
+        }
+    }
+
+    /// Programming time for swapping `target` into a slot.
+    pub fn latency_ps(&self, target: &HwaSpec) -> Ps {
+        match self {
+            Self::Resource { port_mbps } => {
+                // 1 MB/s streams 1 byte per µs, so the port moves
+                // `port_mbps` bytes per simulated µs.
+                let bytes = bitstream_bits(target) as f64 / 8.0;
+                (bytes * PS_PER_US as f64 / port_mbps) as Ps
+            }
+            Self::Fixed { us } => (us * PS_PER_US as f64) as Ps,
+        }
+        .max(1)
+    }
+}
+
+/// Partial-bitstream size proxy for one core: configuration frames scale
+/// with the logic and BRAM the core occupies (64 config bits per LUT,
+/// 36 Kib per BRAM tile). The interface logic (TB/LGC/POB/...) is part
+/// of the static region and costs nothing to swap.
+pub fn bitstream_bits(spec: &HwaSpec) -> u64 {
+    spec.resources.lut as u64 * 64 + spec.resources.bram as u64 * 36_864
+}
+
+/// Whether a slot is available for provisioning decisions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    /// Serving its current type.
+    Live,
+    /// Mid-swap toward the named type (drain or programming phase).
+    Converting(&'static str),
+}
+
+/// One fabric slot as the provisioner sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct SlotView {
+    /// Channel index on the fabric.
+    pub channel: usize,
+    /// The type currently occupying the slot.
+    pub name: &'static str,
+    /// Whether the floorplan declared this slot swappable.
+    pub reconfigurable: bool,
+    pub state: SlotState,
+}
+
+/// One fabric's reconfigurable inventory snapshot.
+#[derive(Debug, Clone)]
+pub struct FabricView {
+    pub fabric: usize,
+    pub slots: Vec<SlotView>,
+}
+
+/// A swap the provisioner wants executed.
+#[derive(Debug, Clone)]
+pub struct SwapPlan {
+    pub fabric: usize,
+    pub channel: usize,
+    pub target: HwaSpec,
+}
+
+/// Epoch-driven inventory reshaper. Stateless under
+/// [`ProvisionPolicy::Static`]; under `QueueDepth` it tracks a
+/// per-type demand EWMA and emits [`SwapPlan`]s.
+#[derive(Debug, Clone)]
+pub struct Provisioner {
+    policy: ProvisionPolicy,
+    /// Per-type demand EWMA (`BTreeMap` for deterministic iteration).
+    ewma: BTreeMap<&'static str, f64>,
+}
+
+impl Provisioner {
+    pub fn new(policy: ProvisionPolicy) -> Self {
+        Self {
+            policy,
+            ewma: BTreeMap::new(),
+        }
+    }
+
+    pub fn policy(&self) -> ProvisionPolicy {
+        self.policy
+    }
+
+    /// One epoch: fold `demand` (queued jobs per required accelerator
+    /// type, summed over all serving sources) into the EWMA, then plan
+    /// swaps. `lookup` resolves a type name to its spec (injected so
+    /// this layer stays table-agnostic and testable).
+    pub fn plan(
+        &mut self,
+        demand: &BTreeMap<&'static str, f64>,
+        fabrics: &[FabricView],
+        lookup: &dyn Fn(&str) -> Option<HwaSpec>,
+    ) -> Vec<SwapPlan> {
+        // Decay every tracked type, then fold in this epoch's sample —
+        // types with no queued work cool off toward zero.
+        for (name, e) in self.ewma.iter_mut() {
+            let sample = demand.get(name).copied().unwrap_or(0.0);
+            *e = (1.0 - EWMA_ALPHA) * *e + EWMA_ALPHA * sample;
+        }
+        for (&name, &sample) in demand {
+            self.ewma
+                .entry(name)
+                .or_insert_with(|| EWMA_ALPHA * sample);
+        }
+        if self.policy != ProvisionPolicy::QueueDepth {
+            return Vec::new();
+        }
+        // Effective supply: live slots plus in-flight conversions, so a
+        // type already being provisioned is not over-provisioned again.
+        let mut supply: BTreeMap<&'static str, f64> = BTreeMap::new();
+        for fv in fabrics {
+            for s in &fv.slots {
+                match s.state {
+                    SlotState::Live => {
+                        *supply.entry(s.name).or_insert(0.0) += 1.0
+                    }
+                    SlotState::Converting(target) => {
+                        *supply.entry(target).or_insert(0.0) += 1.0
+                    }
+                }
+            }
+        }
+        let pressure = |ewma: &BTreeMap<&'static str, f64>,
+                        supply: &BTreeMap<&'static str, f64>,
+                        name: &'static str| {
+            ewma.get(name).copied().unwrap_or(0.0)
+                / supply.get(name).copied().unwrap_or(0.0).max(0.5)
+        };
+        let mut plans: Vec<SwapPlan> = Vec::new();
+        for fv in fabrics {
+            let mut active = fv
+                .slots
+                .iter()
+                .filter(|s| matches!(s.state, SlotState::Converting(_)))
+                .count();
+            // Bounded by the slot count: each iteration either plans a
+            // swap or breaks.
+            for _ in 0..fv.slots.len() {
+                if active >= MAX_CONCURRENT_PER_FABRIC {
+                    break;
+                }
+                // Hottest starved type above the threshold.
+                let hot = self
+                    .ewma
+                    .iter()
+                    .map(|(&n, _)| (n, pressure(&self.ewma, &supply, n)))
+                    .filter(|(_, p)| *p >= HOT_THRESHOLD)
+                    .max_by(|a, b| a.1.total_cmp(&b.1));
+                let Some((hot, hot_p)) = hot else { break };
+                let Some(target) = lookup(hot) else { break };
+                // Coldest live reconfigurable slot of a *different*
+                // type, by its own type's pressure.
+                let victim = fv
+                    .slots
+                    .iter()
+                    .filter(|s| {
+                        s.reconfigurable
+                            && s.state == SlotState::Live
+                            && s.name != hot
+                            && !plans.iter().any(|p| {
+                                p.fabric == fv.fabric
+                                    && p.channel == s.channel
+                            })
+                    })
+                    .min_by(|a, b| {
+                        pressure(&self.ewma, &supply, a.name)
+                            .total_cmp(&pressure(
+                                &self.ewma,
+                                &supply,
+                                b.name,
+                            ))
+                            .then(a.channel.cmp(&b.channel))
+                    });
+                let Some(victim) = victim else { break };
+                let cold_p = pressure(&self.ewma, &supply, victim.name);
+                if hot_p < HYSTERESIS * cold_p {
+                    break;
+                }
+                *supply.entry(victim.name).or_insert(1.0) -= 1.0;
+                *supply.entry(hot).or_insert(0.0) += 1.0;
+                plans.push(SwapPlan {
+                    fabric: fv.fabric,
+                    channel: victim.channel,
+                    target: target.clone(),
+                });
+                active += 1;
+            }
+        }
+        plans
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::hwa::spec_by_name;
+
+    fn lookup(name: &str) -> Option<HwaSpec> {
+        spec_by_name(name)
+    }
+
+    fn view(names: &[&'static str]) -> FabricView {
+        FabricView {
+            fabric: 0,
+            slots: names
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| SlotView {
+                    channel: i,
+                    name: n,
+                    reconfigurable: true,
+                    state: SlotState::Live,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn policy_and_latency_model_round_trip() {
+        for p in [ProvisionPolicy::Static, ProvisionPolicy::QueueDepth] {
+            assert_eq!(ProvisionPolicy::parse(p.name()), Ok(p));
+        }
+        for m in [
+            LatencyModel::default(),
+            LatencyModel::Resource { port_mbps: 12800.0 },
+            LatencyModel::Fixed { us: 5.0 },
+        ] {
+            assert_eq!(LatencyModel::parse(&m.name()).unwrap(), m);
+        }
+        assert!(ProvisionPolicy::parse("adaptive").is_err());
+        assert!(LatencyModel::parse("resource:-1").is_err());
+        assert!(LatencyModel::parse("icap").is_err());
+    }
+
+    #[test]
+    fn latency_scales_with_core_size_and_port_speed() {
+        let m = LatencyModel::default();
+        let small = m.latency_ps(&spec_by_name("izigzag").unwrap());
+        let mid = m.latency_ps(&spec_by_name("gsm").unwrap());
+        let big = m.latency_ps(&spec_by_name("idct").unwrap());
+        assert!(small < mid && mid < big, "{small} {mid} {big}");
+        // gsm: 4257 LUT x 64 bits / 8 = 34_056 bytes at 400 B/µs.
+        assert_eq!(mid, 34_056 * PS_PER_US / 400);
+        let fast = LatencyModel::Resource { port_mbps: 12800.0 };
+        assert_eq!(fast.latency_ps(&spec_by_name("gsm").unwrap()), mid / 32);
+        // BRAM-heavy cores pay for their block-RAM frames too.
+        let aes = spec_by_name("aes_enc").unwrap();
+        assert!(
+            bitstream_bits(&aes)
+                > aes.resources.lut as u64 * 64 + 100 * 36_864
+        );
+    }
+
+    #[test]
+    fn static_policy_never_plans() {
+        let mut p = Provisioner::new(ProvisionPolicy::Static);
+        let mut demand = BTreeMap::new();
+        demand.insert("gsm", 100.0);
+        let plans =
+            p.plan(&demand, &[view(&["dfmul", "dfmul"])], &lookup);
+        assert!(plans.is_empty());
+    }
+
+    #[test]
+    fn queue_depth_converts_cold_slots_toward_the_hot_type() {
+        let mut p = Provisioner::new(ProvisionPolicy::QueueDepth);
+        let mut demand = BTreeMap::new();
+        demand.insert("gsm", 40.0);
+        // Two epochs so the EWMA warms past the threshold.
+        let fabrics = [view(&["dfmul", "dfmul", "gsm", "gsm"])];
+        let _ = p.plan(&demand, &fabrics, &lookup);
+        let plans = p.plan(&demand, &fabrics, &lookup);
+        assert!(!plans.is_empty());
+        assert!(plans.len() <= MAX_CONCURRENT_PER_FABRIC);
+        for plan in &plans {
+            assert_eq!(plan.target.name, "gsm");
+            // Victims are the cold dfmul slots, channels 0 then 1.
+            assert!(plan.channel < 2, "{plan:?}");
+        }
+    }
+
+    #[test]
+    fn balanced_pressure_does_not_thrash() {
+        let mut p = Provisioner::new(ProvisionPolicy::QueueDepth);
+        let mut demand = BTreeMap::new();
+        demand.insert("gsm", 8.0);
+        demand.insert("dfmul", 8.0);
+        let fabrics = [view(&["gsm", "gsm", "dfmul", "dfmul"])];
+        for _ in 0..4 {
+            let plans = p.plan(&demand, &fabrics, &lookup);
+            assert!(
+                plans.is_empty(),
+                "balanced demand must not swap: {plans:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn converting_slots_count_as_supply() {
+        let mut p = Provisioner::new(ProvisionPolicy::QueueDepth);
+        let mut demand = BTreeMap::new();
+        demand.insert("gsm", 40.0);
+        let mut fv = view(&["dfmul", "dfmul", "gsm", "gsm"]);
+        // Both conversion ports busy: nothing further may be planned.
+        fv.slots[0].state = SlotState::Converting("gsm");
+        fv.slots[1].state = SlotState::Converting("gsm");
+        let _ = p.plan(&demand, &[fv.clone()], &lookup);
+        let plans = p.plan(&demand, &[fv], &lookup);
+        assert!(plans.is_empty(), "{plans:?}");
+    }
+}

@@ -112,6 +112,12 @@ pub enum TopologyError {
     /// A chain group in a `FabricSpec` names a channel index beyond the
     /// fabric's HWA inventory.
     ChainGroupOutOfRange { fabric: usize, member: usize },
+    /// A fabric's declared inventory (accelerator cores plus the
+    /// interface itself) does not fit the device's LUT/BRAM budget.
+    ResourceBudget { fabric: usize, luts: u32, brams: u32 },
+    /// A `FabricSpec.reconfigurable` entry names a channel index beyond
+    /// the fabric's HWA inventory.
+    ReconfigSlotOutOfRange { fabric: usize, slot: usize },
 }
 
 impl std::fmt::Display for TopologyError {
@@ -169,6 +175,18 @@ impl std::fmt::Display for TopologyError {
             TopologyError::ChainGroupOutOfRange { fabric, member } => write!(
                 f,
                 "fabric {fabric}: chain group member {member} names no \
+                 configured channel"
+            ),
+            TopologyError::ResourceBudget { fabric, luts, brams } => write!(
+                f,
+                "fabric {fabric}: inventory needs {luts} LUTs / {brams} \
+                 BRAMs, exceeding the xc7vx690t budget ({} / {})",
+                crate::fpga::hwa::DEVICE_LUTS,
+                crate::fpga::hwa::DEVICE_BRAMS
+            ),
+            TopologyError::ReconfigSlotOutOfRange { fabric, slot } => write!(
+                f,
+                "fabric {fabric}: reconfigurable slot {slot} names no \
                  configured channel"
             ),
         }

@@ -17,8 +17,14 @@ use crate::fpga::fabric::{Fpga, FpgaConfig};
 use crate::fpga::hwa::{HwaCompute, HwaSpec};
 use crate::mem::mmu::Mmu;
 use crate::noc::mesh::{Mesh, MeshConfig};
+use crate::reconfig::{
+    FabricView, LatencyModel, ProvisionPolicy, Provisioner, SlotState,
+    SlotView,
+};
 use crate::workload::openloop::{OpenLoopSource, OpenLoopTarget};
 use crate::workload::serving::{ServingSource, ServingTarget, TenantSpec};
+
+use std::collections::BTreeMap;
 
 use super::floorplan::{Floorplan, MmuAssign, TopologyError};
 
@@ -52,6 +58,11 @@ pub struct FabricSpec {
     /// Chain groups over this fabric's channel indices (chains never
     /// cross fabrics — the driver rejects that with a typed error).
     pub chain_groups: Vec<Vec<usize>>,
+    /// Channel indices sitting in partial-reconfiguration regions: only
+    /// these slots may be swapped at runtime ([`crate::reconfig`]).
+    /// Empty (the default) freezes the inventory, matching every
+    /// pre-reconfig configuration bit-for-bit.
+    pub reconfigurable: Vec<usize>,
 }
 
 impl FabricSpec {
@@ -65,6 +76,7 @@ impl FabricSpec {
             iface_mhz: 300.0,
             specs,
             chain_groups: Vec::new(),
+            reconfigurable: Vec::new(),
         }
     }
 }
@@ -164,6 +176,32 @@ impl SystemConfig {
                             member: *member,
                         });
                     }
+                }
+            }
+            for slot in &spec.reconfigurable {
+                if *slot >= spec.specs.len() {
+                    return Err(TopologyError::ReconfigSlotOutOfRange {
+                        fabric: f,
+                        slot: *slot,
+                    });
+                }
+            }
+            // Inventory + interface must fit the device (the synth
+            // resource model was previously write-only; now it gates
+            // construction and provisioner targets alike).
+            if spec.kind == FabricKind::Buffered {
+                let cost = crate::synth::resource::inventory_cost(
+                    spec.pr_group,
+                    spec.ps_group,
+                    &spec.specs,
+                    !spec.chain_groups.is_empty(),
+                );
+                if crate::synth::resource::exceeds_device(&cost) {
+                    return Err(TopologyError::ResourceBudget {
+                        fabric: f,
+                        luts: cost.lut,
+                        brams: cost.bram,
+                    });
                 }
             }
         }
@@ -383,6 +421,18 @@ impl Fabric {
     }
 }
 
+/// The adaptive-provisioning engine installed by [`System::set_reconfig`]
+/// with a non-`Static` policy: every `epoch_ps` it samples per-type
+/// demand from the serving sources and asks the [`Provisioner`] for slot
+/// swaps. `Static` installs no engine at all, so such runs are
+/// bit-identical to pre-reconfig builds.
+struct ReconfigEngine {
+    epoch_ps: Ps,
+    next_epoch: Ps,
+    latency: LatencyModel,
+    provisioner: Provisioner,
+}
+
 /// One fabric tile as wired into the running system: its NoC node, its
 /// clock domains and the fabric model itself.
 struct FabricSlot {
@@ -445,6 +495,12 @@ pub struct System {
     /// Per-domain breakdown of `edges_skipped`, indexed by `DomainId`
     /// (surfaced through [`System::edges_skipped_breakdown`]).
     edges_skipped_by: Vec<u64>,
+    /// Demand-driven provisioning engine (None = frozen inventory).
+    reconfig: Option<ReconfigEngine>,
+    /// Slot swaps begun but not yet landed — gates the per-edge
+    /// completed-swap drain so the frozen-inventory hot path pays
+    /// nothing.
+    pending_swaps: usize,
 }
 
 impl System {
@@ -583,6 +639,8 @@ impl System {
             edges_stepped: 0,
             edges_skipped: 0,
             edges_skipped_by: vec![0; n_domains],
+            reconfig: None,
+            pending_swaps: 0,
         })
     }
 
@@ -815,6 +873,197 @@ impl System {
         }
     }
 
+    // ------------------------------------------------------------------
+    // Dynamic partial reconfiguration ([`crate::reconfig`])
+    // ------------------------------------------------------------------
+
+    /// Install the demand-driven provisioning engine. `Static` installs
+    /// nothing — the run is bit-identical to one that never called this.
+    /// `QueueDepth` samples per-type serving demand every `epoch_us` and
+    /// swaps cold reconfigurable slots toward hot accelerator types, with
+    /// per-swap latency from `latency` and the target core's size.
+    pub fn set_reconfig(
+        &mut self,
+        policy: ProvisionPolicy,
+        epoch_us: f64,
+        latency: LatencyModel,
+    ) {
+        self.reconfig = match policy {
+            ProvisionPolicy::Static => None,
+            _ => {
+                let epoch_ps =
+                    ((epoch_us * crate::clock::PS_PER_US as f64) as Ps).max(1);
+                Some(ReconfigEngine {
+                    epoch_ps,
+                    next_epoch: epoch_ps,
+                    latency,
+                    provisioner: Provisioner::new(policy),
+                })
+            }
+        };
+    }
+
+    /// Manually begin a slot swap (the driver/demo surface — adaptive
+    /// runs go through [`System::set_reconfig`] instead). The slot must
+    /// be declared `reconfigurable` in its [`FabricSpec`] and the
+    /// post-swap inventory must fit the device budget.
+    pub fn request_reconfig(
+        &mut self,
+        fabric: usize,
+        channel: usize,
+        target: HwaSpec,
+        latency_ps: Ps,
+    ) -> Result<(), String> {
+        let fspec = self
+            .config
+            .fabrics
+            .get(fabric)
+            .ok_or_else(|| format!("reconfig: no fabric {fabric}"))?;
+        if !fspec.reconfigurable.contains(&channel) {
+            return Err(format!(
+                "reconfig: fabric {fabric} channel {channel} is not a \
+                 reconfigurable slot"
+            ));
+        }
+        let mut specs = fspec.specs.clone();
+        specs[channel] = target.clone();
+        let cost = crate::synth::resource::inventory_cost(
+            fspec.pr_group,
+            fspec.ps_group,
+            &specs,
+            !fspec.chain_groups.is_empty(),
+        );
+        if crate::synth::resource::exceeds_device(&cost) {
+            return Err(format!(
+                "reconfig: swapping in {} exceeds the device budget \
+                 ({} LUTs / {} BRAMs)",
+                target.name, cost.lut, cost.bram
+            ));
+        }
+        let f = self.slots[fabric]
+            .fabric
+            .buffered_mut()
+            .ok_or_else(|| {
+                format!("reconfig: fabric {fabric} is not buffered")
+            })?;
+        f.begin_reconfig(channel, target, latency_ps)?;
+        self.pending_swaps += 1;
+        Ok(())
+    }
+
+    /// Is the slot serving `hwa_id` on `fabric` mid-swap right now?
+    pub fn slot_reconfiguring(&self, fabric: usize, hwa_id: u8) -> bool {
+        self.slots
+            .get(fabric)
+            .and_then(|s| s.fabric.buffered())
+            .map(|f| f.reconfiguring(hwa_id as usize))
+            .unwrap_or(false)
+    }
+
+    /// (swaps, drain cycles, blocked-while-reconfiguring cycles) summed
+    /// across fabrics — the counters `sweep::RunStats` reports.
+    pub fn reconfig_stats(&self) -> (u64, u64, u64) {
+        self.slots.iter().fold((0, 0, 0), |(s, d, b), slot| {
+            match slot.fabric.buffered() {
+                Some(f) => (
+                    s + f.stats.reconfig_swaps,
+                    d + f.stats.reconfig_drain_cycles,
+                    b + f.stats.reconfig_blocked_cycles,
+                ),
+                None => (s, d, b),
+            }
+        })
+    }
+
+    /// Inventory snapshot per buffered fabric, as the provisioner sees
+    /// it: each slot's current type, whether it may be swapped, and any
+    /// in-flight conversion.
+    fn fabric_views(&self) -> Vec<FabricView> {
+        let mut views = Vec::new();
+        for (fid, slot) in self.slots.iter().enumerate() {
+            let Some(f) = slot.fabric.buffered() else { continue };
+            let reconfigurable = &self.config.fabrics[fid].reconfigurable;
+            let slots = f
+                .channels
+                .iter()
+                .enumerate()
+                .map(|(c, ch)| {
+                    let state = f
+                        .active_reconfigs()
+                        .iter()
+                        .find(|r| r.channel == c)
+                        .map(|r| SlotState::Converting(r.target.name))
+                        .unwrap_or(SlotState::Live);
+                    SlotView {
+                        channel: c,
+                        name: ch.spec.name,
+                        reconfigurable: reconfigurable.contains(&c),
+                        state,
+                    }
+                })
+                .collect();
+            views.push(FabricView { fabric: fid, slots });
+        }
+        views
+    }
+
+    /// Fire provisioning epochs up to `now`: sample demand from the
+    /// serving sources, ask the provisioner for swaps, and begin every
+    /// plan that clears the device budget.
+    fn fire_reconfig_epochs(&mut self, now: Ps) {
+        let due = match &self.reconfig {
+            Some(eng) => now >= eng.next_epoch,
+            None => false,
+        };
+        if !due {
+            return;
+        }
+        let Some(mut eng) = self.reconfig.take() else { return };
+        while now >= eng.next_epoch {
+            eng.next_epoch += eng.epoch_ps;
+            let mut demand: BTreeMap<&'static str, f64> = BTreeMap::new();
+            for src in self.serving_sources.iter().flatten() {
+                src.demand_by_name(&mut demand);
+            }
+            let views = self.fabric_views();
+            let plans = eng.provisioner.plan(&demand, &views, &|name| {
+                crate::fpga::hwa::spec_by_name(name)
+            });
+            for plan in plans {
+                let latency = eng.latency.latency_ps(&plan.target);
+                // Budget-infeasible or already-busy slots are skipped;
+                // the provisioner retries at the next epoch.
+                let _ = self.request_reconfig(
+                    plan.fabric,
+                    plan.channel,
+                    plan.target,
+                    latency,
+                );
+            }
+        }
+        self.reconfig = Some(eng);
+    }
+
+    /// Land completed swaps into the configuration's inventory view and
+    /// retarget the serving sources (queued jobs for the old type keep
+    /// their original plans; only future picks see the new inventory).
+    fn finish_swaps(&mut self) {
+        if self.pending_swaps == 0 {
+            return;
+        }
+        for (fid, slot) in self.slots.iter_mut().enumerate() {
+            let Fabric::Buffered(f) = &mut slot.fabric else { continue };
+            for (c, spec) in f.take_completed_swaps() {
+                self.pending_swaps -= 1;
+                self.config.fabrics[fid].specs[c] = spec.clone();
+                let node = slot.node as u8;
+                for src in self.serving_sources.iter_mut().flatten() {
+                    src.retarget(node, c as u8, &spec);
+                }
+            }
+        }
+    }
+
     /// Total completed requests across serving sources.
     pub fn serving_completions(&self) -> u64 {
         self.serving_sources
@@ -915,6 +1164,12 @@ impl System {
                 }
             }
         }
+        // A provisioning epoch is a scheduled event: never skip past it,
+        // so adaptive runs observe demand at the same instants under
+        // idle-skipping and naive stepping.
+        if let Some(eng) = &self.reconfig {
+            fold(&mut target, eng.next_epoch);
+        }
         let target = match (target, deadline) {
             (Some(t), Some(d)) => t.min(d),
             (Some(t), None) => t,
@@ -990,6 +1245,10 @@ impl System {
         self.edges_stepped += 1;
         let mut ticking = std::mem::take(&mut self.ticking);
         let t = self.clk.advance(&mut ticking);
+        // Provisioning epochs fire at the first dispatched edge at or
+        // after each epoch boundary — a pure function of `t`, so naive
+        // and idle-skipping schedules make identical decisions.
+        self.fire_reconfig_epochs(t);
         for d in &ticking {
             if *d == self.noc_dom {
                 self.step_noc_domain(t);
@@ -1017,6 +1276,7 @@ impl System {
             }
         }
         self.ticking = ticking;
+        self.finish_swaps();
         t
     }
 
@@ -1436,6 +1696,66 @@ mod tests {
     }
 
     #[test]
+    fn reconfigurable_slot_indices_are_range_checked() {
+        let mut cfg = SystemConfig::paper(vec![
+            spec_by_name("izigzag").unwrap();
+            2
+        ]);
+        cfg.fabrics[0].reconfigurable = vec![0, 7];
+        assert_eq!(
+            System::try_new(cfg).err(),
+            Some(TopologyError::ReconfigSlotOutOfRange {
+                fabric: 0,
+                slot: 7
+            })
+        );
+    }
+
+    #[test]
+    fn oversized_inventory_is_rejected_by_the_resource_budget() {
+        // Four `prime` cores (161237 LUTs each) blow the xc7vx690t's
+        // 433200-LUT budget long before the interface is counted.
+        let cfg = SystemConfig::paper(vec![
+            spec_by_name("prime").unwrap();
+            4
+        ]);
+        match System::try_new(cfg).err() {
+            Some(TopologyError::ResourceBudget { fabric: 0, luts, .. }) => {
+                assert!(luts > crate::fpga::hwa::DEVICE_LUTS);
+            }
+            other => panic!("expected ResourceBudget, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn manual_reconfig_requires_a_declared_slot_and_budget() {
+        let mut cfg = SystemConfig::paper(vec![
+            spec_by_name("izigzag").unwrap();
+            2
+        ]);
+        cfg.fabrics[0].reconfigurable = vec![1];
+        let mut sys = System::new(cfg);
+        let gsm = spec_by_name("gsm").unwrap();
+        assert!(
+            sys.request_reconfig(0, 0, gsm.clone(), 1000).is_err(),
+            "slot 0 was not declared reconfigurable"
+        );
+        sys.request_reconfig(0, 1, gsm.clone(), 1000).unwrap();
+        assert!(
+            sys.request_reconfig(0, 1, gsm, 1000).is_err(),
+            "second request on a slot already mid-swap must fail"
+        );
+        assert!(sys.slot_reconfiguring(0, 1));
+        assert!(!sys.slot_reconfiguring(0, 0));
+        sys.run_for(5 * crate::clock::PS_PER_US);
+        assert!(!sys.slot_reconfiguring(0, 1), "swap landed");
+        assert_eq!(sys.config.fabrics[0].specs[1].name, "gsm");
+        let (swaps, drain, _blocked) = sys.reconfig_stats();
+        assert_eq!(swaps, 1);
+        assert!(drain > 0);
+    }
+
+    #[test]
     fn too_small_mesh_is_rejected_with_a_clear_error() {
         let cfg = SystemConfig::single(
             MeshConfig {
@@ -1484,6 +1804,7 @@ mod tests {
                     chained: 0,
                 },
                 slo_ps: 20 * crate::clock::PS_PER_US,
+                phases: None,
             })
             .collect()
     }

@@ -10,6 +10,9 @@
 //! adds the per-tenant `stats.tenants` array for serving workloads;
 //! the array is omitted for every other workload, so schema-2 stats
 //! objects are unchanged byte-for-byte (a pinned test below proves it).
+//! Schema 4 adds the `reconfig_*` swap counters — emitted only when the
+//! run actually reconfigured — and the per-tenant `downgraded_chained`
+//! column, so frozen-inventory artifacts keep their schema-3 bytes.
 
 use std::path::Path;
 
@@ -55,6 +58,23 @@ impl RunStats {
             ("fpga_us", Json::Num(self.fpga_us)),
             ("transmission_us", Json::Num(self.transmission_us)),
         ];
+        // Swap counters are additive and only emitted when the run
+        // actually reconfigured: frozen-inventory artifacts (every
+        // static-policy run) keep their exact schema-3 bytes.
+        if self.reconfig_swaps != 0
+            || self.reconfig_drain_cycles != 0
+            || self.reconfig_blocked_cycles != 0
+        {
+            fields.push(("reconfig_swaps", Json::from(self.reconfig_swaps)));
+            fields.push((
+                "reconfig_drain_cycles",
+                Json::from(self.reconfig_drain_cycles),
+            ));
+            fields.push((
+                "reconfig_blocked_cycles",
+                Json::from(self.reconfig_blocked_cycles),
+            ));
+        }
         // Per-fabric rows are additive and only emitted for multi-fabric
         // scenarios: single-fabric artifacts stay byte-identical to the
         // pre-floorplan schema-2 layout.
@@ -99,6 +119,10 @@ impl RunStats {
                         ("shed_bucket", Json::from(r.shed_bucket)),
                         ("shed_watermark", Json::from(r.shed_watermark)),
                         ("dropped", Json::from(r.dropped)),
+                        (
+                            "downgraded_chained",
+                            Json::from(r.downgraded_chained),
+                        ),
                         ("slo_violations", Json::from(r.slo_violations)),
                         ("count", Json::from(r.count)),
                         ("mean_us", Json::Num(r.mean_us)),
@@ -135,7 +159,7 @@ impl SweepReport {
             })
             .collect();
         Json::obj(vec![
-            ("schema", Json::from(3u64)),
+            ("schema", Json::from(4u64)),
             ("name", Json::from(self.name.as_str())),
             ("scenarios", Json::Arr(scenarios)),
         ])
@@ -181,6 +205,9 @@ impl SweepReport {
             "processor_us",
             "fpga_us",
             "transmission_us",
+            "reconfig_swaps",
+            "reconfig_drain_cycles",
+            "reconfig_blocked_cycles",
         ];
         let mut out = String::new();
         out.push_str("scenario");
@@ -227,6 +254,9 @@ impl SweepReport {
                 fmt_num(t.processor_us),
                 fmt_num(t.fpga_us),
                 fmt_num(t.transmission_us),
+                t.reconfig_swaps.to_string(),
+                t.reconfig_drain_cycles.to_string(),
+                t.reconfig_blocked_cycles.to_string(),
             ];
             for n in nums {
                 out.push(',');
@@ -317,6 +347,9 @@ mod tests {
             processor_us: 0.0,
             fpga_us: 0.0,
             transmission_us: 0.0,
+            reconfig_swaps: 0,
+            reconfig_drain_cycles: 0,
+            reconfig_blocked_cycles: 0,
             per_fabric: vec![FabricStatsRow {
                 fabric: 0,
                 node: 8,
@@ -338,7 +371,7 @@ mod tests {
     fn json_is_parseable_and_self_describing() {
         let r = dummy_report();
         let v = Json::parse(&r.render_json()).unwrap();
-        assert_eq!(v.get("schema").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(v.get("schema").and_then(Json::as_f64), Some(4.0));
         let sc = &v.get("scenarios").and_then(Json::as_arr).unwrap()[0];
         assert_eq!(
             sc.get("spec")
@@ -443,6 +476,7 @@ mod tests {
                     shed_watermark: 0,
                     dropped: 0,
                     slo_violations: 5,
+                    downgraded_chained: 1,
                 },
                 &[1.0, 2.0, 4.0],
             ),
@@ -466,10 +500,42 @@ mod tests {
             Some(5.0)
         );
         assert_eq!(rows[0].get("shed_bucket").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(
+            rows[0].get("downgraded_chained").and_then(Json::as_f64),
+            Some(1.0)
+        );
         assert_eq!(rows[0].get("p999_us").and_then(Json::as_f64), Some(4.0));
         // The empty row stays NaN-free.
         assert_eq!(rows[1].get("count").and_then(Json::as_f64), Some(0.0));
         assert_eq!(rows[1].get("p99_us").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn reconfig_counters_are_emitted_only_when_the_run_reconfigured() {
+        // Frozen inventory (all counters zero): no reconfig keys — the
+        // pinned-bytes test above is the byte-exact form of this claim.
+        let frozen = dummy_report();
+        assert!(!frozen.render_json().contains("reconfig_swaps"));
+        // A run that swapped: the additive counters appear.
+        let mut swapped = dummy_report();
+        swapped.scenarios[0].stats.reconfig_swaps = 2;
+        swapped.scenarios[0].stats.reconfig_drain_cycles = 17;
+        swapped.scenarios[0].stats.reconfig_blocked_cycles = 4_000;
+        let parsed = Json::parse(&swapped.render_json()).unwrap();
+        let scenarios = parsed.get("scenarios").and_then(Json::as_arr).unwrap();
+        let stats = scenarios[0].get("stats").expect("stats present");
+        assert_eq!(
+            stats.get("reconfig_swaps").and_then(Json::as_f64),
+            Some(2.0)
+        );
+        assert_eq!(
+            stats.get("reconfig_drain_cycles").and_then(Json::as_f64),
+            Some(17.0)
+        );
+        assert_eq!(
+            stats.get("reconfig_blocked_cycles").and_then(Json::as_f64),
+            Some(4000.0)
+        );
     }
 
     #[test]

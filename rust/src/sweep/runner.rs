@@ -21,7 +21,7 @@ use crate::cmp::apps::jpeg_chain_block_program;
 use crate::util::stats::{mean, percentile};
 use crate::workload::jpeg::BlockImage;
 use crate::workload::serving::{
-    ArrivalProcess, JobMix, TenantSpec, DEFAULT_WATERMARK,
+    ArrivalProcess, JobMix, PhasePref, TenantSpec, DEFAULT_WATERMARK,
 };
 
 use super::spec::{
@@ -83,6 +83,7 @@ pub struct TenantCounters {
     pub shed_watermark: u64,
     pub dropped: u64,
     pub slo_violations: u64,
+    pub downgraded_chained: u64,
 }
 
 /// Per-tenant slice of a serving run (one row per tenant stream;
@@ -101,6 +102,9 @@ pub struct TenantStatsRow {
     pub shed_watermark: u64,
     /// Admitted jobs dropped at the hard pending-queue cap.
     pub dropped: u64,
+    /// Chained jobs rewritten to direct because the scenario configured
+    /// no chain groups (previously a silent downgrade).
+    pub downgraded_chained: u64,
     pub slo_violations: u64,
     pub count: u64,
     pub mean_us: f64,
@@ -144,6 +148,7 @@ impl TenantStatsRow {
             shed_bucket: c.shed_bucket,
             shed_watermark: c.shed_watermark,
             dropped: c.dropped,
+            downgraded_chained: c.downgraded_chained,
             slo_violations: c.slo_violations,
             count,
             mean_us,
@@ -188,6 +193,13 @@ pub struct RunStats {
     pub processor_us: f64,
     pub fpga_us: f64,
     pub transmission_us: f64,
+    /// Accelerator swaps the reconfiguration controllers completed
+    /// (0 — and omitted from the JSON — unless the run reconfigured).
+    pub reconfig_swaps: u64,
+    /// Interface cycles spent draining in-flight work before swaps.
+    pub reconfig_drain_cycles: u64,
+    /// Interface cycles slots spent busy-programming new bitstreams.
+    pub reconfig_blocked_cycles: u64,
     /// One row per FPGA interface tile. Singleton for single-fabric
     /// scenarios (and omitted from their JSON to keep legacy artifacts
     /// byte-identical).
@@ -338,6 +350,13 @@ pub fn run_scenario_with_idle_skip(
 ) -> Result<RunStats, String> {
     let mut rt = AccelRuntime::new(spec.system_config()?);
     rt.system_mut().set_idle_skip(idle_skip);
+    // Static installs no engine, so frozen-inventory runs stay
+    // bit-identical to pre-reconfig builds.
+    rt.system_mut().set_reconfig(
+        spec.reconfig_policy,
+        spec.reconfig_epoch_us,
+        spec.reconfig_latency,
+    );
     match &spec.workload {
         WorkloadSpec::OpenLoop { rate_per_us } => {
             run_open_loop(spec, &mut rt, *rate_per_us)
@@ -401,7 +420,9 @@ pub fn serving_tenant_specs(
             },
             priority: 3 - (t % 4) as u8,
             mix: match mix {
-                ServingMix::Direct => JobMix::DIRECT_ONLY,
+                ServingMix::Direct | ServingMix::Phased => {
+                    JobMix::DIRECT_ONLY
+                }
                 ServingMix::Mixed => match t % 3 {
                     0 => JobMix::DIRECT_ONLY,
                     1 => JobMix {
@@ -415,6 +436,16 @@ pub fn serving_tenant_specs(
                         chained: 1,
                     },
                 },
+            },
+            // The phase-change mix: every tenant wants gsm until 30 µs,
+            // then dfmul — the shift an adaptive inventory follows.
+            phases: match mix {
+                ServingMix::Phased => Some(PhasePref {
+                    switch_ps: 30 * PS_PER_US,
+                    before: "gsm",
+                    after: "dfmul",
+                }),
+                _ => None,
             },
             slo_ps: (slo_us * PS_PER_US as f64) as u64,
         })
@@ -433,6 +464,7 @@ fn run_serving(
     let done0 = rt.serving_completions();
     let (busy0, cyc0) = rt.system().iface_busy();
     let pf0 = rt.system().per_fabric_stats();
+    let (rs0, rd0, rb0) = rt.system().reconfig_stats();
     // Per-tenant warmup snapshot, in flattened source/tenant order
     // (deterministic: tenant -> source assignment is fixed by the spec).
     let warm: Vec<(TenantCounters, usize)> = rt
@@ -451,6 +483,7 @@ fn run_serving(
                     shed_watermark: t.shed_watermark,
                     dropped: t.dropped,
                     slo_violations: t.slo_violations,
+                    downgraded_chained: t.downgraded_chained,
                 },
                 t.latencies_ps.len(),
             )
@@ -487,6 +520,8 @@ fn run_serving(
                 shed_watermark: t.shed_watermark - w.shed_watermark,
                 dropped: t.dropped - w.dropped,
                 slo_violations: t.slo_violations - w.slo_violations,
+                downgraded_chained: t.downgraded_chained
+                    - w.downgraded_chained,
             },
             &window_lat,
         ));
@@ -494,6 +529,7 @@ fn run_serving(
     // Report order is tenant-id order, not proc order.
     rows.sort_by_key(|r| r.tenant);
     let (esk_noc, esk_iface, esk_hwa) = sys.edges_skipped_breakdown();
+    let (rs1, rd1, rb1) = sys.reconfig_stats();
     Ok(RunStats {
         total_us: window,
         tasks_executed: sys.tasks_executed(),
@@ -515,6 +551,9 @@ fn run_serving(
         processor_us: 0.0,
         fpga_us: 0.0,
         transmission_us: 0.0,
+        reconfig_swaps: rs1 - rs0,
+        reconfig_drain_cycles: rd1 - rd0,
+        reconfig_blocked_cycles: rb1 - rb0,
         per_fabric: fabric_rows_delta(&sys.per_fabric_stats(), &pf0, window),
         tenants: rows,
     })
@@ -612,6 +651,9 @@ fn run_open_loop(
         processor_us: 0.0,
         fpga_us: 0.0,
         transmission_us: 0.0,
+        reconfig_swaps: sys.reconfig_stats().0,
+        reconfig_drain_cycles: sys.reconfig_stats().1,
+        reconfig_blocked_cycles: sys.reconfig_stats().2,
         per_fabric: fabric_rows_delta(
             &sys.per_fabric_stats(),
             &pf0,
@@ -634,6 +676,8 @@ fn closed_loop_stats(rt: &AccelRuntime, total_us: f64) -> RunStats {
         .collect();
     let denom = total_us.max(f64::MIN_POSITIVE);
     let (esk_noc, esk_iface, esk_hwa) = sys.edges_skipped_breakdown();
+    let (reconfig_swaps, reconfig_drain_cycles, reconfig_blocked_cycles) =
+        sys.reconfig_stats();
     let per_fabric = sys
         .per_fabric_stats()
         .iter()
@@ -672,6 +716,9 @@ fn closed_loop_stats(rt: &AccelRuntime, total_us: f64) -> RunStats {
         processor_us: 0.0,
         fpga_us: 0.0,
         transmission_us: 0.0,
+        reconfig_swaps,
+        reconfig_drain_cycles,
+        reconfig_blocked_cycles,
         per_fabric,
         tenants: Vec::new(),
     }
@@ -913,6 +960,7 @@ mod tests {
             shed_watermark: 1,
             dropped: 0,
             slo_violations: 3,
+            downgraded_chained: 2,
         };
         let samples: Vec<f64> = (1..=10).map(|v| v as f64).collect();
         let row = TenantStatsRow::from_window(2, 3, c, &samples);
@@ -920,6 +968,7 @@ mod tests {
         assert_eq!(row.priority, 3);
         assert_eq!(row.arrivals, 12);
         assert_eq!(row.shed_bucket, 1);
+        assert_eq!(row.downgraded_chained, 2);
         assert_eq!(row.slo_violations, 3);
         assert_eq!(row.count, 10);
         assert_eq!(row.mean_us, 5.5);
@@ -979,6 +1028,21 @@ mod tests {
         assert!(specs[2].mix.chained > 0);
         assert_eq!(specs[3].mix, JobMix::DIRECT_ONLY, "profile cycle repeats");
         assert_eq!(specs[0].slo_ps, 20 * PS_PER_US);
+        assert!(specs.iter().all(|t| t.phases.is_none()));
+
+        let phased = serving_tenant_specs(
+            4.0,
+            2,
+            ArrivalKind::Poisson,
+            20.0,
+            ServingMix::Phased,
+        );
+        for t in &phased {
+            assert_eq!(t.mix, JobMix::DIRECT_ONLY);
+            let p = t.phases.expect("phased tenants carry a preference");
+            assert_eq!(p.switch_ps, 30 * PS_PER_US);
+            assert_eq!((p.before, p.after), ("gsm", "dfmul"));
+        }
     }
 
     #[test]

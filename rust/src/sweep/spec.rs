@@ -33,6 +33,7 @@ use std::path::Path;
 use crate::cmp::apps::{app_specs, gsm_app, jpeg_app, App};
 use crate::fpga::hwa::{spec_by_name, table3, HwaSpec};
 use crate::noc::mesh::MeshConfig;
+use crate::reconfig::{LatencyModel, ProvisionPolicy};
 use crate::sim::floorplan::{Floorplan, MmuAssign};
 use crate::sim::system::{FabricKind, FabricSpec, NetKind, SystemConfig};
 use crate::util::config_text::ConfigText;
@@ -197,6 +198,10 @@ pub enum ServingMix {
     /// tenant index (chained jobs need `system.chain = true` to stay
     /// chained; otherwise they downgrade to direct at admission).
     Mixed,
+    /// Direct jobs with a hard phase change: every tenant wants `gsm`
+    /// for the first 30 simulated µs, then `dfmul` — the demand shift a
+    /// reconfigurable inventory can follow and a static one cannot.
+    Phased,
 }
 
 impl ServingMix {
@@ -204,7 +209,10 @@ impl ServingMix {
         match text {
             "direct" => Ok(ServingMix::Direct),
             "mixed" => Ok(ServingMix::Mixed),
-            other => Err(format!("workload.mix: {other:?} (direct|mixed)")),
+            "phased" => Ok(ServingMix::Phased),
+            other => Err(format!(
+                "workload.mix: {other:?} (direct|mixed|phased)"
+            )),
         }
     }
 
@@ -212,6 +220,7 @@ impl ServingMix {
         match self {
             ServingMix::Direct => "direct",
             ServingMix::Mixed => "mixed",
+            ServingMix::Phased => "phased",
         }
     }
 }
@@ -291,6 +300,15 @@ pub struct ScenarioSpec {
     pub window_us: u64,
     /// Closed-loop runs failing to drain by this simulated time error out.
     pub deadline_us: u64,
+    /// Dynamic-reconfiguration policy. `Static` (the default) freezes
+    /// the inventory and keeps every run bit-identical to pre-reconfig
+    /// builds; anything else marks every slot reconfigurable and runs
+    /// the provisioner each epoch.
+    pub reconfig_policy: ProvisionPolicy,
+    /// Provisioner decision period (simulated µs).
+    pub reconfig_epoch_us: f64,
+    /// Bitstream-programming latency model for swaps.
+    pub reconfig_latency: LatencyModel,
 }
 
 impl ScenarioSpec {
@@ -316,7 +334,18 @@ impl ScenarioSpec {
             warmup_us: 5,
             window_us: 40,
             deadline_us: 100_000,
+            reconfig_policy: ProvisionPolicy::Static,
+            reconfig_epoch_us: 5.0,
+            reconfig_latency: LatencyModel::default(),
         }
+    }
+
+    /// Enable demand-driven reconfiguration under `policy` (epoch and
+    /// latency model keep their defaults; set the fields directly for
+    /// full control).
+    pub fn reconfig(mut self, policy: ProvisionPolicy) -> Self {
+        self.reconfig_policy = policy;
+        self
     }
 
     pub fn net(mut self, net: NetKind) -> Self {
@@ -447,6 +476,14 @@ impl ScenarioSpec {
             } else {
                 Vec::new()
             };
+            // A non-static policy puts every slot in a PR region; the
+            // static default declares none, freezing the inventory.
+            let reconfigurable =
+                if self.reconfig_policy == ProvisionPolicy::Static {
+                    Vec::new()
+                } else {
+                    (0..specs.len()).collect()
+                };
             fabrics.push(FabricSpec {
                 kind: self.fabric,
                 n_tbs: self.n_tbs,
@@ -455,6 +492,7 @@ impl ScenarioSpec {
                 iface_mhz: self.iface_mhz,
                 specs,
                 chain_groups,
+                reconfigurable,
             });
         }
         let cfg = SystemConfig {
@@ -544,6 +582,20 @@ impl ScenarioSpec {
         put("workload.warmup_us", self.warmup_us.to_string());
         put("workload.window_us", self.window_us.to_string());
         put("workload.deadline_us", self.deadline_us.to_string());
+        // Reconfig keys are emitted only when non-default, so legacy
+        // specs keep their exact pre-reconfig map.
+        if self.reconfig_policy != ProvisionPolicy::Static {
+            put(
+                "reconfig.policy",
+                self.reconfig_policy.name().to_string(),
+            );
+        }
+        if self.reconfig_epoch_us != 5.0 {
+            put("reconfig.epoch_us", format!("{}", self.reconfig_epoch_us));
+        }
+        if self.reconfig_latency != LatencyModel::default() {
+            put("reconfig.latency_model", self.reconfig_latency.name());
+        }
         m
     }
 
@@ -731,6 +783,21 @@ impl ScenarioSpec {
                 ));
             }
         }
+        if let Some(v) = map.get("reconfig.policy") {
+            spec.reconfig_policy = ProvisionPolicy::parse(v)?;
+        }
+        spec.reconfig_epoch_us = get_parse(map, "reconfig.epoch_us")?
+            .unwrap_or(spec.reconfig_epoch_us);
+        if !spec.reconfig_epoch_us.is_finite() || spec.reconfig_epoch_us <= 0.0
+        {
+            return Err(format!(
+                "reconfig.epoch_us must be > 0, got {}",
+                spec.reconfig_epoch_us
+            ));
+        }
+        if let Some(v) = map.get("reconfig.latency_model") {
+            spec.reconfig_latency = LatencyModel::parse(v)?;
+        }
         spec.seed = get_parse(map, "workload.seed")?.unwrap_or(spec.seed);
         spec.warmup_us =
             get_parse(map, "workload.warmup_us")?.unwrap_or(spec.warmup_us);
@@ -797,6 +864,9 @@ const KNOWN_KEYS: &[&str] = &[
     "workload.warmup_us",
     "workload.window_us",
     "workload.deadline_us",
+    "reconfig.policy",
+    "reconfig.epoch_us",
+    "reconfig.latency_model",
 ];
 
 /// A scenario template whose values may be lists: the cartesian product
@@ -1144,6 +1214,60 @@ mod tests {
             "[workload]\nkind = serving\nslo_us = 0\n"
         )
         .is_err());
+        assert!(SweepSpec::parse_toml("[reconfig]\npolicy = magic\n").is_err());
+        assert!(SweepSpec::parse_toml("[reconfig]\nepoch_us = 0\n").is_err());
+        assert!(
+            SweepSpec::parse_toml("[reconfig]\nlatency_model = warp\n")
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn reconfig_keys_round_trip_and_stay_off_legacy_maps() {
+        // Byte-compat: a pre-reconfig spec's map must not change.
+        let legacy = ScenarioSpec::new("legacy").hwas("izigzag*4");
+        assert!(legacy
+            .to_map()
+            .iter()
+            .all(|(k, _)| !k.starts_with("reconfig.")));
+        assert!(
+            legacy.system_config().unwrap().fabrics[0]
+                .reconfigurable
+                .is_empty(),
+            "static policy declares no PR regions"
+        );
+
+        let mut spec = ScenarioSpec::new("rc")
+            .hwas("gsm*4")
+            .reconfig(ProvisionPolicy::QueueDepth)
+            .workload(WorkloadSpec::Serving {
+                rate_per_us: 2.0,
+                tenants: 4,
+                arrival: ArrivalKind::Poisson,
+                admission: true,
+                slo_us: 20.0,
+                mix: ServingMix::Phased,
+            });
+        spec.reconfig_epoch_us = 2.0;
+        spec.reconfig_latency = LatencyModel::Fixed { us: 8.0 };
+        let map: BTreeMap<String, String> =
+            spec.to_map().into_iter().collect();
+        assert_eq!(
+            map.get("reconfig.policy").map(String::as_str),
+            Some("queue_depth")
+        );
+        assert_eq!(
+            map.get("workload.mix").map(String::as_str),
+            Some("phased")
+        );
+        let back = ScenarioSpec::from_map("rc", &map).unwrap();
+        assert_eq!(spec, back);
+        let cfg = back.system_config().unwrap();
+        assert_eq!(
+            cfg.fabrics[0].reconfigurable,
+            vec![0, 1, 2, 3],
+            "adaptive policies mark every slot reconfigurable"
+        );
     }
 
     #[test]

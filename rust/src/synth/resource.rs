@@ -77,6 +77,34 @@ pub fn interface_cost(
     total
 }
 
+/// Full device cost of one fabric: the interface (PR/PS strategies plus
+/// per-channel buffers) plus every declared accelerator core. This is
+/// what the topology budget check and the `accnoc topology` utilization
+/// print account against [`DEVICE_LUTS`]/[`DEVICE_BRAMS`].
+pub fn inventory_cost(
+    pr_group: usize,
+    ps_group: usize,
+    specs: &[crate::fpga::hwa::HwaSpec],
+    with_chaining: bool,
+) -> Resources {
+    let n = specs.len();
+    let mut total = interface_cost(
+        PrStrategy::distributed(pr_group),
+        PsStrategy::hierarchical(ps_group.min(n.max(1))),
+        n,
+        with_chaining,
+    );
+    for s in specs {
+        total = total.add(&s.resources);
+    }
+    total
+}
+
+/// Does `r` exceed the Virtex-7 xc7vx690t LUT or BRAM budget?
+pub fn exceeds_device(r: &Resources) -> bool {
+    r.lut > DEVICE_LUTS || r.bram > DEVICE_BRAMS
+}
+
 pub fn lut_pct(r: &Resources) -> f64 {
     100.0 * r.lut as f64 / DEVICE_LUTS as f64
 }

@@ -1,0 +1,182 @@
+//! Dynamic partial reconfiguration integration tests (ISSUE 8
+//! acceptance): the drain/quiesce contract never drops in-flight work,
+//! `ProvisionPolicy::Static` is bit-identical to a build with no
+//! reconfiguration keys at all (legacy artifacts stay frozen), and the
+//! adaptive `queue_depth` policy beats a frozen wrong inventory under a
+//! phase-changing serving mix.
+
+use accnoc::accel::{AccelRuntime, Job};
+use accnoc::clock::PS_PER_US;
+use accnoc::fpga::hwa::spec_by_name;
+use accnoc::reconfig::{LatencyModel, ProvisionPolicy};
+use accnoc::runtime::NativeCompute;
+use accnoc::sim::system::SystemConfig;
+use accnoc::sweep::run_scenario;
+use accnoc::sweep::SweepSpec;
+
+/// Drain/quiesce contract, pinned end to end through the driver API:
+/// requests accepted before the swap was requested all complete with
+/// correct payload shapes — the controller drains them (or carries them
+/// over in the request buffer) rather than dropping or reordering —
+/// and the counters account one swap with non-zero drain and
+/// programming cycles.
+#[test]
+fn in_flight_work_survives_a_swap_without_loss() {
+    let dfmul = spec_by_name("dfmul").unwrap();
+    let gsm = spec_by_name("gsm").unwrap();
+    let mut cfg = SystemConfig::paper(vec![gsm.clone(), gsm, dfmul.clone()]);
+    cfg.set_mesh(2, 2);
+    cfg.fabrics[0].reconfigurable = vec![2];
+    let mut rt = AccelRuntime::new(cfg);
+    rt.set_compute(Box::new(NativeCompute::default()));
+
+    // Two requests race for the single dfmul slot: one executes while
+    // the other queues behind it, so the swap request lands with the
+    // channel genuinely busy.
+    let h = rt.accel(2).expect("slot 2 configured");
+    let a = rt
+        .submit(0, Job::on(h).direct(vec![3; h.in_words()]))
+        .unwrap();
+    let b = rt
+        .submit(1, Job::on(h).direct(vec![5; h.in_words()]))
+        .unwrap();
+
+    // Same-shape swap (a fresh dfmul bitstream) keeps any request the
+    // RB carries over shape-compatible with the successor core.
+    let latency_ps = LatencyModel::Fixed { us: 6.0 }.latency_ps(&dfmul);
+    rt.system_mut()
+        .request_reconfig(0, 2, dfmul, latency_ps)
+        .expect("slot 2 is declared reconfigurable");
+
+    // Both pre-fence requests complete; nothing is dropped.
+    let done_a = rt.wait(a, 10_000 * PS_PER_US).unwrap();
+    let done_b = rt.wait(b, 10_000 * PS_PER_US).unwrap();
+    assert!(done_a.total_ps() > 0);
+    assert!(done_b.total_ps() > 0);
+
+    // Let the programming window elapse, then the slot serves again.
+    rt.run_for(10 * PS_PER_US);
+    let h2 = rt.accel(2).expect("slot repopulated after the swap");
+    let c = rt
+        .submit(0, Job::on(h2).direct(vec![9; h2.in_words()]))
+        .unwrap();
+    rt.wait(c, 10_000 * PS_PER_US).unwrap();
+
+    let (swaps, drain, blocked) = rt.system().reconfig_stats();
+    assert_eq!(swaps, 1, "exactly one swap landed");
+    assert!(drain > 0, "the busy channel must cost drain cycles");
+    assert!(blocked > 0, "programming must cost blocked cycles");
+}
+
+const PHASED_BASE: &str = "\
+name = reconfig_eq\n\
+[system]\n\
+hwas = gsm+gsm+dfmul+dfmul\n\
+[workload]\n\
+kind = serving\n\
+rate_per_us = 2\n\
+tenants = 2\n\
+mix = phased\n\
+slo_us = 20\n\
+warmup_us = 1\n\
+window_us = 12\n\
+seed = 41\n";
+
+/// Equivalence pin: a spec that never mentions reconfiguration and the
+/// same spec with an explicit `policy = static` block produce
+/// bit-identical statistics AND byte-identical rendered stats JSON —
+/// `Static` installs no provisioning engine and declares no
+/// reconfigurable slots, so frozen-inventory artifacts cannot move.
+#[test]
+fn static_policy_is_bit_identical_to_no_reconfig_at_all() {
+    let bare = SweepSpec::parse_toml(PHASED_BASE).unwrap();
+    let explicit = SweepSpec::parse_toml(&format!(
+        "{PHASED_BASE}[reconfig]\n\
+         policy = static\n\
+         epoch_us = 2\n\
+         latency_model = fixed:8\n"
+    ))
+    .unwrap();
+    let bare = bare.expand().unwrap();
+    let explicit = explicit.expand().unwrap();
+    assert_eq!(bare.len(), 1);
+    assert_eq!(explicit.len(), 1);
+    assert_eq!(
+        explicit[0].reconfig_policy,
+        ProvisionPolicy::Static,
+        "explicit spec parsed the static policy"
+    );
+
+    let s_bare = run_scenario(&bare[0]).unwrap();
+    let s_explicit = run_scenario(&explicit[0]).unwrap();
+    assert_eq!(s_bare, s_explicit, "Static must not perturb physics");
+    assert_eq!(
+        s_bare.to_json().render(),
+        s_explicit.to_json().render(),
+        "rendered stats bytes must be identical"
+    );
+    assert_eq!(s_bare.reconfig_swaps, 0);
+    assert!(
+        !s_bare.to_json().render().contains("reconfig_swaps"),
+        "a run that never reconfigured must omit the counters"
+    );
+}
+
+/// The headline experiment in miniature: a phase-changing serving mix
+/// (gsm for 30 us, then dfmul) against an inventory that is right for
+/// the first phase only. The frozen `static` policy collapses after the
+/// switch; `queue_depth` reshapes the fabric and keeps completing.
+#[test]
+fn queue_depth_beats_a_wrong_static_inventory_under_a_phase_change() {
+    let sweep = SweepSpec::parse_toml(
+        "name = reconfig_smoke\n\
+         [system]\n\
+         hwas = gsm*4\n\
+         [workload]\n\
+         kind = serving\n\
+         rate_per_us = 2\n\
+         tenants = 2\n\
+         mix = phased\n\
+         slo_us = 20\n\
+         warmup_us = 1\n\
+         window_us = 79\n\
+         seed = 7\n\
+         [reconfig]\n\
+         policy = static,queue_depth\n\
+         epoch_us = 2\n\
+         latency_model = fixed:8\n",
+    )
+    .unwrap();
+    let grid = sweep.expand().unwrap();
+    assert_eq!(grid.len(), 2, "one scenario per policy");
+    let frozen = grid
+        .iter()
+        .find(|s| s.reconfig_policy == ProvisionPolicy::Static)
+        .unwrap();
+    let adaptive = grid
+        .iter()
+        .find(|s| s.reconfig_policy == ProvisionPolicy::QueueDepth)
+        .unwrap();
+
+    let s_frozen = run_scenario(frozen).unwrap();
+    let s_adaptive = run_scenario(adaptive).unwrap();
+
+    assert_eq!(s_frozen.reconfig_swaps, 0, "static never swaps");
+    assert!(
+        s_adaptive.reconfig_swaps > 0,
+        "queue_depth must reshape the inventory after the phase switch"
+    );
+    let completed = |s: &accnoc::sweep::RunStats| -> u64 {
+        s.tenants.iter().map(|t| t.completed).sum()
+    };
+    assert!(
+        completed(&s_adaptive) > completed(&s_frozen),
+        "adaptive must out-complete the wrong frozen inventory \
+         ({} vs {})",
+        completed(&s_adaptive),
+        completed(&s_frozen)
+    );
+    // Determinism holds with the provisioning engine active.
+    let again = run_scenario(adaptive).unwrap();
+    assert_eq!(s_adaptive, again, "reconfiguring runs must be seeded");
+}

@@ -35,6 +35,7 @@ fn overload_system(admission: bool) -> System {
         arrival: ArrivalProcess::Poisson,
         priority: 3,
         mix: JobMix::DIRECT_ONLY,
+        phases: None,
         slo_ps: SLO_US * PS_PER_US,
     }];
     for t in 1..4u16 {
@@ -47,6 +48,7 @@ fn overload_system(admission: bool) -> System {
             },
             priority: 0,
             mix: JobMix::DIRECT_ONLY,
+            phases: None,
             slo_ps: SLO_US * PS_PER_US,
         });
     }
