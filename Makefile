@@ -30,6 +30,7 @@ sweep:
 	cargo run --release -- sweep configs/fig_multi_fpga.toml
 	cargo run --release -- sweep configs/fig_serving.toml
 	cargo run --release -- sweep configs/fig_reconfig.toml
+	cargo run --release -- sweep configs/fig_faults.toml
 
 # Resolve every shipped config's tile map without simulating.
 topology:
@@ -42,10 +43,12 @@ docs:
 	cargo test --doc
 
 # CLI smoke: the three prototypes + the driver-API, multi-FPGA,
-# multi-tenant serving and dynamic-reconfiguration demos
-# (examples/driver_api.rs, examples/multi_fpga.rs and
-# examples/reconfig.rs run the same scenarios).
+# multi-tenant serving, dynamic-reconfiguration and fault-recovery
+# demos (examples/driver_api.rs, examples/multi_fpga.rs,
+# examples/reconfig.rs and examples/fault_recovery.rs run the same
+# scenarios).
 selftest:
 	cargo run --release -- selftest
 	cargo run --release --example multi_fpga
 	cargo run --release --example reconfig
+	cargo run --release --example fault_recovery

@@ -1,0 +1,22 @@
+//! Fault-injection and recovery tour: a two-fabric system with `dfadd`
+//! on both, fabric 0's slot deterministically dead (what a landed
+//! configuration upset does). One job rides the full recovery ladder —
+//! channel-watchdog kills, driver-watchdog timeouts, bounded retries,
+//! failover to the equivalent accelerator on fabric 1 — and a second
+//! job under the no-recovery policy surfaces the typed
+//! `AccelError::PermanentFailure` instead.
+//!
+//! The same scenario runs inside `accnoc selftest`, so this example and
+//! the CLI smoke stay in lockstep (see `accel::fault_recovery_demo`).
+//!
+//!     cargo run --release --example fault_recovery
+
+fn main() {
+    match accnoc::accel::fault_recovery_demo() {
+        Ok(report) => print!("{report}"),
+        Err(e) => {
+            eprintln!("fault_recovery: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -48,7 +48,8 @@ pub use job::Job;
 pub use program::{Phase, Program};
 pub use receipt::{Completion, Receipt, StageBreakdown};
 pub use runtime::{
-    driver_api_demo, multi_fpga_demo, reconfig_demo, AccelRuntime, Session,
+    driver_api_demo, fault_recovery_demo, multi_fpga_demo, reconfig_demo,
+    AccelRuntime, Session,
 };
 
 use crate::fpga::hwa::HwaSpec;
@@ -86,6 +87,63 @@ pub enum AccelError {
     /// (draining or programming) and the new one has not landed yet.
     /// Re-discover the handle once the swap completes.
     SlotReconfiguring { fabric: u8, hwa_id: u8 },
+    /// The job kept timing out after the recovery policy's whole budget
+    /// (bounded retries, then failover where the policy allows it) was
+    /// spent — the terminal fault-recovery outcome. `receipt` is the
+    /// last attempt's receipt.
+    PermanentFailure { receipt: Receipt },
+}
+
+/// Stable machine-readable classification of [`AccelError`] — the enum
+/// callers should branch on instead of matching `Display` text or
+/// individual variants whose payloads may grow. Every variant of
+/// [`AccelError`] (present and future) maps to exactly one kind, and an
+/// existing variant's kind never changes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccelErrorKind {
+    /// The chain shape is invalid (depth, duplicate hops, cross-fabric
+    /// hops, group membership/ambiguity/position).
+    InvalidChain,
+    /// A named accelerator, fabric or core does not exist.
+    UnknownTarget,
+    /// A field is out of its wire range (e.g. priority).
+    InvalidArgument,
+    /// The job did not complete in time (possibly recoverable: retry,
+    /// or wait longer).
+    Timeout,
+    /// The target slot is mid-reconfiguration; re-resolve and re-submit.
+    Reconfiguring,
+    /// The fault-recovery budget is exhausted; the work is lost.
+    PermanentFailure,
+}
+
+impl AccelError {
+    /// This error's stable [`AccelErrorKind`].
+    pub fn kind(&self) -> AccelErrorKind {
+        match self {
+            AccelError::ChainTooDeep { .. }
+            | AccelError::DuplicateHop { .. }
+            | AccelError::CrossFabricChain { .. }
+            | AccelError::NotChainable { .. }
+            | AccelError::AmbiguousChainGroup { .. }
+            | AccelError::ChainIndexOverflow { .. } => {
+                AccelErrorKind::InvalidChain
+            }
+            AccelError::UnknownAccelerator { .. }
+            | AccelError::UnknownFabric { .. }
+            | AccelError::UnknownCore { .. } => AccelErrorKind::UnknownTarget,
+            AccelError::PriorityOutOfRange { .. } => {
+                AccelErrorKind::InvalidArgument
+            }
+            AccelError::Timeout { .. } => AccelErrorKind::Timeout,
+            AccelError::SlotReconfiguring { .. } => {
+                AccelErrorKind::Reconfiguring
+            }
+            AccelError::PermanentFailure { .. } => {
+                AccelErrorKind::PermanentFailure
+            }
+        }
+    }
 }
 
 impl std::fmt::Display for AccelError {
@@ -152,6 +210,15 @@ impl std::fmt::Display for AccelError {
                      reconfigured; re-resolve the handle after the swap"
                 )
             }
+            AccelError::PermanentFailure { receipt } => {
+                write!(
+                    f,
+                    "job {}/{} permanently failed: the recovery policy's \
+                     retry/failover budget is exhausted",
+                    receipt.core(),
+                    receipt.seq()
+                )
+            }
         }
     }
 }
@@ -213,6 +280,75 @@ impl AccelHandle {
     /// Result words one task produces.
     pub fn out_words(&self) -> usize {
         self.out_words
+    }
+}
+
+#[cfg(test)]
+mod kind_tests {
+    use super::*;
+
+    #[test]
+    fn every_error_maps_to_a_stable_kind() {
+        let r = Receipt::new(0, 0);
+        let cases: Vec<(AccelError, AccelErrorKind)> = vec![
+            (
+                AccelError::ChainTooDeep { hops: 5 },
+                AccelErrorKind::InvalidChain,
+            ),
+            (
+                AccelError::DuplicateHop { hwa_id: 1 },
+                AccelErrorKind::InvalidChain,
+            ),
+            (
+                AccelError::CrossFabricChain { first: 0, hop: 1 },
+                AccelErrorKind::InvalidChain,
+            ),
+            (
+                AccelError::NotChainable { hwa_id: 2 },
+                AccelErrorKind::InvalidChain,
+            ),
+            (
+                AccelError::AmbiguousChainGroup { hwa_id: 2 },
+                AccelErrorKind::InvalidChain,
+            ),
+            (
+                AccelError::ChainIndexOverflow { hwa_id: 4 },
+                AccelErrorKind::InvalidChain,
+            ),
+            (
+                AccelError::UnknownAccelerator { hwa_id: 9 },
+                AccelErrorKind::UnknownTarget,
+            ),
+            (
+                AccelError::UnknownFabric { fabric: 3 },
+                AccelErrorKind::UnknownTarget,
+            ),
+            (
+                AccelError::UnknownCore { core: 8 },
+                AccelErrorKind::UnknownTarget,
+            ),
+            (
+                AccelError::PriorityOutOfRange { priority: 4 },
+                AccelErrorKind::InvalidArgument,
+            ),
+            (
+                AccelError::Timeout { receipt: r },
+                AccelErrorKind::Timeout,
+            ),
+            (
+                AccelError::SlotReconfiguring { fabric: 0, hwa_id: 0 },
+                AccelErrorKind::Reconfiguring,
+            ),
+            (
+                AccelError::PermanentFailure { receipt: r },
+                AccelErrorKind::PermanentFailure,
+            ),
+        ];
+        for (err, kind) in cases {
+            assert_eq!(err.kind(), kind, "{err}");
+            // Every variant also renders without panicking.
+            assert!(!err.to_string().is_empty());
+        }
     }
 }
 

@@ -3,6 +3,7 @@
 
 use crate::clock::{Ps, PS_PER_US};
 use crate::cmp::core::Segment;
+use crate::fault::{FaultConfig, FaultStats, RecoveryPolicy};
 use crate::fpga::hwa::HwaCompute;
 use crate::sim::floorplan::TopologyError;
 use crate::sim::system::{System, SystemConfig};
@@ -11,6 +12,10 @@ use super::{
     AccelError, AccelHandle, Chain, CompileCtx, Completion, FabricCtx, Job,
     Program, Receipt,
 };
+
+/// Driver-side re-submissions per target before the policy moves on
+/// (mirrors the serving sources' retry budget).
+const DRIVER_MAX_RETRIES: u32 = 2;
 
 /// The accelerator driver: owns a [`System`] and is the one place work is
 /// submitted to it. Discovery hands out [`AccelHandle`]s, jobs are
@@ -50,6 +55,10 @@ pub struct AccelRuntime {
     /// floorplan is immutable after construction, so this is computed
     /// once instead of per job compilation.
     fabric_nodes: Vec<u8>,
+    /// Counters of the driver-side recovery watchdog
+    /// ([`AccelRuntime::submit_reliable`]); all zero unless that
+    /// surface is used.
+    driver_faults: FaultStats,
 }
 
 impl AccelRuntime {
@@ -86,7 +95,20 @@ impl AccelRuntime {
             sys,
             submitted,
             fabric_nodes,
+            driver_faults: FaultStats::default(),
         }
+    }
+
+    /// Arm fault injection and recovery on the underlying system (see
+    /// [`System::set_faults`]). `FaultSpec::None` disarms everything.
+    pub fn set_faults(&mut self, cfg: FaultConfig) {
+        self.sys.set_faults(cfg);
+    }
+
+    /// Counters of the driver-side recovery watchdog; the system-side
+    /// injection/recovery counters are [`System::fault_stats`].
+    pub fn driver_fault_stats(&self) -> FaultStats {
+        self.driver_faults
     }
 
     /// The underlying system (statistics, fabric, clock).
@@ -272,6 +294,84 @@ impl AccelRuntime {
             self.sys.step();
         }
         self.poll(receipt).ok_or(AccelError::Timeout { receipt })
+    }
+
+    /// An accelerator running the same benchmark as `handle` on a
+    /// *different* slot — the failover target. Another fabric is
+    /// preferred (a hung slot or dead region takes its whole channel
+    /// with it; a different fabric shares no hardware with it), falling
+    /// back to a sibling channel on the same fabric.
+    pub fn equivalent_accel(&self, handle: AccelHandle) -> Option<AccelHandle> {
+        let fabrics = &self.sys.config.fabrics;
+        let name = fabrics
+            .get(handle.fabric() as usize)?
+            .specs
+            .get(handle.id() as usize)?
+            .name;
+        let same_bench = |h: &AccelHandle| {
+            (h.fabric(), h.id()) != (handle.fabric(), handle.id())
+                && fabrics[h.fabric() as usize].specs[h.id() as usize].name
+                    == name
+        };
+        let all = self.accels();
+        all.iter()
+            .copied()
+            .find(|h| same_bench(h) && h.fabric() != handle.fabric())
+            .or_else(|| all.iter().copied().find(same_bench))
+    }
+
+    /// Submit under the driver-side recovery watchdog: run until the
+    /// receipt resolves or `timeout_ps` of simulated time passes. A
+    /// stuck receipt is abandoned (freeing the core), then — per
+    /// `policy` — re-submitted with exponential backoff up to
+    /// [`DRIVER_MAX_RETRIES`] times, failed over once to an
+    /// [`AccelRuntime::equivalent_accel`], and finally surfaced as the
+    /// typed [`AccelError::PermanentFailure`]. `make_job` rebuilds the
+    /// job for whichever handle the current attempt targets.
+    pub fn submit_reliable(
+        &mut self,
+        core: usize,
+        handle: AccelHandle,
+        make_job: impl Fn(AccelHandle) -> Job,
+        policy: RecoveryPolicy,
+        timeout_ps: Ps,
+    ) -> Result<Completion, AccelError> {
+        let timeout = timeout_ps.max(1);
+        let mut target = handle;
+        let mut failed_over = false;
+        let mut attempt = 0u32;
+        loop {
+            let receipt = self.submit(core, make_job(target))?;
+            let deadline = self.now() + (timeout << attempt.min(6));
+            match self.wait(receipt, deadline) {
+                Ok(done) => return Ok(done),
+                Err(AccelError::Timeout { .. }) => {
+                    // The watchdog fires: the receipt is stuck. Abandon
+                    // it so the core can issue the next attempt (its
+                    // tombstone record keeps receipt numbering intact).
+                    self.driver_faults.detected += 1;
+                    let now = self.sys.now();
+                    self.sys.procs[core].abort_invocation(now);
+                    if policy.retries() && attempt < DRIVER_MAX_RETRIES {
+                        attempt += 1;
+                        self.driver_faults.retried += 1;
+                        continue;
+                    }
+                    if policy.fails_over() && !failed_over {
+                        if let Some(alt) = self.equivalent_accel(target) {
+                            target = alt;
+                            failed_over = true;
+                            attempt = 0;
+                            self.driver_faults.failed_over += 1;
+                            continue;
+                        }
+                    }
+                    self.driver_faults.permanently_failed += 1;
+                    return Err(AccelError::PermanentFailure { receipt });
+                }
+                Err(other) => return Err(other),
+            }
+        }
     }
 
     /// Every completed invocation, core by core in submission order —
@@ -639,6 +739,106 @@ pub fn reconfig_demo() -> Result<String, AccelError> {
     Ok(out)
 }
 
+/// Build a two-fabric system with `dfadd` on both, arm fault recovery,
+/// deterministically kill fabric 0's slot (as a configuration upset
+/// would), and drive one job through the full recovery ladder: the
+/// channel watchdog reaps the hung tasks, the driver watchdog times the
+/// receipt out, bounded retries fail, and failover to fabric 1's
+/// equivalent accelerator completes the job. A second job under
+/// `RecoveryPolicy::None` shows the terminal typed error instead.
+/// Shared by `examples/fault_recovery.rs` and the `accnoc selftest`
+/// verb.
+pub fn fault_recovery_demo() -> Result<String, AccelError> {
+    use std::fmt::Write as _;
+
+    use crate::fault::{FaultConfig, FaultSpec, RecoveryPolicy};
+    use crate::fpga::hwa::spec_by_name;
+    use crate::runtime::NativeCompute;
+    use crate::sim::floorplan::Floorplan;
+    use crate::sim::system::FabricSpec;
+
+    use super::AccelErrorKind;
+
+    let plan = Floorplan::parse("F0 P P / P M P / P P F1")
+        .expect("demo plan is valid");
+    let spec = spec_by_name("dfadd").unwrap();
+    let cfg = SystemConfig::floorplanned(
+        plan,
+        vec![
+            FabricSpec::paper(vec![spec.clone()]),
+            FabricSpec::paper(vec![spec]),
+        ],
+    );
+    let mut rt = AccelRuntime::new(cfg);
+    rt.set_compute_on(0, Box::new(NativeCompute::default()));
+    rt.set_compute_on(1, Box::new(NativeCompute::default()));
+
+    // Zero random rates: the channel watchdogs are armed but every
+    // draw passes, so the only fault is the one staged below.
+    let timeout = 5 * PS_PER_US;
+    rt.set_faults(FaultConfig {
+        spec: FaultSpec::Hwa(0.0),
+        recovery: RecoveryPolicy::RetryFailover,
+        timeout_ps: timeout,
+        scrub_ps: 1_000 * PS_PER_US,
+        seed: 1,
+    });
+    // Stage the fault: fabric 0's slot comes up dead (what a landed
+    // configuration upset does) — every task sent there hangs.
+    rt.system_mut().fabric_at_mut(0).channels[0]
+        .fault
+        .as_deref_mut()
+        .expect("fault injection armed")
+        .dead = true;
+
+    let mut out = String::new();
+    let victim = rt.accel_on(0, 0).expect("dfadd on fabric 0");
+    let _ = writeln!(
+        out,
+        "fault_recovery: dfadd on fabrics 0 and 1; fabric 0's slot is dead"
+    );
+
+    let done = rt.submit_reliable(
+        0,
+        victim,
+        |h| Job::on(h).direct(vec![7; h.in_words()]),
+        RecoveryPolicy::RetryFailover,
+        timeout,
+    )?;
+    let d = rt.driver_fault_stats();
+    let _ = writeln!(
+        out,
+        "  retry_failover: completed in {:.3} us after {} timeouts, \
+         {} retries, {} failover",
+        done.total_ps() as f64 / PS_PER_US as f64,
+        d.detected,
+        d.retried,
+        d.failed_over
+    );
+
+    // The same dead slot under a no-recovery policy: the watchdog still
+    // detects the loss, but the outcome is the typed permanent failure.
+    let err = rt
+        .submit_reliable(
+            1,
+            victim,
+            |h| Job::on(h).direct(vec![3; h.in_words()]),
+            RecoveryPolicy::None,
+            timeout,
+        )
+        .expect_err("a dead slot with no recovery cannot complete");
+    assert_eq!(err.kind(), AccelErrorKind::PermanentFailure);
+    let _ = writeln!(out, "  none: typed failure surfaced: {err}");
+
+    let sys_stats = rt.system().fault_stats();
+    let _ = writeln!(
+        out,
+        "  channel watchdog kills (system side): {}",
+        sys_stats.detected
+    );
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -767,6 +967,62 @@ mod tests {
             "{report}"
         );
         assert!(report.contains("swaps 1"), "{report}");
+    }
+
+    #[test]
+    fn fault_recovery_demo_runs_clean() {
+        let report = fault_recovery_demo().expect("demo completes");
+        assert!(report.contains("1 failover"), "{report}");
+        assert!(
+            report.contains("typed failure surfaced"),
+            "{report}"
+        );
+    }
+
+    #[test]
+    fn submit_reliable_is_a_plain_submit_when_nothing_faults() {
+        let mut rt = runtime(1);
+        let h = rt.accel(0).unwrap();
+        let done = rt
+            .submit_reliable(
+                0,
+                h,
+                |h| Job::on(h).direct(vec![1; h.in_words()]),
+                crate::fault::RecoveryPolicy::RetryFailover,
+                50_000 * PS_PER_US,
+            )
+            .expect("healthy system completes first try");
+        assert!(done.total_ps() > 0);
+        assert!(!rt.driver_fault_stats().any(), "no watchdog activity");
+    }
+
+    #[test]
+    fn equivalent_accel_prefers_another_fabric() {
+        use crate::sim::floorplan::Floorplan;
+        use crate::sim::system::FabricSpec;
+
+        let plan = Floorplan::parse("F0 P P / P M P / P P F1").unwrap();
+        let spec = spec_by_name("dfadd").unwrap();
+        let rt = AccelRuntime::new(SystemConfig::floorplanned(
+            plan,
+            vec![
+                FabricSpec::paper(vec![spec.clone(), spec.clone()]),
+                FabricSpec::paper(vec![spec]),
+            ],
+        ));
+        // Sibling on the same fabric exists (0,1) but the other fabric
+        // wins; from fabric 1, fabric 0's first dfadd is chosen.
+        let alt = rt.equivalent_accel(rt.accel_on(0, 0).unwrap()).unwrap();
+        assert_eq!((alt.fabric(), alt.id()), (1, 0));
+        let back = rt.equivalent_accel(rt.accel_on(1, 0).unwrap()).unwrap();
+        assert_eq!((back.fabric(), back.id()), (0, 0));
+        // A single-instance benchmark has no failover target.
+        let lone = AccelRuntime::new(SystemConfig::paper(vec![
+            spec_by_name("gsm").unwrap(),
+        ]));
+        assert!(lone
+            .equivalent_accel(lone.accel(0).unwrap())
+            .is_none());
     }
 
     #[test]

@@ -451,12 +451,15 @@ impl Processor {
                 if flit.is_head() {
                     let h = flit.head_fields();
                     if h.pkt_type == PacketType::Command {
-                        // Notify (memory scenario): completion.
-                        debug_assert_eq!(
-                            CommandKind::decode(h.payload),
-                            CommandKind::Notify
-                        );
-                        self.finish_invoke(now, 0);
+                        // Notify (memory scenario): completion. Any other
+                        // command here (e.g. a NACK raced by a fault) is
+                        // ignored rather than acted on — the core keeps
+                        // waiting and its caller's timeout recovers.
+                        if CommandKind::decode(h.payload) == CommandKind::Notify {
+                            self.finish_invoke(now, 0);
+                        } else {
+                            self.state = CoreState::AwaitResult { words_left };
+                        }
                         return;
                     }
                     if self.record.t_result_first == 0 {
@@ -489,6 +492,31 @@ impl Processor {
                 self.state = other;
             }
         }
+    }
+
+    /// Abandon the in-flight invocation: the driver-side watchdog gave
+    /// up waiting on it (hung task, lost completion). The partial
+    /// timestamp record is pushed as a tombstone — `t_result_last`
+    /// stays 0 — so receipt sequence numbering is preserved for every
+    /// later submission; any late flit of the abandoned invocation is
+    /// absorbed by `deliver`'s catch-all arm. Only the event-driven
+    /// await states abort (a sending core is still making progress).
+    /// Returns `false` when there was nothing to abort.
+    pub fn abort_invocation(&mut self, now: Ps) -> bool {
+        if self.current.is_none()
+            || !matches!(
+                self.state,
+                CoreState::AwaitGrant | CoreState::AwaitResult { .. }
+            )
+        {
+            return false;
+        }
+        self.current = None;
+        self.records.push(self.record);
+        self.record = InvokeRecord::default();
+        self.result_accum.clear();
+        self.next_segment(now);
+        true
     }
 
     fn finish_invoke(&mut self, now: Ps, recv_cycles: u64) {

@@ -411,6 +411,14 @@ fn selftest() -> Result<(), String> {
     let report = crate::accel::reconfig_demo().map_err(|e| e.to_string())?;
     print!("{report}");
     println!("selftest reconfig: OK");
+    // The fault-recovery demo (same scenario as
+    // examples/fault_recovery.rs): a dead slot's tasks hang, the
+    // watchdogs detect them, retries fail, failover completes the job,
+    // and the no-recovery policy surfaces the typed permanent failure.
+    let report =
+        crate::accel::fault_recovery_demo().map_err(|e| e.to_string())?;
+    print!("{report}");
+    println!("selftest fault-recovery: OK");
     Ok(())
 }
 

@@ -1,0 +1,667 @@
+//! Seed-deterministic fault injection and the recovery-policy types
+//! (ISSUE 9).
+//!
+//! The injection layer is a [`FaultSpec`] (what can go wrong, at what
+//! rate) lowered by [`crate::sim::system::System::set_faults`] into
+//! per-site state machines, each drawing from its **own** [`Pcg32`]
+//! stream so runs stay bit-identical per seed and fault classes never
+//! perturb each other's draws:
+//!
+//! * [`LinkFaults`] — NoC link faults at ejection links (a delivered
+//!   flit is dropped or a data bit flips), hooked into
+//!   `noc::mesh::Mesh::step_impl` phase B.
+//! * [`ChannelFaults`] — HWA faults drawn per task (a task hangs until
+//!   the channel watchdog kills it, or its result packet is corrupted),
+//!   hooked into `fpga::channel::Channel::step_hwa`.
+//! * [`UpsetFaults`] — SEU-style configuration upsets drawn per landed
+//!   reconfiguration swap (the slot comes up dead until the scrubber
+//!   re-programs it), hooked into `sim::system::System::finish_swaps`.
+//!
+//! `FaultSpec::None` installs nothing: no RNG stream is created and no
+//! hook runs, so fault-free artifacts are byte-identical to pre-fault
+//! builds (pinned by `rust/tests/sweep.rs`).
+//!
+//! Recovery (CRC/NACK at the packet receivers, source-side timeout →
+//! retry → failover state machines, the slot scrubber) lives at the
+//! respective sites; this module only defines the shared policy and
+//! counter types. Nothing here panics: every fault path maps to a typed
+//! counter or a typed [`crate::accel::AccelError`] (audited by the grep
+//! test in `rust/tests/faults.rs`).
+
+use crate::clock::Ps;
+use crate::flit::{Flit, FlitKind};
+use crate::util::rng::Pcg32;
+
+/// Pcg32 stream ids. Disjoint from every workload stream in use
+/// (open-loop sources use `id + 1`, serving pick streams `0x50_0000 +
+/// id`, tenant streams `0x5e_0000 + id`).
+const LINK_STREAM: u64 = 0xFA_1001;
+const HWA_STREAM_BASE: u64 = 0xFA_2000;
+const UPSET_STREAM: u64 = 0xFA_3001;
+
+/// What to inject, and how often. Probabilities are per *opportunity*:
+/// per delivered flit for link faults, per executed task for HWA
+/// faults, per landed reconfiguration swap for upsets.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum FaultSpec {
+    /// No injection at all (the default): byte-identical artifacts.
+    #[default]
+    None,
+    /// NoC link faults only (drop and bit-flip, each at rate `p`).
+    Link(f64),
+    /// HWA faults only (hang and corrupt, each at rate `p`).
+    Hwa(f64),
+    /// Reconfiguration upsets only (dead slot at rate `p` per swap).
+    Upset(f64),
+    /// All three classes at rate `p`.
+    Mixed(f64),
+}
+
+impl FaultSpec {
+    /// Parse `"none" | "link:<p>" | "hwa:<p>" | "upset:<p>" |
+    /// "mixed:<p>"` (the `fault.spec` sweep key).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        if s == "none" {
+            return Ok(FaultSpec::None);
+        }
+        let (kind, rate) = s
+            .split_once(':')
+            .ok_or_else(|| format!("bad fault spec {s:?} (want none | link:<p> | hwa:<p> | upset:<p> | mixed:<p>)"))?;
+        let p: f64 = rate
+            .parse()
+            .map_err(|_| format!("bad fault probability {rate:?}"))?;
+        if !(0.0..=1.0).contains(&p) {
+            return Err(format!("fault probability {p} outside [0, 1]"));
+        }
+        match kind {
+            "link" => Ok(FaultSpec::Link(p)),
+            "hwa" => Ok(FaultSpec::Hwa(p)),
+            "upset" => Ok(FaultSpec::Upset(p)),
+            "mixed" => Ok(FaultSpec::Mixed(p)),
+            _ => Err(format!("unknown fault class {kind:?}")),
+        }
+    }
+
+    /// Canonical name, the inverse of [`FaultSpec::parse`].
+    pub fn name(&self) -> String {
+        match self {
+            FaultSpec::None => "none".to_string(),
+            FaultSpec::Link(p) => format!("link:{p}"),
+            FaultSpec::Hwa(p) => format!("hwa:{p}"),
+            FaultSpec::Upset(p) => format!("upset:{p}"),
+            FaultSpec::Mixed(p) => format!("mixed:{p}"),
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, FaultSpec::None)
+    }
+
+    /// Per-delivered-flit drop probability.
+    pub fn link_drop_p(&self) -> f64 {
+        match self {
+            FaultSpec::Link(p) | FaultSpec::Mixed(p) => *p,
+            _ => 0.0,
+        }
+    }
+
+    /// Per-delivered-flit data-bit-flip probability.
+    pub fn link_flip_p(&self) -> f64 {
+        self.link_drop_p()
+    }
+
+    /// Per-task hang probability.
+    pub fn hwa_hang_p(&self) -> f64 {
+        match self {
+            FaultSpec::Hwa(p) | FaultSpec::Mixed(p) => *p,
+            _ => 0.0,
+        }
+    }
+
+    /// Per-task result-corruption probability.
+    pub fn hwa_corrupt_p(&self) -> f64 {
+        self.hwa_hang_p()
+    }
+
+    /// Per-landed-swap dead-slot probability.
+    pub fn upset_p(&self) -> f64 {
+        match self {
+            FaultSpec::Upset(p) | FaultSpec::Mixed(p) => *p,
+            _ => 0.0,
+        }
+    }
+}
+
+/// What the system does about detected faults (the `fault.recovery`
+/// sweep key). Injection and recovery are orthogonal: `Recovery::None`
+/// under faults shows the damage, `RetryFailover` bounds it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RecoveryPolicy {
+    /// Detect and count only: timed-out work becomes a typed permanent
+    /// failure (nothing wedges, nothing is re-issued).
+    #[default]
+    None,
+    /// Bounded re-submission to the same accelerator with exponential
+    /// backoff, then permanent failure.
+    Retry,
+    /// [`RecoveryPolicy::Retry`], then failover to an equivalent
+    /// accelerator (same spec) on another node before giving up.
+    RetryFailover,
+}
+
+impl RecoveryPolicy {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim() {
+            "none" => Ok(RecoveryPolicy::None),
+            "retry" => Ok(RecoveryPolicy::Retry),
+            "retry_failover" => Ok(RecoveryPolicy::RetryFailover),
+            other => Err(format!(
+                "unknown recovery policy {other:?} (want none | retry | retry_failover)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoveryPolicy::None => "none",
+            RecoveryPolicy::Retry => "retry",
+            RecoveryPolicy::RetryFailover => "retry_failover",
+        }
+    }
+
+    /// Re-issue to the same target after a timeout?
+    pub fn retries(&self) -> bool {
+        !matches!(self, RecoveryPolicy::None)
+    }
+
+    /// Re-issue to an equivalent target after retries are exhausted?
+    pub fn fails_over(&self) -> bool {
+        matches!(self, RecoveryPolicy::RetryFailover)
+    }
+}
+
+/// Aggregated fault counters (the `RunStats.fault_*` fields; additive
+/// JSON only when nonzero so legacy BENCH bytes stay unchanged).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultStats {
+    /// Faults the injection layer actually applied.
+    pub injected: u64,
+    /// Faults a receiver noticed (CRC mismatch, watchdog kill, timeout
+    /// sweep, scrubber detection, stuck-TB reclaim).
+    pub detected: u64,
+    /// Re-submissions to the same target (including NACK retransmits).
+    pub retried: u64,
+    /// Re-submissions to an equivalent target on another node.
+    pub failed_over: u64,
+    /// Work given up on after the policy's budget was exhausted.
+    pub permanently_failed: u64,
+}
+
+impl FaultStats {
+    /// Window delta against an earlier snapshot.
+    pub fn since(&self, earlier: &FaultStats) -> FaultStats {
+        FaultStats {
+            injected: self.injected - earlier.injected,
+            detected: self.detected - earlier.detected,
+            retried: self.retried - earlier.retried,
+            failed_over: self.failed_over - earlier.failed_over,
+            permanently_failed: self.permanently_failed
+                - earlier.permanently_failed,
+        }
+    }
+
+    pub fn any(&self) -> bool {
+        self.injected != 0
+            || self.detected != 0
+            || self.retried != 0
+            || self.failed_over != 0
+            || self.permanently_failed != 0
+    }
+
+    pub fn absorb(&mut self, other: &FaultStats) {
+        self.injected += other.injected;
+        self.detected += other.detected;
+        self.retried += other.retried;
+        self.failed_over += other.failed_over;
+        self.permanently_failed += other.permanently_failed;
+    }
+}
+
+/// The lowered configuration the [`crate::sim::system::System`] holds
+/// and distributes to sources/channels as they are created.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    pub spec: FaultSpec,
+    pub recovery: RecoveryPolicy,
+    /// Source/watchdog deadline: work invisible for this long is
+    /// declared lost (first retry fires here; backoff doubles it).
+    pub timeout_ps: u64,
+    /// Scrubber period: how often dead slots are re-programmed.
+    pub scrub_ps: u64,
+    pub seed: u64,
+}
+
+/// NoC link-fault state, owned by the mesh (installed into
+/// `noc::mesh::Mesh::fault`). Faults apply at a flit's final
+/// delivery onto its ejection link — the congested interface links the
+/// paper models — and only at nodes enabled in `mask` (MMU tiles are
+/// exempt: memory-side payloads carry no end-to-end verifier yet).
+///
+/// Only `Single` command flits and `Body` data flits are droppable, and
+/// only `Body` flits are flippable: wormhole `Head`/`Tail` framing
+/// always survives, so a fault never wedges a packet receiver — it
+/// surfaces as a CRC mismatch or a missing completion, both of which
+/// the recovery layer converts into retries or typed failures.
+#[derive(Debug)]
+pub struct LinkFaults {
+    drop_p: f64,
+    flip_p: f64,
+    rng: Pcg32,
+    /// Per-node: do ejection-link faults apply here?
+    mask: Vec<bool>,
+    pub drops: u64,
+    pub flips: u64,
+}
+
+/// Outcome of one delivery draw.
+enum LinkFault {
+    Pass,
+    Drop,
+    Flip,
+}
+
+impl LinkFaults {
+    pub fn new(seed: u64, drop_p: f64, flip_p: f64, mask: Vec<bool>) -> Self {
+        Self {
+            drop_p,
+            flip_p,
+            rng: Pcg32::new(seed, LINK_STREAM),
+            mask,
+            drops: 0,
+            flips: 0,
+        }
+    }
+
+    /// Apply link faults to a flit about to be delivered at `node`.
+    /// Returns `false` when the flit was dropped (the caller must not
+    /// deliver it, but must still free its buffer credit). Draws are
+    /// taken only for fault-eligible kinds at masked nodes, so the
+    /// stream is a pure function of the delivered-flit sequence.
+    pub fn on_deliver(&mut self, node: usize, flit: &mut Flit) -> bool {
+        if !self.mask.get(node).copied().unwrap_or(false) {
+            return true;
+        }
+        match self.draw(flit.kind()) {
+            LinkFault::Pass => true,
+            LinkFault::Drop => {
+                self.drops += 1;
+                false
+            }
+            LinkFault::Flip => {
+                // Flip one of the 128 data-payload bits; the packet's
+                // CRC16 (stamped at build time) no longer matches.
+                let bit = self.rng.below(128);
+                let word = (bit / 64) as usize;
+                flit.raw.0[word] ^= 1u64 << (bit % 64);
+                self.flips += 1;
+                true
+            }
+        }
+    }
+
+    fn draw(&mut self, kind: FlitKind) -> LinkFault {
+        match kind {
+            FlitKind::Head | FlitKind::Tail => LinkFault::Pass,
+            FlitKind::Single => {
+                if self.rng.chance(self.drop_p) {
+                    LinkFault::Drop
+                } else {
+                    LinkFault::Pass
+                }
+            }
+            FlitKind::Body => {
+                let r = self.rng.f64();
+                if r < self.drop_p {
+                    LinkFault::Drop
+                } else if r < self.drop_p + self.flip_p {
+                    LinkFault::Flip
+                } else {
+                    LinkFault::Pass
+                }
+            }
+        }
+    }
+}
+
+/// What an HWA fault draw decided for one task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HwaFault {
+    /// The task never finishes; the channel watchdog kills it at
+    /// `exec_start + watchdog_ps`.
+    Hang,
+    /// The task finishes but a bit of its result packet flips after the
+    /// CRC was stamped, so the requester's check fails.
+    Corrupt,
+}
+
+/// Per-channel HWA fault state (each channel gets its own stream,
+/// `HWA_STREAM_BASE + global channel index`, so slot swaps and
+/// per-channel event order never perturb other channels' draws).
+#[derive(Debug)]
+pub struct ChannelFaults {
+    hang_p: f64,
+    corrupt_p: f64,
+    rng: Pcg32,
+    /// Watchdog deadline for hung tasks and stuck (granted-but-never-
+    /// filled) task buffers, in ps.
+    pub watchdog_ps: u64,
+    /// Set while a configuration upset holds the slot dead (every task
+    /// hangs, no RNG draw consumed); cleared when the scrubber's
+    /// re-program lands. The upset itself was counted by
+    /// [`UpsetFaults`], so dead-slot hangs don't inflate `hangs`.
+    pub dead: bool,
+    pub hangs: u64,
+    pub corrupts: u64,
+    /// Hung tasks the watchdog killed (each is also a detection).
+    pub watchdog_kills: u64,
+    /// Payload fills rejected on a CRC mismatch (NACKed to the sender).
+    pub crc_rejects: u64,
+    /// Granted/filling TBs reclaimed after their payload never arrived.
+    pub tb_reclaims: u64,
+}
+
+impl ChannelFaults {
+    pub fn new(
+        seed: u64,
+        global_channel: u64,
+        hang_p: f64,
+        corrupt_p: f64,
+        watchdog_ps: u64,
+    ) -> Self {
+        Self {
+            hang_p,
+            corrupt_p,
+            rng: Pcg32::new(seed, HWA_STREAM_BASE + global_channel),
+            watchdog_ps,
+            dead: false,
+            hangs: 0,
+            corrupts: 0,
+            watchdog_kills: 0,
+            crc_rejects: 0,
+            tb_reclaims: 0,
+        }
+    }
+
+    /// One draw per task entering execution. A dead (upset) slot hangs
+    /// every task without consuming a draw, so scrubbing restores the
+    /// exact fault sequence a never-upset run would have seen.
+    pub fn draw_task(&mut self) -> Option<HwaFault> {
+        if self.dead {
+            return Some(HwaFault::Hang);
+        }
+        let r = self.rng.f64();
+        if r < self.hang_p {
+            self.hangs += 1;
+            Some(HwaFault::Hang)
+        } else if r < self.hang_p + self.corrupt_p {
+            self.corrupts += 1;
+            Some(HwaFault::Corrupt)
+        } else {
+            None
+        }
+    }
+
+    /// Which data bit of a corrupted result packet flips.
+    pub fn corrupt_bit(&mut self) -> u32 {
+        self.rng.below(128)
+    }
+
+    /// Counters in [`FaultStats`] form (injected = hangs + corrupts).
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            injected: self.hangs + self.corrupts,
+            detected: self.watchdog_kills + self.crc_rejects + self.tb_reclaims,
+            ..FaultStats::default()
+        }
+    }
+}
+
+/// A reconfigured slot that came up dead and awaits scrubbing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeadSlot {
+    pub fabric: usize,
+    pub channel: usize,
+}
+
+/// Configuration-upset state, owned by the system: upsets are drawn per
+/// landed reconfiguration swap; a periodic scrubber re-programs dead
+/// slots through the ordinary reconfig controller FSM.
+#[derive(Debug)]
+pub struct UpsetFaults {
+    p: f64,
+    rng: Pcg32,
+    pub scrub_ps: u64,
+    /// Next scrub tick (folded into the idle-skip horizon like the
+    /// reconfig engine's epoch clock).
+    pub next_scrub: Ps,
+    pub dead: Vec<DeadSlot>,
+    pub upsets: u64,
+    /// Dead slots the scrubber found and re-programmed.
+    pub scrubs: u64,
+}
+
+impl UpsetFaults {
+    pub fn new(seed: u64, p: f64, scrub_ps: u64) -> Self {
+        Self {
+            p,
+            rng: Pcg32::new(seed, UPSET_STREAM),
+            scrub_ps,
+            next_scrub: scrub_ps,
+            dead: Vec::new(),
+            upsets: 0,
+            scrubs: 0,
+        }
+    }
+
+    /// Draw on a landed swap: does this slot come up dead?
+    pub fn draw_on_land(&mut self, fabric: usize, channel: usize) -> bool {
+        if self.rng.chance(self.p) {
+            self.upsets += 1;
+            self.dead.push(DeadSlot { fabric, channel });
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn is_dead(&self, fabric: usize, channel: usize) -> bool {
+        self.dead.contains(&DeadSlot { fabric, channel })
+    }
+
+    /// The scrubber repaired (or at least re-queued) this slot.
+    pub fn mark_repaired(&mut self, fabric: usize, channel: usize) {
+        if let Some(i) = self
+            .dead
+            .iter()
+            .position(|d| *d == DeadSlot { fabric, channel })
+        {
+            self.dead.swap_remove(i);
+            self.scrubs += 1;
+        }
+    }
+
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            injected: self.upsets,
+            detected: self.scrubs,
+            ..FaultStats::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flit::{HeadFields, PacketBuilder};
+
+    #[test]
+    fn fault_spec_parse_name_round_trips() {
+        for s in ["none", "link:0.01", "hwa:0.005", "upset:0.1", "mixed:0.002"] {
+            let spec = FaultSpec::parse(s).unwrap();
+            assert_eq!(spec.name(), s);
+            assert_eq!(FaultSpec::parse(&spec.name()).unwrap(), spec);
+        }
+        assert!(FaultSpec::parse("link").is_err());
+        assert!(FaultSpec::parse("link:nan?").is_err());
+        assert!(FaultSpec::parse("link:1.5").is_err());
+        assert!(FaultSpec::parse("gamma:0.1").is_err());
+    }
+
+    #[test]
+    fn none_spec_has_zero_rates_everywhere() {
+        let none = FaultSpec::None;
+        assert!(none.is_none());
+        assert_eq!(none.link_drop_p(), 0.0);
+        assert_eq!(none.link_flip_p(), 0.0);
+        assert_eq!(none.hwa_hang_p(), 0.0);
+        assert_eq!(none.hwa_corrupt_p(), 0.0);
+        assert_eq!(none.upset_p(), 0.0);
+    }
+
+    #[test]
+    fn mixed_spec_arms_every_class() {
+        let m = FaultSpec::Mixed(0.25);
+        assert_eq!(m.link_drop_p(), 0.25);
+        assert_eq!(m.hwa_hang_p(), 0.25);
+        assert_eq!(m.upset_p(), 0.25);
+    }
+
+    #[test]
+    fn recovery_policy_parse_name_round_trips() {
+        for s in ["none", "retry", "retry_failover"] {
+            let p = RecoveryPolicy::parse(s).unwrap();
+            assert_eq!(p.name(), s);
+        }
+        assert!(RecoveryPolicy::parse("panic").is_err());
+        assert!(!RecoveryPolicy::None.retries());
+        assert!(RecoveryPolicy::Retry.retries());
+        assert!(!RecoveryPolicy::Retry.fails_over());
+        assert!(RecoveryPolicy::RetryFailover.fails_over());
+    }
+
+    #[test]
+    fn fault_stats_delta_and_absorb() {
+        let mut a = FaultStats {
+            injected: 10,
+            detected: 7,
+            retried: 5,
+            failed_over: 2,
+            permanently_failed: 1,
+        };
+        let b = FaultStats {
+            injected: 4,
+            detected: 3,
+            retried: 2,
+            failed_over: 1,
+            permanently_failed: 0,
+        };
+        let d = a.since(&b);
+        assert_eq!(d.injected, 6);
+        assert_eq!(d.permanently_failed, 1);
+        assert!(d.any());
+        assert!(!FaultStats::default().any());
+        a.absorb(&b);
+        assert_eq!(a.injected, 14);
+        assert_eq!(a.failed_over, 3);
+    }
+
+    fn body_and_head() -> (Flit, Flit) {
+        let mut b = PacketBuilder::new(1);
+        let p = b.payload(HeadFields::default(), &[1, 2, 3, 4, 5]);
+        (p.flits[1], p.flits[0])
+    }
+
+    #[test]
+    fn link_faults_are_deterministic_per_seed() {
+        let mask = vec![true; 4];
+        let mut a = LinkFaults::new(7, 0.3, 0.3, mask.clone());
+        let mut b = LinkFaults::new(7, 0.3, 0.3, mask);
+        let (body, _) = body_and_head();
+        for node in (0..4).cycle().take(500) {
+            let (mut fa, mut fb) = (body, body);
+            assert_eq!(a.on_deliver(node, &mut fa), b.on_deliver(node, &mut fb));
+            assert_eq!(fa, fb, "flips target the same bit");
+        }
+        assert_eq!(a.drops, b.drops);
+        assert_eq!(a.flips, b.flips);
+        assert!(a.drops > 0 && a.flips > 0, "both classes exercised");
+    }
+
+    #[test]
+    fn link_faults_never_touch_head_or_tail_framing() {
+        let mut lf = LinkFaults::new(3, 1.0, 1.0, vec![true]);
+        let (_, head) = body_and_head();
+        let mut h = head;
+        // Even at p = 1, heads pass untouched (no draw consumed).
+        assert!(lf.on_deliver(0, &mut h));
+        assert_eq!(h, head);
+        assert_eq!(lf.drops + lf.flips, 0);
+        // Unmasked nodes are exempt.
+        let (mut body, _) = body_and_head();
+        assert!(lf.on_deliver(5, &mut body));
+        assert_eq!(lf.drops + lf.flips, 0);
+    }
+
+    #[test]
+    fn channel_faults_partition_hang_and_corrupt() {
+        let mut cf = ChannelFaults::new(11, 0, 0.5, 0.5, 1_000);
+        let mut hangs = 0;
+        let mut corrupts = 0;
+        for _ in 0..200 {
+            match cf.draw_task() {
+                Some(HwaFault::Hang) => hangs += 1,
+                Some(HwaFault::Corrupt) => corrupts += 1,
+                None => {}
+            }
+        }
+        // p = 0.5 + 0.5 covers the unit interval: every task faults.
+        assert_eq!(hangs + corrupts, 200);
+        assert!(hangs > 0 && corrupts > 0);
+        assert_eq!(cf.hangs, hangs);
+        assert_eq!(cf.corrupts, corrupts);
+        assert_eq!(cf.stats().injected, 200);
+        assert!(cf.corrupt_bit() < 128);
+    }
+
+    #[test]
+    fn dead_slot_hangs_every_task_without_consuming_draws() {
+        let mut cf = ChannelFaults::new(1, 0, 0.0, 0.0, 1_000);
+        assert_eq!(cf.draw_task(), None);
+        cf.dead = true;
+        assert_eq!(cf.draw_task(), Some(HwaFault::Hang));
+        assert_eq!(cf.hangs, 0, "the upset was already counted");
+        cf.dead = false;
+        assert_eq!(cf.draw_task(), None);
+    }
+
+    #[test]
+    fn upset_faults_track_dead_slots() {
+        let mut uf = UpsetFaults::new(5, 1.0, 10_000);
+        assert!(uf.draw_on_land(0, 2));
+        assert!(uf.is_dead(0, 2));
+        assert!(!uf.is_dead(0, 1));
+        assert_eq!(uf.upsets, 1);
+        uf.mark_repaired(0, 2);
+        assert!(!uf.is_dead(0, 2));
+        assert_eq!(uf.scrubs, 1);
+        // Repairing a live slot is a no-op, not a panic.
+        uf.mark_repaired(1, 1);
+        assert_eq!(uf.scrubs, 1);
+        let mut never = UpsetFaults::new(5, 0.0, 10_000);
+        for c in 0..50 {
+            assert!(!never.draw_on_land(0, c));
+        }
+        assert!(never.dead.is_empty());
+    }
+}

@@ -314,6 +314,54 @@ pub fn command_payload_origin(payload: u64) -> Option<u8> {
     }
 }
 
+/// End-to-end payload checksum inside head payloads.
+///
+/// Payload packets stamp a CRC16 over their data words into head
+/// payload bits `PAYLOAD_CRC_LO..PAYLOAD_CRC_LO + 16`, with a presence
+/// bit at `PAYLOAD_CRC_LO + 16` (same presence-bit discipline as
+/// [`CMD_ORIGIN_LO`], which occupies the disjoint range 8..16). The
+/// receiver recomputes the CRC over the reassembled words and rejects
+/// the packet on mismatch — the detection edge of the fault-recovery
+/// path. Pre-CRC traffic simply lacks the presence bit and is accepted
+/// unverified.
+pub const PAYLOAD_CRC_LO: u32 = 16;
+
+/// CRC-16/CCITT-FALSE over the little-endian bytes of `words`
+/// (init 0xFFFF, poly 0x1021, no reflection).
+pub fn crc16(words: &[u32]) -> u16 {
+    let mut crc: u16 = 0xFFFF;
+    for w in words {
+        for byte in w.to_le_bytes() {
+            crc ^= (byte as u16) << 8;
+            for _ in 0..8 {
+                crc = if crc & 0x8000 != 0 {
+                    (crc << 1) ^ 0x1021
+                } else {
+                    crc << 1
+                };
+            }
+        }
+    }
+    crc
+}
+
+/// Stamp a payload-packet CRC16 (plus its presence bit) into a head
+/// payload.
+pub fn payload_with_crc(payload: u64, crc: u16) -> u64 {
+    let mask = 0x1_FFFFu64 << PAYLOAD_CRC_LO;
+    (payload & !mask) | ((0x1_0000 | crc as u64) << PAYLOAD_CRC_LO)
+}
+
+/// The stamped CRC16 of a payload-packet head payload, if present.
+pub fn payload_crc(payload: u64) -> Option<u16> {
+    let bits = (payload >> PAYLOAD_CRC_LO) & 0x1_FFFF;
+    if bits & 0x1_0000 != 0 {
+        Some((bits & 0xFFFF) as u16)
+    } else {
+        None
+    }
+}
+
 /// Encode a body or tail flit: routing + kind + 128-bit payload.
 pub fn encode_body(routing: u8, kind: FlitKind, payload: [u64; 2]) -> RawFlit {
     debug_assert!(matches!(kind, FlitKind::Body | FlitKind::Tail));
@@ -409,6 +457,42 @@ mod tests {
         h.payload = command_payload_with_origin(1, 8);
         let back = HeadFields::decode(&h.encode());
         assert_eq!(command_payload_origin(back.payload), Some(8));
+    }
+
+    #[test]
+    fn payload_crc_roundtrips_and_is_absent_by_default() {
+        assert_eq!(payload_crc(0), None);
+        assert_eq!(payload_crc(CMD_LIKE_PAYLOAD), None);
+        let words = [0xDEAD_BEEFu32, 1, 2, 3];
+        let c = crc16(&words);
+        let stamped = payload_with_crc(CMD_LIKE_PAYLOAD, c);
+        assert_eq!(payload_crc(stamped), Some(c));
+        // Coexists with the command subtype and origin fields.
+        assert_eq!(stamped & 0b11, CMD_LIKE_PAYLOAD & 0b11);
+        let with_origin = command_payload_with_origin(stamped, 9);
+        assert_eq!(payload_crc(with_origin), Some(c));
+        assert_eq!(command_payload_origin(with_origin), Some(9));
+        // Still fits the 61-bit head payload.
+        assert!(with_origin < (1 << 61));
+        // Restamping overwrites cleanly.
+        assert_eq!(payload_crc(payload_with_crc(stamped, 0)), Some(0));
+    }
+
+    const CMD_LIKE_PAYLOAD: u64 = 0b10;
+
+    #[test]
+    fn crc16_detects_single_bit_flips() {
+        let words = [7u32, 0x1234_5678, 0xFFFF_FFFF, 0];
+        let good = crc16(&words);
+        for w in 0..words.len() {
+            for bit in [0u32, 13, 31] {
+                let mut bad = words;
+                bad[w] ^= 1 << bit;
+                assert_ne!(crc16(&bad), good, "flip at word {w} bit {bit}");
+            }
+        }
+        // Known stability pin so the polynomial never silently changes.
+        assert_eq!(crc16(&[]), 0xFFFF);
     }
 
     #[test]

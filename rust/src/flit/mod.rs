@@ -7,9 +7,10 @@ pub mod packet;
 
 pub use arena::{ArenaStats, PacketArena, PacketHandle, WordsHandle};
 pub use fields::{
-    command_payload_origin, command_payload_with_origin, Direction, FlitKind,
-    HeadFields, PacketType, RawFlit, BODY_PAYLOAD_BITS, CMD_ORIGIN_LO,
-    FLIT_BITS, HEAD_PAYLOAD_BITS,
+    command_payload_origin, command_payload_with_origin, crc16, payload_crc,
+    payload_with_crc, Direction, FlitKind, HeadFields, PacketType, RawFlit,
+    BODY_PAYLOAD_BITS, CMD_ORIGIN_LO, FLIT_BITS, HEAD_PAYLOAD_BITS,
+    PAYLOAD_CRC_LO,
 };
 pub use packet::{
     payload_packet_flits, Flit, FlitMeta, Packet, PacketBuilder,

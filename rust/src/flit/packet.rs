@@ -8,8 +8,8 @@
 //! * **result**   — head + body* + tail carrying HWA output data
 
 use super::fields::{
-    decode_body_payload, encode_body, FlitKind, HeadFields,
-    PacketType, RawFlit, BODY_PAYLOAD_BITS,
+    crc16, decode_body_payload, encode_body, payload_with_crc, FlitKind,
+    HeadFields, PacketType, RawFlit, BODY_PAYLOAD_BITS,
 };
 
 /// Simulation-side metadata carried next to the 137 wire bits. Never
@@ -186,6 +186,13 @@ impl PacketBuilder {
     ) {
         fields.pkt_type = PacketType::Payload;
         fields.data_size = ((words.len() * 4).min(1023)) as u16;
+        // End-to-end checksum: every payload head carries a CRC16 over
+        // its data words (fields::PAYLOAD_CRC_LO) so receivers can
+        // reject in-flight corruption. Skipped when data_size saturates
+        // (the receiver could no longer recover the exact word count).
+        if words.len() * 4 <= 1023 {
+            fields.payload = payload_with_crc(fields.payload, crc16(words));
+        }
         let n_body = words.len().div_ceil(WORDS_PER_BODY_FLIT).max(1);
         fields.kind = FlitKind::Head;
         let routing = fields.routing;
@@ -335,6 +342,28 @@ mod tests {
         let fa = a.command_flit(fields(1, 1));
         let fb = b.command_flit(fields(1, 1));
         assert_eq!(fa.meta.seq, fb.meta.seq);
+    }
+
+    #[test]
+    fn payload_heads_carry_matching_crc() {
+        use crate::flit::fields::payload_crc;
+        let mut b = PacketBuilder::new(11);
+        for n in [0usize, 1, 13, 255] {
+            let words: Vec<u32> = (0..n as u32).map(|i| i ^ 0x5A5A).collect();
+            let p = b.payload(fields(2, 1), &words);
+            assert_eq!(
+                payload_crc(p.head().payload),
+                Some(crc16(&words)),
+                "n={n}"
+            );
+            // Receiver-side recomputation over the reassembled words.
+            let n_back = p.head().data_size as usize / 4;
+            assert_eq!(crc16(&p.data_words(n_back)), crc16(&words));
+        }
+        // Saturated data_size -> no stamp (word count unrecoverable).
+        let big: Vec<u32> = (0..256).collect();
+        let p = b.payload(fields(2, 1), &big);
+        assert_eq!(payload_crc(p.head().payload), None);
     }
 
     #[test]

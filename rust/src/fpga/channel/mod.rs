@@ -14,9 +14,10 @@ pub mod task_buffer;
 use std::collections::VecDeque;
 
 use crate::clock::{Activity, ClockDomain, Ps};
+use crate::fault::{ChannelFaults, HwaFault};
 use crate::flit::{
-    payload_packet_flits, Direction, FlitKind, HeadFields, Packet,
-    PacketArena, PacketBuilder, PacketHandle, PacketType,
+    crc16, payload_crc, payload_packet_flits, Direction, FlitKind, HeadFields,
+    Packet, PacketArena, PacketBuilder, PacketHandle, PacketType,
 };
 
 use super::hwa::{HwaCompute, HwaSpec};
@@ -70,6 +71,11 @@ enum Hwac {
     Draining { task: Task, done_at: Ps },
     /// PG finished but the CB/POB was full; retrying each HWA cycle.
     Blocked { task: Task },
+    /// Fault injection wedged the datapath (the task "hangs forever");
+    /// the channel watchdog kills it at `kill_at`. The task is never
+    /// executed or completed — its requester recovers through its own
+    /// timeout/retry machinery.
+    Hung { task: Task, kill_at: Ps },
 }
 
 pub struct Channel {
@@ -115,6 +121,10 @@ pub struct Channel {
     /// (requests keep queueing in the RB) while in-flight tasks drain —
     /// the first phase of a slot swap ([`crate::reconfig`]).
     fenced: bool,
+    /// HWA fault injection + this channel's detection counters
+    /// ([`crate::fault`]); `None` (the default) leaves every fault hook
+    /// compiled out of the hot path behind one branch.
+    pub fault: Option<Box<ChannelFaults>>,
 }
 
 impl Channel {
@@ -153,6 +163,7 @@ impl Channel {
             completed: Vec::with_capacity(1024),
             recycled: 0,
             fenced: false,
+            fault: None,
         }
     }
 
@@ -247,6 +258,9 @@ impl Channel {
     /// * `Notify` carries only the memory address (§5, Fig. 5b): the
     ///   requesting processor learns where the MMU landed the result;
     ///   every other field stays at its wire default.
+    /// * `Nack` (CRC reject) echoes the same reservation context as a
+    ///   grant — to the sender it *is* a fresh grant for the kept
+    ///   reservation, so retransmission reuses the ordinary payload path.
     fn push_command(
         &mut self,
         routing: u8,
@@ -264,7 +278,7 @@ impl Channel {
             payload: kind.encode(),
             ..HeadFields::default()
         };
-        if matches!(kind, CommandKind::Grant) {
+        if matches!(kind, CommandKind::Grant | CommandKind::Nack) {
             head.tb_id = tb_id;
             head.chain_depth = template.chain_depth;
             head.chain_index = template.chain_index;
@@ -307,9 +321,83 @@ impl Channel {
         }
         tb.push_words(lanes);
         if is_tail {
-            tb.finish_fill(ready_at);
+            // End-to-end check at the packet receiver: recompute the
+            // CRC16 over the staged words and compare it to the stamp in
+            // the payload head (crate::flit::fields::PAYLOAD_CRC_LO). A
+            // mismatch (in-flight bit flip) discards the fill, keeps the
+            // reservation, and NACKs the sender for a retransmit.
+            // Unstamped heads (pre-CRC traffic) are accepted unverified.
+            let crc_ok = match tb.fill_head().and_then(|h| payload_crc(h.payload)) {
+                Some(stamped) => {
+                    let n = tb
+                        .fill_head()
+                        .map(|h| h.data_size as usize / 4)
+                        .unwrap_or(0);
+                    let words = tb.fill_words();
+                    crc16(&words[..n.min(words.len())]) == stamped
+                }
+                None => true,
+            };
+            if crc_ok {
+                tb.finish_fill(ready_at);
+            } else {
+                let head = tb.fill_head().copied();
+                tb.reset_to_granted();
+                match self.fault.as_deref_mut() {
+                    Some(f) => f.crc_rejects += 1,
+                    None => self.stats.rejected_flits += 1,
+                }
+                if let Some(head) = head {
+                    // NACK back to whoever streams payloads for this
+                    // direction (requester, or the MMU for memory
+                    // fetches) — same routing rule as the grant.
+                    let dest = match head.direction {
+                        Direction::MemToHwa => Some(self.mmu_for(head.src_id)),
+                        _ => self.reply_route.get(head.src_id as usize).copied(),
+                    };
+                    match dest {
+                        Some(d) => {
+                            self.push_command(d, CommandKind::Nack, &head, tb_id)
+                        }
+                        None => self.stats.rejected_flits += 1,
+                    }
+                }
+            }
         }
         true
+    }
+
+    /// Interface-clock watchdog (armed only when fault injection is on):
+    /// reclaim task buffers whose reservation went stale because the
+    /// grant or its payload packet was lost in flight. Without this, a
+    /// lost payload leaks the TB forever and a fully-leaked channel can
+    /// never grant again. A late flit for a reclaimed buffer lands on
+    /// the ordinary rejected-flit path.
+    pub fn step_tb_watchdog(&mut self, now: Ps) {
+        let Some(f) = self.fault.as_deref_mut() else {
+            return;
+        };
+        let mut reclaims = 0;
+        for tb in &mut self.tbs {
+            if matches!(tb.state, TbState::Granted | TbState::Filling)
+                && now.saturating_sub(tb.granted_at()) > f.watchdog_ps
+            {
+                tb.reclaim();
+                reclaims += 1;
+            }
+        }
+        f.tb_reclaims += reclaims;
+    }
+
+    /// Earliest TB-watchdog deadline, for the idle-skip horizon fold
+    /// (skipping past it would delay a reclaim the scheduler owes).
+    pub fn tb_watchdog_wake(&self) -> Option<Ps> {
+        let f = self.fault.as_deref()?;
+        self.tbs
+            .iter()
+            .filter(|tb| matches!(tb.state, TbState::Granted | TbState::Filling))
+            .map(|tb| tb.granted_at() + f.watchdog_ps)
+            .min()
     }
 
     /// CDC visibility horizon for a fill finishing at `now` (2 HWA edges).
@@ -359,6 +447,7 @@ impl Channel {
             Hwac::Fetching { done_at, .. }
             | Hwac::Executing { done_at, .. }
             | Hwac::Draining { done_at, .. } => Activity::NextEventAt(*done_at),
+            Hwac::Hung { kill_at, .. } => Activity::NextEventAt(*kill_at),
             Hwac::Blocked { .. } => Activity::Busy,
         }
     }
@@ -429,10 +518,27 @@ impl Channel {
                         self.tbs[idx].release();
                     }
                     task.t_exec_start = now;
-                    self.hwac = Hwac::Executing {
-                        task,
-                        done_at: now + self.spec.exec_cycles * period,
-                    };
+                    // Fault injection draws once per task entering
+                    // execution: hang (watchdog kills it later) or tag
+                    // the eventual result packet for corruption.
+                    match self.fault.as_deref_mut().and_then(|f| f.draw_task()) {
+                        Some(HwaFault::Hang) => {
+                            let dog = self
+                                .fault
+                                .as_deref()
+                                .map(|f| f.watchdog_ps)
+                                .unwrap_or(0);
+                            self.hwac = Hwac::Hung { task, kill_at: now + dog };
+                        }
+                        fault => {
+                            task.corrupted =
+                                matches!(fault, Some(HwaFault::Corrupt));
+                            self.hwac = Hwac::Executing {
+                                task,
+                                done_at: now + self.spec.exec_cycles * period,
+                            };
+                        }
+                    }
                 } else {
                     self.hwac = Hwac::Fetching { task, tb, done_at };
                 }
@@ -467,6 +573,19 @@ impl Channel {
             Hwac::Blocked { task } => {
                 self.stats.pg_stall_cycles += 1;
                 self.finish_or_block(task, arena);
+            }
+            Hwac::Hung { task, kill_at } => {
+                if now >= kill_at {
+                    // Watchdog kill: reclaim the buffer and drop the
+                    // task (never executed, never completed). Its
+                    // requester's own timeout machinery re-issues it.
+                    arena.free_words(task.words);
+                    if let Some(f) = self.fault.as_deref_mut() {
+                        f.watchdog_kills += 1;
+                    }
+                } else {
+                    self.hwac = Hwac::Hung { task, kill_at };
+                }
             }
         }
     }
@@ -556,7 +675,29 @@ impl Channel {
             start_addr: task.head.start_addr,
             ..HeadFields::default()
         };
-        arena.build_payload(&mut self.builder, head, task.words)
+        let handle = arena.build_payload(&mut self.builder, head, task.words);
+        if task.corrupted {
+            if let Some(f) = self.fault.as_deref_mut() {
+                // Injected result corruption flips a data bit *after*
+                // the CRC16 was stamped from the word buffer, so the
+                // packet is wire-valid but fails the receiver's
+                // end-to-end check. (Memory-direction results reach an
+                // MMU that does not verify — realistic silent
+                // corruption; the serving paths all verify.)
+                // Constrain the flip to CRC-covered data bits — a flip
+                // in the zero-padding lanes would be a fault with no
+                // observable effect.
+                let n_bits = (arena.words(task.words).len() as u32 * 32).max(1);
+                let bit = f.corrupt_bit() % n_bits;
+                let flits = arena.flits_mut(handle);
+                let idx = 1 + (bit / 128) as usize;
+                if idx < flits.len() {
+                    let b = bit % 128;
+                    flits[idx].raw.0[(b / 64) as usize] ^= 1u64 << (b % 64);
+                }
+            }
+        }
+        handle
     }
 
     /// Flits the PS still has to drain from this channel's POB.
@@ -661,6 +802,10 @@ impl Channel {
         std::mem::swap(&mut self.completed, &mut old.completed);
         self.recycled = old.recycled;
         self.hwa_clock = old.hwa_clock.clone();
+        // The successor slot keeps the victim's fault stream and
+        // detection counters — injection follows the physical slot, not
+        // the accelerator occupying it.
+        std::mem::swap(&mut self.fault, &mut old.fault);
         while let Some(e) = old.rb.pop_front() {
             self.rb.push_back(e);
         }
@@ -924,6 +1069,115 @@ mod tests {
         assert!(!ch.payload_data(3, &[1, 2, 3, 4], true, 0));
         assert_eq!(ch.stats.rejected_flits, 2);
         assert!(ch.quiescent(), "rejected traffic leaves no state behind");
+    }
+
+    #[test]
+    fn crc_mismatch_nacks_and_keeps_reservation() {
+        use crate::flit::payload_with_crc;
+        let mut ch = channel("dfadd", 2);
+        ch.push_request(request(1), 0);
+        ch.step_lgc(0);
+        ch.cmd_out.clear(); // drop the grant; we drive the fill directly
+        let words = [10u32, 11, 12, 13];
+        let good = crc16(&words);
+        let bad_head = HeadFields {
+            tb_id: 0,
+            task_head: true,
+            task_tail: true,
+            data_size: 16,
+            payload: payload_with_crc(0, good ^ 1),
+            ..HeadFields::default()
+        };
+        assert!(ch.payload_head(bad_head, 1));
+        assert!(ch.payload_data(0, &words, true, 0));
+        // Rejected: NACK queued, reservation kept, nothing ready.
+        assert_eq!(ch.tbs[0].state, TbState::Granted);
+        let nack = ch.cmd_out.pop_front().expect("nack emitted");
+        assert_eq!(CommandKind::decode(nack.payload), CommandKind::Nack);
+        assert_eq!(nack.tb_id, 0, "nack names the kept reservation");
+        assert_eq!(ch.stats.rejected_flits, 1, "counted (no fault state)");
+        // Retransmit with a matching stamp completes the fill.
+        let good_head = HeadFields {
+            payload: payload_with_crc(0, good),
+            ..bad_head
+        };
+        assert!(ch.payload_head(good_head, 1));
+        assert!(ch.payload_data(0, &words, true, 0));
+        assert_eq!(ch.tbs[0].state, TbState::Ready);
+    }
+
+    #[test]
+    fn hung_task_is_killed_by_watchdog_not_executed() {
+        use crate::fault::ChannelFaults;
+        let mut arena = PacketArena::new();
+        let mut ch = channel("dfadd", 2);
+        let watchdog = 40 * ch.hwa_clock.period_ps;
+        ch.fault = Some(Box::new(ChannelFaults::new(1, 0, 1.0, 0.0, watchdog)));
+        ch.push_request(request(1), 0);
+        ch.step_lgc(0);
+        fill_tb(&mut ch, 0, 4);
+        let cycles = run_hwa(&mut ch, &mut arena, 1000, |c| {
+            c.fault.as_ref().is_some_and(|f| f.watchdog_kills == 1)
+        });
+        assert!(cycles < 1000, "watchdog fired");
+        assert_eq!(ch.stats.tasks_executed, 0, "hung task never executed");
+        assert!(ch.pob.is_empty(), "no result packet");
+        assert!(!ch.busy(), "channel recovered to idle");
+        let f = ch.fault.as_ref().unwrap();
+        assert_eq!(f.hangs, 1);
+        assert_eq!(f.stats().injected, 1);
+        assert_eq!(f.stats().detected, 1);
+    }
+
+    #[test]
+    fn corrupted_result_fails_the_receiver_crc_check() {
+        use crate::fault::ChannelFaults;
+        let mut arena = PacketArena::new();
+        let mut ch = channel("dfadd", 2);
+        ch.fault = Some(Box::new(ChannelFaults::new(2, 0, 0.0, 1.0, 1_000)));
+        ch.push_request(request(1), 0);
+        ch.step_lgc(0);
+        fill_tb(&mut ch, 0, 4);
+        let cycles = run_hwa(&mut ch, &mut arena, 1000, |c| !c.pob.is_empty());
+        assert!(cycles < 1000);
+        let e = ch.pop_result().unwrap();
+        let p = arena.to_packet(e.handle);
+        assert!(p.is_well_formed(), "corruption keeps wire framing intact");
+        let stamped = crate::flit::payload_crc(p.head().payload)
+            .expect("result heads carry a CRC");
+        let n = p.head().data_size as usize / 4;
+        assert_ne!(
+            crc16(&p.data_words(n)),
+            stamped,
+            "receiver-side check detects the flip"
+        );
+        assert_eq!(ch.fault.as_ref().unwrap().corrupts, 1);
+    }
+
+    #[test]
+    fn stale_tb_reservation_reclaimed_by_watchdog() {
+        use crate::fault::ChannelFaults;
+        let mut ch = channel("dfadd", 2);
+        ch.fault = Some(Box::new(ChannelFaults::new(3, 0, 0.0, 0.0, 5_000)));
+        ch.push_request(request(1), 100);
+        ch.step_lgc(100);
+        assert_eq!(ch.tbs[0].state, TbState::Granted);
+        assert_eq!(ch.tb_watchdog_wake(), Some(100 + 5_000));
+        ch.step_tb_watchdog(2_000); // too early
+        assert_eq!(ch.tbs[0].state, TbState::Granted);
+        ch.step_tb_watchdog(10_000);
+        assert_eq!(ch.tbs[0].state, TbState::Free, "reservation reclaimed");
+        assert_eq!(ch.fault.as_ref().unwrap().tb_reclaims, 1);
+        assert_eq!(ch.tb_watchdog_wake(), None);
+        // A late payload head for the reclaimed TB is plain rejection.
+        assert!(!ch.payload_head(
+            HeadFields {
+                tb_id: 0,
+                ..HeadFields::default()
+            },
+            1
+        ));
+        assert_eq!(ch.stats.rejected_flits, 1);
     }
 
     #[test]

@@ -9,6 +9,9 @@ pub enum CommandKind {
     Request,
     Grant,
     Notify,
+    /// Payload rejected (CRC mismatch at the receiver): the sender
+    /// should retransmit into the still-reserved task buffer.
+    Nack,
 }
 
 impl CommandKind {
@@ -17,6 +20,7 @@ impl CommandKind {
             CommandKind::Request => 0,
             CommandKind::Grant => 1,
             CommandKind::Notify => 2,
+            CommandKind::Nack => 3,
         }
     }
 
@@ -24,6 +28,7 @@ impl CommandKind {
         match payload & 0b11 {
             1 => CommandKind::Grant,
             2 => CommandKind::Notify,
+            3 => CommandKind::Nack,
             _ => CommandKind::Request,
         }
     }
@@ -42,6 +47,10 @@ pub struct Task {
     pub flow: u32,
     /// Chain hops completed so far (simulation metadata).
     pub chain_hops: u8,
+    /// Fault injection tagged this task's result for corruption: a data
+    /// bit of the built result packet flips *after* its CRC is stamped,
+    /// so the requester's check fails (see `ChannelFaults`).
+    pub corrupted: bool,
     // -- timestamps (ps), 0 = unset --
     pub t_request: Ps,
     pub t_ready: Ps,
@@ -56,6 +65,7 @@ impl Task {
             words,
             flow,
             chain_hops: 0,
+            corrupted: false,
             t_request: 0,
             t_ready: 0,
             t_exec_start: 0,
@@ -89,7 +99,12 @@ mod tests {
 
     #[test]
     fn command_kind_roundtrip() {
-        for k in [CommandKind::Request, CommandKind::Grant, CommandKind::Notify] {
+        for k in [
+            CommandKind::Request,
+            CommandKind::Grant,
+            CommandKind::Notify,
+            CommandKind::Nack,
+        ] {
             assert_eq!(CommandKind::decode(k.encode()), k);
         }
     }

@@ -105,6 +105,43 @@ impl TaskBuffer {
         task
     }
 
+    /// Head of the payload currently staged (CRC verification peeks at
+    /// the stamped checksum before the fill is committed).
+    pub fn fill_head(&self) -> Option<&HeadFields> {
+        self.head.as_ref()
+    }
+
+    /// Words staged so far (CRC verification input).
+    pub fn fill_words(&self) -> &[u32] {
+        &self.words
+    }
+
+    /// CRC-mismatch recovery: discard the staged payload but keep the
+    /// reservation, so the NACKed sender can retransmit into this same
+    /// buffer without a fresh request/grant round trip.
+    pub fn reset_to_granted(&mut self) {
+        debug_assert_eq!(self.state, TbState::Filling);
+        self.state = TbState::Granted;
+        self.head = None;
+        self.words.clear();
+    }
+
+    /// When this buffer's reservation was made (watchdog age baseline
+    /// for grants whose payload never arrives).
+    pub fn granted_at(&self) -> Ps {
+        self.t_request
+    }
+
+    /// Watchdog reclaim: a reservation (or partial fill) whose payload
+    /// packet was lost in flight goes back to the free pool. A late
+    /// flit for this buffer then hits the ordinary rejected-flit path.
+    pub fn reclaim(&mut self) {
+        debug_assert!(matches!(self.state, TbState::Granted | TbState::Filling));
+        self.state = TbState::Free;
+        self.head = None;
+        self.words.clear();
+    }
+
     /// HWAC finished reading: buffer returns to the free pool.
     pub fn release(&mut self) {
         debug_assert_eq!(self.state, TbState::InUse);
@@ -161,5 +198,40 @@ mod tests {
     fn fill_without_grant_panics() {
         let mut tb = TaskBuffer::new();
         tb.begin_fill(HeadFields::default(), 0);
+    }
+
+    #[test]
+    fn nack_reset_keeps_reservation_for_retransmit() {
+        let mut arena = PacketArena::new();
+        let mut tb = TaskBuffer::new();
+        tb.grant(50);
+        tb.begin_fill(HeadFields::default(), 3);
+        tb.push_words(&[1, 2, 3, 4]);
+        assert_eq!(tb.fill_words(), &[1, 2, 3, 4]);
+        assert!(tb.fill_head().is_some());
+        tb.reset_to_granted();
+        assert_eq!(tb.state, TbState::Granted);
+        assert_eq!(tb.granted_at(), 50);
+        // The retransmitted payload fills the same reservation.
+        tb.begin_fill(HeadFields::default(), 3);
+        tb.push_words(&[5, 6, 7, 8]);
+        tb.finish_fill(60);
+        let task = tb.take(4, 60, &mut arena);
+        assert_eq!(arena.words(task.words), &[5, 6, 7, 8]);
+        assert_eq!(task.t_request, 50, "original request time survives");
+    }
+
+    #[test]
+    fn watchdog_reclaim_frees_stuck_reservation() {
+        let mut tb = TaskBuffer::new();
+        tb.grant(10);
+        tb.reclaim();
+        assert_eq!(tb.state, TbState::Free);
+        tb.grant(20);
+        tb.begin_fill(HeadFields::default(), 1);
+        tb.push_words(&[1]);
+        tb.reclaim();
+        assert_eq!(tb.state, TbState::Free);
+        assert!(tb.fill_words().is_empty());
     }
 }

@@ -257,10 +257,18 @@ impl Fpga {
             || self.channels.iter().any(|c| c.iface_pending())
             || !self.reconfigs.is_empty()
         {
-            Activity::Busy
-        } else {
-            Activity::Idle
+            return Activity::Busy;
         }
+        // Under fault injection, granted-but-never-filled task buffers
+        // schedule a watchdog reclaim; skipping past it would leak the
+        // reservation for the rest of the window.
+        let mut act = Activity::Idle;
+        for c in &self.channels {
+            if let Some(t) = c.tb_watchdog_wake() {
+                act = act.join(Activity::NextEventAt(t));
+            }
+        }
+        act
     }
 
     /// Scheduler probe for one HWA clock domain (`chans` = the channels
@@ -296,9 +304,12 @@ impl Fpga {
         // the in-flight packet (or the one selected by the head flit's
         // hwa_id) advances.
         self.step_pr(now);
-        // Local grant controllers (1/cycle each, §4.2 B.2).
+        // Local grant controllers (1/cycle each, §4.2 B.2), plus the
+        // stuck-reservation watchdog (a no-op unless fault injection
+        // armed the channel).
         for ch in self.channels.iter_mut() {
             ch.step_lgc(now);
+            ch.step_tb_watchdog(now);
         }
         // Packet sender into the router input buffer.
         let router_in = &mut self.router_in;

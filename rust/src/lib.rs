@@ -25,6 +25,7 @@ pub mod baseline;
 pub mod clock;
 pub mod cmp;
 pub mod coordinator;
+pub mod fault;
 pub mod mem;
 pub mod synth;
 pub mod fpga;

@@ -71,10 +71,15 @@ impl Mmu {
             let h = flit.head_fields();
             match h.pkt_type {
                 PacketType::Command => {
-                    debug_assert_eq!(
-                        CommandKind::decode(h.payload),
-                        CommandKind::Grant
-                    );
+                    // Grants start a DMA fetch; a NACK (the channel's
+                    // CRC check rejected our payload) echoes the same
+                    // reservation context and means "send it again", so
+                    // it re-runs the identical DMA job. Anything else
+                    // is a misroute: ignore it rather than fetch.
+                    match CommandKind::decode(h.payload) {
+                        CommandKind::Grant | CommandKind::Nack => {}
+                        _ => return,
+                    }
                     self.stats.grants_decoded += 1;
                     let reply_to = crate::flit::command_payload_origin(
                         h.payload,

@@ -12,6 +12,7 @@
 //! pre-worklist full-scan stepper survives behind `#[cfg(test)]` as the
 //! reference for the equivalence property test.
 
+use crate::fault::LinkFaults;
 use crate::flit::Flit;
 
 use super::router::{Move, Port, Router, DEFAULT_IN_BUF, PORTS};
@@ -113,6 +114,10 @@ pub struct Mesh {
     pub cycles: u64,
     pub flits_injected: u64,
     pub flits_ejected: u64,
+    /// Link fault injection at ejection links ([`crate::fault`]); `None`
+    /// (the default) keeps the hot delivery path one branch away from
+    /// the fault-free behavior.
+    pub fault: Option<Box<LinkFaults>>,
 }
 
 impl Mesh {
@@ -155,6 +160,7 @@ impl Mesh {
             cycles: 0,
             flits_injected: 0,
             flits_ejected: 0,
+            fault: None,
             config,
         }
     }
@@ -308,7 +314,20 @@ impl Mesh {
                     "eject overflow at node {i}: Local-port move escaped \
                      eject-credit backpressure"
                 );
-                self.eject[i].push(m.flit);
+                // Link fault hook (None in fault-free runs): the flit
+                // may be dropped (never delivered) or have a data bit
+                // flipped here, at its final ejection-link traversal.
+                let mut flit = m.flit;
+                if let Some(f) = self.fault.as_deref_mut() {
+                    if !f.on_deliver(i, &mut flit) {
+                        // Dropped: the allocation consumed a Local/eject
+                        // credit that `eject_pop` would normally return;
+                        // return it next cycle or the slot leaks.
+                        self.pending_credits.push((i, Port::Local as usize));
+                        continue;
+                    }
+                }
+                self.eject[i].push(flit);
                 self.eject_total += 1;
             } else {
                 let j = self.neighbor(i, m.out_port);
@@ -473,6 +492,72 @@ mod tests {
         for (i, f) in got.iter().enumerate() {
             assert_eq!(f.meta.seq, i as u32);
         }
+    }
+
+    #[test]
+    fn dropped_flits_return_eject_credits() {
+        // With certain-drop link faults at the destination, every flit
+        // vanishes at its ejection link — but the freed eject credits
+        // must flow back, or the Local output wedges after eject_cap
+        // drops and the mesh deadlocks.
+        let cfg = MeshConfig {
+            eject_cap: 2,
+            ..MeshConfig::default()
+        };
+        let mut mesh = Mesh::new(cfg);
+        mesh.fault = Some(Box::new(LinkFaults::new(
+            1,
+            1.0,
+            0.0,
+            vec![true; 9],
+        )));
+        let mut sent = 0u64;
+        for _ in 0..40 {
+            if mesh.try_inject(0, single(4, 1)) {
+                sent += 1;
+            }
+            mesh.step();
+        }
+        for _ in 0..20 {
+            mesh.step();
+        }
+        assert!(sent > 10, "injection never wedged (credits returned)");
+        assert_eq!(mesh.eject_len(4), 0, "everything dropped");
+        assert_eq!(mesh.fault.as_ref().unwrap().drops, sent);
+        assert!(mesh.idle(), "no flit stuck anywhere");
+    }
+
+    #[test]
+    fn flipped_body_flit_is_still_delivered() {
+        let mut mesh = Mesh::new(MeshConfig::default());
+        mesh.fault = Some(Box::new(LinkFaults::new(
+            2,
+            0.0,
+            1.0,
+            vec![true; 9],
+        )));
+        let mut b = PacketBuilder::new(5);
+        let p = b.payload(
+            HeadFields {
+                routing: 4,
+                ..HeadFields::default()
+            },
+            &[1, 2, 3, 4, 5, 6, 7, 8], // head + body + tail
+        );
+        assert!(mesh.try_inject_packet(0, &p.flits));
+        let mut got = Vec::new();
+        for _ in 0..50 {
+            mesh.step();
+            while let Some(f) = mesh.eject_pop(4) {
+                got.push(f);
+            }
+        }
+        assert_eq!(got.len(), 3, "every flit delivered (flips never drop)");
+        assert_eq!(got[0].raw, p.flits[0].raw, "head untouched");
+        assert_ne!(got[1].raw, p.flits[1].raw, "body data bit flipped");
+        assert_eq!(got[1].kind(), p.flits[1].kind(), "framing bits intact");
+        assert_eq!(got[2].raw, p.flits[2].raw, "tail untouched");
+        assert_eq!(mesh.fault.as_ref().unwrap().flips, 1);
     }
 
     #[test]

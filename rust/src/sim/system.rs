@@ -12,6 +12,9 @@ use crate::baseline::axi::AxiBus;
 use crate::baseline::shared_cache::CacheFpga;
 use crate::clock::{Activity, ClockDomain, DomainId, MultiClock, Ps};
 use crate::cmp::core::{Processor, Segment};
+use crate::fault::{
+    ChannelFaults, FaultConfig, FaultStats, LinkFaults, UpsetFaults,
+};
 use crate::flit::{ArenaStats, Flit, PacketArena};
 use crate::fpga::fabric::{Fpga, FpgaConfig};
 use crate::fpga::hwa::{HwaCompute, HwaSpec};
@@ -501,6 +504,13 @@ pub struct System {
     /// completed-swap drain so the frozen-inventory hot path pays
     /// nothing.
     pending_swaps: usize,
+    /// Fault injection + recovery configuration ([`System::set_faults`]).
+    /// `None` — the default — installs no fault state anywhere, so
+    /// fault-free runs stay byte-identical to pre-fault builds.
+    fault_cfg: Option<FaultConfig>,
+    /// Reconfiguration-upset state (dead slots awaiting the scrubber);
+    /// present only when the fault spec arms the upset class.
+    upsets: Option<Box<UpsetFaults>>,
 }
 
 impl System {
@@ -641,6 +651,8 @@ impl System {
             edges_skipped_by: vec![0; n_domains],
             reconfig: None,
             pending_swaps: 0,
+            fault_cfg: None,
+            upsets: None,
         })
     }
 
@@ -799,13 +811,18 @@ impl System {
             }
         }
         for i in 0..n {
-            self.open_sources[i] = Some(OpenLoopSource::new(
+            let mut src = OpenLoopSource::new(
                 i as u8,
                 self.procs[i].node,
                 targets.clone(),
                 total_rate_per_us / n as f64,
                 seed,
-            ));
+            );
+            // The runner installs faults before sources: arm recovery.
+            if let Some(cfg) = &self.fault_cfg {
+                src.arm_fault_recovery(cfg.recovery, cfg.timeout_ps);
+            }
+            self.open_sources[i] = Some(src);
         }
     }
 
@@ -859,7 +876,7 @@ impl System {
             self.serving_sources[i] = if mine.is_empty() {
                 None
             } else {
-                Some(ServingSource::new(
+                let mut src = ServingSource::new(
                     i as u8,
                     self.procs[i].node,
                     targets.clone(),
@@ -868,9 +885,180 @@ impl System {
                     watermark,
                     chain_ok,
                     seed,
-                ))
+                );
+                // The runner installs faults before sources: arm
+                // timeout/retry/failover recovery.
+                if let Some(cfg) = &self.fault_cfg {
+                    src.arm_fault_recovery(cfg.recovery, cfg.timeout_ps);
+                }
+                Some(src)
             };
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Fault injection & recovery ([`crate::fault`])
+    // ------------------------------------------------------------------
+
+    /// Install (or clear) seed-deterministic fault injection. A
+    /// [`FaultSpec::None`](crate::fault::FaultSpec::None) spec installs
+    /// nothing at all — no RNG stream, no per-site state, no extra
+    /// activity horizons — so fault-free runs stay byte-identical to
+    /// builds that never heard of faults (pinned by
+    /// `rust/tests/sweep.rs`).
+    ///
+    /// Any armed spec installs per-channel fault state on every buffered
+    /// fabric (the TB watchdog and dead-slot fencing serve the link and
+    /// upset classes too, not just `hwa:`), link faults on the NoC when
+    /// the link class is armed, and upset state when the upset class is.
+    /// Sources built later pick the recovery policy up from the stored
+    /// config; already-built sources are armed here.
+    pub fn set_faults(&mut self, cfg: FaultConfig) {
+        if cfg.spec.is_none() {
+            self.fault_cfg = None;
+            self.upsets = None;
+            if let Net::Noc(m) = &mut self.net {
+                m.fault = None;
+            }
+            for slot in &mut self.slots {
+                if let Some(f) = slot.fabric.buffered_mut() {
+                    for ch in f.channels.iter_mut() {
+                        ch.fault = None;
+                    }
+                }
+            }
+            return;
+        }
+        let spec = cfg.spec;
+        // Link faults hit ejection links at fabric and processor tiles.
+        // MMU tiles are exempt (memory-side payloads carry no end-to-end
+        // verifier yet) and the AXI baseline models no lossy links.
+        if let Net::Noc(m) = &mut self.net {
+            if spec.link_drop_p() > 0.0 {
+                let mut mask = vec![true; self.config.floorplan.n_nodes()];
+                for mn in self.config.floorplan.mmu_nodes() {
+                    mask[mn] = false;
+                }
+                m.fault = Some(Box::new(LinkFaults::new(
+                    cfg.seed,
+                    spec.link_drop_p(),
+                    spec.link_flip_p(),
+                    mask,
+                )));
+            }
+        }
+        let mut global_channel = 0u64;
+        for slot in &mut self.slots {
+            if let Some(f) = slot.fabric.buffered_mut() {
+                for ch in f.channels.iter_mut() {
+                    ch.fault = Some(Box::new(ChannelFaults::new(
+                        cfg.seed,
+                        global_channel,
+                        spec.hwa_hang_p(),
+                        spec.hwa_corrupt_p(),
+                        cfg.timeout_ps,
+                    )));
+                    global_channel += 1;
+                }
+            }
+        }
+        if spec.upset_p() > 0.0 {
+            self.upsets = Some(Box::new(UpsetFaults::new(
+                cfg.seed,
+                spec.upset_p(),
+                cfg.scrub_ps.max(1),
+            )));
+        }
+        for src in self.serving_sources.iter_mut().flatten() {
+            src.arm_fault_recovery(cfg.recovery, cfg.timeout_ps);
+        }
+        for src in self.open_sources.iter_mut().flatten() {
+            src.arm_fault_recovery(cfg.recovery, cfg.timeout_ps);
+        }
+        self.fault_cfg = Some(cfg);
+    }
+
+    /// The installed fault configuration, if any.
+    pub fn fault_config(&self) -> Option<&FaultConfig> {
+        self.fault_cfg.as_ref()
+    }
+
+    /// Aggregate fault counters across every injection and recovery
+    /// site: NoC link faults, per-channel HWA faults and their
+    /// detectors, upsets/scrubs, and the sources' retry/failover/
+    /// permanent-failure machines. All-zero when faults are off.
+    pub fn fault_stats(&self) -> FaultStats {
+        let mut st = FaultStats::default();
+        if let Net::Noc(m) = &self.net {
+            if let Some(lf) = m.fault.as_deref() {
+                st.injected += lf.drops + lf.flips;
+            }
+        }
+        for slot in &self.slots {
+            if let Some(f) = slot.fabric.buffered() {
+                for ch in &f.channels {
+                    if let Some(cf) = ch.fault.as_deref() {
+                        st.absorb(&cf.stats());
+                    }
+                }
+            }
+        }
+        if let Some(up) = self.upsets.as_deref() {
+            st.absorb(&up.stats());
+        }
+        for src in self.serving_sources.iter().flatten() {
+            st.absorb(&src.fault_stats());
+        }
+        for src in self.open_sources.iter().flatten() {
+            st.absorb(&src.fault_stats());
+        }
+        st
+    }
+
+    /// Fire scrubber epochs up to `now`: every `scrub_ps`, each dead
+    /// slot is re-programmed with its **current** bitstream through the
+    /// ordinary reconfiguration FSM (a scrub, not a swap — the inventory
+    /// doesn't change). Slots already mid-swap are retried next epoch.
+    /// Like [`System::fire_reconfig_epochs`], firing is a pure function
+    /// of the dispatched-edge time, so naive and idle-skipping schedules
+    /// scrub at identical instants.
+    fn fire_scrub_epochs(&mut self, now: Ps) {
+        let due = matches!(&self.upsets, Some(up) if now >= up.next_scrub);
+        if !due {
+            return;
+        }
+        let Some(mut up) = self.upsets.take() else { return };
+        let latency_model = self
+            .reconfig
+            .as_ref()
+            .map(|e| e.latency)
+            .unwrap_or_default();
+        while now >= up.next_scrub {
+            if up.dead.is_empty() {
+                // Nothing to scrub: jump to the first epoch past `now`
+                // instead of looping through skipped-over ticks.
+                let behind = now - up.next_scrub;
+                up.next_scrub += (behind / up.scrub_ps + 1) * up.scrub_ps;
+                break;
+            }
+            up.next_scrub += up.scrub_ps;
+            let dead = up.dead.clone();
+            for d in dead {
+                let Some(spec) = self
+                    .config
+                    .fabrics
+                    .get(d.fabric)
+                    .and_then(|f| f.specs.get(d.channel))
+                    .cloned()
+                else {
+                    continue;
+                };
+                let latency = latency_model.latency_ps(&spec);
+                let _ =
+                    self.request_reconfig(d.fabric, d.channel, spec, latency);
+            }
+        }
+        self.upsets = Some(up);
     }
 
     // ------------------------------------------------------------------
@@ -1060,6 +1248,18 @@ impl System {
                 for src in self.serving_sources.iter_mut().flatten() {
                     src.retarget(node, c as u8, &spec);
                 }
+                if let Some(up) = self.upsets.as_deref_mut() {
+                    // A scrub re-land repairs the slot; then every
+                    // landing — swap or scrub alike — rolls the upset
+                    // die again (a scrub can itself be upset).
+                    if up.is_dead(fid, c) {
+                        up.mark_repaired(fid, c);
+                    }
+                    let dead_now = up.draw_on_land(fid, c);
+                    if let Some(cf) = f.channels[c].fault.as_deref_mut() {
+                        cf.dead = dead_now;
+                    }
+                }
             }
         }
     }
@@ -1170,6 +1370,14 @@ impl System {
         if let Some(eng) = &self.reconfig {
             fold(&mut target, eng.next_epoch);
         }
+        // A pending scrub is likewise a scheduled event, but only once a
+        // slot is actually dead — with nothing to scrub the epoch is a
+        // no-op and `fire_scrub_epochs` catches the clock up for free.
+        if let Some(up) = self.upsets.as_deref() {
+            if !up.dead.is_empty() {
+                fold(&mut target, up.next_scrub);
+            }
+        }
         let target = match (target, deadline) {
             (Some(t), Some(d)) => t.min(d),
             (Some(t), None) => t,
@@ -1249,6 +1457,7 @@ impl System {
         // after each epoch boundary — a pure function of `t`, so naive
         // and idle-skipping schedules make identical decisions.
         self.fire_reconfig_epochs(t);
+        self.fire_scrub_epochs(t);
         for d in &ticking {
             if *d == self.noc_dom {
                 self.step_noc_domain(t);

@@ -13,6 +13,10 @@
 //! Schema 4 adds the `reconfig_*` swap counters — emitted only when the
 //! run actually reconfigured — and the per-tenant `downgraded_chained`
 //! column, so frozen-inventory artifacts keep their schema-3 bytes.
+//! Schema 5 adds the `fault_*` injection/recovery counters — emitted
+//! only when the run saw any fault activity — and the per-tenant
+//! `fault_failures` column (likewise only when nonzero), so fault-free
+//! artifacts keep their schema-4 bytes.
 
 use std::path::Path;
 
@@ -75,6 +79,27 @@ impl RunStats {
                 Json::from(self.reconfig_blocked_cycles),
             ));
         }
+        // Fault counters are additive and only emitted when the run saw
+        // fault activity: fault-free artifacts (every `fault.spec =
+        // none` run) keep their exact schema-4 bytes.
+        if self.fault_injected != 0
+            || self.fault_detected != 0
+            || self.fault_retried != 0
+            || self.fault_failed_over != 0
+            || self.fault_permanently_failed != 0
+        {
+            fields.push(("fault_injected", Json::from(self.fault_injected)));
+            fields.push(("fault_detected", Json::from(self.fault_detected)));
+            fields.push(("fault_retried", Json::from(self.fault_retried)));
+            fields.push((
+                "fault_failed_over",
+                Json::from(self.fault_failed_over),
+            ));
+            fields.push((
+                "fault_permanently_failed",
+                Json::from(self.fault_permanently_failed),
+            ));
+        }
         // Per-fabric rows are additive and only emitted for multi-fabric
         // scenarios: single-fabric artifacts stay byte-identical to the
         // pre-floorplan schema-2 layout.
@@ -110,7 +135,7 @@ impl RunStats {
                 .tenants
                 .iter()
                 .map(|r| {
-                    Json::obj(vec![
+                    let mut row = vec![
                         ("tenant", Json::from(r.tenant as u64)),
                         ("priority", Json::from(r.priority as u64)),
                         ("arrivals", Json::from(r.arrivals)),
@@ -123,6 +148,17 @@ impl RunStats {
                             "downgraded_chained",
                             Json::from(r.downgraded_chained),
                         ),
+                    ];
+                    // Additive like the scalar fault_* counters: only
+                    // faulty runs carry the column, so fault-free
+                    // serving artifacts keep their schema-4 bytes.
+                    if r.fault_failures != 0 {
+                        row.push((
+                            "fault_failures",
+                            Json::from(r.fault_failures),
+                        ));
+                    }
+                    row.extend([
                         ("slo_violations", Json::from(r.slo_violations)),
                         ("count", Json::from(r.count)),
                         ("mean_us", Json::Num(r.mean_us)),
@@ -130,7 +166,8 @@ impl RunStats {
                         ("p99_us", Json::Num(r.p99_us)),
                         ("p999_us", Json::Num(r.p999_us)),
                         ("max_us", Json::Num(r.max_us)),
-                    ])
+                    ]);
+                    Json::obj(row)
                 })
                 .collect();
             fields.push(("tenants", Json::Arr(rows)));
@@ -159,7 +196,7 @@ impl SweepReport {
             })
             .collect();
         Json::obj(vec![
-            ("schema", Json::from(4u64)),
+            ("schema", Json::from(5u64)),
             ("name", Json::from(self.name.as_str())),
             ("scenarios", Json::Arr(scenarios)),
         ])
@@ -208,6 +245,11 @@ impl SweepReport {
             "reconfig_swaps",
             "reconfig_drain_cycles",
             "reconfig_blocked_cycles",
+            "fault_injected",
+            "fault_detected",
+            "fault_retried",
+            "fault_failed_over",
+            "fault_permanently_failed",
         ];
         let mut out = String::new();
         out.push_str("scenario");
@@ -257,6 +299,11 @@ impl SweepReport {
                 t.reconfig_swaps.to_string(),
                 t.reconfig_drain_cycles.to_string(),
                 t.reconfig_blocked_cycles.to_string(),
+                t.fault_injected.to_string(),
+                t.fault_detected.to_string(),
+                t.fault_retried.to_string(),
+                t.fault_failed_over.to_string(),
+                t.fault_permanently_failed.to_string(),
             ];
             for n in nums {
                 out.push(',');
@@ -350,6 +397,11 @@ mod tests {
             reconfig_swaps: 0,
             reconfig_drain_cycles: 0,
             reconfig_blocked_cycles: 0,
+            fault_injected: 0,
+            fault_detected: 0,
+            fault_retried: 0,
+            fault_failed_over: 0,
+            fault_permanently_failed: 0,
             per_fabric: vec![FabricStatsRow {
                 fabric: 0,
                 node: 8,
@@ -371,7 +423,7 @@ mod tests {
     fn json_is_parseable_and_self_describing() {
         let r = dummy_report();
         let v = Json::parse(&r.render_json()).unwrap();
-        assert_eq!(v.get("schema").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(v.get("schema").and_then(Json::as_f64), Some(5.0));
         let sc = &v.get("scenarios").and_then(Json::as_arr).unwrap()[0];
         assert_eq!(
             sc.get("spec")
@@ -477,6 +529,7 @@ mod tests {
                     dropped: 0,
                     slo_violations: 5,
                     downgraded_chained: 1,
+                    fault_failures: 3,
                 },
                 &[1.0, 2.0, 4.0],
             ),
@@ -504,10 +557,16 @@ mod tests {
             rows[0].get("downgraded_chained").and_then(Json::as_f64),
             Some(1.0)
         );
+        assert_eq!(
+            rows[0].get("fault_failures").and_then(Json::as_f64),
+            Some(3.0)
+        );
         assert_eq!(rows[0].get("p999_us").and_then(Json::as_f64), Some(4.0));
-        // The empty row stays NaN-free.
+        // The empty row stays NaN-free — and, having lost no work to
+        // faults, carries no fault_failures key at all.
         assert_eq!(rows[1].get("count").and_then(Json::as_f64), Some(0.0));
         assert_eq!(rows[1].get("p99_us").and_then(Json::as_f64), Some(0.0));
+        assert!(rows[1].get("fault_failures").is_none());
     }
 
     #[test]
@@ -539,6 +598,41 @@ mod tests {
     }
 
     #[test]
+    fn fault_counters_are_emitted_only_when_the_run_saw_faults() {
+        // Fault-free (all counters zero): no fault keys — the pinned-
+        // bytes test above is the byte-exact form of this claim.
+        let clean = dummy_report();
+        assert!(!clean.render_json().contains("fault_injected"));
+        // A faulty run: the additive counters appear, in order.
+        let mut faulty = dummy_report();
+        faulty.scenarios[0].stats.fault_injected = 9;
+        faulty.scenarios[0].stats.fault_detected = 9;
+        faulty.scenarios[0].stats.fault_retried = 6;
+        faulty.scenarios[0].stats.fault_failed_over = 2;
+        faulty.scenarios[0].stats.fault_permanently_failed = 1;
+        let parsed = Json::parse(&faulty.render_json()).unwrap();
+        let scenarios = parsed.get("scenarios").and_then(Json::as_arr).unwrap();
+        let stats = scenarios[0].get("stats").expect("stats present");
+        assert_eq!(
+            stats.get("fault_injected").and_then(Json::as_f64),
+            Some(9.0)
+        );
+        assert_eq!(
+            stats.get("fault_failed_over").and_then(Json::as_f64),
+            Some(2.0)
+        );
+        assert_eq!(
+            stats.get("fault_permanently_failed").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        // Detection alone (e.g. recovery = none sweeping losses) is
+        // enough to surface the whole block.
+        let mut detected_only = dummy_report();
+        detected_only.scenarios[0].stats.fault_detected = 1;
+        assert!(detected_only.render_json().contains("fault_retried"));
+    }
+
+    #[test]
     fn csv_has_header_plus_one_row_per_scenario() {
         let r = dummy_report();
         let csv = r.render_csv();
@@ -546,6 +640,9 @@ mod tests {
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("scenario,"));
         assert!(lines[0].contains("latency_p99_us"));
+        // CSV columns are unconditional (a rectangular table can't be
+        // additive); only the JSON is gated on activity.
+        assert!(lines[0].contains("fault_permanently_failed"));
         // The scenario name contains a comma and must be quoted.
         assert!(lines[1].starts_with("\"d[net=noc,rate_per_us=1]\""));
     }

@@ -84,6 +84,7 @@ pub struct TenantCounters {
     pub dropped: u64,
     pub slo_violations: u64,
     pub downgraded_chained: u64,
+    pub fault_failures: u64,
 }
 
 /// Per-tenant slice of a serving run (one row per tenant stream;
@@ -105,6 +106,11 @@ pub struct TenantStatsRow {
     /// Chained jobs rewritten to direct because the scenario configured
     /// no chain groups (previously a silent downgrade).
     pub downgraded_chained: u64,
+    /// Admitted jobs this tenant lost to the fault machinery for good
+    /// (the recovery policy's retry/failover budget ran out, or no
+    /// recovery was armed). 0 — and omitted from the JSON — for
+    /// fault-free runs.
+    pub fault_failures: u64,
     pub slo_violations: u64,
     pub count: u64,
     pub mean_us: f64,
@@ -149,6 +155,7 @@ impl TenantStatsRow {
             shed_watermark: c.shed_watermark,
             dropped: c.dropped,
             downgraded_chained: c.downgraded_chained,
+            fault_failures: c.fault_failures,
             slo_violations: c.slo_violations,
             count,
             mean_us,
@@ -200,6 +207,16 @@ pub struct RunStats {
     pub reconfig_drain_cycles: u64,
     /// Interface cycles slots spent busy-programming new bitstreams.
     pub reconfig_blocked_cycles: u64,
+    /// Fault-injection/recovery counters over the measurement window
+    /// (closed-loop runs: the whole run). All zero — and omitted from
+    /// the JSON — when the scenario injects no faults, so legacy
+    /// artifacts stay byte-identical. See [`crate::fault::FaultStats`]
+    /// for the exact meaning of each counter.
+    pub fault_injected: u64,
+    pub fault_detected: u64,
+    pub fault_retried: u64,
+    pub fault_failed_over: u64,
+    pub fault_permanently_failed: u64,
     /// One row per FPGA interface tile. Singleton for single-fabric
     /// scenarios (and omitted from their JSON to keep legacy artifacts
     /// byte-identical).
@@ -357,6 +374,11 @@ pub fn run_scenario_with_idle_skip(
         spec.reconfig_epoch_us,
         spec.reconfig_latency,
     );
+    // FaultSpec::None installs nothing at all, so fault-free grids stay
+    // byte-identical to builds that predate the fault subsystem.
+    if !spec.fault_spec.is_none() {
+        rt.set_faults(spec.fault_config());
+    }
     match &spec.workload {
         WorkloadSpec::OpenLoop { rate_per_us } => {
             run_open_loop(spec, &mut rt, *rate_per_us)
@@ -465,6 +487,7 @@ fn run_serving(
     let (busy0, cyc0) = rt.system().iface_busy();
     let pf0 = rt.system().per_fabric_stats();
     let (rs0, rd0, rb0) = rt.system().reconfig_stats();
+    let fs0 = rt.system().fault_stats();
     // Per-tenant warmup snapshot, in flattened source/tenant order
     // (deterministic: tenant -> source assignment is fixed by the spec).
     let warm: Vec<(TenantCounters, usize)> = rt
@@ -484,6 +507,7 @@ fn run_serving(
                     dropped: t.dropped,
                     slo_violations: t.slo_violations,
                     downgraded_chained: t.downgraded_chained,
+                    fault_failures: t.fault_failures,
                 },
                 t.latencies_ps.len(),
             )
@@ -522,6 +546,7 @@ fn run_serving(
                 slo_violations: t.slo_violations - w.slo_violations,
                 downgraded_chained: t.downgraded_chained
                     - w.downgraded_chained,
+                fault_failures: t.fault_failures - w.fault_failures,
             },
             &window_lat,
         ));
@@ -530,6 +555,7 @@ fn run_serving(
     rows.sort_by_key(|r| r.tenant);
     let (esk_noc, esk_iface, esk_hwa) = sys.edges_skipped_breakdown();
     let (rs1, rd1, rb1) = sys.reconfig_stats();
+    let fd = sys.fault_stats().since(&fs0);
     Ok(RunStats {
         total_us: window,
         tasks_executed: sys.tasks_executed(),
@@ -554,6 +580,11 @@ fn run_serving(
         reconfig_swaps: rs1 - rs0,
         reconfig_drain_cycles: rd1 - rd0,
         reconfig_blocked_cycles: rb1 - rb0,
+        fault_injected: fd.injected,
+        fault_detected: fd.detected,
+        fault_retried: fd.retried,
+        fault_failed_over: fd.failed_over,
+        fault_permanently_failed: fd.permanently_failed,
         per_fabric: fabric_rows_delta(&sys.per_fabric_stats(), &pf0, window),
         tenants: rows,
     })
@@ -604,6 +635,7 @@ fn run_open_loop(
     let done0 = rt.open_loop_completions();
     let (busy0, cyc0) = rt.system().iface_busy();
     let pf0 = rt.system().per_fabric_stats();
+    let fs0 = rt.system().fault_stats();
     // Latencies recorded before the window belong to warmup.
     let lat_skip: Vec<usize> = rt
         .system()
@@ -629,6 +661,7 @@ fn run_open_loop(
                 .map(|l| *l as f64 / PS_PER_US as f64)
         })
         .collect();
+    let fd = sys.fault_stats().since(&fs0);
     let (esk_noc, esk_iface, esk_hwa) = sys.edges_skipped_breakdown();
     Ok(RunStats {
         total_us: window,
@@ -654,6 +687,11 @@ fn run_open_loop(
         reconfig_swaps: sys.reconfig_stats().0,
         reconfig_drain_cycles: sys.reconfig_stats().1,
         reconfig_blocked_cycles: sys.reconfig_stats().2,
+        fault_injected: fd.injected,
+        fault_detected: fd.detected,
+        fault_retried: fd.retried,
+        fault_failed_over: fd.failed_over,
+        fault_permanently_failed: fd.permanently_failed,
         per_fabric: fabric_rows_delta(
             &sys.per_fabric_stats(),
             &pf0,
@@ -678,6 +716,10 @@ fn closed_loop_stats(rt: &AccelRuntime, total_us: f64) -> RunStats {
     let (esk_noc, esk_iface, esk_hwa) = sys.edges_skipped_breakdown();
     let (reconfig_swaps, reconfig_drain_cycles, reconfig_blocked_cycles) =
         sys.reconfig_stats();
+    // Closed-loop runs measure from t=0, so fault counters are totals;
+    // the driver-side watchdog counts (submit_reliable) fold in too.
+    let mut fd = sys.fault_stats();
+    fd.absorb(&rt.driver_fault_stats());
     let per_fabric = sys
         .per_fabric_stats()
         .iter()
@@ -719,6 +761,11 @@ fn closed_loop_stats(rt: &AccelRuntime, total_us: f64) -> RunStats {
         reconfig_swaps,
         reconfig_drain_cycles,
         reconfig_blocked_cycles,
+        fault_injected: fd.injected,
+        fault_detected: fd.detected,
+        fault_retried: fd.retried,
+        fault_failed_over: fd.failed_over,
+        fault_permanently_failed: fd.permanently_failed,
         per_fabric,
         tenants: Vec::new(),
     }
@@ -961,6 +1008,7 @@ mod tests {
             dropped: 0,
             slo_violations: 3,
             downgraded_chained: 2,
+            fault_failures: 0,
         };
         let samples: Vec<f64> = (1..=10).map(|v| v as f64).collect();
         let row = TenantStatsRow::from_window(2, 3, c, &samples);

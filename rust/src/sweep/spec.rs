@@ -30,7 +30,9 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::clock::PS_PER_US;
 use crate::cmp::apps::{app_specs, gsm_app, jpeg_app, App};
+use crate::fault::{FaultConfig, FaultSpec, RecoveryPolicy};
 use crate::fpga::hwa::{spec_by_name, table3, HwaSpec};
 use crate::noc::mesh::MeshConfig;
 use crate::reconfig::{LatencyModel, ProvisionPolicy};
@@ -309,6 +311,18 @@ pub struct ScenarioSpec {
     pub reconfig_epoch_us: f64,
     /// Bitstream-programming latency model for swaps.
     pub reconfig_latency: LatencyModel,
+    /// Fault-injection class and rate (`fault.spec`). The `None`
+    /// default installs nothing, keeping every run byte-identical to
+    /// pre-fault builds.
+    pub fault_spec: FaultSpec,
+    /// What the system does about detected faults (`fault.recovery`).
+    pub fault_recovery: RecoveryPolicy,
+    /// Source/watchdog deadline in simulated µs (`fault.timeout_us`):
+    /// work invisible for this long is declared lost.
+    pub fault_timeout_us: f64,
+    /// Scrubber period in simulated µs (`fault.scrub_us`): how often
+    /// upset (dead) slots are re-programmed.
+    pub fault_scrub_us: f64,
 }
 
 impl ScenarioSpec {
@@ -337,6 +351,35 @@ impl ScenarioSpec {
             reconfig_policy: ProvisionPolicy::Static,
             reconfig_epoch_us: 5.0,
             reconfig_latency: LatencyModel::default(),
+            fault_spec: FaultSpec::None,
+            fault_recovery: RecoveryPolicy::None,
+            fault_timeout_us: 20.0,
+            fault_scrub_us: 50.0,
+        }
+    }
+
+    /// Arm fault injection under `spec` with recovery `policy` (timeout
+    /// and scrub period keep their defaults; set the `fault_*` fields
+    /// directly for full control).
+    pub fn faults(
+        mut self,
+        spec: FaultSpec,
+        recovery: RecoveryPolicy,
+    ) -> Self {
+        self.fault_spec = spec;
+        self.fault_recovery = recovery;
+        self
+    }
+
+    /// The lowered fault configuration this scenario arms (the runner
+    /// hands it to `System::set_faults`; a `None` spec arms nothing).
+    pub fn fault_config(&self) -> FaultConfig {
+        FaultConfig {
+            spec: self.fault_spec,
+            recovery: self.fault_recovery,
+            timeout_ps: (self.fault_timeout_us * PS_PER_US as f64) as u64,
+            scrub_ps: (self.fault_scrub_us * PS_PER_US as f64) as u64,
+            seed: self.seed,
         }
     }
 
@@ -596,6 +639,20 @@ impl ScenarioSpec {
         if self.reconfig_latency != LatencyModel::default() {
             put("reconfig.latency_model", self.reconfig_latency.name());
         }
+        // Fault keys are likewise emitted only when non-default, so
+        // legacy specs keep their exact pre-fault map.
+        if self.fault_spec != FaultSpec::None {
+            put("fault.spec", self.fault_spec.name());
+        }
+        if self.fault_recovery != RecoveryPolicy::None {
+            put("fault.recovery", self.fault_recovery.name().to_string());
+        }
+        if self.fault_timeout_us != 20.0 {
+            put("fault.timeout_us", format!("{}", self.fault_timeout_us));
+        }
+        if self.fault_scrub_us != 50.0 {
+            put("fault.scrub_us", format!("{}", self.fault_scrub_us));
+        }
         m
     }
 
@@ -798,6 +855,29 @@ impl ScenarioSpec {
         if let Some(v) = map.get("reconfig.latency_model") {
             spec.reconfig_latency = LatencyModel::parse(v)?;
         }
+        if let Some(v) = map.get("fault.spec") {
+            spec.fault_spec = FaultSpec::parse(v)?;
+        }
+        if let Some(v) = map.get("fault.recovery") {
+            spec.fault_recovery = RecoveryPolicy::parse(v)?;
+        }
+        spec.fault_timeout_us = get_parse(map, "fault.timeout_us")?
+            .unwrap_or(spec.fault_timeout_us);
+        if !spec.fault_timeout_us.is_finite() || spec.fault_timeout_us <= 0.0
+        {
+            return Err(format!(
+                "fault.timeout_us must be > 0, got {}",
+                spec.fault_timeout_us
+            ));
+        }
+        spec.fault_scrub_us =
+            get_parse(map, "fault.scrub_us")?.unwrap_or(spec.fault_scrub_us);
+        if !spec.fault_scrub_us.is_finite() || spec.fault_scrub_us <= 0.0 {
+            return Err(format!(
+                "fault.scrub_us must be > 0, got {}",
+                spec.fault_scrub_us
+            ));
+        }
         spec.seed = get_parse(map, "workload.seed")?.unwrap_or(spec.seed);
         spec.warmup_us =
             get_parse(map, "workload.warmup_us")?.unwrap_or(spec.warmup_us);
@@ -867,6 +947,10 @@ const KNOWN_KEYS: &[&str] = &[
     "reconfig.policy",
     "reconfig.epoch_us",
     "reconfig.latency_model",
+    "fault.spec",
+    "fault.recovery",
+    "fault.timeout_us",
+    "fault.scrub_us",
 ];
 
 /// A scenario template whose values may be lists: the cartesian product
@@ -1268,6 +1352,62 @@ mod tests {
             vec![0, 1, 2, 3],
             "adaptive policies mark every slot reconfigurable"
         );
+    }
+
+    #[test]
+    fn fault_keys_round_trip_and_stay_off_legacy_maps() {
+        // Byte-compat: a pre-fault spec's map must not change.
+        let legacy = ScenarioSpec::new("legacy").hwas("izigzag*4");
+        assert!(legacy
+            .to_map()
+            .iter()
+            .all(|(k, _)| !k.starts_with("fault.")));
+        assert!(legacy.fault_config().spec.is_none());
+
+        let mut spec = ScenarioSpec::new("f")
+            .hwas("izigzag*4")
+            .faults(FaultSpec::Mixed(0.01), RecoveryPolicy::RetryFailover);
+        spec.fault_timeout_us = 10.0;
+        spec.fault_scrub_us = 25.0;
+        let map: BTreeMap<String, String> =
+            spec.to_map().into_iter().collect();
+        assert_eq!(
+            map.get("fault.spec").map(String::as_str),
+            Some("mixed:0.01")
+        );
+        assert_eq!(
+            map.get("fault.recovery").map(String::as_str),
+            Some("retry_failover")
+        );
+        let back = ScenarioSpec::from_map("f", &map).unwrap();
+        assert_eq!(spec, back);
+        let cfg = back.fault_config();
+        assert_eq!(cfg.timeout_ps, 10 * PS_PER_US);
+        assert_eq!(cfg.scrub_ps, 25 * PS_PER_US);
+        assert_eq!(cfg.seed, back.seed);
+
+        // An explicit `fault.spec = none` is accepted and normalizes
+        // back to the key-free legacy map.
+        let mut none = BTreeMap::new();
+        none.insert("fault.spec".to_string(), "none".to_string());
+        let parsed = ScenarioSpec::from_map("n", &none).unwrap();
+        assert!(parsed
+            .to_map()
+            .iter()
+            .all(|(k, _)| !k.starts_with("fault.")));
+    }
+
+    #[test]
+    fn bad_fault_values_are_rejected_at_load_time() {
+        assert!(SweepSpec::parse_toml("[fault]\nspec = gamma:0.1\n").is_err());
+        assert!(SweepSpec::parse_toml("[fault]\nspec = link:2\n").is_err());
+        assert!(SweepSpec::parse_toml("[fault]\nrecovery = panic\n").is_err());
+        assert!(SweepSpec::parse_toml("[fault]\ntimeout_us = 0\n").is_err());
+        assert!(SweepSpec::parse_toml("[fault]\nscrub_us = -1\n").is_err());
+        assert!(SweepSpec::parse_toml(
+            "[fault]\nspec = hwa:0.01\nrecovery = retry\n"
+        )
+        .is_ok());
     }
 
     #[test]

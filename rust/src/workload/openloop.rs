@@ -15,6 +15,7 @@
 use std::collections::VecDeque;
 
 use crate::clock::{Activity, Ps, PS_PER_US};
+use crate::fault::{FaultStats, RecoveryPolicy};
 use crate::flit::{
     payload_packet_flits, Direction, Flit, FlitKind, HeadFields,
     PacketBuilder, PacketType,
@@ -75,6 +76,15 @@ pub struct OpenLoopSource {
     /// Reusable payload-word buffer: refilled per grant so steady-state
     /// payload assembly performs no heap allocation.
     words_scratch: Vec<u32>,
+    /// Lost-completion age bound, armed by fault injection. `None` (the
+    /// default) leaves the source byte-identical to the fault-free
+    /// build: entries wait forever, exactly as before.
+    fault_timeout: Option<Ps>,
+    /// Earliest instant an outstanding entry can expire (`Ps::MAX` when
+    /// unarmed or nothing is in flight) — folded into [`activity`] so
+    /// the idle-skipping scheduler cannot leap past a sweep.
+    next_sweep: Ps,
+    fault_stats: FaultStats,
 }
 
 impl OpenLoopSource {
@@ -120,7 +130,31 @@ impl OpenLoopSource {
             rx_head: None,
             deferred: 0,
             words_scratch: Vec::with_capacity(max_words),
+            fault_timeout: None,
+            next_sweep: Ps::MAX,
+            fault_stats: FaultStats::default(),
         }
+    }
+
+    /// Arm the lost-completion sweep. An open-loop source measures an
+    /// arrival process, so no policy re-issues work here (that would
+    /// distort the injected rate the experiment is sweeping): under any
+    /// policy, entries older than `timeout_ps` are counted as `drops`
+    /// and their per-target outstanding slot is released. Without the
+    /// sweep, a completion lost to a fault wedges its target at the
+    /// outstanding cap forever and the issue-time sample leaks.
+    pub fn arm_fault_recovery(
+        &mut self,
+        _policy: RecoveryPolicy,
+        timeout_ps: Ps,
+    ) {
+        self.fault_timeout = Some(timeout_ps.max(1));
+    }
+
+    /// Fault counters accumulated by the sweep and NACK handling (all
+    /// zero when recovery was never armed).
+    pub fn fault_stats(&self) -> FaultStats {
+        self.fault_stats
     }
 
     /// Single-fabric convenience: every spec lives on `fpga_node` with
@@ -161,11 +195,14 @@ impl OpenLoopSource {
     /// arrival (grants/results re-activate the source via `deliver`,
     /// which only fires while the interconnect is busy anyway).
     pub fn activity(&self) -> Activity {
-        if self.outbox.is_empty() {
-            Activity::NextEventAt(self.next_arrival)
-        } else {
-            Activity::Busy
+        if !self.outbox.is_empty() {
+            return Activity::Busy;
         }
+        let mut act = Activity::NextEventAt(self.next_arrival);
+        if self.next_sweep != Ps::MAX {
+            act = act.join(Activity::NextEventAt(self.next_sweep));
+        }
+        act
     }
 
     /// Target index for an incoming command: by (origin tile, hwa_id)
@@ -184,6 +221,7 @@ impl OpenLoopSource {
     /// One NoC/CMP cycle: emit at most one flit.
     pub fn step(&mut self, now: Ps, can_inject: bool) -> Option<Flit> {
         debug_assert_eq!(self.outstanding.len(), self.targets.len());
+        self.sweep_lost(now);
         while now >= self.next_arrival {
             let mean_gap = PS_PER_US as f64 / self.rate_per_us.max(1e-9);
             self.next_arrival += self.rng.exp(mean_gap).max(1.0) as Ps;
@@ -207,6 +245,9 @@ impl OpenLoopSource {
                 self.outbox.push_back(req);
                 self.requests_issued += 1;
                 self.issue_times[idx].push_back(now);
+                if let Some(t) = self.fault_timeout {
+                    self.next_sweep = self.next_sweep.min(now + t);
+                }
             } else {
                 self.drops += 1;
             }
@@ -216,6 +257,35 @@ impl OpenLoopSource {
         } else {
             None
         }
+    }
+
+    /// Expire issue-time entries older than the armed timeout: each is
+    /// a completion the fault layer ate (dropped notify, dead slot, or
+    /// hung task). Counting them as `drops` and releasing the slot
+    /// un-wedges the per-target cap; fault-free builds never reach here
+    /// (`fault_timeout` is `None` and `next_sweep` stays `Ps::MAX`).
+    fn sweep_lost(&mut self, now: Ps) {
+        let Some(timeout) = self.fault_timeout else { return };
+        if now < self.next_sweep {
+            return;
+        }
+        let mut next = Ps::MAX;
+        for (idx, q) in self.issue_times.iter_mut().enumerate() {
+            while let Some(&t0) = q.front() {
+                if now.saturating_sub(t0) < timeout {
+                    // Entries behind the front are younger still (FIFO).
+                    next = next.min(t0 + timeout);
+                    break;
+                }
+                q.pop_front();
+                self.outstanding[idx] =
+                    self.outstanding[idx].saturating_sub(1);
+                self.drops += 1;
+                self.fault_stats.detected += 1;
+                self.fault_stats.permanently_failed += 1;
+            }
+        }
+        self.next_sweep = next;
     }
 
     /// A flit ejected at this node.
@@ -233,48 +303,15 @@ impl OpenLoopSource {
                 match CommandKind::decode(h.payload) {
                     CommandKind::Grant => {
                         self.grants_seen += 1;
-                        let Some(idx) = self.target_index(origin, h.hwa_id)
-                        else {
-                            // A grant naming no known target (forged or
-                            // misrouted): nothing sane to answer.
-                            return;
-                        };
-                        let target = &self.targets[idx];
-                        let in_words = target.spec.in_words;
-                        let dest = target.node;
-                        self.words_scratch.clear();
-                        for _ in 0..in_words {
-                            let w = self.rng.next_u32();
-                            self.words_scratch.push(w);
-                        }
-                        // Seq numbers are consumed whether or not the
-                        // packet fits (matching the build-then-drop
-                        // behaviour this path used to have).
-                        let fits = self.outbox.len()
-                            + payload_packet_flits(in_words)
-                            <= OUTBOX_CAP;
-                        let outbox = &mut self.outbox;
-                        self.builder.payload_with(
-                            HeadFields {
-                                routing: dest,
-                                hwa_id: h.hwa_id,
-                                src_id: self.id,
-                                tb_id: h.tb_id,
-                                task_head: true,
-                                task_tail: true,
-                                direction: Direction::ProcToHwa,
-                                ..HeadFields::default()
-                            },
-                            &self.words_scratch,
-                            |f| {
-                                if fits {
-                                    outbox.push_back(f);
-                                }
-                            },
-                        );
-                        if !fits {
-                            self.drops += 1;
-                        }
+                        self.answer_grant(&h, origin);
+                    }
+                    CommandKind::Nack => {
+                        // The interface rejected our payload (CRC check
+                        // failed after a link fault) but kept the
+                        // reservation: retransmit into it.
+                        self.fault_stats.detected += 1;
+                        self.fault_stats.retried += 1;
+                        self.answer_grant(&h, origin);
                     }
                     CommandKind::Notify => {
                         self.complete(now, origin, h.hwa_id);
@@ -287,6 +324,52 @@ impl OpenLoopSource {
         if flit.kind() == FlitKind::Tail {
             let (hwa, origin) = self.rx_head.take().unwrap_or((0, None));
             self.complete(now, origin, hwa);
+        }
+    }
+
+    /// Answer a grant — or a NACK, which re-opens the same reservation —
+    /// by building and queueing the input payload for the granted task
+    /// buffer.
+    fn answer_grant(&mut self, h: &HeadFields, origin: Option<u8>) {
+        let Some(idx) = self.target_index(origin, h.hwa_id) else {
+            // A grant naming no known target (forged or misrouted):
+            // nothing sane to answer.
+            return;
+        };
+        let target = &self.targets[idx];
+        let in_words = target.spec.in_words;
+        let dest = target.node;
+        self.words_scratch.clear();
+        for _ in 0..in_words {
+            let w = self.rng.next_u32();
+            self.words_scratch.push(w);
+        }
+        // Seq numbers are consumed whether or not the packet fits
+        // (matching the build-then-drop behaviour this path used to
+        // have).
+        let fits =
+            self.outbox.len() + payload_packet_flits(in_words) <= OUTBOX_CAP;
+        let outbox = &mut self.outbox;
+        self.builder.payload_with(
+            HeadFields {
+                routing: dest,
+                hwa_id: h.hwa_id,
+                src_id: self.id,
+                tb_id: h.tb_id,
+                task_head: true,
+                task_tail: true,
+                direction: Direction::ProcToHwa,
+                ..HeadFields::default()
+            },
+            &self.words_scratch,
+            |f| {
+                if fits {
+                    outbox.push_back(f);
+                }
+            },
+        );
+        if !fits {
+            self.drops += 1;
         }
     }
 
@@ -481,5 +564,52 @@ mod tests {
             .find(|h| h.pkt_type == PacketType::Payload)
             .expect("payload sent");
         assert_eq!(payload.routing, 8, "answers the granting fabric");
+    }
+
+    #[test]
+    fn armed_sweep_unwedges_a_target_with_lost_completions() {
+        // Regression for the silent wedge: with completions lost (no
+        // deliver() ever called), an unarmed source stops issuing
+        // forever once every target hits the outstanding cap, leaking
+        // the issue-time entries. The armed sweep must expire them,
+        // count each as dropped, and let new requests flow.
+        let specs = vec![spec_by_name("izigzag").unwrap()];
+        let mut src = OpenLoopSource::single_fabric(0, 0, 8, specs, 4.0, 7);
+        src.arm_fault_recovery(RecoveryPolicy::RetryFailover, 1_000_000);
+        for c in 0..10_000u64 {
+            src.step(c * 1000, true);
+        }
+        assert!(
+            src.requests_issued > MAX_OUTSTANDING_PER_HWA,
+            "sweep never released the cap: issued {}",
+            src.requests_issued
+        );
+        let st = src.fault_stats();
+        assert!(st.detected > 0 && st.permanently_failed == st.detected);
+        // Lost entries became drops (outbox never fills here), and the
+        // in-flight bookkeeping stays bounded instead of leaking.
+        assert_eq!(src.drops, st.permanently_failed);
+        let queued: usize =
+            src.issue_times.iter().map(|q| q.len()).sum();
+        assert!(
+            queued as u64 <= MAX_OUTSTANDING_PER_HWA,
+            "issue-time entries leaked: {queued}"
+        );
+        assert!(src.outstanding.iter().all(|&o| o <= MAX_OUTSTANDING_PER_HWA));
+    }
+
+    #[test]
+    fn unarmed_source_never_sweeps() {
+        // Fault-free builds must behave byte-identically to the old
+        // code: no timeout, no sweep, wedge preserved (the fix is gated
+        // on arming so `fault.spec = "none"` artifacts stay bit-exact).
+        let specs = vec![spec_by_name("izigzag").unwrap()];
+        let mut src = OpenLoopSource::single_fabric(0, 0, 8, specs, 4.0, 7);
+        for c in 0..10_000u64 {
+            src.step(c * 1000, true);
+        }
+        assert_eq!(src.requests_issued, MAX_OUTSTANDING_PER_HWA);
+        assert_eq!(src.drops, 0);
+        assert!(!src.fault_stats().any());
     }
 }
