@@ -1,6 +1,6 @@
 # Convenience targets; see README.md.
 
-.PHONY: artifacts test bench bench-smoke sweep topology docs selftest
+.PHONY: artifacts test bench bench-smoke sweep topology autotune docs selftest
 
 # AOT-lower the JAX/Pallas kernels to artifacts/*.hlo.txt + manifest.txt
 # (prerequisite for `cargo {test,run} --features pjrt`).
@@ -37,6 +37,11 @@ topology:
 	for f in configs/*.toml; do \
 		cargo run --release -- topology $$f || exit 1; \
 	done
+
+# Closed-loop floorplan search on the smoke spec: prune with the
+# synthesis models, simulate the survivors, write BENCH_autotune.json.
+autotune:
+	cargo run --release -- autotune configs/autotune_smoke.toml --objective p99 --seed 7
 
 docs:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -1,0 +1,251 @@
+//! Floorplan autotuner: closed-loop design-space search over the
+//! topology grammar, gated by the calibrated hardware models.
+//!
+//! The paper picks its PR/PS strategies and channel counts by hand from
+//! fmax/resource sweeps (Fig. 7, Table 4). This subsystem closes that
+//! loop: given a workload and an [`Objective`], it searches the
+//! floorplan space — fabric placement on the mesh, number of fabrics,
+//! per-fabric accelerator inventory, PR/PS strategy, interface clock,
+//! MMU assignment, device — and reports the best plan as a
+//! ready-to-run floorplan string plus a `configs/`-style TOML fragment.
+//!
+//! Three pieces:
+//!
+//! * [`AutotuneSpec`] / [`Candidate`] (`space`) — the typed search
+//!   space. A spec is the same flat `section.key` grid a
+//!   [`crate::sweep::SweepSpec`] describes (every multi-valued key is a
+//!   search dimension) plus an `[autotune]` section for the objective,
+//!   evaluation budget and search seed. Each candidate passes a
+//!   **feasibility pre-filter** before any simulation time is spent:
+//!   its per-fabric inventory must fit the scenario's
+//!   [`crate::synth::Device`] LUT/BRAM budget
+//!   ([`crate::synth::resource::inventory_cost`]) and its `iface_mhz`
+//!   must not exceed the modeled interface fmax for its PR/PS strategy
+//!   ([`crate::synth::delay::fabric_fmax_mhz`]). Infeasible candidates
+//!   are pruned with a typed [`Infeasible`] reason.
+//! * [`Autotuner`] (`search`) — the evaluation engine. Surviving
+//!   candidates lower to [`crate::sweep::ScenarioSpec`]s and run through
+//!   the multi-threaded [`crate::sweep::SweepRunner`]; spaces that fit
+//!   the budget are searched exhaustively, larger ones by seeded
+//!   hill-climbing with restarts. Both are **bit-identical for a fixed
+//!   seed across `--threads`**, the same discipline as every sweep.
+//! * [`AutotuneOutcome`] (`report`) — the result: per-candidate scores,
+//!   pruned-candidate accounting (exhaustive searches satisfy
+//!   `evaluated + pruned == space size`), the winning plan, a baseline
+//!   comparison against the spec's fixed keys at their defaults (the
+//!   legacy single-FPGA plan, for the shipped specs), and the
+//!   `BENCH_autotune.json` artifact.
+//!
+//! The `accnoc autotune <spec.toml>` CLI verb drives all three; see
+//! `configs/autotune_smoke.toml` and docs/ARCHITECTURE.md §Autotuner.
+
+pub mod report;
+pub mod search;
+pub mod space;
+
+pub use search::{Autotuner, AutotuneOutcome, Baseline, EvaluatedCandidate, Winner};
+pub use space::{AutotuneSpec, Candidate, Infeasible};
+
+use crate::sweep::RunStats;
+
+/// What the search optimizes. Scores are raw metrics (not normalized),
+/// so the report stays interpretable; the direction lives in
+/// [`Objective::maximize`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Minimize p99 request latency (µs). Candidates that complete
+    /// nothing score infinitely bad.
+    MinP99,
+    /// Maximize completed invocations per µs.
+    MaxThroughput,
+    /// Maximize completions/µs per 100 kLUTs of fabric inventory
+    /// (interface + cores across every fabric) — throughput per unit of
+    /// silicon spent.
+    MaxThroughputPerLut,
+    /// Minimize the total SLO violations across tenants (serving
+    /// workloads only; [`Autotuner::run`] rejects other workloads with
+    /// a typed error).
+    MinSloViolations,
+}
+
+impl Objective {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        match text.trim() {
+            "p99" | "min_p99" => Ok(Objective::MinP99),
+            "throughput" | "max_throughput" => Ok(Objective::MaxThroughput),
+            "throughput_per_lut" => Ok(Objective::MaxThroughputPerLut),
+            "slo" | "slo_violations" => Ok(Objective::MinSloViolations),
+            other => Err(format!(
+                "objective: {other:?} \
+                 (p99|throughput|throughput_per_lut|slo_violations)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::MinP99 => "p99",
+            Objective::MaxThroughput => "throughput",
+            Objective::MaxThroughputPerLut => "throughput_per_lut",
+            Objective::MinSloViolations => "slo_violations",
+        }
+    }
+
+    /// Human description of the score column.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Objective::MinP99 => "p99 latency in µs, lower is better",
+            Objective::MaxThroughput => {
+                "completions per µs, higher is better"
+            }
+            Objective::MaxThroughputPerLut => {
+                "completions/µs per 100 kLUTs, higher is better"
+            }
+            Objective::MinSloViolations => {
+                "SLO violations across tenants, lower is better"
+            }
+        }
+    }
+
+    pub fn maximize(&self) -> bool {
+        matches!(
+            self,
+            Objective::MaxThroughput | Objective::MaxThroughputPerLut
+        )
+    }
+
+    /// The candidate's score under this objective. `luts` is the total
+    /// fabric-inventory cost the feasibility pass already computed.
+    pub fn score(&self, stats: &RunStats, luts: u32) -> f64 {
+        match self {
+            Objective::MinP99 => {
+                if stats.latency.count == 0 {
+                    f64::INFINITY
+                } else {
+                    stats.latency.p99_us
+                }
+            }
+            Objective::MaxThroughput => stats.completions_per_us,
+            Objective::MaxThroughputPerLut => {
+                stats.completions_per_us * 100_000.0 / luts.max(1) as f64
+            }
+            Objective::MinSloViolations => stats
+                .tenants
+                .iter()
+                .map(|t| t.slo_violations)
+                .sum::<u64>() as f64,
+        }
+    }
+
+    /// Is score `a` strictly better than score `b`?
+    pub fn better(&self, a: f64, b: f64) -> bool {
+        if self.maximize() {
+            a > b
+        } else {
+            a < b
+        }
+    }
+}
+
+/// Why a search could not produce a winner. Every variant is a typed,
+/// printable rejection — an infeasible-everything space is an error,
+/// never a panic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AutotuneError {
+    /// The spec describes zero candidates (an empty value list).
+    EmptySpace,
+    /// A zero evaluation budget can never score anything.
+    ZeroBudget,
+    /// `slo_violations` needs per-tenant counters, which only serving
+    /// workloads produce.
+    ObjectiveNeedsServing { objective: &'static str },
+    /// Every candidate the search examined failed the feasibility
+    /// filter (counts by reason; for hill-climb searches these cover
+    /// the candidates *encountered*, which is the whole space by the
+    /// time this error is reached).
+    NoFeasibleCandidate {
+        resource: usize,
+        fmax: usize,
+        invalid: usize,
+    },
+    /// Every feasible candidate's simulation failed (e.g. missed its
+    /// closed-loop deadline).
+    AllEvaluationsFailed { first_error: String },
+}
+
+impl std::fmt::Display for AutotuneError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AutotuneError::EmptySpace => {
+                write!(f, "the search space has no candidates")
+            }
+            AutotuneError::ZeroBudget => {
+                write!(f, "budget must be >= 1 evaluation")
+            }
+            AutotuneError::ObjectiveNeedsServing { objective } => write!(
+                f,
+                "objective {objective} requires workload.kind = serving \
+                 for every candidate"
+            ),
+            AutotuneError::NoFeasibleCandidate {
+                resource,
+                fmax,
+                invalid,
+            } => write!(
+                f,
+                "no feasible candidate: {resource} pruned by the device \
+                 resource budget, {fmax} by modeled interface fmax, \
+                 {invalid} invalid"
+            ),
+            AutotuneError::AllEvaluationsFailed { first_error } => write!(
+                f,
+                "every feasible candidate failed to simulate \
+                 (first error: {first_error})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AutotuneError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_parse_round_trips() {
+        for obj in [
+            Objective::MinP99,
+            Objective::MaxThroughput,
+            Objective::MaxThroughputPerLut,
+            Objective::MinSloViolations,
+        ] {
+            assert_eq!(Objective::parse(obj.name()), Ok(obj));
+        }
+        assert!(Objective::parse("p42").is_err());
+        // CLI shorthand aliases.
+        assert_eq!(Objective::parse("slo"), Ok(Objective::MinSloViolations));
+        assert_eq!(Objective::parse("min_p99"), Ok(Objective::MinP99));
+    }
+
+    #[test]
+    fn objective_direction() {
+        assert!(Objective::MinP99.better(1.0, 2.0));
+        assert!(!Objective::MinP99.better(2.0, 1.0));
+        assert!(Objective::MaxThroughput.better(2.0, 1.0));
+        // Ties are never "better": the engine breaks them on candidate id.
+        assert!(!Objective::MinP99.better(1.0, 1.0));
+        assert!(!Objective::MaxThroughput.better(1.0, 1.0));
+    }
+
+    #[test]
+    fn errors_render() {
+        let e = AutotuneError::NoFeasibleCandidate {
+            resource: 3,
+            fmax: 2,
+            invalid: 0,
+        };
+        let text = e.to_string();
+        assert!(text.contains("3 pruned") && text.contains("fmax"), "{text}");
+    }
+}

@@ -1,0 +1,362 @@
+//! Rendering an [`AutotuneOutcome`]: the deterministic
+//! `BENCH_autotune.json` artifact, the human-readable report, and the
+//! ready-to-run `configs/`-style TOML fragment for the winning plan.
+//!
+//! Nothing here reads the clock or any other ambient state, so for a
+//! fixed spec/seed the JSON is byte-identical across runs and thread
+//! counts — the property the determinism tests pin.
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+use crate::util::table::{num, Table};
+
+use super::search::AutotuneOutcome;
+
+impl AutotuneOutcome {
+    /// Percentage improvement of the winner over the baseline, in the
+    /// objective's own direction (positive = winner better). `None`
+    /// when there is no comparable baseline score.
+    pub fn improvement_vs_baseline_pct(&self) -> Option<f64> {
+        let base = self.baseline.as_ref()?.score?;
+        if base == 0.0 || !base.is_finite() || !self.winner.score.is_finite()
+        {
+            return None;
+        }
+        let win = self.winner.score;
+        Some(if self.objective.maximize() {
+            (win - base) / base * 100.0
+        } else {
+            (base - win) / base * 100.0
+        })
+    }
+
+    /// The winning plan as a `configs/`-style TOML spec, ready to drop
+    /// into a file and run with `accnoc sweep`.
+    pub fn winner_toml(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "# autotuned winner for {} (objective: {})",
+            self.name,
+            self.objective.name()
+        );
+        let _ = writeln!(out, "name = {}_tuned", self.name);
+        let _ = writeln!(out, "output = BENCH_{}_tuned.json", self.name);
+        let mut section = String::new();
+        for (k, v) in self.winner.spec.to_map() {
+            let (sec, key) = match k.split_once('.') {
+                Some((s, rest)) => (s.to_string(), rest.to_string()),
+                None => (String::new(), k.clone()),
+            };
+            if sec != section {
+                let _ = writeln!(out, "\n[{sec}]");
+                section = sec;
+            }
+            let _ = writeln!(out, "{key} = {v}");
+        }
+        out
+    }
+
+    /// The full machine-readable result (`BENCH_autotune.json` schema).
+    pub fn to_json(&self) -> Json {
+        let mut cands = Vec::with_capacity(self.evaluated.len());
+        for rec in &self.evaluated {
+            let c = &rec.candidate;
+            let mut pairs: Vec<(String, Json)> = vec![
+                ("id".to_string(), Json::Num(c.id as f64)),
+                ("name".to_string(), Json::Str(c.name.clone())),
+                (
+                    "axes".to_string(),
+                    Json::Obj(
+                        c.axes
+                            .iter()
+                            .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                            .collect(),
+                    ),
+                ),
+                ("luts".to_string(), Json::Num(c.luts as f64)),
+                (
+                    "score".to_string(),
+                    // Non-finite scores (no completions) also serialize
+                    // as null via fmt_num; map them explicitly for
+                    // clarity.
+                    match rec.score {
+                        Some(s) if s.is_finite() => Json::Num(s),
+                        _ => Json::Null,
+                    },
+                ),
+            ];
+            if let Some(stats) = &rec.stats {
+                pairs.push((
+                    "p99_us".to_string(),
+                    Json::Num(stats.latency.p99_us),
+                ));
+                pairs.push((
+                    "completions_per_us".to_string(),
+                    Json::Num(stats.completions_per_us),
+                ));
+                pairs.push((
+                    "tasks_executed".to_string(),
+                    Json::Num(stats.tasks_executed as f64),
+                ));
+            }
+            if let Some(e) = &rec.error {
+                pairs.push(("error".to_string(), Json::Str(e.clone())));
+            }
+            cands.push(Json::Obj(pairs));
+        }
+
+        let baseline = match &self.baseline {
+            None => Json::Null,
+            Some(b) => Json::obj(vec![
+                ("name", Json::Str(b.name.clone())),
+                (
+                    "score",
+                    match b.score {
+                        Some(s) if s.is_finite() => Json::Num(s),
+                        _ => Json::Null,
+                    },
+                ),
+                ("luts", Json::Num(b.luts as f64)),
+                (
+                    "p99_us",
+                    b.stats
+                        .as_ref()
+                        .map(|s| Json::Num(s.latency.p99_us))
+                        .unwrap_or(Json::Null),
+                ),
+                (
+                    "completions_per_us",
+                    b.stats
+                        .as_ref()
+                        .map(|s| Json::Num(s.completions_per_us))
+                        .unwrap_or(Json::Null),
+                ),
+                (
+                    "error",
+                    b.error
+                        .as_ref()
+                        .map(|e| Json::Str(e.clone()))
+                        .unwrap_or(Json::Null),
+                ),
+            ]),
+        };
+
+        let winner = Json::obj(vec![
+            ("id", Json::Num(self.winner.id as f64)),
+            ("name", Json::Str(self.winner.name.clone())),
+            ("score", Json::Num(self.winner.score)),
+            ("luts", Json::Num(self.winner.luts as f64)),
+            ("p99_us", Json::Num(self.winner.stats.latency.p99_us)),
+            (
+                "completions_per_us",
+                Json::Num(self.winner.stats.completions_per_us),
+            ),
+            (
+                "floorplan",
+                Json::Str(self.winner.floorplan_text()),
+            ),
+            (
+                "spec",
+                Json::Obj(
+                    self.winner
+                        .spec
+                        .to_map()
+                        .into_iter()
+                        .map(|(k, v)| (k, Json::Str(v)))
+                        .collect(),
+                ),
+            ),
+        ]);
+
+        Json::obj(vec![
+            ("schema", Json::Num(1.0)),
+            ("kind", Json::Str("autotune".to_string())),
+            ("name", Json::Str(self.name.clone())),
+            ("objective", Json::Str(self.objective.name().to_string())),
+            ("strategy", Json::Str(self.strategy.to_string())),
+            ("budget", Json::Num(self.budget as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("space_size", Json::Num(self.space_size as f64)),
+            (
+                "pruned",
+                Json::obj(vec![
+                    ("resource", Json::Num(self.pruned_resource as f64)),
+                    ("fmax", Json::Num(self.pruned_fmax as f64)),
+                    ("invalid", Json::Num(self.pruned_invalid as f64)),
+                    ("total", Json::Num(self.pruned_total() as f64)),
+                ]),
+            ),
+            ("evaluated", Json::Num(self.evaluated.len() as f64)),
+            ("baseline", baseline),
+            ("candidates", Json::Arr(cands)),
+            ("winner", winner),
+            (
+                "winner_toml",
+                Json::Str(self.winner_toml()),
+            ),
+            (
+                "improvement_vs_baseline_pct",
+                self.improvement_vs_baseline_pct()
+                    .map(Json::Num)
+                    .unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn render_json(&self) -> String {
+        self.to_json().render()
+    }
+
+    pub fn write_json(&self, path: &std::path::Path) -> Result<(), String> {
+        std::fs::write(path, self.render_json())
+            .map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// The human-readable search report the CLI prints.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "autotune {}: objective {} ({}), strategy {}",
+            self.name,
+            self.objective.name(),
+            self.objective.describe(),
+            self.strategy
+        );
+        let _ = writeln!(
+            out,
+            "space: {} candidate(s) -> {} pruned ({} resource, {} fmax, \
+             {} invalid), {} evaluated (budget {}, seed {})",
+            self.space_size,
+            self.pruned_total(),
+            self.pruned_resource,
+            self.pruned_fmax,
+            self.pruned_invalid,
+            self.evaluated.len(),
+            self.budget,
+            self.seed
+        );
+        let mut t = Table::new(
+            "evaluated candidates",
+            &["id", "candidate", "score", "p99 us", "compl/us", "kLUT"],
+        );
+        for rec in &self.evaluated {
+            let c = &rec.candidate;
+            let (score, p99, thr) = match (&rec.score, &rec.stats) {
+                (Some(s), Some(stats)) => (
+                    num(*s, 3),
+                    num(stats.latency.p99_us, 2),
+                    num(stats.completions_per_us, 4),
+                ),
+                _ => (
+                    format!(
+                        "failed: {}",
+                        rec.error.as_deref().unwrap_or("no score")
+                    ),
+                    "-".to_string(),
+                    "-".to_string(),
+                ),
+            };
+            t.row(&[
+                c.id.to_string(),
+                c.name.clone(),
+                score,
+                p99,
+                thr,
+                num(c.luts as f64 / 1000.0, 1),
+            ]);
+        }
+        out.push_str(&t.render());
+        let _ = writeln!(
+            out,
+            "winner: {} (score {})",
+            self.winner.name,
+            num(self.winner.score, 3)
+        );
+        let _ = writeln!(out, "  floorplan: {}", self.winner.floorplan_text());
+        match &self.baseline {
+            Some(b) => match b.score {
+                Some(bs) => {
+                    let _ = write!(
+                        out,
+                        "baseline (default plan): score {}",
+                        num(bs, 3)
+                    );
+                    match self.improvement_vs_baseline_pct() {
+                        Some(pct) => {
+                            let _ = writeln!(
+                                out,
+                                " -> winner improves {}%",
+                                num(pct, 1)
+                            );
+                        }
+                        None => {
+                            let _ = writeln!(out);
+                        }
+                    }
+                }
+                None => {
+                    let _ = writeln!(
+                        out,
+                        "baseline (default plan): failed: {}",
+                        b.error.as_deref().unwrap_or("no score")
+                    );
+                }
+            },
+            None => {
+                let _ = writeln!(
+                    out,
+                    "baseline: none (fixed keys alone are not runnable)"
+                );
+            }
+        }
+        out.push_str("\n--- winning plan as a config fragment ---\n");
+        out.push_str(&self.winner_toml());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::autotune::{Autotuner, AutotuneSpec};
+
+    #[test]
+    fn json_and_report_are_deterministic_and_complete() {
+        let space = AutotuneSpec::new("rp")
+            .axis("system.hwas", &["izigzag*2", "izigzag*4"])
+            .set("workload.kind", "openloop")
+            .set("workload.rate_per_us", "1")
+            .set("workload.warmup_us", "2")
+            .set("workload.window_us", "10");
+        let run = || {
+            Autotuner::new()
+                .threads(1)
+                .run(&space)
+                .expect("search succeeds")
+        };
+        let a = run().render_json();
+        let b = run().render_json();
+        assert_eq!(a, b, "same spec/seed must render byte-identically");
+        let parsed = crate::util::json::Json::parse(&a).expect("valid JSON");
+        assert_eq!(
+            parsed.get("kind").and_then(|v| v.as_str()),
+            Some("autotune")
+        );
+        assert!(parsed.get("winner").is_some());
+        assert!(parsed.get("pruned").is_some());
+
+        let out = run();
+        let report = out.report();
+        assert!(report.contains("winner:"), "{report}");
+        assert!(report.contains("floorplan:"), "{report}");
+        let toml = out.winner_toml();
+        assert!(toml.contains("[system]"), "{toml}");
+        assert!(toml.contains("[workload]"), "{toml}");
+        // The fragment must itself parse as a sweep spec.
+        let reparsed = crate::sweep::SweepSpec::parse_toml(&toml)
+            .expect("winner fragment is a valid spec");
+        assert_eq!(reparsed.name, "rp_tuned");
+    }
+}

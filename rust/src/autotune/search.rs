@@ -1,0 +1,571 @@
+//! The closed-loop search engine: exhaustive for small spaces, seeded
+//! hill-climb with random restarts for large ones.
+//!
+//! Determinism contract: for a fixed spec and seed the search visits
+//! the same candidates, in the same order, on any `--threads` — the
+//! batch evaluator ([`crate::sweep::SweepRunner::run_each`]) returns
+//! results in input order, and every search decision (start picks,
+//! moves, restarts) depends only on already-collected deterministic
+//! results. `BENCH_autotune.json` is therefore byte-identical across
+//! runs and thread counts.
+
+use std::collections::BTreeMap;
+
+use crate::sweep::{RunStats, ScenarioSpec, SweepRunner};
+use crate::util::rng::Pcg32;
+
+use super::space::{AutotuneSpec, Candidate, Infeasible};
+use super::{AutotuneError, Objective};
+
+/// Pcg32 stream selector for the search RNG, so autotune draws never
+/// collide with workload/fault streams even under a shared seed.
+const SEARCH_STREAM: u64 = 0x4155_544f_5455_4e45; // "AUTOTUNE"
+
+/// Random start-probe attempts per restart before falling back to a
+/// deterministic linear scan for the first feasible unevaluated id.
+const START_PROBES: usize = 128;
+
+/// One simulated candidate with its score (or simulation error).
+#[derive(Debug, Clone)]
+pub struct EvaluatedCandidate {
+    pub candidate: Candidate,
+    /// `None` when the simulation failed (see `error`).
+    pub score: Option<f64>,
+    pub stats: Option<RunStats>,
+    pub error: Option<String>,
+}
+
+/// The best evaluated candidate.
+#[derive(Debug, Clone)]
+pub struct Winner {
+    pub id: usize,
+    pub name: String,
+    pub score: f64,
+    pub luts: u32,
+    pub spec: ScenarioSpec,
+    pub stats: RunStats,
+}
+
+impl Winner {
+    /// The ready-to-run floorplan string this plan lowers to (the
+    /// explicit plan, or the legacy single-FPGA lowering).
+    pub fn floorplan_text(&self) -> String {
+        match &self.spec.floorplan {
+            Some(text) => text.clone(),
+            None => self
+                .spec
+                .plan()
+                .map(|p| p.to_spec_string())
+                .unwrap_or_default(),
+        }
+    }
+}
+
+/// The spec's fixed keys run as-is — with the shipped specs, the legacy
+/// single-FPGA default plan the winner must beat.
+#[derive(Debug, Clone)]
+pub struct Baseline {
+    pub name: String,
+    pub score: Option<f64>,
+    pub stats: Option<RunStats>,
+    pub error: Option<String>,
+    pub luts: u32,
+}
+
+/// Everything a search produced; `report` renders it as JSON/text.
+#[derive(Debug, Clone)]
+pub struct AutotuneOutcome {
+    pub name: String,
+    pub objective: Objective,
+    /// `"exhaustive"` or `"hill_climb"`.
+    pub strategy: &'static str,
+    pub budget: usize,
+    pub seed: u64,
+    pub threads: usize,
+    pub space_size: usize,
+    /// Distinct candidates rejected by the feasibility filter, bucketed
+    /// by [`Infeasible::kind`]. For exhaustive searches
+    /// `evaluated.len() + pruned_total() == space_size`.
+    pub pruned_resource: usize,
+    pub pruned_fmax: usize,
+    pub pruned_invalid: usize,
+    /// Every simulated candidate, in candidate-id order.
+    pub evaluated: Vec<EvaluatedCandidate>,
+    pub baseline: Option<Baseline>,
+    pub winner: Winner,
+}
+
+impl AutotuneOutcome {
+    pub fn pruned_total(&self) -> usize {
+        self.pruned_resource + self.pruned_fmax + self.pruned_invalid
+    }
+}
+
+/// Search driver. Configure with the builder methods, then
+/// [`Self::run`]. Objective/budget/seed default to the spec's own
+/// values; the CLI overrides them from flags.
+#[derive(Debug, Clone, Default)]
+pub struct Autotuner {
+    objective: Option<Objective>,
+    budget: Option<usize>,
+    seed: Option<u64>,
+    /// 0 = every host core.
+    threads: usize,
+}
+
+impl Autotuner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn objective(mut self, objective: Objective) -> Self {
+        self.objective = Some(objective);
+        self
+    }
+
+    pub fn budget(mut self, budget: usize) -> Self {
+        self.budget = Some(budget);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Run the search over `space`. Returns a typed error when the
+    /// space is empty, the budget is zero, the objective does not fit
+    /// the workload, nothing is feasible, or nothing simulates.
+    pub fn run(
+        &self,
+        space: &AutotuneSpec,
+    ) -> Result<AutotuneOutcome, AutotuneError> {
+        let objective = self.objective.unwrap_or(space.objective);
+        let budget = self.budget.unwrap_or(space.budget);
+        let seed = self.seed.unwrap_or(space.seed);
+        let size = space.space_size();
+        if size == 0 {
+            return Err(AutotuneError::EmptySpace);
+        }
+        if budget == 0 {
+            return Err(AutotuneError::ZeroBudget);
+        }
+        if objective == Objective::MinSloViolations {
+            let all_serving = space
+                .get("workload.kind")
+                .map(|vs| vs.iter().all(|v| v == "serving"))
+                .unwrap_or(false);
+            if !all_serving {
+                return Err(AutotuneError::ObjectiveNeedsServing {
+                    objective: objective.name(),
+                });
+            }
+        }
+        let runner = if self.threads == 0 {
+            SweepRunner::new()
+        } else {
+            SweepRunner::with_threads(self.threads)
+        };
+        let threads = runner.threads();
+        let mut st = SearchState {
+            space,
+            objective,
+            runner,
+            checked: BTreeMap::new(),
+            evaluated: BTreeMap::new(),
+        };
+
+        let strategy = if size <= budget {
+            // The budget covers the whole space: evaluate every
+            // feasible candidate, so evaluated + pruned == size.
+            for id in 0..size {
+                let _ = st.check(id);
+            }
+            let feasible: Vec<usize> = (0..size)
+                .filter(|id| matches!(st.checked.get(id), Some(Ok(_))))
+                .collect();
+            st.eval_batch(&feasible);
+            "exhaustive"
+        } else {
+            self.hill_climb(&mut st, size, budget, seed);
+            "hill_climb"
+        };
+
+        if st.evaluated.is_empty() {
+            let (resource, fmax, invalid) = st.pruned_counts();
+            return Err(AutotuneError::NoFeasibleCandidate {
+                resource,
+                fmax,
+                invalid,
+            });
+        }
+
+        let winner = match st.best() {
+            Some(w) => w,
+            None => {
+                let first_error = st
+                    .evaluated
+                    .values()
+                    .find_map(|e| e.error.clone())
+                    .unwrap_or_else(|| "no candidate scored".to_string());
+                return Err(AutotuneError::AllEvaluationsFailed {
+                    first_error,
+                });
+            }
+        };
+        let baseline = st.baseline();
+        let (pruned_resource, pruned_fmax, pruned_invalid) =
+            st.pruned_counts();
+        Ok(AutotuneOutcome {
+            name: space.name.clone(),
+            objective,
+            strategy,
+            budget,
+            seed,
+            threads,
+            space_size: size,
+            pruned_resource,
+            pruned_fmax,
+            pruned_invalid,
+            evaluated: st.evaluated.into_values().collect(),
+            baseline,
+            winner,
+        })
+    }
+
+    /// Seeded hill-climb with restarts. Each round: pick a feasible
+    /// unevaluated start (random probes, then a deterministic scan),
+    /// evaluate it, then repeatedly batch-evaluate all feasible
+    /// unevaluated one-axis neighbors and move to the best if it
+    /// strictly improves; otherwise restart. Stops when the budget is
+    /// spent or the space is exhausted.
+    fn hill_climb(
+        &self,
+        st: &mut SearchState<'_>,
+        size: usize,
+        budget: usize,
+        seed: u64,
+    ) {
+        let mut rng = Pcg32::new(seed, SEARCH_STREAM);
+        while st.evaluated.len() < budget {
+            let start = match st.pick_start(&mut rng, size) {
+                Some(id) => id,
+                None => return, // space exhausted
+            };
+            st.eval_batch(&[start]);
+            let mut cur = start;
+            loop {
+                if st.evaluated.len() >= budget {
+                    return;
+                }
+                // A failed simulation has no score to climb from.
+                let cur_score = match st.score_of(cur) {
+                    Some(s) => s,
+                    None => break,
+                };
+                let mut neigh: Vec<usize> = Vec::new();
+                for id in st.space.neighbors(cur) {
+                    if !st.evaluated.contains_key(&id)
+                        && st.check(id).is_ok()
+                    {
+                        neigh.push(id);
+                    }
+                }
+                neigh.truncate(budget - st.evaluated.len());
+                if neigh.is_empty() {
+                    break;
+                }
+                st.eval_batch(&neigh);
+                let best = neigh
+                    .iter()
+                    .filter_map(|&id| st.score_of(id).map(|s| (id, s)))
+                    .reduce(|(bi, bs), (id, s)| {
+                        if st.objective.better(s, bs) {
+                            (id, s)
+                        } else {
+                            (bi, bs) // ties keep the earlier id
+                        }
+                    });
+                match best {
+                    Some((id, s)) if st.objective.better(s, cur_score) => {
+                        cur = id;
+                    }
+                    _ => break, // local optimum: restart
+                }
+            }
+        }
+    }
+}
+
+/// Mutable search bookkeeping: memoized feasibility checks and
+/// evaluations, plus the shared scenario runner.
+struct SearchState<'a> {
+    space: &'a AutotuneSpec,
+    objective: Objective,
+    runner: SweepRunner,
+    /// Every candidate id whose feasibility has been decided.
+    checked: BTreeMap<usize, Result<Candidate, Infeasible>>,
+    /// Every simulated candidate, keyed (and thus ordered) by id.
+    evaluated: BTreeMap<usize, EvaluatedCandidate>,
+}
+
+impl SearchState<'_> {
+    /// Memoized feasibility check.
+    fn check(&mut self, id: usize) -> Result<Candidate, Infeasible> {
+        if let Some(r) = self.checked.get(&id) {
+            return r.clone();
+        }
+        let r = self.space.candidate(id);
+        self.checked.insert(id, r.clone());
+        r
+    }
+
+    /// Distinct pruned candidates encountered so far, bucketed as
+    /// (resource, fmax, invalid).
+    fn pruned_counts(&self) -> (usize, usize, usize) {
+        let mut counts = (0, 0, 0);
+        for r in self.checked.values() {
+            match r {
+                Err(Infeasible::Resource { .. }) => counts.0 += 1,
+                Err(Infeasible::Fmax { .. }) => counts.1 += 1,
+                Err(Infeasible::Invalid { .. }) => counts.2 += 1,
+                Ok(_) => {}
+            }
+        }
+        counts
+    }
+
+    /// Simulate `ids` (all pre-checked feasible) concurrently and
+    /// record their scores. Input order in, input order out.
+    fn eval_batch(&mut self, ids: &[usize]) {
+        if ids.is_empty() {
+            return;
+        }
+        let cands: Vec<Candidate> = ids
+            .iter()
+            .map(|&id| {
+                self.check(id).expect("eval_batch takes feasible ids only")
+            })
+            .collect();
+        let specs: Vec<ScenarioSpec> =
+            cands.iter().map(|c| c.spec.clone()).collect();
+        let results = self.runner.run_each(&specs);
+        for (cand, result) in cands.into_iter().zip(results) {
+            let id = cand.id;
+            let rec = match result {
+                Ok(stats) => {
+                    let score = self.objective.score(&stats, cand.luts);
+                    EvaluatedCandidate {
+                        candidate: cand,
+                        score: Some(score),
+                        stats: Some(stats),
+                        error: None,
+                    }
+                }
+                Err(e) => EvaluatedCandidate {
+                    candidate: cand,
+                    score: None,
+                    stats: None,
+                    error: Some(e),
+                },
+            };
+            self.evaluated.insert(id, rec);
+        }
+    }
+
+    fn score_of(&self, id: usize) -> Option<f64> {
+        self.evaluated.get(&id).and_then(|e| e.score)
+    }
+
+    /// A feasible, not-yet-evaluated start: bounded random probes for
+    /// spread, then a deterministic linear scan so the search never
+    /// stalls (and infeasible-everything spaces get fully classified).
+    fn pick_start(&mut self, rng: &mut Pcg32, size: usize) -> Option<usize> {
+        for _ in 0..START_PROBES {
+            let id = draw(rng, size);
+            if !self.evaluated.contains_key(&id) && self.check(id).is_ok() {
+                return Some(id);
+            }
+        }
+        (0..size)
+            .find(|&id| {
+                !self.evaluated.contains_key(&id) && self.check(id).is_ok()
+            })
+    }
+
+    /// Best evaluated candidate: objective order, ties to the lowest id
+    /// (BTreeMap iteration is id order, and `better` is strict).
+    fn best(&self) -> Option<Winner> {
+        let mut best: Option<(&EvaluatedCandidate, f64)> = None;
+        for rec in self.evaluated.values() {
+            let Some(score) = rec.score else { continue };
+            match best {
+                Some((_, bs)) if !self.objective.better(score, bs) => {}
+                _ => best = Some((rec, score)),
+            }
+        }
+        best.map(|(rec, score)| Winner {
+            id: rec.candidate.id,
+            name: rec.candidate.name.clone(),
+            score,
+            luts: rec.candidate.luts,
+            spec: rec.candidate.spec.clone(),
+            stats: rec.stats.clone().expect("scored candidates have stats"),
+        })
+    }
+
+    /// Run the spec's fixed keys as the comparison baseline. `None`
+    /// when the fixed keys alone don't describe a runnable scenario
+    /// (then there is nothing meaningful to compare against).
+    fn baseline(&self) -> Option<Baseline> {
+        let map = self.space.base_map();
+        let name = format!("{}[baseline]", self.space.name);
+        let spec = match ScenarioSpec::from_map(&name, &map) {
+            Ok(spec) => spec,
+            Err(_) => return None,
+        };
+        let luts = AutotuneSpec::scenario_luts(&spec).unwrap_or(0);
+        let mut results = self.runner.run_each(std::slice::from_ref(&spec));
+        match results.pop().expect("one spec in, one result out") {
+            Ok(stats) => Some(Baseline {
+                name,
+                score: Some(self.objective.score(&stats, luts)),
+                stats: Some(stats),
+                error: None,
+                luts,
+            }),
+            Err(e) => Some(Baseline {
+                name,
+                score: None,
+                stats: None,
+                error: Some(e),
+                luts,
+            }),
+        }
+    }
+}
+
+/// Uniform draw in `0..size` (sizes past `u32` fall back to a modulo
+/// draw; any bias at that scale is irrelevant to restart placement).
+fn draw(rng: &mut Pcg32, size: usize) -> usize {
+    if size <= u32::MAX as usize {
+        rng.below(size as u32) as usize
+    } else {
+        (rng.next_u64() % size as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_space() -> AutotuneSpec {
+        AutotuneSpec::new("qs")
+            .axis("system.hwas", &["izigzag*2", "dfdiv*2"])
+            .set("workload.kind", "openloop")
+            .set("workload.rate_per_us", "1")
+            .set("workload.warmup_us", "2")
+            .set("workload.window_us", "10")
+    }
+
+    #[test]
+    fn exhaustive_search_picks_the_known_best() {
+        // izigzag runs 1 cycle @400 MHz; dfdiv 1200 cycles @250 MHz. The
+        // p99 winner is never in doubt.
+        let space = quick_space();
+        let out = Autotuner::new()
+            .threads(1)
+            .run(&space)
+            .expect("search succeeds");
+        assert_eq!(out.strategy, "exhaustive");
+        assert_eq!(out.space_size, 2);
+        assert_eq!(out.evaluated.len() + out.pruned_total(), out.space_size);
+        assert_eq!(out.winner.name, "qs[hwas=izigzag*2]");
+        let base = out.baseline.expect("fixed keys are runnable");
+        let bscore = base.score.expect("baseline simulates");
+        assert!(
+            out.winner.score <= bscore,
+            "winner {} must not lose to the default plan {}",
+            out.winner.score,
+            bscore
+        );
+    }
+
+    #[test]
+    fn search_is_deterministic_across_thread_counts() {
+        let space = quick_space();
+        let a = Autotuner::new().threads(1).run(&space).unwrap();
+        let b = Autotuner::new().threads(4).run(&space).unwrap();
+        assert_eq!(a.winner.id, b.winner.id);
+        assert_eq!(a.winner.score, b.winner.score);
+        let ids = |o: &AutotuneOutcome| {
+            o.evaluated
+                .iter()
+                .map(|e| e.candidate.id)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(ids(&a), ids(&b));
+    }
+
+    #[test]
+    fn hill_climb_respects_the_budget_and_seed() {
+        // 3 x 3 x 2 = 18 candidates, budget 5 -> hill-climb.
+        let space = AutotuneSpec::new("hc")
+            .axis("system.hwas", &["izigzag*2", "izigzag*4", "dfdiv*2"])
+            .axis("system.task_buffers", &["1", "2", "4"])
+            .axis("system.ps_group", &["2", "4"])
+            .set("workload.kind", "openloop")
+            .set("workload.rate_per_us", "1")
+            .set("workload.warmup_us", "2")
+            .set("workload.window_us", "10")
+            .budget(5)
+            .seed(11);
+        let a = Autotuner::new().threads(1).run(&space).unwrap();
+        let b = Autotuner::new().threads(3).run(&space).unwrap();
+        assert_eq!(a.strategy, "hill_climb");
+        assert!(a.evaluated.len() <= 5);
+        assert!(!a.evaluated.is_empty());
+        let ids = |o: &AutotuneOutcome| {
+            o.evaluated
+                .iter()
+                .map(|e| e.candidate.id)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(ids(&a), ids(&b), "same seed, any thread count");
+        assert_eq!(a.winner.id, b.winner.id);
+    }
+
+    #[test]
+    fn infeasible_everything_is_a_typed_error() {
+        let space = AutotuneSpec::new("bad")
+            .axis("system.hwas", &["prime*3", "prime*4"])
+            .set("workload.kind", "openloop")
+            .set("workload.rate_per_us", "1");
+        match Autotuner::new().threads(1).run(&space) {
+            Err(AutotuneError::NoFeasibleCandidate {
+                resource, fmax, invalid,
+            }) => {
+                assert_eq!(resource, 2);
+                assert_eq!((fmax, invalid), (0, 0));
+            }
+            other => panic!("expected NoFeasibleCandidate, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn slo_objective_requires_serving_workloads() {
+        let space = quick_space();
+        match Autotuner::new()
+            .objective(Objective::MinSloViolations)
+            .run(&space)
+        {
+            Err(AutotuneError::ObjectiveNeedsServing { .. }) => {}
+            other => panic!("expected ObjectiveNeedsServing, got {other:?}"),
+        }
+    }
+}

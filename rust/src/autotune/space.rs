@@ -1,0 +1,530 @@
+//! The autotuner's search space: spec parsing, candidate enumeration,
+//! and the model-based feasibility pre-filter.
+//!
+//! An [`AutotuneSpec`] is the flat `section.key = value` grid a
+//! `SweepSpec` uses — every multi-valued key is a search axis — plus an
+//! `[autotune]` section (`objective`, `budget`, `seed`). Candidates are
+//! addressed by a dense id in `0..space_size()`: a mixed-radix number
+//! over the axes in sorted-key order with the last axis fastest, the
+//! exact order `SweepSpec::expand` enumerates, so candidate ids line up
+//! with sweep-report rows for the same grid.
+
+use std::collections::BTreeMap;
+
+use crate::sweep::spec::{known_spec_key, split_list};
+use crate::sweep::ScenarioSpec;
+use crate::synth::fabric_fmax_mhz;
+use crate::synth::resource::inventory_cost;
+use crate::util::config_text::ConfigText;
+
+use super::Objective;
+
+/// Modeled iface fmax comparisons tolerate float dust so `iface_mhz =
+/// <the modeled fmax itself>` counts as feasible.
+const FMAX_EPS_MHZ: f64 = 1e-9;
+
+/// Why a candidate was pruned before simulation. Ordered by the ladder
+/// the filter walks: syntax/shape first, then per-fabric resources,
+/// then timing closure.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Infeasible {
+    /// The candidate's key/value combination does not parse or lower to
+    /// a buildable system (bad floorplan semantics, zero buffers, ...).
+    Invalid { reason: String },
+    /// Fabric `fabric`'s inventory (interface + cores) exceeds the
+    /// device's LUT or BRAM budget.
+    Resource { fabric: usize, luts: u32, brams: u32 },
+    /// Fabric `fabric` asks for `iface_mhz` but the delay model caps
+    /// its PR/PS strategy at `fmax_mhz`.
+    Fmax {
+        fabric: usize,
+        iface_mhz: f64,
+        fmax_mhz: f64,
+    },
+}
+
+impl Infeasible {
+    /// Stable bucket name used in reports and pruned-count accounting.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Infeasible::Invalid { .. } => "invalid",
+            Infeasible::Resource { .. } => "resource",
+            Infeasible::Fmax { .. } => "fmax",
+        }
+    }
+}
+
+impl std::fmt::Display for Infeasible {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Infeasible::Invalid { reason } => write!(f, "invalid: {reason}"),
+            Infeasible::Resource {
+                fabric,
+                luts,
+                brams,
+            } => write!(
+                f,
+                "fabric F{fabric} inventory ({luts} LUTs, {brams} BRAMs) \
+                 exceeds the device budget"
+            ),
+            Infeasible::Fmax {
+                fabric,
+                iface_mhz,
+                fmax_mhz,
+            } => write!(
+                f,
+                "fabric F{fabric} wants {iface_mhz:.0} MHz but the delay \
+                 model caps this strategy at {fmax_mhz:.1} MHz"
+            ),
+        }
+    }
+}
+
+/// A candidate that survived the feasibility filter: a runnable
+/// scenario plus the bookkeeping the scorer and report need.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    /// Dense id in `0..space_size()` (mixed-radix axis indices).
+    pub id: usize,
+    /// `spec_name[axis=value,...]`, matching `SweepSpec::expand` naming.
+    pub name: String,
+    /// The axis choices that define this candidate, `(full_key, value)`
+    /// in sorted-key order.
+    pub axes: Vec<(String, String)>,
+    /// The runnable scenario (validated end to end).
+    pub spec: ScenarioSpec,
+    /// Total inventory LUT cost across every fabric — the denominator
+    /// for [`Objective::MaxThroughputPerLut`].
+    pub luts: u32,
+}
+
+/// The declarative search problem: a value grid, an objective, and the
+/// evaluation budget/seed. See the module docs for the id ordering.
+#[derive(Debug, Clone)]
+pub struct AutotuneSpec {
+    pub name: String,
+    /// Report path override; [`Self::output_path`] falls back to
+    /// `BENCH_<name>.json`.
+    pub output: Option<String>,
+    pub objective: Objective,
+    /// Maximum number of candidates to *simulate* (pruning is free).
+    pub budget: usize,
+    /// Seed for the hill-climb restarts; exhaustive searches ignore it.
+    pub seed: u64,
+    values: BTreeMap<String, Vec<String>>,
+}
+
+impl AutotuneSpec {
+    pub fn new(name: &str) -> Self {
+        AutotuneSpec {
+            name: name.to_string(),
+            output: None,
+            objective: Objective::MinP99,
+            budget: 64,
+            seed: 7,
+            values: BTreeMap::new(),
+        }
+    }
+
+    /// Fix `key` to a single value (not a search axis).
+    pub fn set(self, key: &str, value: &str) -> Self {
+        self.axis(key, &[value])
+    }
+
+    /// Add `key` as a search axis over `vals`.
+    pub fn axis(mut self, key: &str, vals: &[&str]) -> Self {
+        self.values.insert(
+            key.to_string(),
+            vals.iter().map(|v| v.to_string()).collect(),
+        );
+        self
+    }
+
+    pub fn objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    pub fn budget(mut self, budget: usize) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Does this config text describe an autotune spec (any
+    /// `[autotune]` key)? The `topology` verb and the shipped-config
+    /// test use this to route files to the right parser.
+    pub fn is_autotune_text(text: &str) -> bool {
+        match ConfigText::parse(text) {
+            Ok(cfg) => cfg.keys().any(|k| k.starts_with("autotune.")),
+            Err(_) => false,
+        }
+    }
+
+    /// Parse the TOML-subset format: top-level `name`/`output`, an
+    /// `[autotune]` section, and sweep-style `section.key` grids for
+    /// everything else. Unknown keys are errors, same as sweeps.
+    pub fn parse_toml(text: &str) -> Result<Self, String> {
+        let cfg = ConfigText::parse(text)?;
+        let mut spec = AutotuneSpec::new("autotune");
+        for key in cfg.keys() {
+            let raw = cfg.get(key).unwrap_or("");
+            match key {
+                "name" => spec.name = raw.to_string(),
+                "output" => spec.output = Some(raw.to_string()),
+                "autotune.objective" => {
+                    spec.objective = Objective::parse(raw)?;
+                }
+                "autotune.budget" => {
+                    spec.budget = raw
+                        .parse()
+                        .map_err(|_| format!("autotune.budget: {raw:?}"))?;
+                }
+                "autotune.seed" => {
+                    spec.seed = raw
+                        .parse()
+                        .map_err(|_| format!("autotune.seed: {raw:?}"))?;
+                }
+                k if k.starts_with("autotune.") => {
+                    return Err(format!(
+                        "unknown autotune key {k:?} \
+                         (objective, budget, seed)"
+                    ));
+                }
+                k => {
+                    if !known_spec_key(k) {
+                        return Err(format!("unknown spec key {k:?}"));
+                    }
+                    let vals = split_list(raw);
+                    if vals.is_empty() {
+                        return Err(format!("{k}: empty value list"));
+                    }
+                    spec.values.insert(k.to_string(), vals);
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse_toml(&text)
+    }
+
+    /// Report path: the spec's `output` or `BENCH_<name>.json`.
+    pub fn output_path(&self) -> String {
+        self.output
+            .clone()
+            .unwrap_or_else(|| format!("BENCH_{}.json", self.name))
+    }
+
+    /// The search axes (multi-valued keys) in sorted-key order.
+    pub fn axes(&self) -> Vec<(&str, &[String])> {
+        self.values
+            .iter()
+            .filter(|(_, v)| v.len() > 1)
+            .map(|(k, v)| (k.as_str(), v.as_slice()))
+            .collect()
+    }
+
+    /// The values for `key`, if set.
+    pub fn get(&self, key: &str) -> Option<&[String]> {
+        self.values.get(key).map(|v| v.as_slice())
+    }
+
+    /// Number of candidates (product of axis lengths; 1 for an all-fixed
+    /// spec, 0 only if some value list is empty).
+    pub fn space_size(&self) -> usize {
+        self.values
+            .values()
+            .map(|v| v.len())
+            .fold(1usize, |a, b| a.saturating_mul(b))
+    }
+
+    /// Decode `id` into per-axis indices (sorted-key order, last axis
+    /// fastest — the `SweepSpec::expand` enumeration order).
+    pub fn indices(&self, id: usize) -> Vec<usize> {
+        let axes = self.axes();
+        let mut idx = vec![0usize; axes.len()];
+        let mut rem = id;
+        for (d, (_, vals)) in axes.iter().enumerate().rev() {
+            idx[d] = rem % vals.len();
+            rem /= vals.len();
+        }
+        idx
+    }
+
+    /// Inverse of [`Self::indices`].
+    pub fn id_of(&self, indices: &[usize]) -> usize {
+        let axes = self.axes();
+        let mut id = 0usize;
+        for (d, (_, vals)) in axes.iter().enumerate() {
+            id = id * vals.len() + indices[d];
+        }
+        id
+    }
+
+    /// All candidates one axis-step away from `id` (every axis, every
+    /// alternative value), in deterministic (axis, value) order.
+    pub fn neighbors(&self, id: usize) -> Vec<usize> {
+        let axes = self.axes();
+        let idx = self.indices(id);
+        let mut out = Vec::new();
+        for (d, (_, vals)) in axes.iter().enumerate() {
+            for j in 0..vals.len() {
+                if j == idx[d] {
+                    continue;
+                }
+                let mut v = idx.clone();
+                v[d] = j;
+                out.push(self.id_of(&v));
+            }
+        }
+        out
+    }
+
+    /// The flat spec map for candidate `id` (fixed keys + this
+    /// candidate's axis choices).
+    pub fn candidate_map(&self, id: usize) -> BTreeMap<String, String> {
+        let idx = self.indices(id);
+        let axis_pos: BTreeMap<&str, usize> = self
+            .axes()
+            .iter()
+            .enumerate()
+            .map(|(d, (k, _))| (*k, d))
+            .collect();
+        self.values
+            .iter()
+            .map(|(k, vals)| {
+                let v = match axis_pos.get(k.as_str()) {
+                    Some(&d) => vals[idx[d]].clone(),
+                    None => vals[0].clone(),
+                };
+                (k.clone(), v)
+            })
+            .collect()
+    }
+
+    /// The axis choices for candidate `id`, `(full_key, value)`.
+    pub fn axis_values(&self, id: usize) -> Vec<(String, String)> {
+        let idx = self.indices(id);
+        self.axes()
+            .iter()
+            .enumerate()
+            .map(|(d, (k, vals))| (k.to_string(), vals[idx[d]].clone()))
+            .collect()
+    }
+
+    /// `name[axis=value,...]` — the `SweepSpec::expand` naming scheme
+    /// (axis keys shortened to their last `.` segment).
+    pub fn candidate_name(&self, id: usize) -> String {
+        let axes = self.axis_values(id);
+        if axes.is_empty() {
+            return self.name.clone();
+        }
+        let parts: Vec<String> = axes
+            .iter()
+            .map(|(k, v)| {
+                let short = k.rsplit('.').next().unwrap_or(k.as_str());
+                format!("{short}={v}")
+            })
+            .collect();
+        format!("{}[{}]", self.name, parts.join(","))
+    }
+
+    /// The fixed (single-valued) keys only — the baseline scenario the
+    /// report compares the winner against. With the shipped specs this
+    /// is the legacy single-FPGA default plan.
+    pub fn base_map(&self) -> BTreeMap<String, String> {
+        self.values
+            .iter()
+            .filter(|(_, v)| v.len() == 1)
+            .map(|(k, v)| (k.clone(), v[0].clone()))
+            .collect()
+    }
+
+    /// Run candidate `id` through the feasibility ladder; `Ok` means it
+    /// is worth simulator time. The ladder, in order:
+    ///
+    /// 1. parse + lower (`from_map_unvalidated`, `plan`, `fabric_specs`)
+    ///    — failures are [`Infeasible::Invalid`];
+    /// 2. per fabric, `inventory_cost` vs the candidate's
+    ///    [`crate::synth::Device`] budget — [`Infeasible::Resource`];
+    /// 3. per fabric, requested `iface_mhz` vs the modeled
+    ///    [`fabric_fmax_mhz`] — [`Infeasible::Fmax`];
+    /// 4. the full `system_config()` build — residual defects (MMU
+    ///    reachability etc.) are [`Infeasible::Invalid`].
+    pub fn candidate(&self, id: usize) -> Result<Candidate, Infeasible> {
+        let map = self.candidate_map(id);
+        let name = self.candidate_name(id);
+        let invalid = |reason: String| Infeasible::Invalid { reason };
+        let spec = ScenarioSpec::from_map_unvalidated(&name, &map)
+            .map_err(invalid)?;
+        let plan = spec.plan().map_err(invalid)?;
+        let fabrics = spec.fabric_specs(&plan).map_err(invalid)?;
+        let mut luts = 0u32;
+        for (f, fs) in fabrics.iter().enumerate() {
+            let cost = inventory_cost(
+                fs.pr_group,
+                fs.ps_group,
+                &fs.specs,
+                !fs.chain_groups.is_empty(),
+            );
+            luts = luts.saturating_add(cost.lut);
+            if spec.device.exceeds(&cost) {
+                return Err(Infeasible::Resource {
+                    fabric: f,
+                    luts: cost.lut,
+                    brams: cost.bram,
+                });
+            }
+            let fmax = fabric_fmax_mhz(fs.pr_group, fs.ps_group, fs.specs.len());
+            if fs.iface_mhz > fmax + FMAX_EPS_MHZ {
+                return Err(Infeasible::Fmax {
+                    fabric: f,
+                    iface_mhz: fs.iface_mhz,
+                    fmax_mhz: fmax,
+                });
+            }
+        }
+        spec.system_config().map_err(invalid)?;
+        Ok(Candidate {
+            id,
+            name,
+            axes: self.axis_values(id),
+            spec,
+            luts,
+        })
+    }
+
+    /// Total inventory LUT cost for an already-built scenario (used for
+    /// the baseline row, which skips the candidate ladder).
+    pub fn scenario_luts(spec: &ScenarioSpec) -> Result<u32, String> {
+        let plan = spec.plan()?;
+        let fabrics = spec.fabric_specs(&plan)?;
+        let mut luts = 0u32;
+        for fs in &fabrics {
+            let cost = inventory_cost(
+                fs.pr_group,
+                fs.ps_group,
+                &fs.specs,
+                !fs.chain_groups.is_empty(),
+            );
+            luts = luts.saturating_add(cost.lut);
+        }
+        Ok(luts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_space() -> AutotuneSpec {
+        AutotuneSpec::new("t")
+            .axis("system.hwas", &["izigzag*2", "izigzag*4", "dfdiv*2"])
+            .axis("system.task_buffers", &["1", "2"])
+            .set("workload.kind", "openloop")
+            .set("workload.rate_per_us", "2")
+    }
+
+    #[test]
+    fn id_decode_matches_sweep_expand_order() {
+        let s = small_space();
+        assert_eq!(s.space_size(), 6);
+        // Sorted axes: system.hwas (3 values), system.task_buffers (2).
+        // Last axis fastest: id 0 -> (0,0), id 1 -> (0,1), id 2 -> (1,0).
+        assert_eq!(s.indices(0), vec![0, 0]);
+        assert_eq!(s.indices(1), vec![0, 1]);
+        assert_eq!(s.indices(2), vec![1, 0]);
+        assert_eq!(s.id_of(&[2, 1]), 5);
+        assert_eq!(
+            s.candidate_name(3),
+            "t[hwas=izigzag*4,task_buffers=2]"
+        );
+        let map = s.candidate_map(5);
+        assert_eq!(map["system.hwas"], "dfdiv*2");
+        assert_eq!(map["system.task_buffers"], "2");
+        assert_eq!(map["workload.kind"], "openloop");
+    }
+
+    #[test]
+    fn neighbors_step_one_axis() {
+        let s = small_space();
+        let mut n = s.neighbors(0);
+        n.sort_unstable();
+        // From (0,0): hwas -> (1,0)=2, (2,0)=4; tbs -> (0,1)=1.
+        assert_eq!(n, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn feasibility_ladder_prunes_with_typed_reasons() {
+        let s = AutotuneSpec::new("t")
+            .axis("system.hwas", &["izigzag*4", "prime*3"])
+            .axis("system.iface_mhz", &["300", "1000"])
+            .set("workload.kind", "openloop")
+            .set("workload.rate_per_us", "1");
+        // id 0: izigzag*4 @ 300 MHz — feasible.
+        let c = s.candidate(0).expect("feasible candidate");
+        assert!(c.luts > 0);
+        assert_eq!(c.name, "t[hwas=izigzag*4,iface_mhz=300]");
+        // id 1: izigzag*4 @ 1000 MHz — fmax-pruned.
+        match s.candidate(1) {
+            Err(Infeasible::Fmax { fabric: 0, .. }) => {}
+            other => panic!("expected fmax prune, got {other:?}"),
+        }
+        // id 2: prime*3 blows the 690T LUT budget — resource-pruned
+        // (before the fmax check even runs).
+        match s.candidate(2) {
+            Err(Infeasible::Resource { fabric: 0, luts, .. }) => {
+                assert!(luts > 433_200);
+            }
+            other => panic!("expected resource prune, got {other:?}"),
+        }
+        // A nonsense mix is Invalid, not a panic.
+        let bad = AutotuneSpec::new("t").set("system.hwas", "nosuchhwa*2");
+        match bad.candidate(0) {
+            Err(Infeasible::Invalid { .. }) => {}
+            other => panic!("expected invalid, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn toml_round_trip_and_detection() {
+        let text = "\
+name = smoke
+output = BENCH_x.json
+
+[autotune]
+objective = p99
+budget = 12
+seed = 9
+
+[system]
+hwas = izigzag*2, izigzag*4
+
+[workload]
+kind = openloop
+rate_per_us = 2
+";
+        assert!(AutotuneSpec::is_autotune_text(text));
+        let s = AutotuneSpec::parse_toml(text).expect("parse");
+        assert_eq!(s.name, "smoke");
+        assert_eq!(s.output_path(), "BENCH_x.json");
+        assert_eq!(s.objective, Objective::MinP99);
+        assert_eq!((s.budget, s.seed), (12, 9));
+        assert_eq!(s.space_size(), 2);
+        // Sweep specs are not autotune specs.
+        assert!(!AutotuneSpec::is_autotune_text(
+            "name = x\n[system]\nhwas = izigzag*2\n"
+        ));
+        // Unknown keys in either namespace are errors.
+        assert!(AutotuneSpec::parse_toml("[autotune]\nbudjet = 3\n").is_err());
+        assert!(AutotuneSpec::parse_toml("[system]\nhwaz = a\n").is_err());
+    }
+}

@@ -22,7 +22,15 @@ SUBCOMMANDS:
                       (see configs/ and docs/EXPERIMENTS.md)
     topology <spec>   resolve a sweep spec's floorplans without
                       simulating: print each distinct tile map with its
-                      per-fabric inventories and MMU assignment
+                      per-fabric inventories, modeled interface fmax and
+                      MMU assignment (autotune specs resolve their whole
+                      candidate space, with pruned-candidate accounting)
+    autotune <spec>   closed-loop design-space search: prune infeasible
+                      floorplan candidates with the synthesis models
+                      (device LUT/BRAM budget, modeled interface fmax),
+                      simulate the survivors, and report the best plan
+                      plus a ready-to-run config fragment
+                      (see configs/autotune_smoke.toml)
     run               run one scenario from a config file
                       (--config path; same [system]/[workload] keys as a
                       sweep spec, without list values)
@@ -40,6 +48,10 @@ OPTIONS:
                       `output`, else BENCH_<name>.json)
     --csv-out PATH    also write the sweep report as CSV
     --dry-run         expand and list the sweep grid without running
+    --objective O     autotune objective override:
+                      p99 | throughput | throughput_per_lut | slo_violations
+    --budget N        autotune evaluation-budget override
+    --seed N          autotune search-seed override
 ";
 
 fn emit(t: crate::util::table::Table, csv: bool) {
@@ -66,6 +78,7 @@ pub fn main_with(args: Args) -> Result<(), String> {
         Some("run") => run_custom(&args, csv),
         Some("sweep") => run_sweep(&args, csv),
         Some("topology") => run_topology(&args),
+        Some("autotune") => run_autotune(&args),
         Some("synth") => {
             emit(fig7::run().table(), csv);
             emit(fig7::run().component_table(), csv);
@@ -219,6 +232,13 @@ fn run_topology(args: &Args) -> Result<(), String> {
         .positional
         .first()
         .ok_or("topology: missing spec path (see configs/)")?;
+    // Autotune specs carry an `[autotune]` section a sweep parser would
+    // reject; resolve their candidate space instead of a scenario grid.
+    if let Ok(text) = std::fs::read_to_string(std::path::Path::new(path)) {
+        if crate::autotune::AutotuneSpec::is_autotune_text(&text) {
+            return autotune_topology(&text);
+        }
+    }
     let sweep = SweepSpec::load(std::path::Path::new(path))?;
     let scenarios = sweep.expand()?;
     let mut seen: Vec<String> = Vec::new();
@@ -255,6 +275,103 @@ fn run_topology(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `topology` over an autotune spec: resolve every candidate in the
+/// space, print each distinct *feasible* topology once, and account for
+/// the pruned candidates by reason — the dry-run view of what a search
+/// would actually simulate.
+fn autotune_topology(text: &str) -> Result<(), String> {
+    use crate::autotune::{AutotuneSpec, Infeasible};
+
+    let spec = AutotuneSpec::parse_toml(text)?;
+    let size = spec.space_size();
+    let mut seen: Vec<String> = Vec::new();
+    let (mut resource, mut fmax, mut invalid) = (0usize, 0usize, 0usize);
+    for id in 0..size {
+        match spec.candidate(id) {
+            Ok(c) => {
+                let cfg = c.spec.system_config()?;
+                let key = render_topology(&cfg);
+                if seen.contains(&key) {
+                    continue;
+                }
+                println!(
+                    "topology {} of autotune {} (first candidate: {})",
+                    seen.len(),
+                    spec.name,
+                    c.name
+                );
+                print!("{key}");
+                seen.push(key);
+            }
+            Err(Infeasible::Resource { .. }) => resource += 1,
+            Err(Infeasible::Fmax { .. }) => fmax += 1,
+            Err(Infeasible::Invalid { .. }) => invalid += 1,
+        }
+    }
+    println!(
+        "topology {}: {} candidates resolve to {} distinct feasible \
+         topolog{}; {} pruned ({} resource, {} fmax, {} invalid)",
+        spec.name,
+        size,
+        seen.len(),
+        if seen.len() == 1 { "y" } else { "ies" },
+        resource + fmax + invalid,
+        resource,
+        fmax,
+        invalid
+    );
+    Ok(())
+}
+
+/// The `autotune` verb: load the spec, apply CLI overrides, run the
+/// search, print the human report, write `BENCH_autotune.json`.
+fn run_autotune(args: &Args) -> Result<(), String> {
+    use crate::autotune::{Autotuner, AutotuneSpec, Objective};
+
+    let path = args
+        .positional
+        .first()
+        .ok_or("autotune: missing spec path (see configs/autotune_smoke.toml)")?;
+    let spec = AutotuneSpec::load(std::path::Path::new(path))?;
+    let mut tuner = Autotuner::new();
+    if let Some(obj) = args.get("objective") {
+        tuner = tuner.objective(Objective::parse(obj)?);
+    }
+    if let Some(budget) = args.get_parse::<usize>("budget")? {
+        tuner = tuner.budget(budget);
+    }
+    if let Some(seed) = args.get_parse::<u64>("seed")? {
+        tuner = tuner.seed(seed);
+    }
+    if let Some(threads) = args.get_parse::<usize>("threads")? {
+        tuner = tuner.threads(threads);
+    }
+    eprintln!(
+        "autotune {}: {} candidates in the space",
+        spec.name,
+        spec.space_size()
+    );
+    let t0 = std::time::Instant::now();
+    let outcome = tuner
+        .run(&spec)
+        .map_err(|e| format!("autotune {}: {e}", spec.name))?;
+    let wall = t0.elapsed();
+    print!("{}", outcome.report());
+    let out_path = args
+        .get("out")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| spec.output_path());
+    outcome.write_json(std::path::Path::new(&out_path))?;
+    eprintln!(
+        "autotune {}: {} evaluated, {} pruned in {:.2} s -> {out_path}",
+        spec.name,
+        outcome.evaluated.len(),
+        outcome.pruned_total(),
+        wall.as_secs_f64()
+    );
+    Ok(())
+}
+
 /// Tile map + per-fabric inventory + MMU assignment, as one string (also
 /// the dedup key for `run_topology`).
 fn render_topology(cfg: &crate::sim::SystemConfig) -> String {
@@ -285,7 +402,8 @@ fn render_topology(cfg: &crate::sim::SystemConfig) -> String {
             names.join(" "),
         );
         // Device utilization of the declared inventory (interface +
-        // cores), against the xc7vx690t budget the constructor enforces.
+        // cores), against the budget the constructor enforces for the
+        // configured part (`system.device`; xc7vx690t by default).
         let cost = crate::synth::resource::inventory_cost(
             spec.pr_group,
             spec.ps_group,
@@ -294,15 +412,36 @@ fn render_topology(cfg: &crate::sim::SystemConfig) -> String {
         );
         let _ = writeln!(
             out,
-            "    device: {} LUTs ({:.1}%), {} BRAMs ({:.1}%){}",
+            "    device: {} — {} LUTs ({:.1}%), {} BRAMs ({:.1}%){}",
+            cfg.device.name,
             cost.lut,
-            crate::synth::resource::lut_pct(&cost),
+            cfg.device.lut_pct(&cost),
             cost.bram,
-            crate::synth::resource::bram_pct(&cost),
+            cfg.device.bram_pct(&cost),
             if spec.reconfigurable.is_empty() {
                 String::new()
             } else {
                 format!(", PR slots {:?}", spec.reconfigurable)
+            },
+        );
+        // The calibrated delay model's ceiling for this PR/PS strategy
+        // — a configured clock above it won't close timing on hardware.
+        let fmax = crate::synth::fabric_fmax_mhz(
+            spec.pr_group,
+            spec.ps_group,
+            spec.specs.len(),
+        );
+        let _ = writeln!(
+            out,
+            "    modeled iface fmax: {:.1} MHz{}",
+            fmax,
+            if spec.iface_mhz > fmax + 1e-9 {
+                format!(
+                    " — WARNING: configured {:.0} MHz exceeds the model",
+                    spec.iface_mhz
+                )
+            } else {
+                String::new()
             },
         );
         for group in &spec.chain_groups {
@@ -419,6 +558,46 @@ fn selftest() -> Result<(), String> {
         crate::accel::fault_recovery_demo().map_err(|e| e.to_string())?;
     print!("{report}");
     println!("selftest fault-recovery: OK");
+    // The autotuner: a small exhaustive search over floorplans and
+    // inventories whose winner must beat the legacy single-FPGA default
+    // plan (the baseline = the spec's fixed keys) on p99.
+    {
+        use crate::autotune::{Autotuner, AutotuneSpec};
+
+        let space = AutotuneSpec::new("selftest")
+            .axis(
+                "system.floorplan",
+                &["P P F0 / P M P / P P P", "P P F0 / P M P / P P F1"],
+            )
+            .axis("system.hwas", &["izigzag*4", "izigzag*8"])
+            .set("workload.kind", "openloop")
+            .set("workload.rate_per_us", "4")
+            .set("workload.warmup_us", "2")
+            .set("workload.window_us", "15");
+        let out = Autotuner::new()
+            .run(&space)
+            .map_err(|e| format!("selftest autotune: {e}"))?;
+        let base = out
+            .baseline
+            .as_ref()
+            .and_then(|b| b.score)
+            .ok_or("selftest autotune: baseline did not run")?;
+        if !(out.winner.score < base) {
+            return Err(format!(
+                "selftest autotune: winner p99 {:.2} µs does not beat \
+                 the default single-FPGA plan ({base:.2} µs)",
+                out.winner.score
+            ));
+        }
+        println!(
+            "selftest autotune: OK (winner {} p99 {:.2} µs vs default \
+             {base:.2} µs, {} evaluated / {} pruned)",
+            out.winner.name,
+            out.winner.score,
+            out.evaluated.len(),
+            out.pruned_total()
+        );
+    }
     Ok(())
 }
 
@@ -440,6 +619,7 @@ mod tests {
             "experiment",
             "sweep",
             "topology",
+            "autotune",
             "run",
             "synth",
             "list",
@@ -461,22 +641,49 @@ mod tests {
             if path.extension().and_then(|e| e.to_str()) != Some("toml") {
                 continue;
             }
-            let sweep = SweepSpec::load(&path)
-                .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
-            for s in sweep.expand().unwrap() {
-                let cfg = s
-                    .system_config()
+            let text = std::fs::read_to_string(&path).unwrap();
+            let mut rendered_all: Vec<String> = Vec::new();
+            if crate::autotune::AutotuneSpec::is_autotune_text(&text) {
+                // Autotune specs resolve their candidate space; the
+                // infeasible candidates are pruned, not errors, but at
+                // least one candidate must survive.
+                let spec = crate::autotune::AutotuneSpec::parse_toml(&text)
                     .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
-                let rendered = render_topology(&cfg);
+                for id in 0..spec.space_size() {
+                    if let Ok(c) = spec.candidate(id) {
+                        let cfg = c.spec.system_config().unwrap();
+                        rendered_all.push(render_topology(&cfg));
+                    }
+                }
+                assert!(
+                    !rendered_all.is_empty(),
+                    "{}: every candidate infeasible",
+                    path.display()
+                );
+            } else {
+                let sweep = SweepSpec::load(&path)
+                    .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+                for s in sweep.expand().unwrap() {
+                    let cfg = s
+                        .system_config()
+                        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+                    rendered_all.push(render_topology(&cfg));
+                }
+            }
+            for rendered in &rendered_all {
                 assert!(rendered.contains("F0"), "{rendered}");
                 assert!(rendered.contains("MMU tile"), "{rendered}");
                 assert!(
                     rendered.contains("device:"),
                     "missing utilization line: {rendered}"
                 );
+                assert!(
+                    rendered.contains("modeled iface fmax"),
+                    "missing fmax line: {rendered}"
+                );
             }
             checked += 1;
         }
-        assert!(checked >= 7, "expected the shipped configs, saw {checked}");
+        assert!(checked >= 8, "expected the shipped configs, saw {checked}");
     }
 }

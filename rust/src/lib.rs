@@ -21,6 +21,7 @@
 //! target.
 
 pub mod accel;
+pub mod autotune;
 pub mod baseline;
 pub mod clock;
 pub mod cmp;

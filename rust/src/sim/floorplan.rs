@@ -114,7 +114,12 @@ pub enum TopologyError {
     ChainGroupOutOfRange { fabric: usize, member: usize },
     /// A fabric's declared inventory (accelerator cores plus the
     /// interface itself) does not fit the device's LUT/BRAM budget.
-    ResourceBudget { fabric: usize, luts: u32, brams: u32 },
+    ResourceBudget {
+        fabric: usize,
+        luts: u32,
+        brams: u32,
+        device: crate::synth::Device,
+    },
     /// A `FabricSpec.reconfigurable` entry names a channel index beyond
     /// the fabric's HWA inventory.
     ReconfigSlotOutOfRange { fabric: usize, slot: usize },
@@ -177,12 +182,16 @@ impl std::fmt::Display for TopologyError {
                 "fabric {fabric}: chain group member {member} names no \
                  configured channel"
             ),
-            TopologyError::ResourceBudget { fabric, luts, brams } => write!(
+            TopologyError::ResourceBudget {
+                fabric,
+                luts,
+                brams,
+                device,
+            } => write!(
                 f,
                 "fabric {fabric}: inventory needs {luts} LUTs / {brams} \
-                 BRAMs, exceeding the xc7vx690t budget ({} / {})",
-                crate::fpga::hwa::DEVICE_LUTS,
-                crate::fpga::hwa::DEVICE_BRAMS
+                 BRAMs, exceeding the {} budget ({} / {})",
+                device.name, device.luts, device.brams
             ),
             TopologyError::ReconfigSlotOutOfRange { fabric, slot } => write!(
                 f,

@@ -97,6 +97,9 @@ pub struct SystemConfig {
     pub fabrics: Vec<FabricSpec>,
     /// Processor → MMU tile assignment policy (multi-MMU plans).
     pub mmu_assign: MmuAssign,
+    /// The FPGA part every fabric's inventory is budgeted against
+    /// (`system.device`; defaults to the paper's xc7vx690t).
+    pub device: crate::synth::Device,
 }
 
 impl SystemConfig {
@@ -113,6 +116,7 @@ impl SystemConfig {
             net: NetKind::Noc,
             fabrics: vec![fabric],
             mmu_assign: MmuAssign::Nearest,
+            device: crate::synth::Device::default(),
         }
     }
 
@@ -123,6 +127,7 @@ impl SystemConfig {
             net: NetKind::Noc,
             fabrics,
             mmu_assign: MmuAssign::Nearest,
+            device: crate::synth::Device::default(),
         }
     }
 
@@ -199,11 +204,12 @@ impl SystemConfig {
                     &spec.specs,
                     !spec.chain_groups.is_empty(),
                 );
-                if crate::synth::resource::exceeds_device(&cost) {
+                if self.device.exceeds(&cost) {
                     return Err(TopologyError::ResourceBudget {
                         fabric: f,
                         luts: cost.lut,
                         brams: cost.bram,
+                        device: self.device,
                     });
                 }
             }
@@ -1121,11 +1127,11 @@ impl System {
             &specs,
             !fspec.chain_groups.is_empty(),
         );
-        if crate::synth::resource::exceeds_device(&cost) {
+        if self.config.device.exceeds(&cost) {
             return Err(format!(
-                "reconfig: swapping in {} exceeds the device budget \
+                "reconfig: swapping in {} exceeds the {} budget \
                  ({} LUTs / {} BRAMs)",
-                target.name, cost.lut, cost.bram
+                target.name, self.config.device.name, cost.lut, cost.bram
             ));
         }
         let f = self.slots[fabric]

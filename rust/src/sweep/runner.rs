@@ -313,10 +313,33 @@ impl SweepRunner {
         name: &str,
         specs: Vec<ScenarioSpec>,
     ) -> Result<SweepReport, String> {
-        let n = specs.len();
-        if n == 0 {
+        if specs.is_empty() {
             return Err("empty scenario grid".to_string());
         }
+        let results = self.run_each(&specs);
+        let mut scenarios = Vec::with_capacity(specs.len());
+        for (spec, result) in specs.into_iter().zip(results) {
+            let stats = result.map_err(|e| format!("{}: {e}", spec.name))?;
+            scenarios.push(ScenarioResult { spec, stats });
+        }
+        Ok(SweepReport {
+            name: name.to_string(),
+            scenarios,
+        })
+    }
+
+    /// Run every scenario concurrently and return the per-scenario
+    /// results in input order, without failing the whole batch on the
+    /// first error. [`Self::run`] layers the fail-fast sweep semantics
+    /// on top; the autotuner consumes the slots directly (a candidate
+    /// that, say, misses its closed-loop deadline is *its* failure, not
+    /// the search's). Results depend only on each spec, so the output
+    /// is bit-identical on any thread count.
+    pub fn run_each(
+        &self,
+        specs: &[ScenarioSpec],
+    ) -> Vec<Result<RunStats, String>> {
+        let n = specs.len();
         type Slot = Mutex<Option<Result<RunStats, String>>>;
         let next = AtomicUsize::new(0);
         let slots: Vec<Slot> = (0..n).map(|_| Mutex::new(None)).collect();
@@ -333,19 +356,10 @@ impl SweepRunner {
                 });
             }
         });
-        let mut scenarios = Vec::with_capacity(n);
-        for (spec, slot) in specs.into_iter().zip(slots) {
-            let stats = slot
-                .into_inner()
-                .unwrap()
-                .expect("every slot written")
-                .map_err(|e| format!("{}: {e}", spec.name))?;
-            scenarios.push(ScenarioResult { spec, stats });
-        }
-        Ok(SweepReport {
-            name: name.to_string(),
-            scenarios,
-        })
+        slots
+            .into_iter()
+            .map(|slot| slot.into_inner().unwrap().expect("every slot written"))
+            .collect()
     }
 }
 

@@ -293,6 +293,10 @@ pub struct ScenarioSpec {
     pub pr_group: usize,
     pub ps_group: usize,
     pub iface_mhz: f64,
+    /// FPGA part the per-fabric inventory is budgeted against
+    /// (`system.device`; the xc7vx690t default preserves every legacy
+    /// budget check byte-for-byte).
+    pub device: crate::synth::Device,
     pub hwas: HwaMix,
     /// Chain all HWAs into one group (Fig. 10 setup).
     pub chain: bool,
@@ -341,6 +345,7 @@ impl ScenarioSpec {
             pr_group: 4,
             ps_group: 4,
             iface_mhz: 300.0,
+            device: crate::synth::Device::default(),
             hwas: HwaMix::First(8),
             chain: false,
             workload: WorkloadSpec::OpenLoop { rate_per_us: 1.0 },
@@ -435,6 +440,12 @@ impl ScenarioSpec {
         self
     }
 
+    /// Budget the inventory against a different FPGA part.
+    pub fn device(mut self, device: crate::synth::Device) -> Self {
+        self.device = device;
+        self
+    }
+
     /// Accelerator mix, in [`HwaMix::parse`] syntax; panics on a syntax
     /// error (use `HwaMix::parse` + field assignment for fallible input).
     pub fn hwas(mut self, mix: &str) -> Self {
@@ -472,26 +483,34 @@ impl ScenarioSpec {
         self
     }
 
-    /// Resolve into the `sim::System` configuration this scenario runs:
-    /// the floorplan (explicit, or the legacy single-FPGA lowering of
-    /// `mesh`) plus one `FabricSpec` per fabric tile. Every topology
-    /// defect surfaces here as an error, never as a mid-sweep panic.
-    pub fn system_config(&self) -> Result<SystemConfig, String> {
-        if self.n_tbs == 0 {
-            return Err("task_buffers must be >= 1".to_string());
-        }
+    /// The floorplan this scenario lowers to: the explicit plan text, or
+    /// the legacy single-FPGA lowering of `mesh`. Syntax errors surface
+    /// here; the full semantic validation runs in [`Self::system_config`].
+    pub fn plan(&self) -> Result<Floorplan, String> {
         // The floorplan, when present, is authoritative for the mesh
         // dimensions (`from_map` rejects a conflicting explicit
         // `system.mesh` at load time, where set-ness is knowable).
-        let plan = match &self.floorplan {
-            Some(text) => Floorplan::parse(text).map_err(|e| e.to_string())?,
-            None => Floorplan::single_fpga(MeshConfig {
+        match &self.floorplan {
+            Some(text) => Floorplan::parse(text).map_err(|e| e.to_string()),
+            None => Ok(Floorplan::single_fpga(MeshConfig {
                 width: self.mesh.0,
                 height: self.mesh.1,
                 ..MeshConfig::default()
-            }),
-        };
-        // (cfg.validate() below runs the full floorplan validation.)
+            })),
+        }
+    }
+
+    /// One `FabricSpec` per fabric tile of `plan`, with this scenario's
+    /// per-fabric mix overrides resolved — but WITHOUT the construction-
+    /// time budget/topology validation `system_config` runs. The
+    /// autotuner uses this to cost candidates it may never build.
+    pub fn fabric_specs(
+        &self,
+        plan: &Floorplan,
+    ) -> Result<Vec<FabricSpec>, String> {
+        if self.n_tbs == 0 {
+            return Err("task_buffers must be >= 1".to_string());
+        }
         for f in self.fabric_hwas.keys() {
             if (*f as usize) >= plan.n_fabrics() {
                 return Err(format!(
@@ -538,11 +557,23 @@ impl ScenarioSpec {
                 reconfigurable,
             });
         }
+        Ok(fabrics)
+    }
+
+    /// Resolve into the `sim::System` configuration this scenario runs:
+    /// the floorplan (explicit, or the legacy single-FPGA lowering of
+    /// `mesh`) plus one `FabricSpec` per fabric tile. Every topology
+    /// defect surfaces here as an error, never as a mid-sweep panic.
+    pub fn system_config(&self) -> Result<SystemConfig, String> {
+        let plan = self.plan()?;
+        // (cfg.validate() below runs the full floorplan validation.)
+        let fabrics = self.fabric_specs(&plan)?;
         let cfg = SystemConfig {
             floorplan: plan,
             net: self.net,
             fabrics,
             mmu_assign: self.mmu_assign,
+            device: self.device,
         };
         cfg.validate().map_err(|e| e.to_string())?;
         Ok(cfg)
@@ -579,6 +610,11 @@ impl ScenarioSpec {
         }
         for (f, mix) in &self.fabric_hwas {
             put(&format!("system.hwas_f{f}"), mix.to_string());
+        }
+        // The device key is emitted only when non-default, so legacy
+        // specs keep their exact pre-`Device` map.
+        if self.device != crate::synth::Device::default() {
+            put("system.device", self.device.name.to_string());
         }
         put("system.task_buffers", self.n_tbs.to_string());
         put("system.pr_group", self.pr_group.to_string());
@@ -663,6 +699,21 @@ impl ScenarioSpec {
         name: &str,
         map: &BTreeMap<String, String>,
     ) -> Result<Self, String> {
+        let spec = Self::from_map_unvalidated(name, map)?;
+        spec.system_config()?; // validate the whole shape eagerly
+        Ok(spec)
+    }
+
+    /// [`Self::from_map`] without the eager `system_config()`
+    /// validation: field syntax is still checked, but a spec whose
+    /// *shape* is unbuildable (over-budget inventory, bad floorplan
+    /// semantics) parses fine. The autotuner needs this — its
+    /// feasibility filter must inspect and cost candidates that the
+    /// construction-time budget check would reject outright.
+    pub fn from_map_unvalidated(
+        name: &str,
+        map: &BTreeMap<String, String>,
+    ) -> Result<Self, String> {
         for k in map.keys() {
             if !KNOWN_KEYS.contains(&k.as_str()) {
                 return Err(format!(
@@ -735,6 +786,9 @@ impl ScenarioSpec {
         spec.ps_group = get_parse(map, "system.ps_group")?.unwrap_or(spec.ps_group);
         spec.iface_mhz =
             get_parse(map, "system.iface_mhz")?.unwrap_or(spec.iface_mhz);
+        if let Some(v) = map.get("system.device") {
+            spec.device = crate::synth::Device::parse(v)?;
+        }
         if let Some(v) = map.get("system.hwas") {
             spec.hwas = HwaMix::parse(v)?;
             spec.hwas.to_specs()?; // validate names eagerly
@@ -885,7 +939,6 @@ impl ScenarioSpec {
             get_parse(map, "workload.window_us")?.unwrap_or(spec.window_us);
         spec.deadline_us =
             get_parse(map, "workload.deadline_us")?.unwrap_or(spec.deadline_us);
-        spec.system_config()?; // validate the whole shape eagerly
         Ok(spec)
     }
 }
@@ -910,6 +963,12 @@ fn get_parse<T: std::str::FromStr>(
     }
 }
 
+/// Is `key` one `ScenarioSpec::from_map` accepts? (The autotune spec
+/// parser vets its search-space keys against the same list.)
+pub(crate) fn known_spec_key(key: &str) -> bool {
+    KNOWN_KEYS.contains(&key)
+}
+
 /// Every key `ScenarioSpec::from_map` accepts (anything else is a typo).
 const KNOWN_KEYS: &[&str] = &[
     "system.net",
@@ -926,6 +985,7 @@ const KNOWN_KEYS: &[&str] = &[
     "system.pr_group",
     "system.ps_group",
     "system.iface_mhz",
+    "system.device",
     "system.hwas",
     "system.chain",
     "workload.kind",
@@ -1150,7 +1210,7 @@ impl SweepSpec {
     }
 }
 
-fn split_list(raw: &str) -> Vec<String> {
+pub(crate) fn split_list(raw: &str) -> Vec<String> {
     raw.split(',')
         .map(|s| s.trim().to_string())
         .filter(|s| !s.is_empty())
@@ -1229,6 +1289,56 @@ mod tests {
             let back = ScenarioSpec::from_map("w", &map).unwrap();
             assert_eq!(spec, back);
         }
+    }
+
+    #[test]
+    fn device_key_round_trips_and_gates_the_budget() {
+        // Non-default devices survive the map round trip...
+        let spec = ScenarioSpec::new("dev")
+            .device(crate::synth::Device::XCVU9P)
+            .hwas("izigzag*4");
+        let map: BTreeMap<String, String> =
+            spec.to_map().into_iter().collect();
+        assert_eq!(map.get("system.device").map(String::as_str), Some("xcvu9p"));
+        assert_eq!(ScenarioSpec::from_map("dev", &map).unwrap(), spec);
+        // ...the default emits no key (legacy maps stay byte-identical)...
+        let legacy = ScenarioSpec::new("legacy");
+        assert!(legacy
+            .to_map()
+            .iter()
+            .all(|(k, _)| k != "system.device"));
+        // ...and the selected part is the budget actually enforced:
+        // four `prime` cores blow the 690t but fit the VU9P.
+        let over = ScenarioSpec::new("over").hwas("prime*4");
+        assert!(over.system_config().is_err());
+        let roomy = over.device(crate::synth::Device::XCVU9P);
+        assert!(roomy.system_config().is_ok());
+        assert!(ScenarioSpec::new("typo")
+            .to_map()
+            .iter()
+            .all(|(k, _)| known_spec_key(k)));
+    }
+
+    #[test]
+    fn unvalidated_parse_accepts_unbuildable_shapes() {
+        // `prime*4` exceeds the default budget: the validated parser
+        // rejects it, the unvalidated one hands the autotuner a spec it
+        // can cost and prune with a typed reason instead.
+        let map: BTreeMap<String, String> = ScenarioSpec::new("x")
+            .hwas("prime*4")
+            .to_map()
+            .into_iter()
+            .collect();
+        assert!(ScenarioSpec::from_map("x", &map).is_err());
+        let spec = ScenarioSpec::from_map_unvalidated("x", &map).unwrap();
+        let plan = spec.plan().unwrap();
+        let fabrics = spec.fabric_specs(&plan).unwrap();
+        assert_eq!(fabrics.len(), 1);
+        assert_eq!(fabrics[0].specs.len(), 4);
+        // Field-level typos still fail even unvalidated.
+        let mut bad = map.clone();
+        bad.insert("system.device".into(), "not_a_part".into());
+        assert!(ScenarioSpec::from_map_unvalidated("x", &bad).is_err());
     }
 
     #[test]

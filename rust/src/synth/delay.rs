@@ -74,6 +74,19 @@ pub fn interface_fmax_mhz(pr_k: usize, ps_group: usize, n: usize) -> f64 {
     pr_fmax_mhz(pr_k, n).min(ps_fmax_mhz(ps_group, n))
 }
 
+/// Modeled interface fmax of a fabric with `n` HWA channels under the
+/// configured PR/PS group sizes. Unlike the raw [`interface_fmax_mhz`],
+/// groups are clamped to the inventory the same way
+/// [`crate::synth::resource::inventory_cost`] clamps them (a PS4 over 2
+/// channels *is* a global 2-way PS), so this accepts any `FabricSpec`
+/// verbatim. This is the timing half of the feasibility check: a
+/// scenario's `iface_mhz` above this value asks the interface to run
+/// faster than the modeled critical path allows.
+pub fn fabric_fmax_mhz(pr_group: usize, ps_group: usize, n: usize) -> f64 {
+    let n = n.max(1);
+    interface_fmax_mhz(pr_group.clamp(1, n), ps_group.clamp(1, n), n)
+}
+
 /// The Fig. 7 sweep: PR in {4, 8, 16, 32} x PS in {global, 16, 8, 4, 2}.
 pub fn fig7_grid(n: usize) -> Vec<(String, String, f64)> {
     let mut out = Vec::new();
@@ -157,5 +170,19 @@ mod tests {
     #[test]
     fn grid_has_20_points() {
         assert_eq!(fig7_grid(N).len(), 20);
+    }
+
+    #[test]
+    fn fabric_fmax_clamps_groups_to_inventory() {
+        // Unclamped groups on the full grid agree with the raw model...
+        assert_eq!(fabric_fmax_mhz(4, 4, N), interface_fmax_mhz(4, 4, N));
+        // ...and oversized groups degrade to the global arrangement
+        // instead of tripping the raw model's assertions.
+        assert_eq!(fabric_fmax_mhz(4, 8, 4), interface_fmax_mhz(4, 4, 4));
+        assert_eq!(fabric_fmax_mhz(32, 32, 8), interface_fmax_mhz(8, 8, 8));
+        // The paper's winning operating point stays feasible at small n.
+        assert!(fabric_fmax_mhz(4, 4, 8) >= 300.0);
+        // A global PS over 8 channels cannot close 300 MHz.
+        assert!(fabric_fmax_mhz(4, 8, 8) < 300.0);
     }
 }

@@ -3,5 +3,9 @@
 pub mod delay;
 pub mod resource;
 
-pub use delay::{fig7_grid, interface_fmax_mhz, pr_fmax_mhz, ps_fmax_mhz};
-pub use resource::{channel_cost, interface_cost, lut_pct, pr_cost, ps_cost};
+pub use delay::{
+    fabric_fmax_mhz, fig7_grid, interface_fmax_mhz, pr_fmax_mhz, ps_fmax_mhz,
+};
+pub use resource::{
+    channel_cost, interface_cost, lut_pct, pr_cost, ps_cost, Device,
+};

@@ -10,6 +10,78 @@ use crate::fpga::hwa::{Resources, DEVICE_BRAMS, DEVICE_LUTS};
 use crate::fpga::iface::pr::PrStrategy;
 use crate::fpga::iface::ps::PsStrategy;
 
+/// A named FPGA part's routable LUT/BRAM budget — the denominator of
+/// every feasibility check and utilization print. The catalog is typed
+/// (not config-file data) so a budget can never silently drift from the
+/// part it claims to model; `system.device` selects an entry per
+/// scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Device {
+    pub name: &'static str,
+    pub luts: u32,
+    pub brams: u32,
+}
+
+impl Device {
+    /// The paper's part (§6.1): Virtex-7 xc7vx690t. The numbers are the
+    /// same `DEVICE_LUTS`/`DEVICE_BRAMS` constants every pre-`Device`
+    /// budget check used, so the default is behavior-preserving.
+    pub const XC7VX690T: Device = Device {
+        name: "xc7vx690t",
+        luts: DEVICE_LUTS,
+        brams: DEVICE_BRAMS,
+    };
+    /// The VC707 eval board's smaller sibling (Virtex-7 485T).
+    pub const XC7VX485T: Device = Device {
+        name: "xc7vx485t",
+        luts: 303_600,
+        brams: 1_030,
+    };
+    /// An UltraScale+ datacenter part (VU9P), for headroom studies.
+    pub const XCVU9P: Device = Device {
+        name: "xcvu9p",
+        luts: 1_182_240,
+        brams: 2_160,
+    };
+
+    pub const CATALOG: [Device; 3] =
+        [Device::XC7VX690T, Device::XC7VX485T, Device::XCVU9P];
+
+    /// Look a part up by name (the `system.device` spec value).
+    pub fn parse(name: &str) -> Result<Device, String> {
+        Device::CATALOG
+            .into_iter()
+            .find(|d| d.name == name)
+            .ok_or_else(|| {
+                let known: Vec<&str> =
+                    Device::CATALOG.iter().map(|d| d.name).collect();
+                format!(
+                    "unknown device {name:?} (known: {})",
+                    known.join(", ")
+                )
+            })
+    }
+
+    /// Does `r` exceed this part's LUT or BRAM budget?
+    pub fn exceeds(&self, r: &Resources) -> bool {
+        r.lut > self.luts || r.bram > self.brams
+    }
+
+    pub fn lut_pct(&self, r: &Resources) -> f64 {
+        100.0 * r.lut as f64 / self.luts as f64
+    }
+
+    pub fn bram_pct(&self, r: &Resources) -> f64 {
+        100.0 * r.bram as f64 / self.brams as f64
+    }
+}
+
+impl Default for Device {
+    fn default() -> Self {
+        Device::XC7VX690T
+    }
+}
+
 /// Table 4 per-channel components (LUT, BRAM).
 pub const TB_COST: Resources = Resources::new(100, 4, 0, 0);
 pub const TA_COST: Resources = Resources::new(2, 0, 0, 0);
@@ -100,22 +172,47 @@ pub fn inventory_cost(
     total
 }
 
-/// Does `r` exceed the Virtex-7 xc7vx690t LUT or BRAM budget?
+/// Does `r` exceed the default (xc7vx690t) LUT or BRAM budget?
 pub fn exceeds_device(r: &Resources) -> bool {
-    r.lut > DEVICE_LUTS || r.bram > DEVICE_BRAMS
+    Device::default().exceeds(r)
 }
 
 pub fn lut_pct(r: &Resources) -> f64 {
-    100.0 * r.lut as f64 / DEVICE_LUTS as f64
+    Device::default().lut_pct(r)
 }
 
 pub fn bram_pct(r: &Resources) -> f64 {
-    100.0 * r.bram as f64 / DEVICE_BRAMS as f64
+    Device::default().bram_pct(r)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn default_device_preserves_legacy_budget() {
+        let d = Device::default();
+        assert_eq!(d.name, "xc7vx690t");
+        assert_eq!(d.luts, DEVICE_LUTS);
+        assert_eq!(d.brams, DEVICE_BRAMS);
+        // The free functions are the same check as the typed default.
+        let over = Resources::new(DEVICE_LUTS + 1, 0, 0, 0);
+        assert!(exceeds_device(&over) && d.exceeds(&over));
+        let under = Resources::new(DEVICE_LUTS, DEVICE_BRAMS, 0, 0);
+        assert!(!exceeds_device(&under) && !d.exceeds(&under));
+    }
+
+    #[test]
+    fn device_catalog_parses_by_name() {
+        for d in Device::CATALOG {
+            assert_eq!(Device::parse(d.name), Ok(d));
+        }
+        assert!(Device::parse("xc7z020").is_err());
+        // A mix that drowns the 485t still fits the VU9P.
+        let r = Resources::new(400_000, 0, 0, 0);
+        assert!(Device::XC7VX485T.exceeds(&r));
+        assert!(!Device::XCVU9P.exceeds(&r));
+    }
 
     #[test]
     fn table4_pr_ps_anchor() {

@@ -1,0 +1,169 @@
+//! End-to-end autotuner acceptance: golden exhaustive search, pruned-
+//! candidate accounting, byte-identical determinism across runs and
+//! thread counts, typed infeasible-everything errors, and the shipped
+//! `configs/autotune_smoke.toml` spec beating the default floorplan.
+
+use accnoc::autotune::{
+    AutotuneError, AutotuneSpec, Autotuner, Infeasible, Objective,
+};
+use accnoc::util::json::Json;
+
+fn quick(name: &str) -> AutotuneSpec {
+    AutotuneSpec::new(name)
+        .set("workload.kind", "openloop")
+        .set("workload.rate_per_us", "1")
+        .set("workload.warmup_us", "2")
+        .set("workload.window_us", "10")
+}
+
+/// Golden search: with one axis separating a 1-cycle/400 MHz kernel
+/// from a 1200-cycle/250 MHz kernel, the p99 winner is known in
+/// advance.
+#[test]
+fn exhaustive_search_picks_the_known_best_plan() {
+    let space = quick("golden").axis("system.hwas", &["izigzag*2", "dfdiv*2"]);
+    let out = Autotuner::new().threads(2).run(&space).expect("search runs");
+    assert_eq!(out.strategy, "exhaustive");
+    assert_eq!(out.winner.name, "golden[hwas=izigzag*2]");
+    assert_eq!(out.winner.id, 0);
+    // The winner report carries a runnable plan string.
+    assert!(!out.winner.floorplan_text().is_empty());
+}
+
+/// Exhaustive accounting: every candidate is either evaluated or pruned
+/// with a typed reason — nothing is silently dropped, and nothing that
+/// failed the filter is ever simulated.
+#[test]
+fn evaluated_plus_pruned_covers_the_whole_space() {
+    let space = quick("acct")
+        .axis("system.hwas", &["izigzag*2", "prime*3"])
+        .axis("system.iface_mhz", &["300", "1000"]);
+    let out = Autotuner::new().threads(1).run(&space).expect("search runs");
+    assert_eq!(out.space_size, 4);
+    assert_eq!(
+        out.evaluated.len() + out.pruned_total(),
+        out.space_size,
+        "exhaustive searches must account for every candidate"
+    );
+    // prime*3 kills both iface values on resources (checked before
+    // fmax); izigzag*2 at 1000 MHz dies on the delay model.
+    assert_eq!(out.pruned_resource, 2);
+    assert_eq!(out.pruned_fmax, 1);
+    assert_eq!(out.pruned_invalid, 0);
+    assert_eq!(out.evaluated.len(), 1);
+    // The feasibility filter ran before simulation: every evaluated
+    // candidate re-passes it.
+    for rec in &out.evaluated {
+        assert!(space.candidate(rec.candidate.id).is_ok());
+    }
+}
+
+/// Same seed => byte-identical BENCH_autotune.json, across repeat runs
+/// and across worker-thread counts, for both search strategies.
+#[test]
+fn same_seed_is_byte_identical_across_runs_and_threads() {
+    // Exhaustive strategy.
+    let small = quick("det").axis("system.hwas", &["izigzag*2", "izigzag*4"]);
+    let a = Autotuner::new().threads(1).run(&small).unwrap().render_json();
+    let b = Autotuner::new().threads(1).run(&small).unwrap().render_json();
+    let c = Autotuner::new().threads(4).run(&small).unwrap().render_json();
+    assert_eq!(a, b, "repeat runs must match");
+    assert_eq!(a, c, "thread counts must not leak into the artifact");
+
+    // Hill-climb strategy (space 12 > budget 4).
+    let big = quick("det")
+        .axis("system.hwas", &["izigzag*2", "izigzag*4", "dfdiv*2"])
+        .axis("system.task_buffers", &["1", "2"])
+        .axis("system.ps_group", &["2", "4"])
+        .budget(4)
+        .seed(13);
+    let a = Autotuner::new().threads(1).run(&big).unwrap().render_json();
+    let b = Autotuner::new().threads(4).run(&big).unwrap().render_json();
+    assert_eq!(a, b, "hill-climb must be deterministic on any thread count");
+    let parsed = Json::parse(&a).expect("valid JSON");
+    assert_eq!(
+        parsed.get("strategy").and_then(|v| v.as_str()),
+        Some("hill_climb")
+    );
+}
+
+/// An infeasible-everything space is a typed error, not a panic, and
+/// the counts say why.
+#[test]
+fn infeasible_everything_returns_a_typed_error() {
+    let space = quick("dead")
+        .axis("system.hwas", &["prime*3", "prime*4"])
+        .axis("system.iface_mhz", &["300", "500"]);
+    match Autotuner::new().threads(1).run(&space) {
+        Err(AutotuneError::NoFeasibleCandidate {
+            resource,
+            fmax,
+            invalid,
+        }) => {
+            assert_eq!(resource, 4);
+            assert_eq!((fmax, invalid), (0, 0));
+        }
+        other => panic!("expected NoFeasibleCandidate, got {other:?}"),
+    }
+    // The per-candidate reasons are typed too.
+    match space.candidate(0) {
+        Err(Infeasible::Resource { luts, .. }) => assert!(luts > 433_200),
+        other => panic!("expected a resource prune, got {other:?}"),
+    }
+}
+
+/// The shipped smoke spec end to end: exact pruning split, exhaustive
+/// coverage, and a winner that beats the legacy single-FPGA default
+/// plan (the baseline) on p99.
+#[test]
+fn shipped_smoke_spec_beats_the_default_floorplan() {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../configs/autotune_smoke.toml"
+    );
+    let text = std::fs::read_to_string(path).expect("smoke spec readable");
+    assert!(AutotuneSpec::is_autotune_text(&text));
+    let spec = AutotuneSpec::parse_toml(&text).expect("smoke spec parses");
+    assert_eq!(spec.name, "autotune_smoke");
+    assert_eq!(spec.output_path(), "BENCH_autotune.json");
+    assert_eq!(spec.objective, Objective::MinP99);
+    assert_eq!(spec.space_size(), 18);
+
+    let out = Autotuner::new().run(&spec).expect("smoke search runs");
+    assert_eq!(out.strategy, "exhaustive", "budget 24 covers the space");
+    assert_eq!(out.evaluated.len() + out.pruned_total(), 18);
+    assert_eq!(out.pruned_resource, 6, "prime*3 x 3 plans x 2 PS");
+    assert_eq!(out.pruned_fmax, 3, "izigzag*8 under global PS");
+    assert_eq!(out.evaluated.len(), 9);
+
+    let base = out
+        .baseline
+        .as_ref()
+        .and_then(|b| b.score)
+        .expect("the default single-FPGA plan simulates");
+    assert!(
+        out.winner.score < base,
+        "autotuned plan (p99 {}) must beat the default plan (p99 {base})",
+        out.winner.score
+    );
+    assert!(out.improvement_vs_baseline_pct().unwrap_or(0.0) > 0.0);
+
+    // The artifact parses and carries the whole accounting story.
+    let json = Json::parse(&out.render_json()).expect("valid JSON");
+    assert_eq!(json.get("kind").and_then(|v| v.as_str()), Some("autotune"));
+    assert_eq!(
+        json.get("space_size").and_then(|v| v.as_f64()),
+        Some(18.0)
+    );
+    let pruned = json.get("pruned").expect("pruned object");
+    assert_eq!(pruned.get("total").and_then(|v| v.as_f64()), Some(9.0));
+    assert_eq!(
+        json.get("candidates").and_then(|v| v.as_arr()).map(|a| a.len()),
+        Some(9)
+    );
+    // The winning plan round-trips as a runnable sweep spec.
+    let toml = out.winner_toml();
+    let tuned = accnoc::sweep::SweepSpec::parse_toml(&toml)
+        .expect("winner fragment is a valid spec");
+    assert_eq!(tuned.expand().expect("expands").len(), 1);
+}
